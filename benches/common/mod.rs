@@ -1,0 +1,28 @@
+//! Shared bench setup: artifacts + runtime + fast eval options.
+#![allow(dead_code)]
+
+use reram_mpq::experiments::ExpOpts;
+use reram_mpq::{artifacts_dir, Manifest, Runtime};
+
+pub struct Ctx {
+    pub manifest: Manifest,
+    pub runtime: Runtime,
+}
+
+pub fn ctx() -> Ctx {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir).expect("run `make artifacts` first");
+    let runtime = Runtime::new(dir).expect("pjrt cpu client");
+    Ctx { manifest, runtime }
+}
+
+/// Benches evaluate on a few batches — the cost model and mapper dominate
+/// what the tables measure; accuracy numbers for the record come from the
+/// CLI/EXPERIMENTS runs on the full test set.
+pub fn opts() -> ExpOpts {
+    let eval_batches = std::env::var("BENCH_EVAL_BATCHES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2);
+    ExpOpts { eval_batches }
+}

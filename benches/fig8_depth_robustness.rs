@@ -1,0 +1,41 @@
+//! Bench: regenerate paper Figure 8 (accuracy degradation vs compression
+//! ratio, shallow vs deep backbone).
+//!
+//!     cargo bench --bench fig8_depth_robustness
+
+mod common;
+
+use reram_mpq::experiments;
+use reram_mpq::util::bench::Bench;
+use reram_mpq::RunConfig;
+
+fn main() {
+    let c = common::ctx();
+    let cfg = RunConfig::default();
+    let opts = common::opts();
+
+    let mut rows = None;
+    Bench::from_env().run("fig8: CR sweep, resnet8 vs resnet14", || {
+        rows = Some(
+            experiments::fig8(&c.runtime, &c.manifest, &cfg, opts, experiments::FIG8_CRS)
+                .expect("fig8"),
+        );
+    });
+    let rows = rows.unwrap();
+    println!();
+    println!("{}", experiments::render_fig8(&rows));
+
+    // Shape assertion: accuracy at low CR should exceed accuracy at extreme
+    // CR for both models (degradation exists).
+    for label in ["ResNet18*", "ResNet50*"] {
+        let series: Vec<f64> = rows
+            .iter()
+            .filter(|(l, _, _)| l == label)
+            .map(|(_, _, r)| r.accuracy.top1)
+            .collect();
+        assert!(
+            series.first().unwrap() > series.last().unwrap(),
+            "{label}: accuracy must degrade from CR 0% to 100%"
+        );
+    }
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate paper Table 3 (compression-ratio sweep with energy
+//! breakdown) and time the sweep.
+//!
+//!     cargo bench --bench table3_cr_sweep
+
+mod common;
+
+use reram_mpq::experiments;
+use reram_mpq::util::bench::Bench;
+use reram_mpq::RunConfig;
+
+fn main() {
+    let c = common::ctx();
+    let cfg = RunConfig::default();
+    let opts = common::opts();
+
+    let mut rows = None;
+    Bench::from_env().run("table3: CR sweep 0..100% (resnet8)", || {
+        rows = Some(
+            experiments::table3(&c.runtime, &c.manifest, &cfg, opts, experiments::TABLE3_CRS)
+                .expect("table3"),
+        );
+    });
+    let rows = rows.unwrap();
+    println!();
+    println!("{}", experiments::render_table3(&rows));
+
+    // Shape assertions: energy decreases monotonically with CR and the ADC
+    // component dominates (the paper's §5.3 observations).
+    for w in rows.windows(2) {
+        assert!(
+            w[1].cost.energy.system_mj() <= w[0].cost.energy.system_mj() + 1e-9,
+            "energy must fall as CR rises"
+        );
+    }
+    let r0 = &rows[0];
+    assert!(r0.cost.energy.adc_mj / r0.cost.energy.system_mj() > 0.8, "ADC dominates");
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerate paper Table 4 (bit utilization, ORIGIN vs OUR mapper,
+//! 128×128 and 32×32 arrays) and time the mapping.
+//!
+//!     cargo bench --bench table4_utilization
+
+mod common;
+
+use reram_mpq::experiments;
+use reram_mpq::util::bench::Bench;
+use reram_mpq::RunConfig;
+
+fn main() {
+    let c = common::ctx();
+    let cfg = RunConfig::default();
+
+    let mut rows = None;
+    Bench::from_env().run("table4: utilization ORIGIN vs OUR (resnet14 @80%)", || {
+        rows = Some(experiments::table4(&c.runtime, &c.manifest, &cfg).expect("table4"));
+    });
+    let rows = rows.unwrap();
+    println!();
+    println!("{}", experiments::render_table4(&rows));
+
+    // Shape assertions: OUR ≥ ORIGIN on both sizes, larger improvement on
+    // the larger array (paper §5.4).
+    let o128 = rows.iter().find(|r| r.method == "ORIGIN" && r.size.0 == 128).unwrap();
+    let u128 = rows.iter().find(|r| r.method == "OUR" && r.size.0 == 128).unwrap();
+    let o32 = rows.iter().find(|r| r.method == "ORIGIN" && r.size.0 == 32).unwrap();
+    let u32 = rows.iter().find(|r| r.method == "OUR" && r.size.0 == 32).unwrap();
+    assert!(u128.utilization > o128.utilization, "OUR must beat ORIGIN on 128x128");
+    assert!(u32.utilization > o32.utilization, "OUR must beat ORIGIN on 32x32");
+    assert!(
+        (u128.utilization - o128.utilization) > (u32.utilization - o32.utilization),
+        "large arrays should gain more from packing"
+    );
+}

@@ -1,0 +1,104 @@
+//! Bench: the L3 hot paths in isolation — mapper, cost model, quantizer,
+//! PJRT forward execution and the standalone Pallas kernel. This is the
+//! profile that drives the §Perf optimization loop.
+//!
+//!     cargo bench --bench xbar_hotpath
+
+mod common;
+
+use reram_mpq::coordinator::{Pipeline, ThresholdMode};
+use reram_mpq::quant;
+use reram_mpq::tensor::Tensor;
+use reram_mpq::util::bench::Bench;
+use reram_mpq::util::rng::Rng;
+use reram_mpq::xbar::{self, MappingStrategy, XbarConfig};
+use reram_mpq::RunConfig;
+
+fn main() {
+    let c = common::ctx();
+    let cfg = RunConfig::default();
+    let bench = Bench::from_env();
+
+    let mut pipe = Pipeline::new(&c.runtime, &c.manifest, "resnet20", cfg.clone())
+        .expect("pipeline");
+    let (clustering, _) = pipe
+        .choose_clustering(ThresholdMode::FixedCr(0.7))
+        .expect("clustering");
+    let bm = clustering.bitmap.clone();
+    let xcfg = XbarConfig::default();
+
+    // 1. quantizer — current (buffer-reusing) vs the pre-§Perf per-strip
+    // allocating loop, reproduced here for the before/after record.
+    bench.run("quant::apply (resnet20, 272k params)", || {
+        quant::apply(&pipe.model, &pipe.theta, &bm, &cfg.quant)
+    });
+    bench.run("quant_apply_allocating (pre-perf baseline)", || {
+        // old loop shape: three fresh Vecs per strip
+        let mut out = pipe.theta.clone();
+        for (i, s) in pipe.model.strips().iter().enumerate() {
+            let bits = bm.bits[i];
+            let vals = pipe.model.strip_values(&out, *s);
+            if bits == 0 {
+                pipe.model.set_strip_values(&mut out, *s, &vec![0.0; vals.len()]);
+                continue;
+            }
+            let scale = quant::symmetric_scale(&vals, bits);
+            let deq = quant::fake_quantize(&vals, bits, scale);
+            pipe.model.set_strip_values(&mut out, *s, &deq);
+        }
+        out
+    });
+
+    // 2. mapper (both strategies)
+    bench.run("xbar::map_model packed (resnet20)", || {
+        xbar::map_model(&pipe.model, &bm, &xcfg, MappingStrategy::Packed)
+    });
+    bench.run("xbar::map_model origin (resnet20)", || {
+        xbar::map_model(&pipe.model, &bm, &xcfg, MappingStrategy::Origin)
+    });
+
+    // 3. cost model
+    let mapping = xbar::map_model(&pipe.model, &bm, &xcfg, MappingStrategy::Packed);
+    bench.run("xbar::cost (resnet20)", || xbar::cost(&mapping, &xcfg));
+
+    // 4. PJRT forward (one eval batch = 128 images)
+    let exe = pipe.model.entry.executables.get("fwd_eval").unwrap().clone();
+    let theta_t = Tensor::from_vec(pipe.theta.clone());
+    let (xb, _) = pipe.test.batch(0, pipe.model.entry.batch.eval);
+    bench.run("pjrt fwd_eval (resnet20, batch 128)", || {
+        c.runtime.exec(&exe, &[theta_t.clone(), xb.clone()]).expect("exec")
+    });
+
+    // 5. standalone Pallas strip-MVM kernel
+    let k = &c.manifest.kernel;
+    let mut rng = Rng::seed_from_u64(3);
+    let a = Tensor::new(
+        vec![k.t, k.g * k.d],
+        (0..k.t * k.g * k.d).map(|_| rng.normal()).collect(),
+    );
+    let w = Tensor::new(
+        vec![k.g * k.d, k.n],
+        (0..k.g * k.d * k.n).map(|_| (rng.below(255) as f32) - 127.0).collect(),
+    );
+    let s = Tensor::new(
+        vec![k.g, k.n],
+        (0..k.g * k.n).map(|_| rng.range(0.001, 0.01) as f32).collect(),
+    );
+    bench.run("pjrt strip_mvm kernel (128x144x64)", || {
+        c.runtime
+            .exec(&k.strip_mvm, &[a.clone(), w.clone(), s.clone()])
+            .expect("kernel")
+    });
+
+    // 6. the mixed-precision kernel (two clusters + stepwise accumulation)
+    let wq = w.clone();
+    let sq = s.clone();
+    bench.run("pjrt mixed_strip_mvm kernel", || {
+        c.runtime
+            .exec(
+                &k.mixed_strip_mvm,
+                &[a.clone(), wq.clone(), sq.clone(), w.clone(), s.clone()],
+            )
+            .expect("kernel")
+    });
+}

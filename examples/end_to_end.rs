@@ -1,0 +1,161 @@
+//! End-to-end driver — exercises every layer of the stack on the real
+//! workload and proves they compose (the run recorded in EXPERIMENTS.md):
+//!
+//!   1. load the AOT artifacts (JAX/Pallas → HLO text → PJRT),
+//!   2. Hutchinson strip-sensitivity analysis through the `hvp` executable,
+//!   3. FIM-guided threshold search (Algorithm 1 *and* the §5 sweep),
+//!   4. dynamic clustering + crossbar-capacity alignment,
+//!   5. mixed-precision quantization + NeuroSim-lite mapping/cost,
+//!   6. full-test-set accuracy through the `fwd_eval` executable,
+//!   7. batched serving through the engine (the L3 request hot path),
+//!   8. the L1 Pallas kernel executed standalone and checked in Rust.
+//!
+//!     cargo run --release --example end_to_end
+
+use std::time::Instant;
+
+use reram_mpq::coordinator::{Engine, EngineConfig, Pipeline, ThresholdMode};
+use reram_mpq::dataset::TestSet;
+use reram_mpq::tensor::Tensor;
+use reram_mpq::util::rng::Rng;
+use reram_mpq::xbar::MappingStrategy;
+use reram_mpq::{artifacts_dir, Manifest, Result, RunConfig, Runtime};
+
+fn main() -> Result<()> {
+    let t_start = Instant::now();
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let runtime = Runtime::new(dir.clone())?;
+    let cfg = RunConfig::default();
+
+    println!("== end-to-end: {} ==", runtime.platform());
+    println!("hardware (Table 1): {}", cfg.xbar.to_value().to_json());
+
+    // ---- 1+2: sensitivity analysis --------------------------------------
+    let mut pipe = Pipeline::new(&runtime, &manifest, "resnet20", cfg.clone())?;
+    let t0 = Instant::now();
+    let sens = pipe.sensitivity()?.clone();
+    let sorted = sens.sorted_scores();
+    println!(
+        "[sensitivity] {} strips, {} probes, {:.1}s; median score {:.3e}, p99 {:.3e}",
+        sorted.len(),
+        sens.probes,
+        t0.elapsed().as_secs_f64(),
+        sorted[sorted.len() / 2],
+        sorted[sorted.len() * 99 / 100]
+    );
+
+    // ---- 3: threshold search (both modes) --------------------------------
+    let t0 = Instant::now();
+    let (c_alg1, evals1) = pipe.choose_clustering(ThresholdMode::Alg1)?;
+    println!(
+        "[alg1 ] chose CR {:.1}% (q_hi={}) after {} FIM evals, {:.1}s",
+        c_alg1.compression_ratio(8) * 100.0,
+        c_alg1.q_hi,
+        evals1,
+        t0.elapsed().as_secs_f64()
+    );
+    let t0 = Instant::now();
+    let (c_sweep, evals2) = pipe.choose_clustering(ThresholdMode::Sweep)?;
+    println!(
+        "[sweep] chose CR {:.1}% (q_hi={}) after {} FIM evals, {:.1}s",
+        c_sweep.compression_ratio(8) * 100.0,
+        c_sweep.q_hi,
+        evals2,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- 4+5+6: full pipeline at the sweep's operating point -------------
+    let t0 = Instant::now();
+    let report = pipe.run(ThresholdMode::Sweep, true, MappingStrategy::Packed, usize::MAX)?;
+    println!(
+        "[pipeline] CR {:.1}%: top1 {:.2}% (fp32 {:.2}%), {:.3} mJ/img, {:.3} ms/img, util(hi) {:.1}%, {:.1}s",
+        report.compression_ratio * 100.0,
+        report.accuracy.top1 * 100.0,
+        report.fp32_accuracy * 100.0,
+        report.cost.energy.system_mj(),
+        report.cost.latency_ms,
+        report.utilization_hi * 100.0,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- 7: serving engine -----------------------------------------------
+    let qtheta = reram_mpq::quant::apply(
+        &pipe.model,
+        &pipe.theta,
+        &c_sweep.bitmap,
+        &cfg.quant,
+    )
+    .theta;
+    let engine = Engine::new(dir.clone(), &pipe.model, qtheta, EngineConfig::default())?;
+    let handle = engine.start();
+    let _ = handle.classify(vec![0.0; 32 * 32 * 3])?; // warm the executable
+    let test = TestSet::load(&manifest)?;
+    let n = 256.min(test.len());
+    let elems = 32 * 32 * 3;
+    let t0 = Instant::now();
+    let mut correct = 0;
+    let mut i = 0;
+    while i < n {
+        let hi = (i + 32).min(n);
+        let pend: Vec<_> = (i..hi)
+            .map(|j| handle.submit(test.x.data()[j * elems..(j + 1) * elems].to_vec()))
+            .collect::<Result<_>>()?;
+        for (j, p) in (i..hi).zip(pend) {
+            if p.wait()?.class == test.y[j] {
+                correct += 1;
+            }
+        }
+        i = hi;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let snap = handle.metrics.snapshot();
+    println!(
+        "[serve] {n} reqs in {:.2}s = {:.0} req/s, acc {:.2}%, mean batch fill {:.2}, mean batch latency {:.0}us",
+        dt,
+        n as f64 / dt,
+        correct as f64 / n as f64 * 100.0,
+        snap.mean_batch_fill,
+        snap.mean_latency_us
+    );
+
+    // ---- 8: the L1 Pallas kernel, standalone ------------------------------
+    let k = &manifest.kernel;
+    let (t, d, g, nk) = (k.t, k.d, k.g, k.n);
+    let mut rng = Rng::seed_from_u64(1);
+    let a: Vec<f32> = (0..t * g * d).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..g * d * nk).map(|_| (rng.below(15) as f32) - 7.0).collect();
+    let s: Vec<f32> = (0..g * nk).map(|_| rng.range(0.01, 0.1) as f32).collect();
+    let out = runtime.exec(
+        &k.strip_mvm,
+        &[
+            Tensor::new(vec![t, g * d], a.clone()),
+            Tensor::new(vec![g * d, nk], w.clone()),
+            Tensor::new(vec![g, nk], s.clone()),
+        ],
+    )?;
+    // Rust-side oracle.
+    let mut want = vec![0.0f32; t * nk];
+    for ti in 0..t {
+        for gi in 0..g {
+            for ni in 0..nk {
+                let mut acc = 0.0f32;
+                for di in 0..d {
+                    acc += a[ti * g * d + gi * d + di] * w[(gi * d + di) * nk + ni];
+                }
+                want[ti * nk + ni] += acc * s[gi * nk + ni];
+            }
+        }
+    }
+    let max_err = out[0]
+        .data()
+        .iter()
+        .zip(&want)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    println!("[kernel] strip_mvm [{t}x{}]x[{}x{nk}] max|err| vs rust oracle = {max_err:.2e}", g * d, g * d);
+    assert!(max_err < 1e-3, "kernel mismatch");
+
+    println!("== end-to-end complete in {:.1}s ==", t_start.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: compress a pre-trained model with the sensitivity-aware
+//! mixed-precision pipeline and print accuracy + hardware cost.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! (Run `make artifacts` first.)
+
+use reram_mpq::coordinator::{Pipeline, ThresholdMode};
+use reram_mpq::xbar::MappingStrategy;
+use reram_mpq::{artifacts_dir, Manifest, Result, RunConfig, Runtime};
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let runtime = Runtime::new(dir)?;
+
+    // Compress the ResNet20 backbone at 70% compression (70% of strips in
+    // 4-bit crossbars), with dynamic crossbar alignment + packed mapping.
+    let mut pipe = Pipeline::new(&runtime, &manifest, "resnet20", RunConfig::default())?;
+    let report = pipe.run(
+        ThresholdMode::FixedCr(0.7),
+        /*align=*/ true,
+        MappingStrategy::Packed,
+        /*eval_batches=*/ 4,
+    )?;
+
+    println!("== quickstart: sensitivity-aware mixed-precision quantization ==");
+    println!("model:        {}", report.model);
+    println!("fp32 top-1:   {:.2}%", report.fp32_accuracy * 100.0);
+    println!(
+        "quantized:    {:.2}% top-1 at CR {:.0}% ({} hi / {} strips)",
+        report.accuracy.top1 * 100.0,
+        report.compression_ratio * 100.0,
+        report.q_hi,
+        report.total_strips
+    );
+    println!(
+        "crossbars:    {:.2}% bit utilization (8-bit arrays), {:.2}% overall",
+        report.utilization_hi * 100.0,
+        report.utilization_all * 100.0
+    );
+    println!(
+        "per image:    {:.3} mJ system energy ({:.3} mJ ADC), {:.3} ms latency",
+        report.cost.energy.system_mj(),
+        report.cost.energy.adc_mj,
+        report.cost.latency_ms
+    );
+    Ok(())
+}

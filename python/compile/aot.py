@@ -1,0 +1,220 @@
+"""AOT pipeline: train the model zoo, lower every graph to HLO *text*,
+export weights + dataset + manifest for the Rust coordinator.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the `xla` 0.1.6 crate binds) rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Run: `cd python && python -m compile.aot --out-dir ../artifacts`
+Python never runs again after this (request path is pure Rust).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model, train
+from .kernels import strip_mvm
+
+MODELS = ["resnet8", "resnet14", "resnet20"]
+EVAL_BATCH = 128
+SERVE_BATCH = 8
+CALIB_BATCH = 32
+
+# Standalone kernel export shape: 3x3 kernel over 16 channels -> G=9 groups,
+# R=144 reduction, 64 output strips-columns, T=128 activation rows.
+KERNEL_T, KERNEL_D, KERNEL_G, KERNEL_N = 128, 16, 9, 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_hlo(path: str, fn, *example_args) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)/1e3:.0f} kB)")
+
+
+def write_bin(path: str, arr: np.ndarray) -> dict:
+    """Little-endian f32 raw tensor + shape entry for the manifest."""
+    a = np.ascontiguousarray(arr, dtype=np.float32)
+    a.tofile(path)
+    return {"file": os.path.basename(path), "shape": list(a.shape), "dtype": "f32"}
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_model(name: str, theta: np.ndarray, fp_acc: float, out: str) -> dict:
+    p = model.num_params(name)
+    pc = model.num_conv_params(name)
+
+    # fwd: logits = f(theta, x) — theta is a graph *parameter* so Rust feeds
+    # quantized weights through the same executable.
+    for tag, b in (("eval", EVAL_BATCH), ("serve", SERVE_BATCH)):
+        write_hlo(
+            os.path.join(out, f"{name}_fwd_{tag}.hlo.txt"),
+            lambda th, x: (model.forward(name, th, x),),
+            spec((p,)),
+            spec((b, 32, 32, 3)),
+        )
+
+    # hvp: one Hutchinson probe step -> v * Hv over conv params.
+    write_hlo(
+        os.path.join(out, f"{name}_hvp.hlo.txt"),
+        lambda th, x, y, v: (model.hvp_diag_probe(name, th, x, y, v),),
+        spec((p,)),
+        spec((CALIB_BATCH, 32, 32, 3)),
+        spec((CALIB_BATCH, model.NUM_CLASSES)),
+        spec((pc,)),
+    )
+
+    # gsq: empirical Fisher diagonal over conv params.
+    write_hlo(
+        os.path.join(out, f"{name}_gsq.hlo.txt"),
+        lambda th, x, y: (model.fisher_diag(name, th, x, y),),
+        spec((p,)),
+        spec((CALIB_BATCH, 32, 32, 3)),
+        spec((CALIB_BATCH, model.NUM_CLASSES)),
+    )
+
+    params_entry = write_bin(os.path.join(out, f"{name}_params.bin"), theta)
+
+    convflat_off = 0
+    layers = []
+    for s in model.param_specs(name):
+        e = {
+            "name": s.name,
+            "shape": list(s.shape),
+            "kind": s.kind,
+            "theta_offset": s.offset,
+        }
+        if s.quantizable:
+            e["convflat_offset"] = convflat_off
+            convflat_off += s.size
+        layers.append(e)
+
+    return {
+        "name": name,
+        "num_params": p,
+        "num_conv_params": pc,
+        "fp32_test_acc": fp_acc,
+        "params": params_entry,
+        "layers": layers,
+        "executables": {
+            "fwd_eval": f"{name}_fwd_eval.hlo.txt",
+            "fwd_serve": f"{name}_fwd_serve.hlo.txt",
+            "hvp": f"{name}_hvp.hlo.txt",
+            "gsq": f"{name}_gsq.hlo.txt",
+        },
+        "batch": {"eval": EVAL_BATCH, "serve": SERVE_BATCH, "calib": CALIB_BATCH},
+    }
+
+
+def export_kernel(out: str) -> dict:
+    """Standalone L1 kernel executables for Rust-side kernel benches."""
+    t, d, g, n = KERNEL_T, KERNEL_D, KERNEL_G, KERNEL_N
+    r = g * d
+    write_hlo(
+        os.path.join(out, "strip_mvm.hlo.txt"),
+        lambda a, w, s: (strip_mvm.strip_mvm(a, w, s, group_size=d),),
+        spec((t, r)),
+        spec((r, n)),
+        spec((g, n)),
+    )
+    write_hlo(
+        os.path.join(out, "mixed_strip_mvm.hlo.txt"),
+        lambda a, wq, sq, wp, sp_: (
+            strip_mvm.mixed_strip_mvm(a, wq, sq, wp, sp_, group_size=d),
+        ),
+        spec((t, r)),
+        spec((r, n)),
+        spec((g, n)),
+        spec((r, n)),
+        spec((g, n)),
+    )
+    return {
+        "t": t,
+        "d": d,
+        "g": g,
+        "n": n,
+        "strip_mvm": "strip_mvm.hlo.txt",
+        "mixed_strip_mvm": "mixed_strip_mvm.hlo.txt",
+    }
+
+
+def export_pallas_fwd(name: str, out: str) -> str:
+    """Forward with the Pallas kernel inlined (L1-in-L2 composition proof)."""
+    p = model.num_params(name)
+    fname = f"{name}_fwd_pallas.hlo.txt"
+    write_hlo(
+        os.path.join(out, fname),
+        lambda th, x: (model.forward_pallas(name, th, x),),
+        spec((p,)),
+        spec((SERVE_BATCH, 32, 32, 3)),
+    )
+    return fname
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+
+    sp = data.splits(seed=args.seed)
+    manifest: dict = {
+        "version": 1,
+        "dataset": {},
+        "models": {},
+        "kernel": {},
+        "num_classes": model.NUM_CLASSES,
+    }
+
+    # Dataset export (test + calib; train stays python-side).
+    xt, yt = sp["test"]
+    xc_, yc = sp["calib"]
+    manifest["dataset"]["test_x"] = write_bin(os.path.join(out, "test_x.bin"), xt)
+    manifest["dataset"]["test_y"] = write_bin(
+        os.path.join(out, "test_y.bin"), yt.astype(np.float32)
+    )
+    manifest["dataset"]["calib_x"] = write_bin(os.path.join(out, "calib_x.bin"), xc_)
+    manifest["dataset"]["calib_y1h"] = write_bin(
+        os.path.join(out, "calib_y1h.bin"), data.one_hot(yc)
+    )
+
+    ckpt = os.path.join(out, "ckpt")
+    for name in MODELS:
+        theta, acc = train.train_cached(name, sp, ckpt, seed=args.seed)
+        manifest["models"][name] = export_model(name, theta, acc, out)
+
+    manifest["kernel"] = export_kernel(out)
+    manifest["models"]["resnet8"]["executables"]["fwd_pallas"] = export_pallas_fwd(
+        "resnet8", out
+    )
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written; artifacts complete in {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""CIFAR-Syn: deterministic synthetic 10-class 32x32x3 image corpus.
+
+Substitute for CIFAR-10 (no network access in this environment — see
+DESIGN.md §5). Each class is defined by an (orientation, frequency, color,
+blob-layout) signature; per-sample variation comes from heavy signature
+jitter, a *distractor* pattern borrowed from another class, contrast
+scaling and strong additive Gaussian noise. The jitters are tuned so the
+class manifolds genuinely overlap: a small CNN lands near ~90% test
+accuracy (CIFAR-10-like) and *degrades* under aggressive quantization —
+the regime the paper's experiments live in.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 10
+IMG_HW = 32
+
+# Per-class color palettes (RGB weight of the carrier grating), partially
+# desaturated so color is a weak cue.
+_BASE_PALETTE = np.array(
+    [
+        [1.00, 0.25, 0.25],
+        [0.25, 1.00, 0.25],
+        [0.25, 0.25, 1.00],
+        [0.95, 0.95, 0.20],
+        [0.90, 0.30, 0.90],
+        [0.20, 0.90, 0.90],
+        [0.95, 0.60, 0.20],
+        [0.55, 0.35, 0.95],
+        [0.65, 0.85, 0.35],
+        [0.80, 0.80, 0.80],
+    ],
+    dtype=np.float32,
+)
+_GRAY = np.array([0.6, 0.6, 0.6], dtype=np.float32)
+DESATURATION = 0.45  # 0 = full color cue, 1 = no color cue
+_PALETTE = (1 - DESATURATION) * _BASE_PALETTE + DESATURATION * _GRAY
+
+NOISE_SIGMA = 0.75      # pixel noise
+THETA_JITTER = 0.12     # orientation jitter (rad); class separation is pi/10
+FREQ_JITTER = 0.30      # cycles jitter; class separation is 0.8
+DISTRACTOR_MAX = 0.40   # max weight of the other-class distractor grating
+
+
+def _grating(theta: np.ndarray, freq: np.ndarray, phase: np.ndarray) -> np.ndarray:
+    """Batch of oriented sinusoidal gratings, shape [B, H, W]."""
+    yy, xx = np.meshgrid(
+        np.linspace(-1.0, 1.0, IMG_HW), np.linspace(-1.0, 1.0, IMG_HW), indexing="ij"
+    )
+    xx = xx[None]  # [1, H, W]
+    yy = yy[None]
+    ct = np.cos(theta)[:, None, None]
+    st = np.sin(theta)[:, None, None]
+    carrier = xx * ct + yy * st
+    return np.sin(2.0 * np.pi * freq[:, None, None] * carrier + phase[:, None, None])
+
+
+def _blobs(cls: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Class-hinted Gaussian blob layout (weak cue), shape [B, H, W]."""
+    b = cls.shape[0]
+    yy, xx = np.meshgrid(
+        np.linspace(-1.0, 1.0, IMG_HW), np.linspace(-1.0, 1.0, IMG_HW), indexing="ij"
+    )
+    ang = 2.0 * np.pi * cls / NUM_CLASSES + rng.normal(0.0, 0.7, size=b)
+    r = 0.45 + rng.normal(0.0, 0.15, size=b)
+    cx = r * np.cos(ang)
+    cy = r * np.sin(ang)
+    sig = 0.22 + 0.015 * (cls % 3)
+    d2 = (xx[None] - cx[:, None, None]) ** 2 + (yy[None] - cy[:, None, None]) ** 2
+    return np.exp(-d2 / (2.0 * sig[:, None, None] ** 2))
+
+
+def _class_params(cls: np.ndarray, rng: np.random.Generator):
+    theta = np.pi * cls / NUM_CLASSES + rng.normal(0.0, THETA_JITTER, size=cls.shape[0])
+    freq = 2.0 + (cls % 5) * 0.8 + rng.normal(0.0, FREQ_JITTER, size=cls.shape[0])
+    phase = rng.uniform(0.0, 2.0 * np.pi, size=cls.shape[0])
+    return theta, freq, phase
+
+
+def generate(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate `n` samples. Returns (images [n,32,32,3] f32, labels [n] i32)."""
+    rng = np.random.default_rng(seed)
+    cls = rng.integers(0, NUM_CLASSES, size=n)
+
+    theta, freq, phase = _class_params(cls, rng)
+    g = _grating(theta, freq, phase)  # [n, H, W]
+
+    # Distractor: a grating from a *different* class, mixed in.
+    other = (cls + rng.integers(1, NUM_CLASSES, size=n)) % NUM_CLASSES
+    ot, of, op = _class_params(other, rng)
+    g_dis = _grating(ot, of, op)
+    lam = rng.uniform(0.0, DISTRACTOR_MAX, size=n)[:, None, None]
+    g = (1.0 - lam) * g + lam * g_dis
+
+    blob = _blobs(cls, rng)
+    contrast = rng.uniform(0.55, 1.3, size=n)[:, None, None]
+
+    base = contrast * (0.65 * g + 0.45 * blob)  # [n, H, W]
+    color = _PALETTE[cls]  # [n, 3]
+    img = base[..., None] * color[:, None, None, :]
+    img = img + rng.normal(0.0, NOISE_SIGMA, size=img.shape)
+    img = np.clip(img, -2.5, 2.5).astype(np.float32)
+    return img, cls.astype(np.int32)
+
+
+def splits(
+    n_train: int = 8192, n_test: int = 2048, n_calib: int = 512, seed: int = 7
+) -> dict[str, tuple[np.ndarray, np.ndarray]]:
+    """Disjoint-seed train/test/calib splits."""
+    return {
+        "train": generate(n_train, seed),
+        "test": generate(n_test, seed + 1000),
+        "calib": generate(n_calib, seed + 2000),
+    }
+
+
+def one_hot(labels: np.ndarray) -> np.ndarray:
+    out = np.zeros((labels.shape[0], NUM_CLASSES), dtype=np.float32)
+    out[np.arange(labels.shape[0]), labels] = 1.0
+    return out

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the Pallas strip-MVM kernel (no pallas imports)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def strip_mvm_ref(
+    a: jnp.ndarray, w: jnp.ndarray, gscale: jnp.ndarray, *, group_size: int
+) -> jnp.ndarray:
+    """Reference: Z[t,n] = sum_g (A_g @ W_g)[t,n] * gscale[g,n]."""
+    t, r = a.shape
+    _, n = w.shape
+    g = r // group_size
+    ag = a.reshape(t, g, group_size)
+    wg = w.reshape(g, group_size, n)
+    # [t, g, n] partial products per strip group
+    parts = jnp.einsum("tgd,gdn->tgn", ag, wg)
+    return jnp.sum(parts * gscale[None, :, :], axis=1)
+
+
+def mixed_strip_mvm_ref(
+    a, w_hi, s_hi, w_lo, s_lo, *, group_size: int
+) -> jnp.ndarray:
+    return strip_mvm_ref(a, w_hi, s_hi, group_size=group_size) + strip_mvm_ref(
+        a, w_lo, s_lo, group_size=group_size
+    )
+
+
+def dequantize_ref(codes: jnp.ndarray, gscale: jnp.ndarray, *, group_size: int):
+    """Expand quantized codes back to f32 weights: w = codes * scale[strip]."""
+    r, n = codes.shape
+    g = r // group_size
+    return (codes.reshape(g, group_size, n) * gscale[:, None, :]).reshape(r, n)

@@ -1,0 +1,181 @@
+"""L1: Pallas strip-MVM kernel — the paper's compute hot-spot.
+
+The crossbar-shaped primitive: an im2col'd activation tile `A [T, R]` times
+a weight matrix `W [R, N]` whose reduction dimension is partitioned into
+G = R/D *strip groups* of size D (one group per (kh, kw) kernel position —
+each column of a group is one of the paper's 1x1xD strip-weights). Each
+(group g, output column n) cell carries its own quantization scale
+`gscale[g, n]`, so the kernel computes
+
+    Z[t, n] = sum_g  ( sum_d A[t, g*D+d] * W[g*D+d, n] ) * gscale[g, n]
+
+i.e. per-array integer partial sums merged with per-strip rescale — exactly
+the shift-and-add merge a ReRAM tile does after its ADCs, and exactly the
+paper's stepwise accumulation when called once for the high-bit cluster and
+once for the low-bit cluster (`expand()` = the scale ratio folded into
+`gscale`; see `mixed_strip_mvm`).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks (T tiles ×
+strip groups); each step is a `[bT, D] x [D, N]` MXU matmul with the
+VPU applying the per-strip rescale into the VMEM accumulator. Weights are
+carried as integer-valued f32 (analog conductances are not int8 registers);
+`interpret=True` everywhere because the CPU PJRT plugin cannot execute
+Mosaic custom-calls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Default tile height; T is padded to a multiple of this.
+BLOCK_T = 128
+
+
+def _kernel(a_ref, w_ref, s_ref, o_ref):
+    g = pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    part = jnp.dot(a_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] += part * s_ref[0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "block_t"))
+def strip_mvm(
+    a: jnp.ndarray,
+    w: jnp.ndarray,
+    gscale: jnp.ndarray,
+    *,
+    group_size: int,
+    block_t: int = BLOCK_T,
+) -> jnp.ndarray:
+    """Strip-grouped scaled MVM.
+
+    a:      [T, R] activations (f32; integer-valued when modelling DAC codes)
+    w:      [R, N] weights (f32; integer-valued quantized codes)
+    gscale: [G, N] per-(strip-group, output-channel) scale, G = R/group_size
+    returns [T, N] f32
+    """
+    t, r = a.shape
+    rw, n = w.shape
+    assert r == rw, (r, rw)
+    assert r % group_size == 0, (r, group_size)
+    g = r // group_size
+    assert gscale.shape == (g, n), (gscale.shape, g, n)
+
+    bt = min(block_t, t)
+    pad_t = (-t) % bt
+    if pad_t:
+        a = jnp.pad(a, ((0, pad_t), (0, 0)))
+    tp = t + pad_t
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(tp // bt, g),
+        in_specs=[
+            pl.BlockSpec((bt, group_size), lambda i, j: (i, j)),
+            pl.BlockSpec((group_size, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, n), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tp, n), jnp.float32),
+        interpret=True,
+    )(a, w, gscale)
+    return out[:t]
+
+
+def mixed_strip_mvm(
+    a: jnp.ndarray,
+    w_hi: jnp.ndarray,
+    s_hi: jnp.ndarray,
+    w_lo: jnp.ndarray,
+    s_lo: jnp.ndarray,
+    *,
+    group_size: int,
+) -> jnp.ndarray:
+    """Precision-coordinated parallel computation (paper §4.3).
+
+    The high-bit cluster (8-bit codes, per-strip scale `s_hi`) and low-bit
+    cluster (4-bit codes, per-strip scale `s_lo`) hold *complementary* strips
+    (each is zero where the other is populated). They run as independent
+    crossbar programs; the final stepwise accumulation `Z = Z_q + expand(Z_p)`
+    aligns the low-bit partials onto the high-bit grid — `expand` being the
+    scale ratio already folded into `s_lo`.
+    """
+    z_q = strip_mvm(a, w_hi, s_hi, group_size=group_size)
+    z_p = strip_mvm(a, w_lo, s_lo, group_size=group_size)
+    return z_q + z_p
+
+
+# ---------------------------------------------------------------------------
+# Convolution routed through the kernel (for forward_pallas)
+# ---------------------------------------------------------------------------
+
+def im2col(x: jnp.ndarray, k: int, stride: int) -> jnp.ndarray:
+    """SAME-padding im2col matching lax.conv_general_dilated.
+
+    x: [B, H, W, C]  ->  [B, Ho, Wo, K*K*C], last axis ordered (kh, kw, c)
+    to match `w.reshape(K*K*C, N)` of an HWIO kernel.
+    """
+    b, h, w, c = x.shape
+    ho = -(-h // stride)
+    wo = -(-w // stride)
+    pad_h = max((ho - 1) * stride + k - h, 0)
+    pad_w = max((wo - 1) * stride + k - w, 0)
+    xp = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (pad_h // 2, pad_h - pad_h // 2),
+            (pad_w // 2, pad_w - pad_w // 2),
+            (0, 0),
+        ),
+    )
+    cols = []
+    for kh in range(k):
+        for kw in range(k):
+            sl = xp[:, kh : kh + (ho - 1) * stride + 1 : stride,
+                    kw : kw + (wo - 1) * stride + 1 : stride, :]
+            cols.append(sl)
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d_via_strips(x: jnp.ndarray, w: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """2D conv computed as strip-grouped MVM on the Pallas kernel (fp path:
+    all strip scales are 1)."""
+    k, _, c, n = w.shape
+    patches = im2col(x, k, stride)  # [B, Ho, Wo, K*K*C]
+    b, ho, wo, r = patches.shape
+    a = patches.reshape(b * ho * wo, r)
+    wm = w.reshape(r, n)
+    gscale = jnp.ones((k * k, n), dtype=jnp.float32)
+    z = strip_mvm(a, wm, gscale, group_size=c)
+    return z.reshape(b, ho, wo, n)
+
+
+# ---------------------------------------------------------------------------
+# Strip quantization helpers (shared by tests / aot demo tensors)
+# ---------------------------------------------------------------------------
+
+def quantize_strips(
+    wm: np.ndarray, bits: int, group_size: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-strip quantization of a [R, N] weight matrix.
+
+    Returns (codes [R, N] integer-valued f32, scale [G, N] f32) with
+    codes in [-(2^(b-1)-1), 2^(b-1)-1].
+    """
+    r, n = wm.shape
+    g = r // group_size
+    qmax = float(2 ** (bits - 1) - 1)
+    wg = wm.reshape(g, group_size, n)
+    amax = np.abs(wg).max(axis=1)  # [G, N]
+    scale = np.where(amax > 0, amax / qmax, 1.0).astype(np.float32)
+    codes = np.rint(wg / scale[:, None, :]).clip(-qmax, qmax)
+    return codes.reshape(r, n).astype(np.float32), scale

@@ -1,0 +1,282 @@
+"""L2: strip-conv ResNet family for CIFAR-Syn, in pure-functional JAX.
+
+Weights live in a single flat f32 vector so the Rust coordinator can feed
+quantized parameters into the AOT-compiled forward graph without rebuilding
+anything. `param_specs()` is the layout contract: the same (name, shape,
+offset, quantizable) table is exported into artifacts/manifest.json and
+consumed by rust/src/model/.
+
+Conv weights use HWIO layout `[K, K, D, N]`; a *strip-weight* (the paper's
+1x1xD unit) is the D-slice at a fixed (kx, ky, n). GroupNorm is used instead
+of BatchNorm so the inference graph has no running-stats plumbing (the paper
+quantizes conv weights only; normalization params stay fp32 either way).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NUM_CLASSES = 10
+
+CONFIGS: dict[str, dict] = {
+    # CIFAR-style stage widths 16/32/64. Block counts per stage:
+    "resnet8": dict(blocks=(1, 1, 1), width=16),   # shallow — "ResNet18" stand-in
+    "resnet14": dict(blocks=(2, 2, 2), width=16),  # deeper — "ResNet50" stand-in
+    "resnet20": dict(blocks=(3, 3, 3), width=16),  # Table 2 backbone
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    kind: str  # "conv" | "gn" | "dense_w" | "dense_b"
+    offset: int  # into the flat parameter vector
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+    @property
+    def quantizable(self) -> bool:
+        return self.kind == "conv"
+
+
+def _stage_widths(width: int) -> tuple[int, int, int]:
+    return (width, 2 * width, 4 * width)
+
+
+def param_specs(model: str) -> list[ParamSpec]:
+    """Deterministic flat layout of all parameters for `model`."""
+    cfg = CONFIGS[model]
+    widths = _stage_widths(cfg["width"])
+    specs: list[tuple[str, tuple[int, ...], str]] = []
+
+    def add(name, shape, kind):
+        specs.append((name, tuple(int(s) for s in shape), kind))
+
+    add("stem.conv", (3, 3, 3, widths[0]), "conv")
+    c_in = widths[0]
+    for s, (nblocks, c_out) in enumerate(zip(cfg["blocks"], widths)):
+        for b in range(nblocks):
+            pfx = f"s{s}.b{b}"
+            add(f"{pfx}.gn1.gamma", (c_in,), "gn")
+            add(f"{pfx}.gn1.beta", (c_in,), "gn")
+            add(f"{pfx}.conv1", (3, 3, c_in, c_out), "conv")
+            add(f"{pfx}.gn2.gamma", (c_out,), "gn")
+            add(f"{pfx}.gn2.beta", (c_out,), "gn")
+            add(f"{pfx}.conv2", (3, 3, c_out, c_out), "conv")
+            if c_in != c_out:
+                add(f"{pfx}.shortcut", (1, 1, c_in, c_out), "conv")
+            c_in = c_out
+    add("head.gn.gamma", (c_in,), "gn")
+    add("head.gn.beta", (c_in,), "gn")
+    add("head.dense.w", (c_in, NUM_CLASSES), "dense_w")
+    add("head.dense.b", (NUM_CLASSES,), "dense_b")
+
+    out, off = [], 0
+    for name, shape, kind in specs:
+        sp = ParamSpec(name, shape, kind, off)
+        out.append(sp)
+        off += sp.size
+    return out
+
+
+def num_params(model: str) -> int:
+    sp = param_specs(model)
+    return sp[-1].offset + sp[-1].size
+
+
+def conv_param_specs(model: str) -> list[ParamSpec]:
+    return [s for s in param_specs(model) if s.quantizable]
+
+
+def num_conv_params(model: str) -> int:
+    return sum(s.size for s in conv_param_specs(model))
+
+
+def unflatten(model: str, theta: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    return {
+        s.name: theta[s.offset : s.offset + s.size].reshape(s.shape)
+        for s in param_specs(model)
+    }
+
+
+def flatten(model: str, params: dict[str, np.ndarray]) -> np.ndarray:
+    sps = param_specs(model)
+    out = np.zeros(num_params(model), dtype=np.float32)
+    for s in sps:
+        out[s.offset : s.offset + s.size] = np.asarray(params[s.name]).reshape(-1)
+    return out
+
+
+def init_params(model: str, seed: int = 0) -> np.ndarray:
+    """He-init conv/dense, unit gamma / zero beta. Returns the flat vector."""
+    rng = np.random.default_rng(seed)
+    sps = param_specs(model)
+    theta = np.zeros(num_params(model), dtype=np.float32)
+    for s in sps:
+        if s.kind == "conv":
+            fan_in = s.shape[0] * s.shape[1] * s.shape[2]
+            w = rng.normal(0.0, np.sqrt(2.0 / fan_in), size=s.shape)
+        elif s.kind == "dense_w":
+            w = rng.normal(0.0, np.sqrt(1.0 / s.shape[0]), size=s.shape)
+        elif s.name.endswith("gamma"):
+            w = np.ones(s.shape)
+        else:  # beta, dense_b
+            w = np.zeros(s.shape)
+        theta[s.offset : s.offset + s.size] = w.reshape(-1).astype(np.float32)
+    return theta
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _group_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray) -> jnp.ndarray:
+    c = x.shape[-1]
+    groups = min(8, c)
+    b, h, w, _ = x.shape
+    xg = x.reshape(b, h, w, groups, c // groups)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) / jnp.sqrt(var + 1e-5)
+    x = xg.reshape(b, h, w, c)
+    return x * gamma + beta
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray, stride: int) -> jnp.ndarray:
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _conv_strip_pallas(x: jnp.ndarray, w: jnp.ndarray, stride: int) -> jnp.ndarray:
+    """Same conv, routed through the L1 Pallas strip-MVM kernel via im2col."""
+    from .kernels import strip_mvm
+
+    return strip_mvm.conv2d_via_strips(x, w, stride)
+
+
+def forward(
+    model: str,
+    theta: jnp.ndarray,
+    x: jnp.ndarray,
+    conv_fn: Callable[[jnp.ndarray, jnp.ndarray, int], jnp.ndarray] = _conv,
+) -> jnp.ndarray:
+    """Logits for a batch. `theta` is the flat parameter vector."""
+    cfg = CONFIGS[model]
+    widths = _stage_widths(cfg["width"])
+    p = unflatten(model, theta)
+
+    h = conv_fn(x, p["stem.conv"], 1)
+    c_in = widths[0]
+    for s, (nblocks, c_out) in enumerate(zip(cfg["blocks"], widths)):
+        for b in range(nblocks):
+            pfx = f"s{s}.b{b}"
+            stride = 2 if (s > 0 and b == 0) else 1
+            y = _group_norm(h, p[f"{pfx}.gn1.gamma"], p[f"{pfx}.gn1.beta"])
+            y = jax.nn.relu(y)
+            pre = y
+            y = conv_fn(y, p[f"{pfx}.conv1"], stride)
+            y = _group_norm(y, p[f"{pfx}.gn2.gamma"], p[f"{pfx}.gn2.beta"])
+            y = jax.nn.relu(y)
+            y = conv_fn(y, p[f"{pfx}.conv2"], 1)
+            if c_in != c_out:
+                h = conv_fn(pre, p[f"{pfx}.shortcut"], stride)
+            h = h + y
+            c_in = c_out
+    h = _group_norm(h, p["head.gn.gamma"], p["head.gn.beta"])
+    h = jax.nn.relu(h)
+    h = h.mean(axis=(1, 2))
+    return h @ p["head.dense.w"] + p["head.dense.b"]
+
+
+def forward_pallas(model: str, theta: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Forward with every conv routed through the Pallas strip-MVM kernel —
+    proves the L1 kernel composes into the L2 graph (lowers into one HLO)."""
+    return forward(model, theta, x, conv_fn=_conv_strip_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Loss / Hessian-vector products / Fisher diagonal
+# ---------------------------------------------------------------------------
+
+def loss(model: str, theta: jnp.ndarray, x: jnp.ndarray, y1h: jnp.ndarray) -> jnp.ndarray:
+    logits = forward(model, theta, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(y1h * logp, axis=-1))
+
+
+def _gather_conv(model: str, full: jnp.ndarray) -> jnp.ndarray:
+    """Concatenate the conv slices of a flat full-parameter-sized vector."""
+    parts = [full[s.offset : s.offset + s.size] for s in conv_param_specs(model)]
+    return jnp.concatenate(parts)
+
+
+def _scatter_conv(model: str, theta: jnp.ndarray, conv_flat: jnp.ndarray) -> jnp.ndarray:
+    """Overwrite the conv slices of `theta` with values from `conv_flat`."""
+    out = theta
+    off = 0
+    for s in conv_param_specs(model):
+        out = out.at[s.offset : s.offset + s.size].set(conv_flat[off : off + s.size])
+        off += s.size
+    return out
+
+
+def hvp_diag_probe(
+    model: str,
+    theta: jnp.ndarray,
+    x: jnp.ndarray,
+    y1h: jnp.ndarray,
+    v: jnp.ndarray,
+) -> jnp.ndarray:
+    """One Hutchinson step: returns `v * (H v)` restricted to conv params.
+
+    For Rademacher `v`, E[v * Hv] = diag(H); the Rust sensitivity driver
+    averages this over probes and sums within each strip to get
+    Trace(H_strip). `v` has length num_conv_params(model).
+    """
+
+    def loss_conv(conv_flat):
+        return loss(model, _scatter_conv(model, theta, conv_flat), x, y1h)
+
+    conv0 = _gather_conv(model, theta)
+    grad_fn = jax.grad(loss_conv)
+    _, hv = jax.jvp(grad_fn, (conv0,), (v,))
+    return v * hv
+
+
+def fisher_diag(
+    model: str, theta: jnp.ndarray, x: jnp.ndarray, y1h: jnp.ndarray
+) -> jnp.ndarray:
+    """Empirical Fisher diagonal over conv params: E_b[(d log p(y|x)/dθ)^2]."""
+
+    def nll_single(conv_flat, xi, yi):
+        logits = forward(model, _scatter_conv(model, theta, conv_flat), xi[None])
+        logp = jax.nn.log_softmax(logits)[0]
+        return -jnp.sum(yi * logp)
+
+    conv0 = _gather_conv(model, theta)
+    per = jax.vmap(lambda xi, yi: jax.grad(nll_single)(conv0, xi, yi))(x, y1h)
+    return jnp.mean(per**2, axis=0)
+
+
+def accuracy(
+    model: str, theta: jnp.ndarray, x: np.ndarray, y: np.ndarray, batch: int = 256
+) -> float:
+    fwd = jax.jit(lambda t, xb: forward(model, t, xb))
+    correct = 0
+    for i in range(0, x.shape[0] - batch + 1, batch):
+        logits = fwd(theta, x[i : i + batch])
+        correct += int((np.argmax(np.asarray(logits), axis=-1) == y[i : i + batch]).sum())
+    n = (x.shape[0] // batch) * batch
+    return correct / max(n, 1)

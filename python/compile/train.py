@@ -1,0 +1,94 @@
+"""Build-time trainer for the CIFAR-Syn model zoo.
+
+Runs ONCE inside `make artifacts` (compile path). Adam + cosine decay,
+cross-entropy. Checkpoints are cached under artifacts/ckpt/ keyed by a
+config digest so re-running aot.py does not retrain unnecessarily.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model
+
+EPOCHS = {"resnet8": 14, "resnet14": 14, "resnet20": 14}
+BATCH = 128
+LR = 2e-3
+
+
+def _adam_step(theta, m, v, g, lr, t, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1**t)
+    vh = v / (1 - b2**t)
+    return theta - lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def train(name: str, train_xy, test_xy, seed: int = 0, epochs: int | None = None):
+    """Train `name` on CIFAR-Syn; returns (theta flat f32, test_accuracy)."""
+    x, y = train_xy
+    y1h = data.one_hot(y)
+    n = x.shape[0]
+    epochs = epochs or EPOCHS[name]
+    steps_per_epoch = n // BATCH
+    total = epochs * steps_per_epoch
+
+    theta = jnp.asarray(model.init_params(name, seed))
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+
+    @jax.jit
+    def step(theta, m, v, xb, yb, t):
+        l, g = jax.value_and_grad(lambda th: model.loss(name, th, xb, yb))(theta)
+        lr = LR * 0.5 * (1 + jnp.cos(jnp.pi * t / total))
+        theta, m, v = _adam_step(theta, m, v, g, lr, t)
+        return theta, m, v, l
+
+    rng = np.random.default_rng(seed + 99)
+    t = 0
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(steps_per_epoch):
+            idx = perm[i * BATCH : (i + 1) * BATCH]
+            t += 1
+            theta, m, v, l = step(theta, m, v, x[idx], y1h[idx], t)
+        if (ep + 1) % 4 == 0 or ep == epochs - 1:
+            acc = model.accuracy(name, theta, test_xy[0], test_xy[1])
+            print(f"[train:{name}] epoch {ep+1}/{epochs} loss={float(l):.4f} test_acc={acc:.4f}")
+    acc = model.accuracy(name, theta, test_xy[0], test_xy[1])
+    return np.asarray(theta, dtype=np.float32), float(acc)
+
+
+def _digest(name: str, seed: int) -> str:
+    key = json.dumps(
+        {
+            "name": name,
+            "cfg": model.CONFIGS[name],
+            "seed": seed,
+            "epochs": EPOCHS[name],
+            "batch": BATCH,
+            "lr": LR,
+            "noise": data.NOISE_SIGMA,
+        },
+        sort_keys=True,
+    )
+    return hashlib.sha256(key.encode()).hexdigest()[:16]
+
+
+def train_cached(name: str, splits, ckpt_dir: str, seed: int = 0):
+    """Train or load from cache. Returns (theta, test_acc)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tag = _digest(name, seed)
+    path = os.path.join(ckpt_dir, f"{name}_{tag}.npz")
+    if os.path.exists(path):
+        z = np.load(path)
+        print(f"[train:{name}] cache hit {path} (acc={float(z['acc']):.4f})")
+        return z["theta"].astype(np.float32), float(z["acc"])
+    theta, acc = train(name, splits["train"], splits["test"], seed=seed)
+    np.savez(path, theta=theta, acc=np.float32(acc))
+    return theta, acc

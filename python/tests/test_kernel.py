@@ -1,0 +1,120 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+hypothesis sweeps shapes and value ranges; every case asserts allclose
+between the Pallas (interpret) kernel and ref.py.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, strip_mvm
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, shape, scale=1.0):
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+@given(
+    t=st.integers(1, 200),
+    d=st.integers(1, 32),
+    g=st.integers(1, 12),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_strip_mvm_matches_ref(t, d, g, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (t, g * d))
+    w = _rand(rng, (g * d, n))
+    s = rng.uniform(0.25, 4.0, size=(g, n)).astype(np.float32)
+    got = strip_mvm.strip_mvm(jnp.asarray(a), jnp.asarray(w), jnp.asarray(s), group_size=d)
+    want = ref.strip_mvm_ref(jnp.asarray(a), jnp.asarray(w), jnp.asarray(s), group_size=d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@given(
+    t=st.integers(1, 64),
+    d=st.integers(1, 16),
+    g=st.integers(1, 9),
+    n=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mixed_strip_mvm_matches_ref(t, d, g, n, seed):
+    """Complementary hi/lo clusters; stepwise accumulation must equal the
+    single-matmul reference on the dequantized weights."""
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (t, g * d))
+    w = _rand(rng, (g * d, n))
+    # Random strip partition (g, n) -> hi or lo.
+    hi_mask = rng.random(size=(g, n)) < 0.5
+    codes_hi, s_hi = strip_mvm.quantize_strips(w, 8, d)
+    codes_lo, s_lo = strip_mvm.quantize_strips(w, 4, d)
+    mh = np.repeat(hi_mask, d, axis=0)
+    wq = (codes_hi * mh).astype(np.float32)
+    wp = (codes_lo * ~mh).astype(np.float32)
+    sq = (s_hi * hi_mask).astype(np.float32)
+    sp_ = (s_lo * ~hi_mask).astype(np.float32)
+
+    got = strip_mvm.mixed_strip_mvm(
+        jnp.asarray(a), jnp.asarray(wq), jnp.asarray(sq), jnp.asarray(wp), jnp.asarray(sp_), group_size=d
+    )
+    # Oracle: dequantize each cluster and do one f32 matmul.
+    w_deq = np.asarray(
+        ref.dequantize_ref(jnp.asarray(wq), jnp.asarray(sq), group_size=d)
+    ) + np.asarray(ref.dequantize_ref(jnp.asarray(wp), jnp.asarray(sp_), group_size=d))
+    want = a @ w_deq
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3, atol=1e-3)
+
+
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    d=st.integers(1, 16),
+    g=st.integers(1, 9),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_strips_roundtrip_bound(bits, d, g, n, seed):
+    """|w - dequant(quant(w))| <= scale/2 elementwise (symmetric uniform)."""
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, (g * d, n), scale=2.0)
+    codes, scale = strip_mvm.quantize_strips(w, bits, d)
+    qmax = 2 ** (bits - 1) - 1
+    assert np.abs(codes).max() <= qmax
+    w_deq = np.asarray(ref.dequantize_ref(jnp.asarray(codes), jnp.asarray(scale), group_size=d))
+    err = np.abs(w - w_deq).reshape(g, d, n)
+    # strict half-LSB bound, with relative slack for f32 rounding at the
+    # exact midpoints
+    bound = np.broadcast_to(scale[:, None, :] * 0.5 * (1 + 1e-5) + 1e-6, err.shape)
+    np.testing.assert_array_less(err, bound)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("k", [1, 3])
+def test_conv_via_strips_matches_lax(stride, k):
+    import jax
+
+    rng = np.random.default_rng(3)
+    x = _rand(rng, (2, 16, 16, 8))
+    w = _rand(rng, (k, k, 8, 12))
+    got = strip_mvm.conv2d_via_strips(jnp.asarray(x), jnp.asarray(w), stride)
+    want = jax.lax.conv_general_dilated(
+        jnp.asarray(x), jnp.asarray(w), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_strip_mvm_zero_scale_kills_contribution():
+    rng = np.random.default_rng(5)
+    d, g, n = 4, 3, 6
+    a = _rand(rng, (10, g * d))
+    w = _rand(rng, (g * d, n))
+    s = np.ones((g, n), dtype=np.float32)
+    s[1, :] = 0.0
+    got = np.asarray(strip_mvm.strip_mvm(jnp.asarray(a), jnp.asarray(w), jnp.asarray(s), group_size=d))
+    w_masked = w.copy()
+    w_masked[d : 2 * d, :] = 0.0
+    np.testing.assert_allclose(got, a @ w_masked, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,124 @@
+"""L2 model tests: layout contract, forward shapes, pallas-path equivalence,
+HVP vs finite differences, Fisher diagonal sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model
+
+
+@pytest.mark.parametrize("name", list(model.CONFIGS))
+def test_param_layout_contiguous(name):
+    sps = model.param_specs(name)
+    off = 0
+    for s in sps:
+        assert s.offset == off
+        off += s.size
+    assert off == model.num_params(name)
+    # conv-flat offsets are the concat order of quantizable specs
+    assert model.num_conv_params(name) == sum(s.size for s in sps if s.quantizable)
+
+
+@pytest.mark.parametrize("name", list(model.CONFIGS))
+def test_forward_shapes(name):
+    th = jnp.asarray(model.init_params(name, 1))
+    x = jnp.zeros((4, 32, 32, 3), jnp.float32)
+    out = model.forward(name, th, x)
+    assert out.shape == (4, model.NUM_CLASSES)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_flatten_unflatten_roundtrip():
+    name = "resnet8"
+    th = model.init_params(name, 2)
+    params = {k: np.asarray(v) for k, v in model.unflatten(name, jnp.asarray(th)).items()}
+    th2 = model.flatten(name, params)
+    np.testing.assert_array_equal(th, th2)
+
+
+def test_forward_pallas_matches_forward():
+    name = "resnet8"
+    rng = np.random.default_rng(0)
+    th = jnp.asarray(model.init_params(name, 3))
+    x = jnp.asarray(rng.normal(size=(2, 32, 32, 3)).astype(np.float32))
+    a = model.forward(name, th, x)
+    b = model.forward_pallas(name, th, x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+def _embed_conv(name, v):
+    """Scatter a conv-flat vector into a full-parameter-sized vector."""
+    v_full = np.zeros(model.num_params(name), dtype=np.float32)
+    off = 0
+    for s in model.conv_param_specs(name):
+        v_full[s.offset : s.offset + s.size] = np.asarray(v)[off : off + s.size]
+        off += s.size
+    return jnp.asarray(v_full)
+
+
+def test_hvp_probe_matches_full_param_jvp():
+    """The conv-restricted probe graph must agree with the unrestricted
+    jvp-of-grad over the full parameter vector (an independent code path
+    through the scatter/gather machinery). f32 finite differences are too
+    noisy at this Hessian scale to be a useful oracle — the full-jvp is the
+    autodiff ground truth."""
+    name = "resnet8"
+    rng = np.random.default_rng(4)
+    th = jnp.asarray(model.init_params(name, 4))
+    x = jnp.asarray(rng.normal(size=(8, 32, 32, 3)).astype(np.float32))
+    y1h = jnp.asarray(data.one_hot(rng.integers(0, 10, size=8).astype(np.int32)))
+    pc = model.num_conv_params(name)
+    v = jnp.asarray(rng.choice([-1.0, 1.0], size=pc).astype(np.float32))
+
+    probe = model.hvp_diag_probe(name, th, x, y1h, v)
+    vhv = float(jnp.sum(probe))  # v*(Hv) summed == v^T H v
+
+    v_full = _embed_conv(name, v)
+    grad_fn = jax.grad(lambda t: model.loss(name, t, x, y1h))
+    _, hv_full = jax.jvp(grad_fn, (th,), (v_full,))
+    vhv_full = float(v_full @ hv_full)
+    assert abs(vhv - vhv_full) <= 1e-3 * max(1.0, abs(vhv_full)), (vhv, vhv_full)
+
+
+def test_hvp_probe_hessian_symmetry():
+    """v2^T H v1 == v1^T H v2. For Rademacher v, Hv = v * (v ⊙ Hv), so the
+    probe output lets us recover Hv and check the symmetry of H."""
+    name = "resnet8"
+    rng = np.random.default_rng(8)
+    th = jnp.asarray(model.init_params(name, 8))
+    x = jnp.asarray(rng.normal(size=(4, 32, 32, 3)).astype(np.float32))
+    y1h = jnp.asarray(data.one_hot(rng.integers(0, 10, size=4).astype(np.int32)))
+    pc = model.num_conv_params(name)
+    v1 = jnp.asarray(rng.choice([-1.0, 1.0], size=pc).astype(np.float32))
+    v2 = jnp.asarray(rng.choice([-1.0, 1.0], size=pc).astype(np.float32))
+
+    hv1 = v1 * model.hvp_diag_probe(name, th, x, y1h, v1)  # v1*(v1⊙Hv1) = Hv1
+    hv2 = v2 * model.hvp_diag_probe(name, th, x, y1h, v2)
+    a = float(v2 @ hv1)
+    b = float(v1 @ hv2)
+    assert abs(a - b) <= 1e-2 * max(1.0, abs(a), abs(b)), (a, b)
+
+
+def test_fisher_diag_nonnegative_and_shaped():
+    name = "resnet8"
+    rng = np.random.default_rng(5)
+    th = jnp.asarray(model.init_params(name, 5))
+    x = jnp.asarray(rng.normal(size=(8, 32, 32, 3)).astype(np.float32))
+    y1h = jnp.asarray(data.one_hot(rng.integers(0, 10, size=8).astype(np.int32)))
+    f = model.fisher_diag(name, th, x, y1h)
+    assert f.shape == (model.num_conv_params(name),)
+    assert float(f.min()) >= 0.0
+    assert float(f.max()) > 0.0
+
+
+def test_dataset_determinism_and_balance():
+    x1, y1 = data.generate(512, seed=11)
+    x2, y2 = data.generate(512, seed=11)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    x3, _ = data.generate(512, seed=12)
+    assert not np.array_equal(x1, x3)
+    # all classes present
+    assert len(np.unique(y1)) == data.NUM_CLASSES
+    assert x1.dtype == np.float32 and x1.shape == (512, 32, 32, 3)

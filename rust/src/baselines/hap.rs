@@ -1,0 +1,55 @@
+//! Hessian-Aware Pruning (HAP, Yu et al. WACV'22) baseline — the paper's
+//! Table 2 comparator.
+//!
+//! HAP scores parameter groups by the same second-order loss perturbation
+//! `ΔL ≈ w_p^T (Trace(H)/p) w_p / 2` and *prunes* (removes) the lowest-
+//! scoring groups at a target compression ratio; survivors stay 8-bit.
+//! Crucially, HAP's sparsity is not crossbar-structured: pruned weights
+//! leave holes in the arrays, so it is mapped with the ORIGIN strategy —
+//! reproducing the paper's observation that unstructured compression
+//! cannot skip crossbar rows/columns (§2.2).
+
+use crate::quant::BitMap;
+use crate::sensitivity::Sensitivity;
+
+/// Build a HAP bitmap: `cr` fraction of strips pruned (bits = 0), the rest
+/// kept at `keep_bits`.
+pub fn hap_bitmap(sens: &Sensitivity, cr: f64, keep_bits: u8) -> BitMap {
+    let n = sens.scores.len();
+    let n_prune = ((cr * n as f64).round() as usize).min(n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| sens.scores[a].total_cmp(&sens.scores[b]));
+    let mut bits = vec![keep_bits; n];
+    for &i in idx.iter().take(n_prune) {
+        bits[i] = 0;
+    }
+    BitMap { bits }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sens(scores: Vec<f64>) -> Sensitivity {
+        Sensitivity { scores, traces: vec![], probes: 1 }
+    }
+
+    #[test]
+    fn prunes_lowest_scores() {
+        let s = sens(vec![0.9, 0.1, 0.5, 0.3]);
+        let bm = hap_bitmap(&s, 0.5, 8);
+        assert_eq!(bm.bits, vec![8, 0, 8, 0]);
+    }
+
+    #[test]
+    fn cr_zero_keeps_everything() {
+        let s = sens(vec![1.0, 2.0]);
+        assert_eq!(hap_bitmap(&s, 0.0, 8).bits, vec![8, 8]);
+    }
+
+    #[test]
+    fn cr_one_prunes_everything() {
+        let s = sens(vec![1.0, 2.0]);
+        assert_eq!(hap_bitmap(&s, 1.0, 8).bits, vec![0, 0]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Comparator methods used by the paper's evaluation: HAP structured
+//! pruning (Table 2) and uniform-precision endpoints (Table 3).
+
+pub mod hap;
+pub mod uniform;
+
+pub use hap::hap_bitmap;
+pub use uniform::uniform_bitmap;

@@ -1,0 +1,22 @@
+//! Uniform-precision baselines: every strip at the same bit width — the
+//! paper's Table 3 endpoints (0% compression = all 8-bit, 100% = all 4-bit).
+
+use crate::quant::BitMap;
+
+/// All strips at `bits`.
+pub fn uniform_bitmap(n_strips: usize, bits: u8) -> BitMap {
+    BitMap::uniform(n_strips, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_cr_endpoints() {
+        let b8 = uniform_bitmap(10, 8);
+        assert_eq!(b8.compression_ratio(8), 0.0);
+        let b4 = uniform_bitmap(10, 4);
+        assert_eq!(b4.compression_ratio(8), 1.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Sensitivity clustering + dynamic crossbar alignment (paper §4.2).
+//!
+//! Strips with score `s_i > T` form the high-precision cluster; the rest the
+//! low-precision cluster. Before mapping, `T` is nudged *per layer* so the
+//! high-bit strip count `q` becomes a multiple of the layer's crossbar
+//! column capacity `C` — high-bit arrays are packed full, the remainder is
+//! demoted to the cheap low-bit tier.
+
+use crate::model::ModelInfo;
+use crate::quant::BitMap;
+
+/// A sensitivity-threshold clustering of all strips.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    pub bitmap: BitMap,
+    /// The threshold actually applied (after any alignment demotions this is
+    /// the effective per-layer boundary's global starting point).
+    pub threshold: f64,
+    /// Number of high-precision strips.
+    pub q_hi: usize,
+}
+
+impl Clustering {
+    pub fn compression_ratio(&self, hi_bits: u8) -> f64 {
+        self.bitmap.compression_ratio(hi_bits)
+    }
+}
+
+/// Basic threshold clustering: `s_i > t` → hi bits, else lo bits.
+pub fn cluster(scores: &[f64], t: f64, hi_bits: u8, lo_bits: u8) -> Clustering {
+    let bits: Vec<u8> = scores
+        .iter()
+        .map(|&s| if s > t { hi_bits } else { lo_bits })
+        .collect();
+    let q_hi = bits.iter().filter(|&&b| b == hi_bits).count();
+    Clustering { bitmap: BitMap { bits }, threshold: t, q_hi }
+}
+
+/// Cluster to an exact target compression ratio (used by the CR-sweep
+/// experiments): the `ceil(cr · n)` lowest-score strips get `lo_bits`.
+pub fn cluster_at_cr(scores: &[f64], cr: f64, hi_bits: u8, lo_bits: u8) -> Clustering {
+    let n = scores.len();
+    let n_lo = ((cr * n as f64).round() as usize).min(n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+    let mut bits = vec![hi_bits; n];
+    for &i in idx.iter().take(n_lo) {
+        bits[i] = lo_bits;
+    }
+    let q_hi = n - n_lo;
+    let threshold = if n_lo == 0 {
+        f64::NEG_INFINITY
+    } else if n_lo == n {
+        f64::INFINITY
+    } else {
+        scores[idx[n_lo - 1]]
+    };
+    Clustering { bitmap: BitMap { bits }, threshold, q_hi }
+}
+
+/// Dynamic alignment (paper §4.2): per layer, demote the lowest-score
+/// high-bit strips until the layer's hi count is a multiple of that layer's
+/// crossbar capacity `C` (strip-columns per high-bit array).
+///
+/// `capacity(layer_idx)` returns C for the layer; demotions move strips to
+/// `lo_bits`.
+pub fn align_to_capacity(
+    model: &ModelInfo,
+    scores: &[f64],
+    clustering: &Clustering,
+    hi_bits: u8,
+    lo_bits: u8,
+    capacity: impl Fn(usize) -> usize,
+) -> Clustering {
+    let mut bits = clustering.bitmap.bits.clone();
+    for (li, _layer) in model.conv_layers().iter().enumerate() {
+        let cap = capacity(li).max(1);
+        // Indices of hi strips in this layer, sorted by ascending score.
+        let mut hi_idx: Vec<usize> = model
+            .strips()
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| s.layer == li && bits[*i] == hi_bits)
+            .map(|(i, _)| i)
+            .collect();
+        // Paper: "incrementally adjust T to reduce q and make it a multiple
+        // of C". When a layer's hi cluster is smaller than one array (q < C)
+        // the only multiple below is 0 — wiping the cluster would change the
+        // model without freeing any resource granularity, so the partial
+        // array is kept instead.
+        if hi_idx.len() < cap {
+            continue;
+        }
+        let rem = hi_idx.len() % cap;
+        if rem == 0 {
+            continue;
+        }
+        hi_idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+        for &i in hi_idx.iter().take(rem) {
+            bits[i] = lo_bits;
+        }
+    }
+    let q_hi = bits.iter().filter(|&&b| b == hi_bits).count();
+    Clustering {
+        bitmap: BitMap { bits },
+        threshold: clustering.threshold,
+        q_hi,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry};
+    use std::collections::HashMap;
+
+    fn toy(n_out: usize) -> ModelInfo {
+        ModelInfo::new(ModelEntry {
+            name: "toy".into(),
+            num_params: 2 * n_out,
+            num_conv_params: 2 * n_out,
+            fp32_test_acc: 1.0,
+            params: BinEntry { file: "x".into(), shape: vec![2 * n_out], dtype: "f32".into() },
+            layers: vec![LayerEntry {
+                name: "c".into(),
+                shape: vec![1, 1, 2, n_out],
+                kind: "conv".into(),
+                theta_offset: 0,
+                convflat_offset: Some(0),
+            }],
+            executables: HashMap::new(),
+            batch: BatchSizes { eval: 1, serve: 1, calib: 1 },
+        })
+    }
+
+    #[test]
+    fn cluster_thresholds_strictly_above() {
+        let c = cluster(&[1.0, 2.0, 3.0], 2.0, 8, 4);
+        assert_eq!(c.bitmap.bits, vec![4, 4, 8]);
+        assert_eq!(c.q_hi, 1);
+    }
+
+    #[test]
+    fn cluster_at_cr_exact_counts() {
+        let scores = vec![0.5, 0.1, 0.9, 0.3, 0.7];
+        let c = cluster_at_cr(&scores, 0.6, 8, 4);
+        assert_eq!(c.q_hi, 2);
+        // lowest three (0.1, 0.3, 0.5) demoted
+        assert_eq!(c.bitmap.bits, vec![4, 4, 8, 4, 8]);
+        assert!((c.compression_ratio(8) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cr_endpoints() {
+        let scores = vec![1.0, 2.0];
+        assert_eq!(cluster_at_cr(&scores, 0.0, 8, 4).q_hi, 2);
+        assert_eq!(cluster_at_cr(&scores, 1.0, 8, 4).q_hi, 0);
+    }
+
+    #[test]
+    fn align_demotes_remainder_lowest_first() {
+        let m = toy(10); // 10 strips in one layer
+        let scores: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let c = cluster(&scores, 2.5, 8, 4); // hi = strips 3..9 -> q=7
+        assert_eq!(c.q_hi, 7);
+        let aligned = align_to_capacity(&m, &scores, &c, 8, 4, |_| 4);
+        // 7 % 4 = 3 demotions -> q = 4; lowest hi scores (3,4,5) demoted
+        assert_eq!(aligned.q_hi, 4);
+        assert_eq!(aligned.bitmap.bits[3], 4);
+        assert_eq!(aligned.bitmap.bits[5], 4);
+        assert_eq!(aligned.bitmap.bits[6], 8);
+    }
+
+    #[test]
+    fn align_noop_when_divisible() {
+        let m = toy(8);
+        let scores: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let c = cluster(&scores, 3.5, 8, 4); // q = 4
+        let aligned = align_to_capacity(&m, &scores, &c, 8, 4, |_| 4);
+        assert_eq!(aligned.q_hi, 4);
+        assert_eq!(aligned.bitmap.bits, c.bitmap.bits);
+    }
+}

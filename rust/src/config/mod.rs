@@ -1,0 +1,252 @@
+//! Run configuration: quantization scheme, sensitivity estimation,
+//! threshold-search and hardware knobs. JSON-serializable so experiment
+//! configs can be checked in / passed via `--config`.
+
+
+use crate::xbar::XbarConfig;
+
+/// Scale granularity of a quantizer (paper: strips map to crossbar columns,
+/// so per-strip scaling is the structured choice; per-layer models a shared
+/// conductance range across a whole low-bit array bank).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    PerStrip,
+    PerLayer,
+}
+
+/// One precision tier.
+#[derive(Clone, Copy, Debug)]
+pub struct Tier {
+    pub bits: u8,
+    pub granularity: Granularity,
+}
+
+/// Quantization scheme for the mixed-precision pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantConfig {
+    /// High-sensitivity tier (paper: 8-bit, per-strip).
+    pub hi: Tier,
+    /// Low-sensitivity tier (paper: 4-bit; per-layer scale models one
+    /// shared conductance window per low-bit array bank).
+    pub lo: Tier,
+    /// ReRAM device (conductance) variation, as a fraction of the
+    /// quantization step injected as zero-mean Gaussian noise on the
+    /// dequantized weight — the analog non-ideality the paper's §1 cites.
+    pub device_sigma: f32,
+    /// RNG seed for device variation (deterministic experiments).
+    pub seed: u64,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        Self {
+            hi: Tier { bits: 8, granularity: Granularity::PerStrip },
+            lo: Tier { bits: 4, granularity: Granularity::PerLayer },
+            device_sigma: 0.8,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Hutchinson estimator settings (paper §2.3/§4.1).
+#[derive(Clone, Copy, Debug)]
+pub struct SensitivityConfig {
+    /// Number of Rademacher probes m.
+    pub probes: usize,
+    /// Number of calibration batches averaged per probe.
+    pub calib_batches: usize,
+    pub seed: u64,
+}
+
+impl Default for SensitivityConfig {
+    fn default() -> Self {
+        Self { probes: 8, calib_batches: 2, seed: 0xbeef }
+    }
+}
+
+/// Algorithm 1 (FIM-difference threshold search) settings.
+#[derive(Clone, Copy, Debug)]
+pub struct ThresholdConfig {
+    /// Initial threshold as a *quantile* of the strip-sensitivity
+    /// distribution. T0 = 1.0 reproduces the paper's "maximum compression"
+    /// starting point (all strips low-bit).
+    pub t0_quantile: f64,
+    pub learning_rate: f64,
+    pub tolerance: f64,
+    pub max_iters: usize,
+    /// Finite-difference half-step (in quantile space) for dF/dT.
+    pub fd_step: f64,
+    /// Calibration batches used per FIM evaluation.
+    pub calib_batches: usize,
+}
+
+impl Default for ThresholdConfig {
+    fn default() -> Self {
+        Self {
+            t0_quantile: 1.0,
+            learning_rate: 0.25,
+            tolerance: 1e-4,
+            max_iters: 12,
+            fd_step: 0.05,
+            calib_batches: 1,
+        }
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Clone, Debug, Default)]
+pub struct RunConfig {
+    pub quant: QuantConfig,
+    pub sensitivity: SensitivityConfig,
+    pub threshold: ThresholdConfig,
+    pub xbar: XbarConfig,
+}
+
+impl RunConfig {
+    /// Parse a (possibly partial) JSON config; unspecified fields keep
+    /// their defaults.
+    pub fn from_json(text: &str) -> crate::Result<Self> {
+        use crate::util::json::Value;
+        let v = Value::parse(text)?;
+        let mut c = RunConfig::default();
+        if let Some(q) = v.opt("quant") {
+            if let Some(t) = q.opt("hi") {
+                c.quant.hi = Tier::from_value(t, c.quant.hi)?;
+            }
+            if let Some(t) = q.opt("lo") {
+                c.quant.lo = Tier::from_value(t, c.quant.lo)?;
+            }
+            if let Some(s) = q.opt("device_sigma") {
+                c.quant.device_sigma = s.num()? as f32;
+            }
+            if let Some(s) = q.opt("seed") {
+                c.quant.seed = s.num()? as u64;
+            }
+        }
+        if let Some(s) = v.opt("sensitivity") {
+            if let Some(p) = s.opt("probes") {
+                c.sensitivity.probes = p.usize()?;
+            }
+            if let Some(p) = s.opt("calib_batches") {
+                c.sensitivity.calib_batches = p.usize()?;
+            }
+            if let Some(p) = s.opt("seed") {
+                c.sensitivity.seed = p.num()? as u64;
+            }
+        }
+        if let Some(t) = v.opt("threshold") {
+            if let Some(p) = t.opt("t0_quantile") {
+                c.threshold.t0_quantile = p.num()?;
+            }
+            if let Some(p) = t.opt("learning_rate") {
+                c.threshold.learning_rate = p.num()?;
+            }
+            if let Some(p) = t.opt("tolerance") {
+                c.threshold.tolerance = p.num()?;
+            }
+            if let Some(p) = t.opt("max_iters") {
+                c.threshold.max_iters = p.usize()?;
+            }
+            if let Some(p) = t.opt("fd_step") {
+                c.threshold.fd_step = p.num()?;
+            }
+            if let Some(p) = t.opt("calib_batches") {
+                c.threshold.calib_batches = p.usize()?;
+            }
+        }
+        if let Some(x) = v.opt("xbar") {
+            c.xbar = XbarConfig::from_value(x, c.xbar)?;
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> String {
+        use crate::util::json::{obj, Value};
+        obj(vec![
+            (
+                "quant",
+                obj(vec![
+                    ("hi", self.quant.hi.to_value()),
+                    ("lo", self.quant.lo.to_value()),
+                    ("device_sigma", Value::Num(self.quant.device_sigma as f64)),
+                    ("seed", Value::Num(self.quant.seed as f64)),
+                ]),
+            ),
+            (
+                "sensitivity",
+                obj(vec![
+                    ("probes", Value::Num(self.sensitivity.probes as f64)),
+                    ("calib_batches", Value::Num(self.sensitivity.calib_batches as f64)),
+                    ("seed", Value::Num(self.sensitivity.seed as f64)),
+                ]),
+            ),
+            (
+                "threshold",
+                obj(vec![
+                    ("t0_quantile", Value::Num(self.threshold.t0_quantile)),
+                    ("learning_rate", Value::Num(self.threshold.learning_rate)),
+                    ("tolerance", Value::Num(self.threshold.tolerance)),
+                    ("max_iters", Value::Num(self.threshold.max_iters as f64)),
+                    ("fd_step", Value::Num(self.threshold.fd_step)),
+                    ("calib_batches", Value::Num(self.threshold.calib_batches as f64)),
+                ]),
+            ),
+            ("xbar", self.xbar.to_value()),
+        ])
+        .to_json()
+    }
+}
+
+impl Tier {
+    fn from_value(v: &crate::util::json::Value, default: Tier) -> crate::Result<Tier> {
+        let mut t = default;
+        if let Some(b) = v.opt("bits") {
+            t.bits = b.usize()? as u8;
+        }
+        if let Some(g) = v.opt("granularity") {
+            t.granularity = match g.str()? {
+                "per_strip" => Granularity::PerStrip,
+                "per_layer" => Granularity::PerLayer,
+                other => anyhow::bail!("unknown granularity '{other}'"),
+            };
+        }
+        Ok(t)
+    }
+
+    fn to_value(&self) -> crate::util::json::Value {
+        crate::util::json::obj(vec![
+            ("bits", crate::util::json::Value::Num(self.bits as f64)),
+            (
+                "granularity",
+                crate::util::json::Value::Str(
+                    match self.granularity {
+                        Granularity::PerStrip => "per_strip",
+                        Granularity::PerLayer => "per_layer",
+                    }
+                    .to_string(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_tiers() {
+        let c = RunConfig::default();
+        assert_eq!(c.quant.hi.bits, 8);
+        assert_eq!(c.quant.lo.bits, 4);
+        assert_eq!(c.threshold.t0_quantile, 1.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = RunConfig::default();
+        let c2 = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c2.quant.hi.bits, c.quant.hi.bits);
+        assert_eq!(c2.xbar.rows, c.xbar.rows);
+    }
+}

@@ -1,0 +1,228 @@
+//! Serving engine: the L3 request hot path. Requests are dynamically
+//! batched (size- or deadline-triggered), padded to the static `fwd_serve`
+//! batch shape, executed on PJRT, and answered through per-request channels.
+//! Python is never involved.
+//!
+//! Built on std threads + channels (this environment has no tokio; the
+//! batching discipline is the same as a vLLM-style router's).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::model::ModelInfo;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::Result;
+
+use super::metrics::Metrics;
+
+/// One classification request: a 32×32×3 image.
+struct Request {
+    t0: Instant,
+    image: Vec<f32>,
+    reply: SyncSender<Response>,
+}
+
+/// Prediction for one image.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub class: usize,
+    /// Time spent inside the engine (queue + execute), microseconds.
+    pub latency_us: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Flush a partial batch after this long.
+    pub max_wait: Duration,
+    /// Bounded queue length (backpressure).
+    pub queue: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { max_wait: Duration::from_millis(2), queue: 1024 }
+    }
+}
+
+/// Handle for submitting requests (cloneable across threads).
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: SyncSender<Request>,
+    pub metrics: Arc<Metrics>,
+}
+
+/// A pending reply the caller can wait on.
+pub struct Pending {
+    rx: Receiver<Response>,
+}
+
+impl Pending {
+    pub fn wait(self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped request"))
+    }
+}
+
+impl EngineHandle {
+    /// Submit one image; returns a handle to wait on.
+    pub fn submit(&self, image: Vec<f32>) -> Result<Pending> {
+        let (reply, rx) = sync_channel(1);
+        self.metrics.observe_request();
+        self.tx
+            .send(Request { t0: Instant::now(), image, reply })
+            .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+        Ok(Pending { rx })
+    }
+
+    /// Submit and wait (convenience).
+    pub fn classify(&self, image: Vec<f32>) -> Result<Response> {
+        self.submit(image)?.wait()
+    }
+}
+
+/// The engine: owns its *own* PJRT runtime (xla handles are not `Send`, so
+/// the client lives entirely inside the batching thread), the quantized
+/// weights and the batching loop.
+pub struct Engine {
+    artifacts: PathBuf,
+    exe: String,
+    theta: Tensor,
+    batch: usize,
+    image_elems: usize,
+    cfg: EngineConfig,
+}
+
+/// Worker-side state (constructed inside the engine thread).
+struct Worker {
+    runtime: Runtime,
+    exe: String,
+    theta: Tensor,
+    batch: usize,
+    image_elems: usize,
+}
+
+impl Engine {
+    pub fn new(
+        artifacts: PathBuf,
+        model: &ModelInfo,
+        theta: Vec<f32>,
+        cfg: EngineConfig,
+    ) -> Result<Self> {
+        let exe = model
+            .entry
+            .executables
+            .get("fwd_serve")
+            .ok_or_else(|| anyhow::anyhow!("model has no fwd_serve executable"))?
+            .clone();
+        Ok(Self {
+            artifacts,
+            exe,
+            theta: Tensor::from_vec(theta),
+            batch: model.entry.batch.serve,
+            image_elems: 32 * 32 * 3,
+            cfg,
+        })
+    }
+
+    /// Spawn the batching loop; returns the submission handle. The loop
+    /// exits when every handle is dropped.
+    pub fn start(self) -> EngineHandle {
+        let (tx, rx) = sync_channel::<Request>(self.cfg.queue);
+        let metrics = Arc::new(Metrics::default());
+        let handle = EngineHandle { tx, metrics: metrics.clone() };
+
+        let cfg = self.cfg;
+        std::thread::spawn(move || {
+            // The PJRT client is created inside this thread (xla is !Send).
+            let worker = match Runtime::new(self.artifacts.clone()) {
+                Ok(runtime) => Worker {
+                    runtime,
+                    exe: self.exe,
+                    theta: self.theta,
+                    batch: self.batch,
+                    image_elems: self.image_elems,
+                },
+                Err(e) => {
+                    crate::error!("engine runtime failed to start: {e}");
+                    return;
+                }
+            };
+            let mut pending: Vec<Request> = Vec::with_capacity(worker.batch);
+            loop {
+                // Wait for the first request of a batch.
+                match rx.recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break, // all senders gone
+                }
+                let deadline = Instant::now() + cfg.max_wait;
+                // Fill until size- or deadline-triggered.
+                while pending.len() < worker.batch {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    match rx.recv_timeout(deadline - now) {
+                        Ok(r) => pending.push(r),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                if let Err(e) = worker.run_batch(&mut pending, &metrics) {
+                    crate::error!("batch failed: {e}");
+                    pending.clear(); // dropped replies propagate as errors
+                }
+            }
+        });
+        handle
+    }
+}
+
+impl Worker {
+    fn run_batch(&self, pending: &mut Vec<Request>, metrics: &Metrics) -> Result<()> {
+        let n = pending.len();
+        // Pad to the static batch shape.
+        let mut x = vec![0.0f32; self.batch * self.image_elems];
+        for (i, req) in pending.iter().enumerate() {
+            anyhow::ensure!(
+                req.image.len() == self.image_elems,
+                "bad image size {}",
+                req.image.len()
+            );
+            x[i * self.image_elems..(i + 1) * self.image_elems].copy_from_slice(&req.image);
+        }
+        let xt = Tensor::new(vec![self.batch, 32, 32, 3], x);
+        let out = self.runtime.exec(&self.exe, &[self.theta.clone(), xt])?;
+        let logits = &out[0];
+        let k = logits.shape()[1];
+
+        let now = Instant::now();
+        // Record metrics *before* replying: callers may snapshot as soon as
+        // their reply lands.
+        let batch_lat = pending
+            .iter()
+            .map(|r| now.duration_since(r.t0).as_micros() as u64)
+            .max()
+            .unwrap_or(0);
+        metrics.observe_batch(n, batch_lat);
+        let mut max_lat = 0u64;
+        for (i, req) in pending.drain(..).enumerate() {
+            let row = logits.data()[i * k..(i + 1) * k].to_vec();
+            let class = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(c, _)| c)
+                .unwrap_or(0);
+            let latency_us = now.duration_since(req.t0).as_micros() as u64;
+            max_lat = max_lat.max(latency_us);
+            let _ = req.reply.send(Response { logits: row, class, latency_us });
+        }
+        debug_assert!(max_lat <= batch_lat);
+        Ok(())
+    }
+}

@@ -1,0 +1,69 @@
+//! Accuracy evaluation over the PJRT forward executable.
+
+use crate::dataset::TestSet;
+use crate::model::ModelInfo;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Top-1 / top-5 accuracy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Accuracy {
+    pub top1: f64,
+    pub top5: f64,
+    pub samples: usize,
+}
+
+/// Evaluate `theta` on the test set through the `fwd_eval` executable.
+pub fn evaluate(
+    runtime: &Runtime,
+    model: &ModelInfo,
+    theta: &[f32],
+    test: &TestSet,
+) -> Result<Accuracy> {
+    evaluate_batches(runtime, model, theta, test, usize::MAX)
+}
+
+/// Evaluate on at most `max_batches` eval batches (for quick sweeps).
+pub fn evaluate_batches(
+    runtime: &Runtime,
+    model: &ModelInfo,
+    theta: &[f32],
+    test: &TestSet,
+    max_batches: usize,
+) -> Result<Accuracy> {
+    let exe = model
+        .entry
+        .executables
+        .get("fwd_eval")
+        .ok_or_else(|| anyhow::anyhow!("model has no fwd_eval executable"))?
+        .clone();
+    let b = model.entry.batch.eval;
+    let theta_t = Tensor::from_vec(theta.to_vec());
+    let nb = test.num_batches(b).min(max_batches);
+    anyhow::ensure!(nb > 0, "test set smaller than one eval batch");
+
+    let (mut c1, mut c5, mut n) = (0usize, 0usize, 0usize);
+    for i in 0..nb {
+        let (x, y) = test.batch(i, b);
+        let out = runtime.exec(&exe, &[theta_t.clone(), x])?;
+        let logits = &out[0];
+        let k = logits.shape()[1];
+        for (row, &label) in logits.data().chunks_exact(k).zip(y.iter()) {
+            let mut idx: Vec<usize> = (0..k).collect();
+            idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
+            if idx[0] == label {
+                c1 += 1;
+            }
+            if idx.iter().take(5).any(|&i| i == label) {
+                c5 += 1;
+            }
+            n += 1;
+        }
+    }
+    Ok(Accuracy {
+        top1: c1 as f64 / n as f64,
+        top5: c5 as f64 / n as f64,
+        samples: n,
+    })
+}

@@ -1,0 +1,74 @@
+//! Lightweight serving metrics (lock-free counters + latency aggregation).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    latency_us_sum: AtomicU64,
+    latency_us_max: AtomicU64,
+}
+
+/// Point-in-time snapshot of the serving metrics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch_fill: f64,
+    pub mean_latency_us: f64,
+    pub max_latency_us: u64,
+}
+
+impl Metrics {
+    pub fn observe_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn observe_batch(&self, items: usize, latency_us: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
+        self.latency_us_sum.fetch_add(latency_us, Ordering::Relaxed);
+        self.latency_us_max.fetch_max(latency_us, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        Snapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches,
+            mean_batch_fill: if batches == 0 {
+                0.0
+            } else {
+                self.batched_items.load(Ordering::Relaxed) as f64 / batches as f64
+            },
+            mean_latency_us: if batches == 0 {
+                0.0
+            } else {
+                self.latency_us_sum.load(Ordering::Relaxed) as f64 / batches as f64
+            },
+            max_latency_us: self.latency_us_max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::default();
+        m.observe_request();
+        m.observe_request();
+        m.observe_batch(2, 100);
+        m.observe_batch(1, 300);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_fill - 1.5).abs() < 1e-12);
+        assert!((s.mean_latency_us - 200.0).abs() < 1e-12);
+        assert_eq!(s.max_latency_us, 300);
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator: the compression pipeline, the accuracy evaluator, the
+//! serving engine (dynamic batching over PJRT) and its metrics.
+
+pub mod engine;
+pub mod eval;
+pub mod metrics;
+pub mod pipeline;
+
+pub use engine::{Engine, EngineConfig, EngineHandle, Response};
+pub use eval::{evaluate, evaluate_batches, Accuracy};
+pub use metrics::{Metrics, Snapshot};
+pub use pipeline::{Pipeline, PipelineReport, ThresholdMode};

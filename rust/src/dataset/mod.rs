@@ -1,0 +1,86 @@
+//! CIFAR-Syn dataset access on the Rust side (test + calibration splits
+//! exported by `aot.py`; the training split never leaves Python).
+
+use crate::model::Manifest;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Test split: images `[N,32,32,3]` + integer labels.
+pub struct TestSet {
+    pub x: Tensor,
+    pub y: Vec<usize>,
+}
+
+impl TestSet {
+    pub fn load(manifest: &Manifest) -> Result<Self> {
+        let x = manifest.dataset_tensor("test_x")?;
+        let y = manifest
+            .dataset_tensor("test_y")?
+            .into_data()
+            .into_iter()
+            .map(|v| v as usize)
+            .collect();
+        Ok(Self { x, y })
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Batch `i` of size `b` (images, labels).
+    pub fn batch(&self, i: usize, b: usize) -> (Tensor, &[usize]) {
+        let lo = i * b;
+        let hi = (lo + b).min(self.len());
+        (self.x.slice_rows(lo, hi), &self.y[lo..hi])
+    }
+
+    pub fn num_batches(&self, b: usize) -> usize {
+        self.len() / b // full batches only (graph shapes are static)
+    }
+}
+
+/// Calibration split: images + one-hot labels, sliced into fixed-size
+/// batches matching the HVP/GSQ graph batch dimension.
+pub struct CalibSet {
+    pub x: Tensor,
+    pub y1h: Tensor,
+    pub batch: usize,
+}
+
+impl CalibSet {
+    pub fn load(manifest: &Manifest, batch: usize) -> Result<Self> {
+        let x = manifest.dataset_tensor("calib_x")?;
+        let y1h = manifest.dataset_tensor("calib_y1h")?;
+        anyhow::ensure!(x.shape()[0] == y1h.shape()[0], "calib x/y length mismatch");
+        Ok(Self { x, y1h, batch })
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.x.shape()[0] / self.batch
+    }
+
+    pub fn get(&self, i: usize) -> (Tensor, Tensor) {
+        let lo = i * self.batch;
+        let hi = lo + self.batch;
+        (self.x.slice_rows(lo, hi), self.y1h.slice_rows(lo, hi))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn testset_batching_is_contiguous() {
+        let x = Tensor::new(vec![5, 2], (0..10).map(|v| v as f32).collect());
+        let ts = TestSet { x, y: vec![0, 1, 2, 3, 4] };
+        assert_eq!(ts.num_batches(2), 2);
+        let (xb, yb) = ts.batch(1, 2);
+        assert_eq!(xb.data(), &[4., 5., 6., 7.]);
+        assert_eq!(yb, &[2, 3]);
+    }
+}

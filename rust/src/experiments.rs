@@ -1,0 +1,226 @@
+//! Experiment drivers regenerating every table and figure of the paper's
+//! evaluation section (shared by the CLI, the examples and the criterion
+//! benches). See DESIGN.md §4 for the experiment index.
+
+use crate::baselines;
+use crate::coordinator::{Pipeline, PipelineReport, ThresholdMode};
+use crate::model::Manifest;
+use crate::report;
+use crate::runtime::Runtime;
+use crate::xbar::{self, MappingStrategy, XbarConfig};
+use crate::{RunConfig, Result};
+
+/// How many eval batches the experiments use (full test set by default;
+/// benches shrink this for iteration speed).
+#[derive(Clone, Copy, Debug)]
+pub struct ExpOpts {
+    pub eval_batches: usize,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        Self { eval_batches: usize::MAX }
+    }
+}
+
+/// Table 2: HAP vs OURS on the ResNet20 backbone at 74% CR.
+pub struct Table2 {
+    pub hap: PipelineReport,
+    pub ours: PipelineReport,
+}
+
+pub fn table2(
+    runtime: &Runtime,
+    manifest: &Manifest,
+    cfg: &RunConfig,
+    opts: ExpOpts,
+) -> Result<Table2> {
+    let cr = 0.74;
+    let mut pipe = Pipeline::new(runtime, manifest, "resnet20", cfg.clone())?;
+
+    // HAP: prune `cr` of strips by the same Hessian score, 8-bit survivors,
+    // unstructured (ORIGIN) mapping.
+    let sens = pipe.sensitivity()?.clone();
+    let hap_bm = baselines::hap_bitmap(&sens, cr, cfg.quant.hi.bits);
+    let hap = pipe.report_for_bitmap(
+        &hap_bm,
+        ThresholdMode::FixedCr(cr),
+        f64::NAN,
+        0,
+        MappingStrategy::Origin,
+        opts.eval_batches,
+    )?;
+
+    // OURS: mixed precision at the same CR, aligned + packed mapping.
+    let ours = pipe.run(
+        ThresholdMode::FixedCr(cr),
+        true,
+        MappingStrategy::Packed,
+        opts.eval_batches,
+    )?;
+    Ok(Table2 { hap, ours })
+}
+
+pub fn render_table2(t: &Table2) -> String {
+    let mut out = String::new();
+    out.push_str("Table 2: Comparison of ResNet20 between HAP and our method\n");
+    out.push_str(&report::table2_header());
+    out.push('\n');
+    out.push_str(&report::table2_row("HAP", &t.hap));
+    out.push('\n');
+    out.push_str(&report::table2_row("OURS", &t.ours));
+    out.push('\n');
+    out.push_str(&format!("headline: {}\n", report::headline(&t.ours, &t.hap)));
+    out
+}
+
+/// Table 3: CR sweep on the ResNet18 stand-in with energy breakdown.
+pub fn table3(
+    runtime: &Runtime,
+    manifest: &Manifest,
+    cfg: &RunConfig,
+    opts: ExpOpts,
+    crs: &[f64],
+) -> Result<Vec<PipelineReport>> {
+    let mut pipe = Pipeline::new(runtime, manifest, "resnet8", cfg.clone())?;
+    let mut rows = Vec::new();
+    for &cr in crs {
+        let r = pipe.run(
+            ThresholdMode::FixedCr(cr),
+            true,
+            MappingStrategy::Packed,
+            opts.eval_batches,
+        )?;
+        rows.push(r);
+    }
+    Ok(rows)
+}
+
+pub const TABLE3_CRS: &[f64] = &[0.0, 0.1, 0.5, 0.7, 0.9, 1.0];
+
+pub fn render_table3(rows: &[PipelineReport]) -> String {
+    let mut out = String::new();
+    out.push_str("Table 3: Impact of Compression Ratio on Accuracy and Energy (resnet8 = ResNet18 stand-in)\n");
+    out.push_str(&report::table3_header());
+    out.push('\n');
+    for r in rows {
+        out.push_str(&report::table3_row(r));
+        out.push('\n');
+    }
+    out
+}
+
+/// Table 4: bit utilization, ORIGIN vs OUR mapper, two array sizes.
+pub struct Table4Row {
+    pub method: &'static str,
+    pub size: (usize, usize),
+    pub utilization: f64,
+    pub improvement: Option<f64>,
+}
+
+pub fn table4(
+    runtime: &Runtime,
+    manifest: &Manifest,
+    cfg: &RunConfig,
+) -> Result<Vec<Table4Row>> {
+    let cr = 0.8;
+    let mut rows = Vec::new();
+    let mut pipe = Pipeline::new(runtime, manifest, "resnet14", cfg.clone())?;
+    let sens = pipe.sensitivity()?.clone();
+    let clustering = crate::clustering::cluster_at_cr(
+        &sens.scores,
+        cr,
+        cfg.quant.hi.bits,
+        cfg.quant.lo.bits,
+    );
+
+    for xcfg in [XbarConfig::default(), XbarConfig::small()] {
+        let size = (xcfg.rows, xcfg.cols);
+        // ORIGIN: raw clustering, natural mapping.
+        let mo = xbar::map_model(&pipe.model, &clustering.bitmap, &xcfg, MappingStrategy::Origin);
+        let uo = mo.utilization(cfg.quant.hi.bits);
+        rows.push(Table4Row { method: "ORIGIN", size, utilization: uo, improvement: None });
+
+        // OUR: capacity-aligned clustering + packed mapping.
+        let caps: Vec<usize> = pipe
+            .model
+            .conv_layers()
+            .iter()
+            .map(|l| xcfg.capacity_strips(l.d, cfg.quant.hi.bits))
+            .collect();
+        let aligned = crate::clustering::align_to_capacity(
+            &pipe.model,
+            &sens.scores,
+            &clustering,
+            cfg.quant.hi.bits,
+            cfg.quant.lo.bits,
+            |li| caps[li],
+        );
+        let mp = xbar::map_model(&pipe.model, &aligned.bitmap, &xcfg, MappingStrategy::Packed);
+        let up = mp.utilization(cfg.quant.hi.bits);
+        rows.push(Table4Row {
+            method: "OUR",
+            size,
+            utilization: up,
+            improvement: Some(up - uo),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render_table4(rows: &[Table4Row]) -> String {
+    let mut out = String::new();
+    out.push_str("Table 4: Bit Utilization on ResNet50 stand-in (80% CR, 8-bit arrays)\n");
+    out.push_str(&report::table4_header());
+    out.push('\n');
+    for r in rows {
+        out.push_str(&report::table4_row(
+            "ResNet50/80%",
+            r.method,
+            r.size,
+            8,
+            r.utilization,
+            r.improvement,
+        ));
+        out.push('\n');
+    }
+    out
+}
+
+/// Figure 8: accuracy vs CR for the shallow vs deep backbone.
+pub fn fig8(
+    runtime: &Runtime,
+    manifest: &Manifest,
+    cfg: &RunConfig,
+    opts: ExpOpts,
+    crs: &[f64],
+) -> Result<Vec<(String, f64, PipelineReport)>> {
+    let mut out = Vec::new();
+    for (name, label) in [("resnet8", "ResNet18*"), ("resnet14", "ResNet50*")] {
+        let mut pipe = Pipeline::new(runtime, manifest, name, cfg.clone())?;
+        for &cr in crs {
+            let r = pipe.run(
+                ThresholdMode::FixedCr(cr),
+                true,
+                MappingStrategy::Packed,
+                opts.eval_batches,
+            )?;
+            out.push((label.to_string(), cr, r));
+        }
+    }
+    Ok(out)
+}
+
+pub const FIG8_CRS: &[f64] = &[0.0, 0.2, 0.4, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95, 1.0];
+
+pub fn render_fig8(rows: &[(String, f64, PipelineReport)]) -> String {
+    let mut out = String::new();
+    out.push_str("Figure 8: Accuracy degradation under increasing compression ratio\n");
+    out.push_str(&report::fig8_header());
+    out.push('\n');
+    for (label, cr, r) in rows {
+        out.push_str(&report::fig8_row(label, *cr, r.accuracy.top1));
+        out.push('\n');
+    }
+    out
+}

@@ -1,0 +1,225 @@
+//! Fisher-information threshold selection (paper §4.2, Algorithm 1).
+//!
+//! The FIM diagonal of the compressed model is compared against the fp32
+//! reference; Algorithm 1 descends on the threshold `T` (parameterized as a
+//! *quantile* of the strip-score distribution so the step size is scale-free)
+//! to minimize `‖F(θ_c) − F(θ)‖²_F`. Because clustering is a step function
+//! of `T`, the gradient is taken by central finite differences — the
+//! smoothed analogue of the paper's `∂F/∂T`.
+//!
+//! The paper's §5 also describes the deployed variant: a short candidate
+//! sweep ranked jointly by FIM distance (accuracy proxy) and an energy
+//! proxy, picking a near-Pareto operating point. Both are implemented:
+//! [`ThresholdSearch::gradient_descent`] and [`ThresholdSearch::sweep`].
+
+use crate::clustering::{cluster_at_cr, Clustering};
+use crate::config::{QuantConfig, ThresholdConfig};
+use crate::dataset::CalibSet;
+use crate::model::ModelInfo;
+use crate::quant;
+use crate::runtime::Runtime;
+use crate::sensitivity::Sensitivity;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Squared Frobenius distance between two diagonal FIMs.
+pub fn fim_distance(f: &[f32], f0: &[f32]) -> f64 {
+    assert_eq!(f.len(), f0.len());
+    f.iter()
+        .zip(f0.iter())
+        .map(|(a, b)| {
+            let d = (*a - *b) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Relative ADC-energy proxy of a clustering: hi strips cost 2^8 ADC levels,
+/// lo strips 2^4 (per §2.2's exponential ADC scaling), normalized to all-hi.
+pub fn energy_proxy(q_hi: usize, total: usize, hi_bits: u8, lo_bits: u8) -> f64 {
+    let hi_cost = (1u64 << hi_bits) as f64;
+    let lo_cost = (1u64 << lo_bits) as f64;
+    let q = q_hi as f64;
+    let p = (total - q_hi) as f64;
+    (q * hi_cost + p * lo_cost) / (total as f64 * hi_cost)
+}
+
+/// One evaluated threshold candidate.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// Quantile of the score distribution (fraction of strips in the LOW tier).
+    pub quantile: f64,
+    pub threshold: f64,
+    pub fim_dist: f64,
+    pub energy: f64,
+    pub q_hi: usize,
+}
+
+/// Trace of a threshold search (for reports / EXPERIMENTS.md).
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub best: Candidate,
+    pub history: Vec<Candidate>,
+    pub evals: usize,
+}
+
+/// Drives the `gsq` executable to evaluate FIM diagonals of candidate
+/// compressed models.
+pub struct ThresholdSearch<'a> {
+    pub runtime: &'a Runtime,
+    pub model: &'a ModelInfo,
+    pub calib: &'a CalibSet,
+    pub sens: &'a Sensitivity,
+    pub quant_cfg: QuantConfig,
+    pub cfg: ThresholdConfig,
+}
+
+impl<'a> ThresholdSearch<'a> {
+    /// FIM diagonal (conv params) of parameter vector `theta`.
+    pub fn fim_diag(&self, theta: &[f32]) -> Result<Vec<f32>> {
+        let exe = self
+            .model
+            .entry
+            .executables
+            .get("gsq")
+            .ok_or_else(|| anyhow::anyhow!("model has no gsq executable"))?
+            .clone();
+        let theta_t = Tensor::from_vec(theta.to_vec());
+        let batches = self.cfg.calib_batches.min(self.calib.num_batches()).max(1);
+        let mut acc = vec![0.0f64; self.model.entry.num_conv_params];
+        for b in 0..batches {
+            let (x, y1h) = self.calib.get(b);
+            let out = self.runtime.exec(&exe, &[theta_t.clone(), x, y1h])?;
+            for (a, v) in acc.iter_mut().zip(out[0].data()) {
+                *a += *v as f64;
+            }
+        }
+        Ok(acc.iter().map(|&a| (a / batches as f64) as f32).collect())
+    }
+
+    /// Compress at quantile `q` (fraction of strips in the low tier) and
+    /// return the candidate evaluation. Device-variation noise is disabled
+    /// for the candidate model: the threshold search measures *systematic*
+    /// quantization damage; stochastic conductance noise would jitter the
+    /// FIM landscape and break the descent.
+    fn eval_quantile(&self, q: f64, theta: &[f32], f0: &[f32]) -> Result<(Candidate, Clustering)> {
+        let qc = q.clamp(0.0, 1.0);
+        let clustering = cluster_at_cr(
+            &self.sens.scores,
+            qc,
+            self.quant_cfg.hi.bits,
+            self.quant_cfg.lo.bits,
+        );
+        let quant_cfg = crate::config::QuantConfig { device_sigma: 0.0, ..self.quant_cfg };
+        let qm = quant::apply(self.model, theta, &clustering.bitmap, &quant_cfg);
+        let f = self.fim_diag(&qm.theta)?;
+        let cand = Candidate {
+            quantile: qc,
+            threshold: clustering.threshold,
+            fim_dist: fim_distance(&f, f0),
+            energy: energy_proxy(
+                clustering.q_hi,
+                self.sens.scores.len(),
+                self.quant_cfg.hi.bits,
+                self.quant_cfg.lo.bits,
+            ),
+            q_hi: clustering.q_hi,
+        };
+        Ok((cand, clustering))
+    }
+
+    /// Algorithm 1: gradient descent on the (quantile-space) threshold.
+    ///
+    /// Semantics per the paper: start from T0 = maximum compression and
+    /// descend on `L = ‖F(θ_c) − F0‖²_F` until the difference falls below
+    /// the tolerance ε — i.e. return the *most compressed* operating point
+    /// whose Fisher information still matches the original. (Descending L
+    /// all the way to its global minimum would trivially land at "no
+    /// compression".) ε is interpreted relative to L(T0) since the paper
+    /// leaves it unspecified.
+    pub fn gradient_descent(&self, theta: &[f32]) -> Result<SearchResult> {
+        let f0 = self.fim_diag(theta)?;
+        let mut t = self.cfg.t0_quantile; // T0 = 1.0: maximum compression
+        let mut history: Vec<Candidate> = Vec::new();
+        let mut evals = 1usize;
+        let h = self.cfg.fd_step;
+        let mut l_ref: Option<f64> = None; // L(T0)
+
+        for k in 0..self.cfg.max_iters {
+            let (cand, _) = self.eval_quantile(t, theta, &f0)?;
+            evals += 1;
+            crate::debug!("alg1 iter={k} t={t:.3} fim={:.4e}", cand.fim_dist);
+            history.push(cand.clone());
+            let l0 = *l_ref.get_or_insert(cand.fim_dist.max(1e-30));
+            // Converged: FIM difference within tolerance of the original.
+            if cand.fim_dist <= self.cfg.tolerance * l0 {
+                break;
+            }
+            // Central finite difference of L(t) — the smoothed ∂F/∂T.
+            let (cp, _) = self.eval_quantile((t + h).min(1.0), theta, &f0)?;
+            let (cm, _) = self.eval_quantile((t - h).max(0.0), theta, &f0)?;
+            evals += 2;
+            let g = (cp.fim_dist - cm.fim_dist) / ((cp.quantile - cm.quantile).max(1e-9));
+            // Sign descent with a decaying quantile-space step; if the
+            // gradient points outward at a boundary, step inward anyway
+            // (the landscape is noisy at the extremes).
+            let step = self.cfg.learning_rate * 0.9f64.powi(k as i32);
+            let mut t_new = (t - step * g.signum()).clamp(0.0, 1.0);
+            if (t_new - t).abs() < 1e-12 {
+                t_new = (t - step).clamp(0.0, 1.0);
+            }
+            t = t_new;
+        }
+        // The answer is the last (most-compressed-within-tolerance) iterate.
+        let best = history.last().cloned().expect("at least one candidate");
+        Ok(SearchResult { best, history, evals })
+    }
+
+    /// §5 deployment variant: sweep candidate quantiles, rank jointly by
+    /// FIM distance and energy proxy (`score = fim/fim_max + λ·energy`),
+    /// return the near-Pareto argmin.
+    pub fn sweep(&self, theta: &[f32], candidates: &[f64], lambda: f64) -> Result<SearchResult> {
+        let f0 = self.fim_diag(theta)?;
+        let mut history = Vec::new();
+        for &q in candidates {
+            let (cand, _) = self.eval_quantile(q, theta, &f0)?;
+            crate::debug!("sweep q={q:.2} fim={:.4e} energy={:.3}", cand.fim_dist, cand.energy);
+            history.push(cand);
+        }
+        let fmax = history
+            .iter()
+            .map(|c| c.fim_dist)
+            .fold(f64::MIN_POSITIVE, f64::max);
+        let best = history
+            .iter()
+            .min_by(|a, b| {
+                let sa = a.fim_dist / fmax + lambda * a.energy;
+                let sb = b.fim_dist / fmax + lambda * b.energy;
+                sa.total_cmp(&sb)
+            })
+            .expect("non-empty candidate list")
+            .clone();
+        Ok(SearchResult { best, evals: history.len() + 1, history })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fim_distance_is_squared_frobenius() {
+        assert_eq!(fim_distance(&[1.0, 2.0], &[0.0, 0.0]), 5.0);
+        assert_eq!(fim_distance(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn energy_proxy_bounds() {
+        // all-hi = 1.0
+        assert!((energy_proxy(10, 10, 8, 4) - 1.0).abs() < 1e-12);
+        // all-lo = 2^4/2^8 = 1/16
+        assert!((energy_proxy(0, 10, 8, 4) - 1.0 / 16.0).abs() < 1e-12);
+        let mid = energy_proxy(5, 10, 8, 4);
+        assert!(mid > 1.0 / 16.0 && mid < 1.0);
+    }
+}

@@ -1,0 +1,76 @@
+//! # reram-mpq
+//!
+//! Sensitivity-aware mixed-precision quantization framework for ReRAM-based
+//! computing-in-memory — a reproduction of Chen et al. (CS.AR 2025) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The Rust layer (this crate) is the paper's framework itself plus every
+//! substrate it depends on:
+//!
+//! * [`runtime`] — PJRT client wrapper: loads the AOT-compiled HLO-text
+//!   artifacts produced by `python/compile/aot.py` and executes them on the
+//!   request path (Python never runs at inference time).
+//! * [`tensor`] — minimal dense tensor + binary artifact IO.
+//! * [`model`] — manifest contract: parameter layout, conv layers, strips.
+//! * [`dataset`] — CIFAR-Syn test/calibration data loading + batching.
+//! * [`quant`] — symmetric int4/int8 strip quantizers, device-variation
+//!   model, packing (paper §4.1/§4.3).
+//! * [`sensitivity`] — Hutchinson Hessian-diagonal driver → per-strip
+//!   sensitivity scores (paper §4.1).
+//! * [`fim`] — empirical Fisher diagonal + Algorithm 1 threshold search
+//!   (paper §4.2).
+//! * [`clustering`] — sensitivity clustering and the dynamic crossbar-
+//!   capacity alignment (paper §4.2).
+//! * [`xbar`] — NeuroSim-lite ReRAM crossbar simulator: arrays, ADC/DAC
+//!   energy, latency, mapping, utilization (substrate for §5).
+//! * [`coordinator`] — the execution engine: pipeline orchestration,
+//!   request batching, accuracy evaluation, stepwise mixed-precision
+//!   accumulation (paper §4.3).
+//! * [`baselines`] — HAP structured pruning and uniform-precision
+//!   comparators used by the paper's tables.
+//! * [`report`] — emitters that regenerate the paper's tables/figures.
+
+pub mod baselines;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod experiments;
+pub mod fim;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sensitivity;
+pub mod tensor;
+pub mod util;
+pub mod xbar;
+
+pub use config::RunConfig;
+pub use model::{Manifest, ModelInfo};
+pub use runtime::Runtime;
+pub use tensor::Tensor;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$RERAM_MPQ_ARTIFACTS` or ./artifacts,
+/// walking up from the current dir so examples/benches work from anywhere.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("RERAM_MPQ_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(DEFAULT_ARTIFACTS);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return DEFAULT_ARTIFACTS.into();
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! `reram-mpq` CLI — leader entrypoint for the mixed-precision quantization
+//! framework. All subcommands run purely from the AOT artifacts (Python is
+//! never invoked on the request path).
+
+use reram_mpq::coordinator::{Engine, EngineConfig, Pipeline, ThresholdMode};
+use reram_mpq::dataset::TestSet;
+use reram_mpq::experiments::{self, ExpOpts};
+use reram_mpq::util::cli::Args;
+use reram_mpq::xbar::MappingStrategy;
+use reram_mpq::{artifacts_dir, Manifest, Result, RunConfig, Runtime};
+
+const USAGE: &str = "\
+reram-mpq — sensitivity-aware mixed-precision quantization for ReRAM CIM
+
+USAGE: reram-mpq [--artifacts DIR] [--config FILE.json] <command> [options]
+
+COMMANDS:
+  hw-config                      print the hardware configuration (Table 1)
+  sensitivity [--model M]        Hutchinson sensitivity score distribution
+  quantize [--model M] [--cr R] [--search alg1|sweep] [--no-align]
+           [--origin] [--eval-batches N]
+                                 run the full pipeline once
+  table2   [--eval-batches N]    regenerate Table 2 (HAP vs OURS)
+  table3   [--eval-batches N]    regenerate Table 3 (CR sweep + energy)
+  table4                         regenerate Table 4 (crossbar utilization)
+  fig8     [--eval-batches N]    regenerate Figure 8 (accuracy vs CR)
+  serve    [--model M] [--requests N] [--cr R]
+                                 run the batching engine over test images
+";
+
+fn opts(args: &Args) -> Result<ExpOpts> {
+    Ok(ExpOpts {
+        eval_batches: args.get_usize("eval-batches")?.unwrap_or(usize::MAX),
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &["no-align", "origin", "help"])?;
+    if args.has("help") || args.subcommand.is_none() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    let cfg = match args.get("config") {
+        Some(p) => RunConfig::from_json(&std::fs::read_to_string(p)?)?,
+        None => RunConfig::default(),
+    };
+
+    let manifest = Manifest::load(&dir)?;
+    let runtime = Runtime::new(dir)?;
+
+    match args.subcommand.as_deref().unwrap() {
+        "hw-config" => {
+            println!("Hardware Architecture Configuration (paper Table 1)");
+            println!("{}", cfg.xbar.to_value().to_json());
+        }
+        "sensitivity" => {
+            let model = args.get_or("model", "resnet20");
+            let mut pipe = Pipeline::new(&runtime, &manifest, &model, cfg)?;
+            let s = pipe.sensitivity()?;
+            let sorted = s.sorted_scores();
+            println!("strips: {}", sorted.len());
+            for q in [0.0, 0.25, 0.5, 0.75, 0.9, 0.99] {
+                let idx = ((sorted.len() - 1) as f64 * q) as usize;
+                println!("  p{:>4.1}: {:.3e}", q * 100.0, sorted[idx]);
+            }
+            println!("  max : {:.3e}", sorted[sorted.len() - 1]);
+        }
+        "quantize" => {
+            let model = args.get_or("model", "resnet20");
+            let mut pipe = Pipeline::new(&runtime, &manifest, &model, cfg)?;
+            let mode = match (args.get_f64("cr")?, args.get_or("search", "sweep").as_str()) {
+                (Some(c), _) => ThresholdMode::FixedCr(c),
+                (None, "alg1") => ThresholdMode::Alg1,
+                _ => ThresholdMode::Sweep,
+            };
+            let strategy = if args.has("origin") {
+                MappingStrategy::Origin
+            } else {
+                MappingStrategy::Packed
+            };
+            let eb = args.get_usize("eval-batches")?.unwrap_or(usize::MAX);
+            let r = pipe.run(mode, !args.has("no-align"), strategy, eb)?;
+            println!(
+                "model={} cr={:.1}% q_hi={}/{} top1={:.2}% top5={:.2}% (fp32 {:.2}%)",
+                r.model,
+                r.compression_ratio * 100.0,
+                r.q_hi,
+                r.total_strips,
+                r.accuracy.top1 * 100.0,
+                r.accuracy.top5 * 100.0,
+                r.fp32_accuracy * 100.0
+            );
+            println!(
+                "energy={:.3} mJ (ADC {:.3}) latency={:.3} ms util(hi)={:.2}% util(all)={:.2}% fim_evals={}",
+                r.cost.energy.system_mj(),
+                r.cost.energy.adc_mj,
+                r.cost.latency_ms,
+                r.utilization_hi * 100.0,
+                r.utilization_all * 100.0,
+                r.fim_evals
+            );
+        }
+        "table2" => {
+            let t = experiments::table2(&runtime, &manifest, &cfg, opts(&args)?)?;
+            println!("{}", experiments::render_table2(&t));
+        }
+        "table3" => {
+            let rows = experiments::table3(
+                &runtime,
+                &manifest,
+                &cfg,
+                opts(&args)?,
+                experiments::TABLE3_CRS,
+            )?;
+            println!("{}", experiments::render_table3(&rows));
+        }
+        "table4" => {
+            let rows = experiments::table4(&runtime, &manifest, &cfg)?;
+            println!("{}", experiments::render_table4(&rows));
+        }
+        "fig8" => {
+            let rows = experiments::fig8(
+                &runtime,
+                &manifest,
+                &cfg,
+                opts(&args)?,
+                experiments::FIG8_CRS,
+            )?;
+            println!("{}", experiments::render_fig8(&rows));
+        }
+        "serve" => {
+            let model = args.get_or("model", "resnet8");
+            let requests = args.get_usize("requests")?.unwrap_or(512);
+            let cr = args.get_f64("cr")?;
+            serve(runtime, manifest, cfg, &model, requests, cr)?;
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+/// Push test images through the batching engine from several client threads
+/// and report throughput + latency + accuracy.
+fn serve(
+    runtime: Runtime,
+    manifest: Manifest,
+    cfg: RunConfig,
+    model: &str,
+    requests: usize,
+    cr: Option<f64>,
+) -> Result<()> {
+    let mut pipe = Pipeline::new(&runtime, &manifest, model, cfg.clone())?;
+    // Quantize at the requested CR (or serve fp32).
+    let theta = match cr {
+        Some(c) => {
+            let r = pipe.choose_clustering(ThresholdMode::FixedCr(c))?;
+            reram_mpq::quant::apply(&pipe.model, &pipe.theta, &r.0.bitmap, &cfg.quant).theta
+        }
+        None => pipe.theta.clone(),
+    };
+    let engine = Engine::new(manifest.dir.clone(), &pipe.model, theta, EngineConfig::default())?;
+    let handle = engine.start();
+    // Warm the executable before timing.
+    let _ = handle.classify(vec![0.0; 32 * 32 * 3])?;
+
+    let test = TestSet::load(&manifest)?;
+    let n = requests.min(test.len());
+    let elems = 32 * 32 * 3;
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    // Submit in flights of 64 to keep the batcher busy.
+    let mut i = 0;
+    while i < n {
+        let hi = (i + 64).min(n);
+        let pendings: Vec<_> = (i..hi)
+            .map(|j| {
+                let img = test.x.data()[j * elems..(j + 1) * elems].to_vec();
+                handle.submit(img)
+            })
+            .collect::<Result<_>>()?;
+        for (j, p) in (i..hi).zip(pendings) {
+            if p.wait()?.class == test.y[j] {
+                correct += 1;
+            }
+        }
+        i = hi;
+    }
+    let dt = t0.elapsed();
+    let m = handle.metrics.snapshot();
+    println!(
+        "served {n} requests in {:.3}s  ({:.1} req/s)  acc={:.2}%",
+        dt.as_secs_f64(),
+        n as f64 / dt.as_secs_f64(),
+        correct as f64 / n as f64 * 100.0
+    );
+    println!(
+        "batches={} mean_fill={:.2} mean_batch_latency={:.1}us max={}us",
+        m.batches, m.mean_batch_fill, m.mean_latency_us, m.max_latency_us
+    );
+    Ok(())
+}

@@ -1,0 +1,415 @@
+//! The manifest contract between `python/compile/aot.py` and the Rust
+//! coordinator: parameter layout, conv layers, and the paper's strip-weight
+//! indexing (§4.1 — a strip is the `1×1×D` slice of an HWIO conv kernel at a
+//! fixed (kh, kw, output-channel)).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::tensor::Tensor;
+use crate::util::json::Value;
+use crate::Result;
+
+/// A binary tensor artifact reference.
+#[derive(Clone, Debug)]
+pub struct BinEntry {
+    pub file: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One parameter tensor in the flat layout.
+#[derive(Clone, Debug)]
+pub struct LayerEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: String,
+    pub theta_offset: usize,
+    pub convflat_offset: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct BatchSizes {
+    pub eval: usize,
+    pub serve: usize,
+    pub calib: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub num_params: usize,
+    pub num_conv_params: usize,
+    pub fp32_test_acc: f64,
+    pub params: BinEntry,
+    pub layers: Vec<LayerEntry>,
+    pub executables: HashMap<String, String>,
+    pub batch: BatchSizes,
+}
+
+#[derive(Clone, Debug)]
+pub struct KernelEntry {
+    pub t: usize,
+    pub d: usize,
+    pub g: usize,
+    pub n: usize,
+    pub strip_mvm: String,
+    pub mixed_strip_mvm: String,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: u32,
+    pub dataset: HashMap<String, BinEntry>,
+    pub models: HashMap<String, ModelEntry>,
+    pub kernel: KernelEntry,
+    pub num_classes: usize,
+    pub dir: PathBuf,
+}
+
+fn bin_entry(v: &Value) -> Result<BinEntry> {
+    Ok(BinEntry {
+        file: v.get("file")?.str()?.to_string(),
+        shape: v.get("shape")?.usize_vec()?,
+        dtype: v.get("dtype")?.str()?.to_string(),
+    })
+}
+
+fn layer_entry(v: &Value) -> Result<LayerEntry> {
+    Ok(LayerEntry {
+        name: v.get("name")?.str()?.to_string(),
+        shape: v.get("shape")?.usize_vec()?,
+        kind: v.get("kind")?.str()?.to_string(),
+        theta_offset: v.get("theta_offset")?.usize()?,
+        convflat_offset: match v.opt("convflat_offset") {
+            Some(x) => Some(x.usize()?),
+            None => None,
+        },
+    })
+}
+
+fn model_entry(v: &Value) -> Result<ModelEntry> {
+    let batch = v.get("batch")?;
+    Ok(ModelEntry {
+        name: v.get("name")?.str()?.to_string(),
+        num_params: v.get("num_params")?.usize()?,
+        num_conv_params: v.get("num_conv_params")?.usize()?,
+        fp32_test_acc: v.get("fp32_test_acc")?.num()?,
+        params: bin_entry(v.get("params")?)?,
+        layers: v
+            .get("layers")?
+            .arr()?
+            .iter()
+            .map(layer_entry)
+            .collect::<Result<_>>()?,
+        executables: v
+            .get("executables")?
+            .obj()?
+            .iter()
+            .map(|(k, val)| Ok((k.clone(), val.str()?.to_string())))
+            .collect::<Result<_>>()?,
+        batch: BatchSizes {
+            eval: batch.get("eval")?.usize()?,
+            serve: batch.get("serve")?.usize()?,
+            calib: batch.get("calib")?.usize()?,
+        },
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts` first)", path.display()))?;
+        let v = Value::parse(&text)?;
+        let kernel = v.get("kernel")?;
+        Ok(Manifest {
+            version: v.get("version")?.usize()? as u32,
+            dataset: v
+                .get("dataset")?
+                .obj()?
+                .iter()
+                .map(|(k, val)| Ok((k.clone(), bin_entry(val)?)))
+                .collect::<Result<_>>()?,
+            models: v
+                .get("models")?
+                .obj()?
+                .iter()
+                .map(|(k, val)| Ok((k.clone(), model_entry(val)?)))
+                .collect::<Result<_>>()?,
+            kernel: KernelEntry {
+                t: kernel.get("t")?.usize()?,
+                d: kernel.get("d")?.usize()?,
+                g: kernel.get("g")?.usize()?,
+                n: kernel.get("n")?.usize()?,
+                strip_mvm: kernel.get("strip_mvm")?.str()?.to_string(),
+                mixed_strip_mvm: kernel.get("mixed_strip_mvm")?.str()?.to_string(),
+            },
+            num_classes: v.get("num_classes")?.usize()?,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn tensor(&self, entry: &BinEntry) -> Result<Tensor> {
+        Tensor::load_bin(&self.dir.join(&entry.file), entry.shape.clone())
+    }
+
+    pub fn dataset_tensor(&self, key: &str) -> Result<Tensor> {
+        let e = self
+            .dataset
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("dataset key {key} missing from manifest"))?;
+        self.tensor(e)
+    }
+
+    pub fn model(&self, name: &str) -> Result<ModelInfo> {
+        let entry = self
+            .models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))?;
+        Ok(ModelInfo::new(entry.clone()))
+    }
+}
+
+/// One quantizable conv layer, with strip geometry derived from its HWIO shape.
+#[derive(Clone, Debug)]
+pub struct ConvLayer {
+    /// Index into `ModelInfo::conv_layers`.
+    pub index: usize,
+    pub name: String,
+    /// Kernel spatial size K (square kernels).
+    pub k: usize,
+    /// Input depth D — the strip length.
+    pub d: usize,
+    /// Output channels N.
+    pub n: usize,
+    pub theta_offset: usize,
+    pub convflat_offset: usize,
+}
+
+impl ConvLayer {
+    /// Number of strips in this layer: K²·N (paper §4.1).
+    pub fn num_strips(&self) -> usize {
+        self.k * self.k * self.n
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.k * self.k * self.d * self.n
+    }
+
+    /// Flat index (within theta) of element (g, d, n) where g = kh*K + kw.
+    #[inline]
+    pub fn theta_index(&self, g: usize, dd: usize, n: usize) -> usize {
+        self.theta_offset + (g * self.d + dd) * self.n + n
+    }
+
+    /// Flat index within the conv-flat vector (HVP/GSQ output layout).
+    #[inline]
+    pub fn convflat_index(&self, g: usize, dd: usize, n: usize) -> usize {
+        self.convflat_offset + (g * self.d + dd) * self.n + n
+    }
+}
+
+/// Identifies one strip-weight: (conv layer, kernel position g = kh*K+kw,
+/// output channel n).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StripId {
+    pub layer: usize,
+    pub g: usize,
+    pub n: usize,
+}
+
+/// A model plus its derived strip table.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub entry: ModelEntry,
+    conv_layers: Vec<ConvLayer>,
+    strips: Vec<StripId>,
+}
+
+impl ModelInfo {
+    pub fn new(entry: ModelEntry) -> Self {
+        let mut conv_layers = Vec::new();
+        for l in &entry.layers {
+            if l.kind == "conv" {
+                let (k, d, n) = (l.shape[0], l.shape[2], l.shape[3]);
+                assert_eq!(l.shape[0], l.shape[1], "non-square kernel {:?}", l.shape);
+                conv_layers.push(ConvLayer {
+                    index: conv_layers.len(),
+                    name: l.name.clone(),
+                    k,
+                    d,
+                    n,
+                    theta_offset: l.theta_offset,
+                    convflat_offset: l.convflat_offset.expect("conv layer missing convflat_offset"),
+                });
+            }
+        }
+        let mut strips = Vec::new();
+        for (li, l) in conv_layers.iter().enumerate() {
+            for g in 0..l.k * l.k {
+                for n in 0..l.n {
+                    strips.push(StripId { layer: li, g, n });
+                }
+            }
+        }
+        Self { entry, conv_layers, strips }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.entry.name
+    }
+
+    pub fn conv_layers(&self) -> &[ConvLayer] {
+        &self.conv_layers
+    }
+
+    pub fn layer(&self, idx: usize) -> &ConvLayer {
+        &self.conv_layers[idx]
+    }
+
+    /// All strips, layer-major then g-major then n.
+    pub fn strips(&self) -> &[StripId] {
+        &self.strips
+    }
+
+    pub fn num_strips(&self) -> usize {
+        self.strips.len()
+    }
+
+    /// Copy the D values of a strip out of the flat parameter vector.
+    pub fn strip_values(&self, theta: &[f32], s: StripId) -> Vec<f32> {
+        let l = &self.conv_layers[s.layer];
+        (0..l.d).map(|dd| theta[l.theta_index(s.g, dd, s.n)]).collect()
+    }
+
+    /// Allocation-free variant: fill `buf` with the strip's values.
+    pub fn strip_values_into(&self, theta: &[f32], s: StripId, buf: &mut Vec<f32>) {
+        let l = &self.conv_layers[s.layer];
+        buf.clear();
+        buf.extend((0..l.d).map(|dd| theta[l.theta_index(s.g, dd, s.n)]));
+    }
+
+    /// Overwrite the D values of a strip in the flat parameter vector.
+    pub fn set_strip_values(&self, theta: &mut [f32], s: StripId, vals: &[f32]) {
+        let l = &self.conv_layers[s.layer];
+        assert_eq!(vals.len(), l.d);
+        for (dd, v) in vals.iter().enumerate() {
+            theta[l.theta_index(s.g, dd, s.n)] = *v;
+        }
+    }
+
+    /// ‖w_strip‖² over the flat parameter vector.
+    pub fn strip_l2sq(&self, theta: &[f32], s: StripId) -> f64 {
+        let l = &self.conv_layers[s.layer];
+        (0..l.d)
+            .map(|dd| {
+                let v = theta[l.theta_index(s.g, dd, s.n)] as f64;
+                v * v
+            })
+            .sum()
+    }
+
+    /// Sum a conv-flat-sized vector (e.g. a Hessian-diagonal estimate) over
+    /// the elements of each strip → one value per strip, in `strips()` order.
+    pub fn reduce_convflat_per_strip(&self, convflat: &[f32]) -> Vec<f64> {
+        assert_eq!(convflat.len(), self.entry.num_conv_params);
+        let mut out = Vec::with_capacity(self.strips.len());
+        for s in &self.strips {
+            let l = &self.conv_layers[s.layer];
+            let mut acc = 0.0f64;
+            for dd in 0..l.d {
+                acc += convflat[l.convflat_index(s.g, dd, s.n)] as f64;
+            }
+            out.push(acc);
+        }
+        out
+    }
+
+    /// Load the fp32 checkpoint from the artifacts dir.
+    pub fn load_params(&self, manifest: &Manifest) -> Result<Vec<f32>> {
+        Ok(manifest.tensor(&self.entry.params)?.into_data())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_entry() -> ModelEntry {
+        // one conv layer [2,2,3,4] at theta offset 5, convflat offset 0
+        ModelEntry {
+            name: "toy".into(),
+            num_params: 5 + 2 * 2 * 3 * 4,
+            num_conv_params: 2 * 2 * 3 * 4,
+            fp32_test_acc: 1.0,
+            params: BinEntry { file: "x".into(), shape: vec![53], dtype: "f32".into() },
+            layers: vec![
+                LayerEntry {
+                    name: "gn".into(),
+                    shape: vec![5],
+                    kind: "gn".into(),
+                    theta_offset: 0,
+                    convflat_offset: None,
+                },
+                LayerEntry {
+                    name: "c1".into(),
+                    shape: vec![2, 2, 3, 4],
+                    kind: "conv".into(),
+                    theta_offset: 5,
+                    convflat_offset: Some(0),
+                },
+            ],
+            executables: HashMap::new(),
+            batch: BatchSizes { eval: 1, serve: 1, calib: 1 },
+        }
+    }
+
+    #[test]
+    fn strip_table_geometry() {
+        let m = ModelInfo::new(toy_entry());
+        assert_eq!(m.conv_layers().len(), 1);
+        let l = m.layer(0);
+        assert_eq!((l.k, l.d, l.n), (2, 3, 4));
+        assert_eq!(l.num_strips(), 16); // K²·N = 4·4
+        assert_eq!(m.num_strips(), 16);
+    }
+
+    #[test]
+    fn strip_values_roundtrip() {
+        let m = ModelInfo::new(toy_entry());
+        let mut theta = vec![0.0f32; m.entry.num_params];
+        let s = StripId { layer: 0, g: 3, n: 2 };
+        m.set_strip_values(&mut theta, s, &[1.0, 2.0, 3.0]);
+        assert_eq!(m.strip_values(&theta, s), vec![1.0, 2.0, 3.0]);
+        // elements land at stride N within the layer block
+        let l = m.layer(0);
+        assert_eq!(theta[l.theta_index(3, 0, 2)], 1.0);
+        assert_eq!(theta[l.theta_index(3, 1, 2)], 2.0);
+        // no bleed into other strips
+        let other = StripId { layer: 0, g: 3, n: 1 };
+        assert_eq!(m.strip_values(&theta, other), vec![0.0, 0.0, 0.0]);
+        assert!((m.strip_l2sq(&theta, s) - 14.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reduce_convflat_sums_within_strip() {
+        let m = ModelInfo::new(toy_entry());
+        let mut flat = vec![0.0f32; m.entry.num_conv_params];
+        let l = m.layer(0);
+        // put 1.0 in every element of strip (g=1, n=0)
+        for dd in 0..l.d {
+            flat[l.convflat_index(1, dd, 0)] = 1.0;
+        }
+        let per = m.reduce_convflat_per_strip(&flat);
+        let idx = m
+            .strips()
+            .iter()
+            .position(|s| s.g == 1 && s.n == 0)
+            .unwrap();
+        assert_eq!(per[idx], 3.0);
+        assert_eq!(per.iter().sum::<f64>(), 3.0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Strip quantizers (paper §4.1, §4.3): symmetric uniform int-b codes with
+//! per-strip or per-layer scales, the `expand()` alignment factor, and the
+//! ReRAM device-variation model.
+
+use crate::config::{Granularity, QuantConfig, Tier};
+use crate::model::ModelInfo;
+use crate::util::rng::Rng;
+
+/// Largest positive code of a symmetric b-bit quantizer.
+#[inline]
+pub fn qmax(bits: u8) -> f32 {
+    ((1i32 << (bits - 1)) - 1) as f32
+}
+
+/// Symmetric scale for a value range: `scale = max|w| / qmax`.
+#[inline]
+pub fn symmetric_scale(vals: &[f32], bits: u8) -> f32 {
+    let amax = vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if amax > 0.0 {
+        amax / qmax(bits)
+    } else {
+        1.0
+    }
+}
+
+/// Quantize to integer codes on the given scale.
+pub fn quantize_codes(vals: &[f32], bits: u8, scale: f32) -> Vec<i32> {
+    let q = qmax(bits);
+    vals.iter()
+        .map(|v| (v / scale).round().clamp(-q, q) as i32)
+        .collect()
+}
+
+/// Dequantize codes back to f32.
+pub fn dequantize(codes: &[i32], scale: f32) -> Vec<f32> {
+    codes.iter().map(|&c| c as f32 * scale).collect()
+}
+
+/// Fake-quantize in one step: `deq(quant(v))`.
+pub fn fake_quantize(vals: &[f32], bits: u8, scale: f32) -> Vec<f32> {
+    let q = qmax(bits);
+    vals.iter()
+        .map(|v| (v / scale).round().clamp(-q, q) * scale)
+        .collect()
+}
+
+/// The paper's `expand()` factor aligning low-bit partial sums onto the
+/// high-bit accumulation grid: the ratio of quantization steps.
+#[inline]
+pub fn expand_factor(scale_lo: f32, scale_hi: f32) -> f32 {
+    scale_lo / scale_hi
+}
+
+/// Per-strip precision assignment produced by clustering.
+#[derive(Clone, Debug)]
+pub struct BitMap {
+    /// bits per strip, in `ModelInfo::strips()` order; 0 = pruned.
+    pub bits: Vec<u8>,
+}
+
+impl BitMap {
+    pub fn uniform(n: usize, bits: u8) -> Self {
+        Self { bits: vec![bits; n] }
+    }
+
+    /// Fraction of strips in the low tier (the paper's compression ratio;
+    /// pruned strips count as compressed too).
+    pub fn compression_ratio(&self, hi_bits: u8) -> f64 {
+        let lo = self.bits.iter().filter(|&&b| b != hi_bits).count();
+        lo as f64 / self.bits.len().max(1) as f64
+    }
+
+    pub fn count_bits(&self, bits: u8) -> usize {
+        self.bits.iter().filter(|&&b| b == bits).count()
+    }
+}
+
+/// Result of quantizing a model: the dequantized ("fake-quant") parameter
+/// vector to feed the forward executable, plus the per-strip metadata the
+/// crossbar mapper consumes.
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    pub theta: Vec<f32>,
+    /// Per-strip scale (LSB) actually used.
+    pub scales: Vec<f32>,
+    /// Per-strip bit width (copy of the bitmap).
+    pub bits: Vec<u8>,
+    /// Mean squared quantization error over conv weights.
+    pub mse: f64,
+}
+
+/// Per-layer shared scale for a tier (one conductance window per array bank).
+fn layer_scale(model: &ModelInfo, theta: &[f32], layer: usize, bits: u8) -> f32 {
+    let l = model.layer(layer);
+    let lo = l.theta_offset;
+    let hi = lo + l.num_params();
+    symmetric_scale(&theta[lo..hi], bits)
+}
+
+/// Apply mixed-precision quantization to the conv weights of `theta`
+/// according to `bitmap`, with the device-variation model of `cfg`.
+///
+/// Strips with bits == 0 are pruned (zeroed) — used by the HAP baseline.
+pub fn apply(
+    model: &ModelInfo,
+    theta: &[f32],
+    bitmap: &BitMap,
+    cfg: &QuantConfig,
+) -> QuantizedModel {
+    assert_eq!(bitmap.bits.len(), model.num_strips());
+    let mut out = theta.to_vec();
+    let mut scales = vec![0.0f32; model.num_strips()];
+    let mut rng = Rng::seed_from_u64(cfg.seed);
+    let mut sq_err = 0.0f64;
+    let mut n_q = 0usize;
+
+    // Cache per-(layer, bits) layer scales.
+    let mut layer_scales: std::collections::HashMap<(usize, u8), f32> =
+        std::collections::HashMap::new();
+
+    // Hot loop: one pass per strip with reusable buffers (no per-strip
+    // allocation — §Perf).
+    let mut vals: Vec<f32> = Vec::new();
+    let mut deq: Vec<f32> = Vec::new();
+    for (i, s) in model.strips().iter().enumerate() {
+        let bits = bitmap.bits[i];
+        model.strip_values_into(&out, *s, &mut vals);
+        if bits == 0 {
+            deq.clear();
+            deq.resize(vals.len(), 0.0);
+            model.set_strip_values(&mut out, *s, &deq);
+            for v in &vals {
+                sq_err += (*v as f64) * (*v as f64);
+            }
+            n_q += vals.len();
+            continue;
+        }
+        let tier = tier_for(cfg, bits);
+        let scale = match tier.granularity {
+            Granularity::PerStrip => symmetric_scale(&vals, bits),
+            Granularity::PerLayer => *layer_scales
+                .entry((s.layer, bits))
+                .or_insert_with(|| layer_scale(model, theta, s.layer, bits)),
+        };
+        scales[i] = scale;
+        let q = qmax(bits);
+        deq.clear();
+        deq.extend(vals.iter().map(|v| (v / scale).round().clamp(-q, q) * scale));
+        if cfg.device_sigma > 0.0 {
+            for v in deq.iter_mut() {
+                *v += rng.normal() * cfg.device_sigma * scale;
+            }
+        }
+        for (a, b) in vals.iter().zip(deq.iter()) {
+            let e = (*a - *b) as f64;
+            sq_err += e * e;
+        }
+        n_q += vals.len();
+        model.set_strip_values(&mut out, *s, &deq);
+    }
+
+    QuantizedModel {
+        theta: out,
+        scales,
+        bits: bitmap.bits.clone(),
+        mse: sq_err / n_q.max(1) as f64,
+    }
+}
+
+fn tier_for(cfg: &QuantConfig, bits: u8) -> Tier {
+    if bits == cfg.hi.bits {
+        cfg.hi
+    } else if bits == cfg.lo.bits {
+        cfg.lo
+    } else {
+        // Other widths (ablations): per-strip scaling.
+        Tier { bits, granularity: Granularity::PerStrip }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qmax_values() {
+        assert_eq!(qmax(8), 127.0);
+        assert_eq!(qmax(4), 7.0);
+        assert_eq!(qmax(2), 1.0);
+    }
+
+    #[test]
+    fn fake_quant_error_bounded_by_half_lsb() {
+        let vals: Vec<f32> = (-50..50).map(|i| i as f32 * 0.037).collect();
+        for bits in [4u8, 8] {
+            let s = symmetric_scale(&vals, bits);
+            let deq = fake_quantize(&vals, bits, s);
+            for (a, b) in vals.iter().zip(deq.iter()) {
+                assert!((a - b).abs() <= s * 0.5 + 1e-6, "bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn codes_respect_range() {
+        let vals = vec![-3.0f32, -1.0, 0.0, 0.5, 2.9];
+        let s = symmetric_scale(&vals, 4);
+        let codes = quantize_codes(&vals, 4, s);
+        assert!(codes.iter().all(|&c| (-7..=7).contains(&c)));
+        // extremes hit the rails
+        assert_eq!(codes[0], -7);
+    }
+
+    #[test]
+    fn zero_strip_gets_unit_scale() {
+        assert_eq!(symmetric_scale(&[0.0, 0.0], 8), 1.0);
+    }
+
+    #[test]
+    fn expand_is_scale_ratio() {
+        assert_eq!(expand_factor(0.4, 0.1), 4.0);
+    }
+
+    #[test]
+    fn bitmap_cr_counts_non_hi() {
+        let bm = BitMap { bits: vec![8, 8, 4, 4, 4, 0] };
+        assert!((bm.compression_ratio(8) - 4.0 / 6.0).abs() < 1e-12);
+        assert_eq!(bm.count_bits(4), 3);
+    }
+
+    #[test]
+    fn eight_bit_roundtrip_is_tighter_than_four_bit() {
+        let vals: Vec<f32> = (0..64).map(|i| ((i * 37) % 13) as f32 * 0.11 - 0.7).collect();
+        let e8: f32 = {
+            let s = symmetric_scale(&vals, 8);
+            fake_quantize(&vals, 8, s)
+                .iter()
+                .zip(&vals)
+                .map(|(a, b)| (a - b).abs())
+                .sum()
+        };
+        let e4: f32 = {
+            let s = symmetric_scale(&vals, 4);
+            fake_quantize(&vals, 4, s)
+                .iter()
+                .zip(&vals)
+                .map(|(a, b)| (a - b).abs())
+                .sum()
+        };
+        assert!(e8 < e4);
+    }
+}

@@ -1,0 +1,126 @@
+//! Table emitters matching the paper's reporting format (markdown rows,
+//! identical columns to Tables 2–4 / Figure 8 series).
+
+use crate::coordinator::{PipelineReport, ThresholdMode};
+
+/// Nominal CR (the requested operating point) when the run was fixed-CR,
+/// else the measured one — table rows quote the paper's nominal axis.
+pub fn nominal_cr(r: &PipelineReport) -> f64 {
+    match r.mode {
+        ThresholdMode::FixedCr(c) => c,
+        _ => r.compression_ratio,
+    }
+}
+
+/// Format a fraction as a percentage with two decimals.
+pub fn pct(v: f64) -> String {
+    format!("{:.2}%", v * 100.0)
+}
+
+/// Table 2 row: Method | CR | Acc-top1 | Acc-top5 | Latency | Energy.
+pub fn table2_row(method: &str, r: &PipelineReport) -> String {
+    format!(
+        "| {:<6} | {:>4.0}% | {:>7} | {:>7} | {:>9.3} ms | {:>8.3} mJ |",
+        method,
+        nominal_cr(r) * 100.0,
+        pct(r.accuracy.top1),
+        pct(r.accuracy.top5),
+        r.cost.latency_ms,
+        r.cost.energy.system_mj(),
+    )
+}
+
+pub fn table2_header() -> String {
+    "| Method | CR   | Acc-top1 | Acc-top5 | Latency     | Energy      |\n\
+     |--------|------|----------|----------|-------------|-------------|"
+        .to_string()
+}
+
+/// Table 3 row: CR | Acc | System | ADC | Accumulation | Other.
+pub fn table3_row(r: &PipelineReport) -> String {
+    let e = &r.cost.energy;
+    format!(
+        "| {:>4.0}% | {:>7} | {:>8.3} mJ | {:>8.3} mJ | {:>8.3} uJ | {:>8.3} uJ |",
+        nominal_cr(r) * 100.0,
+        pct(r.accuracy.top1),
+        e.system_mj(),
+        e.adc_mj,
+        e.accumulation_mj * 1e3,
+        e.other_mj * 1e3,
+    )
+}
+
+pub fn table3_header() -> String {
+    "| CR    | Acc     | System      | ADC         | Accumulation | Other       |\n\
+     |-------|---------|-------------|-------------|--------------|-------------|"
+        .to_string()
+}
+
+/// Table 4 row: Model/CR | Method | Size | Bit | Utilization | Improvement.
+pub fn table4_row(
+    model_cr: &str,
+    method: &str,
+    size: (usize, usize),
+    bits: u8,
+    util: f64,
+    improvement: Option<f64>,
+) -> String {
+    format!(
+        "| {:<14} | {:<6} | {:>3}x{:<3} | {}bit | {:>7} | {:>8} |",
+        model_cr,
+        method,
+        size.0,
+        size.1,
+        bits,
+        pct(util),
+        improvement.map_or("-".to_string(), |i| format!("+{:.2}", i * 100.0)),
+    )
+}
+
+pub fn table4_header() -> String {
+    "| Model/CR       | Method | Size    | Bit  | Utilization | Improvement |\n\
+     |----------------|--------|---------|------|-------------|-------------|"
+        .to_string()
+}
+
+/// Figure 8 series row: CR vs accuracy per model.
+pub fn fig8_row(model: &str, cr: f64, acc: f64) -> String {
+    format!("| {:<9} | {:>4.0}% | {:>7} |", model, cr * 100.0, pct(acc))
+}
+
+pub fn fig8_header() -> String {
+    "| Model     | CR   | Acc     |\n|-----------|------|---------|".to_string()
+}
+
+/// §1/§5 headline deltas between a baseline and ours.
+pub fn headline(ours: &PipelineReport, base: &PipelineReport) -> String {
+    let lat = 1.0 - ours.cost.latency_ms / base.cost.latency_ms;
+    let pow = 1.0 - ours.cost.energy.system_mj() / base.cost.energy.system_mj();
+    let adc = 1.0 - ours.cost.energy.adc_mj / base.cost.energy.adc_mj;
+    format!(
+        "accuracy {} (vs {}), latency -{:.0}%, power -{:.0}%, ADC energy -{:.0}%",
+        pct(ours.accuracy.top1),
+        pct(base.accuracy.top1),
+        lat * 100.0,
+        pow * 100.0,
+        adc * 100.0
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.8463), "84.63%");
+    }
+
+    #[test]
+    fn table4_row_shape() {
+        let row = table4_row("ResNet50/80%", "OUR", (128, 128), 8, 0.8436, Some(0.4081));
+        assert!(row.contains("84.36%"));
+        assert!(row.contains("+40.81"));
+        assert!(row.contains("128x128"));
+    }
+}

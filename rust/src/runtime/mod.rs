@@ -1,0 +1,127 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1 CPU):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. One compiled executable per artifact,
+//! cached by name. Interchange is HLO *text* — jax ≥ 0.5 serialized protos
+//! carry 64-bit instruction ids this XLA rejects.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Execution statistics for one executable.
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// A compiled-executable cache over a PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+}
+
+impl Runtime {
+    /// Create a runtime rooted at the artifacts directory.
+    pub fn new(dir: PathBuf) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        crate::info!("pjrt up: platform={} devices={}", client.platform_name(), client.device_count());
+        Ok(Self {
+            client,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (or fetch from cache) the HLO-text artifact `file`.
+    pub fn load(&self, file: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
+        crate::info!("compiled {file} in {:.2}s", t0.elapsed().as_secs_f64());
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with the given inputs; returns the tuple of
+    /// outputs as tensors. All exported graphs return a tuple
+    /// (`return_tuple=True` at lowering).
+    pub fn exec(&self, file: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.load(file)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data())
+                    .reshape(&dims)
+                    .map_err(|e| anyhow::anyhow!("reshape input {:?}: {e}", t.shape()))
+            })
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow::anyhow!("execute {file}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result {file}: {e}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.lock().unwrap();
+            let e = st.entry(file.to_string()).or_default();
+            e.calls += 1;
+            e.total_secs += dt;
+        }
+
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {file}: {e}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| anyhow::anyhow!("output shape: {e}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("output data: {e}"))?;
+                Ok(Tensor::new(dims, data))
+            })
+            .collect()
+    }
+
+    /// Per-executable call statistics (for the perf pass / metrics).
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Number of compiled executables held in cache.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,183 @@
+//! Hutchinson sensitivity driver (paper §4.1).
+//!
+//! The L3 side of the Hessian analysis: generates Rademacher probe vectors,
+//! drives the AOT-compiled `hvp` executable (`v ⊙ Hv` over conv params),
+//! averages the diagonal estimate over probes and calibration batches, and
+//! reduces it to the paper's per-strip sensitivity score
+//!
+//!   s_i = Trace(H_strip) / (2 · p_strip) · ‖w_strip‖²
+//!
+//! (HAP's loss-perturbation form, applied at strip granularity.)
+
+use crate::config::SensitivityConfig;
+use crate::dataset::CalibSet;
+use crate::model::ModelInfo;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Per-strip sensitivity analysis output.
+#[derive(Clone, Debug)]
+pub struct Sensitivity {
+    /// One score per strip, `ModelInfo::strips()` order.
+    pub scores: Vec<f64>,
+    /// Per-strip Hessian-trace estimates (before the ‖w‖² weighting).
+    pub traces: Vec<f64>,
+    /// Hutchinson probes used.
+    pub probes: usize,
+}
+
+impl Sensitivity {
+    /// Scores sorted ascending — the clustering threshold domain.
+    pub fn sorted_scores(&self) -> Vec<f64> {
+        let mut s = self.scores.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        s
+    }
+
+    /// Value at quantile q ∈ [0,1] of the score distribution (q=1 → above
+    /// the max, i.e. "everything low-bit" — the paper's T0).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let s = self.sorted_scores();
+        if q >= 1.0 {
+            return s[s.len() - 1] * (1.0 + 1e-9) + 1e-300;
+        }
+        let idx = ((s.len() as f64) * q.max(0.0)) as usize;
+        s[idx.min(s.len() - 1)]
+    }
+}
+
+/// Drives the HVP executable to estimate per-strip Hessian traces.
+pub struct Analyzer<'a> {
+    pub runtime: &'a Runtime,
+    pub model: &'a ModelInfo,
+    pub calib: &'a CalibSet,
+    pub cfg: SensitivityConfig,
+}
+
+impl<'a> Analyzer<'a> {
+    /// Run Hutchinson estimation with the fp32 checkpoint `theta`.
+    pub fn run(&self, theta: &[f32]) -> Result<Sensitivity> {
+        let pc = self.model.entry.num_conv_params;
+        let exe = self
+            .model
+            .entry
+            .executables
+            .get("hvp")
+            .ok_or_else(|| anyhow::anyhow!("model has no hvp executable"))?
+            .clone();
+        let mut rng = Rng::seed_from_u64(self.cfg.seed);
+        let theta_t = Tensor::from_vec(theta.to_vec());
+
+        let mut diag = vec![0.0f64; pc];
+        let batches = self.cfg.calib_batches.min(self.calib.num_batches()).max(1);
+        let mut total = 0usize;
+        for _probe in 0..self.cfg.probes {
+            // Rademacher probe: ±1 per conv weight.
+            let v: Vec<f32> = (0..pc).map(|_| rng.rademacher()).collect();
+            let v_t = Tensor::from_vec(v);
+            for b in 0..batches {
+                let (x, y1h) = self.calib.get(b);
+                let out = self
+                    .runtime
+                    .exec(&exe, &[theta_t.clone(), x, y1h, v_t.clone()])?;
+                let est = &out[0];
+                anyhow::ensure!(est.len() == pc, "hvp output length mismatch");
+                for (d, e) in diag.iter_mut().zip(est.data()) {
+                    *d += *e as f64;
+                }
+                total += 1;
+            }
+        }
+        for d in diag.iter_mut() {
+            *d /= total as f64;
+        }
+
+        // Per-strip trace = sum of diagonal estimates within the strip.
+        let diag_f32: Vec<f32> = diag.iter().map(|&d| d as f32).collect();
+        let traces = self.model.reduce_convflat_per_strip(&diag_f32);
+
+        // Score: Trace(H_strip)/(2 p_strip) * ||w_strip||^2, clamped at 0
+        // (negative curvature estimates carry no pruning signal — HAP does
+        // the same).
+        let mut scores = Vec::with_capacity(traces.len());
+        for (s, tr) in self.model.strips().iter().zip(traces.iter()) {
+            let p = self.model.layer(s.layer).d as f64;
+            let l2 = self.model.strip_l2sq(theta, *s);
+            scores.push((tr.max(0.0) / (2.0 * p)) * l2);
+        }
+        Ok(Sensitivity { scores, traces, probes: self.cfg.probes })
+    }
+}
+
+/// Pure scoring helper (exposed for tests and the HAP baseline): combines
+/// externally-computed traces with weight norms.
+pub fn score_strips(model: &ModelInfo, theta: &[f32], traces: &[f64]) -> Vec<f64> {
+    model
+        .strips()
+        .iter()
+        .zip(traces.iter())
+        .map(|(s, tr)| {
+            let p = model.layer(s.layer).d as f64;
+            (tr.max(0.0) / (2.0 * p)) * model.strip_l2sq(theta, *s)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry};
+    use std::collections::HashMap;
+
+    fn toy_model() -> ModelInfo {
+        ModelInfo::new(ModelEntry {
+            name: "toy".into(),
+            num_params: 1 * 1 * 2 * 3,
+            num_conv_params: 6,
+            fp32_test_acc: 1.0,
+            params: BinEntry { file: "x".into(), shape: vec![6], dtype: "f32".into() },
+            layers: vec![LayerEntry {
+                name: "c".into(),
+                shape: vec![1, 1, 2, 3],
+                kind: "conv".into(),
+                theta_offset: 0,
+                convflat_offset: Some(0),
+            }],
+            executables: HashMap::new(),
+            batch: BatchSizes { eval: 1, serve: 1, calib: 1 },
+        })
+    }
+
+    #[test]
+    fn score_weights_trace_by_norm() {
+        let m = toy_model();
+        // theta laid out [d, n]: strip n gathers column n
+        let theta = vec![1.0, 0.0, 2.0, /* d=1 */ 3.0, 0.0, 0.0];
+        // strips: n=0 -> {1,3}, n=1 -> {0,0}, n=2 -> {2,0}
+        let traces = vec![2.0, 2.0, 2.0];
+        let s = score_strips(&m, &theta, &traces);
+        // p = d = 2 -> factor trace/(2*2) = 0.5
+        assert!((s[0] - 0.5 * 10.0).abs() < 1e-12);
+        assert!((s[1] - 0.0).abs() < 1e-12);
+        assert!((s[2] - 0.5 * 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_trace_clamped() {
+        let m = toy_model();
+        let theta = vec![1.0; 6];
+        let s = score_strips(&m, &theta, &[-5.0, 1.0, 1.0]);
+        assert_eq!(s[0], 0.0);
+        assert!(s[1] > 0.0);
+    }
+
+    #[test]
+    fn quantile_endpoints() {
+        let sens = Sensitivity { scores: vec![1.0, 2.0, 3.0, 4.0], traces: vec![], probes: 1 };
+        assert_eq!(sens.quantile(0.0), 1.0);
+        assert!(sens.quantile(1.0) > 4.0); // T0: everything below threshold
+        assert_eq!(sens.quantile(0.5), 3.0);
+    }
+}

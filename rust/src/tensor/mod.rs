@@ -1,0 +1,181 @@
+//! Minimal dense f32 tensor + the binary artifact IO contract.
+//!
+//! Artifacts are raw little-endian f32 buffers; shapes live in
+//! `manifest.json` (see `python/compile/aot.py::write_bin`).
+
+use std::io::Read;
+use std::path::Path;
+
+use crate::Result;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Self { shape: vec![data.len()], data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape (same element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Rows `lo..hi` along the leading axis.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && hi <= self.shape[0] && lo <= hi);
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor::new(shape, self.data[lo * row..hi * row].to_vec())
+    }
+
+    /// Argmax along the last axis; returns indices, flattened over leading axes.
+    pub fn argmax_last(&self) -> Vec<usize> {
+        let k = *self.shape.last().expect("rank >= 1");
+        self.data
+            .chunks_exact(k)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Load a raw little-endian f32 file with the given shape.
+    pub fn load_bin(path: &Path, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+        let mut bytes = Vec::with_capacity(n * 4);
+        f.read_to_end(&mut bytes)?;
+        anyhow::ensure!(
+            bytes.len() == n * 4,
+            "{}: expected {} bytes for shape {shape:?}, got {}",
+            path.display(),
+            n * 4,
+            bytes.len()
+        );
+        let data = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Tensor::new(shape, data))
+    }
+
+    pub fn save_bin(&self, path: &Path) -> Result<()> {
+        let mut bytes = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_data_contract() {
+        let t = Tensor::new(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn slice_rows_takes_leading_axis() {
+        let t = Tensor::new(vec![3, 2], vec![0., 1., 10., 11., 20., 21.]);
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[10., 11., 20., 21.]);
+    }
+
+    #[test]
+    fn argmax_last_rowwise() {
+        let t = Tensor::new(vec![2, 3], vec![0., 5., 2., 9., 1., 1.]);
+        assert_eq!(t.argmax_last(), vec![1, 0]);
+    }
+
+    fn temp_path(name: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "reram_mpq_test_{}_{name}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let p = temp_path("roundtrip.bin");
+        let t = Tensor::new(vec![2, 2], vec![1.5, -2.0, 3.25, 0.0]);
+        t.save_bin(&p).unwrap();
+        let u = Tensor::load_bin(&p, vec![2, 2]).unwrap();
+        assert_eq!(t, u);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn bin_size_mismatch_errors() {
+        let p = temp_path("mismatch.bin");
+        std::fs::write(&p, [0u8; 12]).unwrap();
+        assert!(Tensor::load_bin(&p, vec![2, 2]).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

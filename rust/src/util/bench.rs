@@ -1,0 +1,107 @@
+//! Minimal benchmark harness (offline build — no `criterion`).
+//!
+//! Warmup + timed iterations, reporting mean / stddev / min. Used by the
+//! `benches/*.rs` targets (declared `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<42} {:>10.3} ms/iter  (±{:>7.3} ms, min {:>9.3} ms, n={})",
+            self.name,
+            self.mean.as_secs_f64() * 1e3,
+            self.stddev.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner with a time budget per benchmark.
+pub struct Bench {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 30,
+            budget: Duration::from_secs(10),
+        }
+    }
+}
+
+impl Bench {
+    /// Fast profile for CI-style runs (override with BENCH_BUDGET_SECS).
+    pub fn from_env() -> Self {
+        let mut b = Self::default();
+        if let Ok(s) = std::env::var("BENCH_BUDGET_SECS") {
+            if let Ok(secs) = s.parse::<u64>() {
+                b.budget = Duration::from_secs(secs);
+            }
+        }
+        b
+    }
+
+    /// Run `f` repeatedly, returning the measurement (and printing it).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let t_start = Instant::now();
+        let mut times = Vec::new();
+        while times.len() < self.min_iters
+            || (times.len() < self.max_iters && t_start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        let n = times.len();
+        let mean_s = times.iter().map(|d| d.as_secs_f64()).sum::<f64>() / n as f64;
+        let var = times
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters: n,
+            mean: Duration::from_secs_f64(mean_s),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: *times.iter().min().unwrap(),
+        };
+        println!("{}", m.report());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_at_least_min_iters() {
+        let b = Bench { warmup: 0, min_iters: 4, max_iters: 8, budget: Duration::ZERO };
+        let mut count = 0;
+        let m = b.run("noop", || count += 1);
+        assert_eq!(m.iters, 4);
+        assert_eq!(count, 4);
+    }
+}

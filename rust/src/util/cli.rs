@@ -1,0 +1,114 @@
+//! Minimal CLI argument parser (offline build — no `clap`).
+//!
+//! Shape: `prog [--global val]... <subcommand> [--flag] [--opt val]...`
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments: a subcommand plus `--key value` / `--switch` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: HashMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse, treating names in `switch_names` as valueless flags.
+    pub fn parse(argv: &[String], switch_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                if switch_names.contains(&name) {
+                    if inline.is_some() {
+                        bail!("--{name} takes no value");
+                    }
+                    out.switches.push(name.to_string());
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?
+                        }
+                    };
+                    out.options.insert(name.to_string(), val);
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse()?)),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse()?)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_switches() {
+        let a = Args::parse(
+            &v(&["table2", "--eval-batches", "3", "--origin", "--cr=0.74"]),
+            &["origin"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("table2"));
+        assert_eq!(a.get("eval-batches"), Some("3"));
+        assert!(a.has("origin"));
+        assert_eq!(a.get_f64("cr").unwrap(), Some(0.74));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&v(&["x", "--cr"]), &[]).is_err());
+    }
+
+    #[test]
+    fn switch_with_value_errors() {
+        assert!(Args::parse(&v(&["x", "--origin=1"]), &["origin"]).is_err());
+    }
+}

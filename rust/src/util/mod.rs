@@ -1,0 +1,9 @@
+//! In-repo substrates for the offline build: JSON, PRNG, CLI parsing,
+//! logging, bench harness (the usual crates.io dependencies are not
+//! available in this environment — see DESIGN.md §3).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;

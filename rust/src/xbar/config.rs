@@ -1,0 +1,202 @@
+//! Hardware architecture configuration (paper Table 1) + 32 nm energy/
+//! timing constants calibrated to the NeuroSim/ISAAC numbers the paper
+//! cites (§2.2: one ADC bit ≈ 87% energy; ADC dominates array energy).
+
+
+/// ReRAM crossbar + periphery configuration. Defaults reproduce Table 1.
+#[derive(Clone, Copy, Debug)]
+pub struct XbarConfig {
+    /// Synaptic array rows (word lines).
+    pub rows: usize,
+    /// Synaptic array columns (bit lines / cell columns).
+    pub cols: usize,
+    /// Bits stored per ReRAM cell (device precision).
+    pub cell_bits: u8,
+    /// Cell columns sharing one ADC (column mux).
+    pub cols_per_adc: usize,
+    /// Input (activation) bits streamed bit-serially through the DACs.
+    pub input_bits: u8,
+    /// Chip-level ADC lane budget (fixed periphery; the bandwidth wall that
+    /// makes latency proportional to total conversions).
+    pub adc_lanes: usize,
+
+    // --- 32 nm energy/timing constants (per-op, picojoules / nanoseconds) ---
+    /// SAR ADC energy at 4-bit resolution; scales ×2 per extra bit
+    /// (exponential ADC cost, §2.2).
+    pub e_adc4_pj: f64,
+    /// Cell read energy per active (programmed) cell per input-bit phase.
+    pub e_cell_pj: f64,
+    /// DAC/wordline driver energy per row per input-bit phase.
+    pub e_dac_pj: f64,
+    /// Shift-and-add merge energy per ADC sample.
+    pub e_shift_add_pj: f64,
+    /// Digital partial-sum accumulation energy per add (the paper's
+    /// "Accumulation" column).
+    pub e_accum_pj: f64,
+    /// Buffer/interconnect energy per bit moved (the paper's "Other").
+    pub e_buffer_pj_per_bit: f64,
+    /// SAR cycle time (one bit-decision) in ns.
+    pub t_sar_cycle_ns: f64,
+    /// Array read-pulse phase time in ns.
+    pub t_read_ns: f64,
+}
+
+impl Default for XbarConfig {
+    fn default() -> Self {
+        // Table 1: 32 nm, 128×128 array, 2-bit cells, 2 columns per ADC,
+        // 4-/8-bit weights, 16-/256-level ADC.
+        Self {
+            rows: 128,
+            cols: 128,
+            cell_bits: 2,
+            cols_per_adc: 2,
+            input_bits: 8,
+            adc_lanes: 128,
+            e_adc4_pj: 0.8,
+            e_cell_pj: 0.005,
+            e_dac_pj: 0.02,
+            e_shift_add_pj: 0.023,
+            e_accum_pj: 0.2,
+            e_buffer_pj_per_bit: 0.05,
+            t_sar_cycle_ns: 1.0,
+            t_read_ns: 35.0,
+        }
+    }
+}
+
+impl XbarConfig {
+    /// A 32×32 array variant (Table 4's small-array column).
+    pub fn small() -> Self {
+        Self { rows: 32, cols: 32, adc_lanes: 128, ..Self::default() }
+    }
+
+    /// Cell columns occupied by one weight of `bits` precision.
+    pub fn cells_per_weight(&self, bits: u8) -> usize {
+        ((bits + self.cell_bits - 1) / self.cell_bits) as usize
+    }
+
+    /// Weight columns (output channels) that fit side-by-side in one array.
+    pub fn weight_cols_per_array(&self, bits: u8) -> usize {
+        self.cols / self.cells_per_weight(bits)
+    }
+
+    /// ADC resolution (bits) paired with a weight precision — Table 1 pairs
+    /// 4-bit weights with 16-level (4-bit) and 8-bit with 256-level (8-bit).
+    pub fn adc_bits(&self, weight_bits: u8) -> u8 {
+        weight_bits.max(self.cell_bits)
+    }
+
+    /// SAR ADC energy at `bits` resolution (pJ): ×2 per bit above 4.
+    pub fn e_adc_pj(&self, bits: u8) -> f64 {
+        self.e_adc4_pj * 2f64.powi(bits as i32 - 4)
+    }
+
+    /// SAR conversion time at `bits` resolution (ns).
+    pub fn t_adc_ns(&self, bits: u8) -> f64 {
+        bits as f64 * self.t_sar_cycle_ns
+    }
+
+    /// Crossbar capacity C for the dynamic-alignment rule (paper §4.2):
+    /// high-bit strips per array for a layer with strip depth `d`.
+    pub fn capacity_strips(&self, d: usize, bits: u8) -> usize {
+        let vert = (self.rows / d.min(self.rows)).max(1);
+        self.weight_cols_per_array(bits) * vert
+    }
+
+    /// Parse a (possibly partial) JSON object over the given defaults.
+    pub fn from_value(v: &crate::util::json::Value, default: Self) -> crate::Result<Self> {
+        let mut c = default;
+        macro_rules! field {
+            ($name:ident, usize) => {
+                if let Some(x) = v.opt(stringify!($name)) {
+                    c.$name = x.usize()?;
+                }
+            };
+            ($name:ident, u8) => {
+                if let Some(x) = v.opt(stringify!($name)) {
+                    c.$name = x.usize()? as u8;
+                }
+            };
+            ($name:ident, f64) => {
+                if let Some(x) = v.opt(stringify!($name)) {
+                    c.$name = x.num()?;
+                }
+            };
+        }
+        field!(rows, usize);
+        field!(cols, usize);
+        field!(cell_bits, u8);
+        field!(cols_per_adc, usize);
+        field!(input_bits, u8);
+        field!(adc_lanes, usize);
+        field!(e_adc4_pj, f64);
+        field!(e_cell_pj, f64);
+        field!(e_dac_pj, f64);
+        field!(e_shift_add_pj, f64);
+        field!(e_accum_pj, f64);
+        field!(e_buffer_pj_per_bit, f64);
+        field!(t_sar_cycle_ns, f64);
+        field!(t_read_ns, f64);
+        Ok(c)
+    }
+
+    pub fn to_value(&self) -> crate::util::json::Value {
+        use crate::util::json::{obj, Value};
+        obj(vec![
+            ("rows", Value::Num(self.rows as f64)),
+            ("cols", Value::Num(self.cols as f64)),
+            ("cell_bits", Value::Num(self.cell_bits as f64)),
+            ("cols_per_adc", Value::Num(self.cols_per_adc as f64)),
+            ("input_bits", Value::Num(self.input_bits as f64)),
+            ("adc_lanes", Value::Num(self.adc_lanes as f64)),
+            ("e_adc4_pj", Value::Num(self.e_adc4_pj)),
+            ("e_cell_pj", Value::Num(self.e_cell_pj)),
+            ("e_dac_pj", Value::Num(self.e_dac_pj)),
+            ("e_shift_add_pj", Value::Num(self.e_shift_add_pj)),
+            ("e_accum_pj", Value::Num(self.e_accum_pj)),
+            ("e_buffer_pj_per_bit", Value::Num(self.e_buffer_pj_per_bit)),
+            ("t_sar_cycle_ns", Value::Num(self.t_sar_cycle_ns)),
+            ("t_read_ns", Value::Num(self.t_read_ns)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_defaults() {
+        let c = XbarConfig::default();
+        assert_eq!((c.rows, c.cols), (128, 128));
+        assert_eq!(c.cell_bits, 2);
+        assert_eq!(c.cols_per_adc, 2);
+        assert_eq!(c.cells_per_weight(8), 4);
+        assert_eq!(c.cells_per_weight(4), 2);
+        assert_eq!(c.weight_cols_per_array(8), 32);
+        assert_eq!(c.weight_cols_per_array(4), 64);
+        // 16-level / 256-level ADC pairing
+        assert_eq!(c.adc_bits(4), 4);
+        assert_eq!(c.adc_bits(8), 8);
+    }
+
+    #[test]
+    fn adc_energy_doubles_per_bit() {
+        let c = XbarConfig::default();
+        let e4 = c.e_adc_pj(4);
+        let e5 = c.e_adc_pj(5);
+        let e8 = c.e_adc_pj(8);
+        assert!((e5 / e4 - 2.0).abs() < 1e-12);
+        assert!((e8 / e4 - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_counts_vertical_slots() {
+        let c = XbarConfig::default();
+        // d=32: 4 vertical slots × 32 columns = 128 strips per 8-bit array
+        assert_eq!(c.capacity_strips(32, 8), 128);
+        assert_eq!(c.capacity_strips(128, 8), 32);
+        // deeper than the array: still one (split) slot
+        assert_eq!(c.capacity_strips(256, 8), 32);
+    }
+}

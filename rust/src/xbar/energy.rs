@@ -1,0 +1,226 @@
+//! Energy / latency cost model (NeuroSim-lite).
+//!
+//! Accounting philosophy (matches the paper's §2.2 claims): ADCs dominate;
+//! their energy scales exponentially with resolution, their time linearly
+//! (SAR). Costs are charged per *provisioned* crossbar resource — zeros
+//! left by unstructured sparsity still burn read phases and conversions,
+//! which is exactly why the structured mapping wins.
+//!
+//! Latency model: word-line reads are pipelined behind the conversion wall
+//! (the chip has a fixed ADC lane budget), so end-to-end latency is
+//! conversion-bound: `Σ conversions × t_sar(bits) / adc_lanes`.
+//! All figures are per image.
+
+
+use super::mapper::ModelMapping;
+use super::XbarConfig;
+
+/// Energy breakdown mirroring the paper's Table 3 columns (per image).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBreakdown {
+    /// ADC conversions (mJ).
+    pub adc_mj: f64,
+    /// Cell read currents (mJ).
+    pub cell_mj: f64,
+    /// DAC / word-line drivers (mJ).
+    pub dac_mj: f64,
+    /// Shift-and-add merge of bit-sliced columns (mJ).
+    pub shift_add_mj: f64,
+    /// Digital partial-sum accumulation incl. the mixed-precision
+    /// expand-add (mJ) — Table 3 "Accumulation".
+    pub accumulation_mj: f64,
+    /// Buffers / interconnect (mJ) — Table 3 "Other".
+    pub other_mj: f64,
+}
+
+impl EnergyBreakdown {
+    /// Table 3 "System" column.
+    pub fn system_mj(&self) -> f64 {
+        self.adc_mj + self.cell_mj + self.dac_mj + self.shift_add_mj
+            + self.accumulation_mj + self.other_mj
+    }
+
+    fn add(&mut self, o: &EnergyBreakdown) {
+        self.adc_mj += o.adc_mj;
+        self.cell_mj += o.cell_mj;
+        self.dac_mj += o.dac_mj;
+        self.shift_add_mj += o.shift_add_mj;
+        self.accumulation_mj += o.accumulation_mj;
+        self.other_mj += o.other_mj;
+    }
+}
+
+/// Per-layer cost detail.
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    pub name: String,
+    pub energy: EnergyBreakdown,
+    pub latency_ms: f64,
+    pub conversions: u64,
+}
+
+/// Whole-model per-image cost.
+#[derive(Clone, Debug)]
+pub struct CostReport {
+    pub energy: EnergyBreakdown,
+    pub latency_ms: f64,
+    pub conversions: u64,
+    pub layers: Vec<LayerCost>,
+}
+
+const PJ_TO_MJ: f64 = 1e-9;
+const NS_TO_MS: f64 = 1e-6;
+
+/// Evaluate the cost model over a mapping (per image).
+pub fn cost(mapping: &ModelMapping, cfg: &XbarConfig) -> CostReport {
+    let mut layers = Vec::new();
+    let mut total = EnergyBreakdown::default();
+    let mut latency_ns = 0.0f64;
+    let mut conv_total = 0u64;
+
+    for lm in &mapping.layers {
+        let px = lm.out_pixels as u64;
+        let mut e = EnergyBreakdown::default();
+        let mut lat = 0.0f64;
+        let mut conv_layer = 0u64;
+        let n_tiers = lm.tiers.iter().filter(|t| t.cellcols > 0).count() as u64;
+
+        for t in &lm.tiers {
+            if t.cellcols == 0 {
+                continue;
+            }
+            let adc_bits = cfg.adc_bits(t.bits);
+            let phases = cfg.input_bits as u64;
+            // Every provisioned cell column converts once per phase.
+            let conversions = t.cellcols(cfg) * phases * px;
+            conv_layer += conversions;
+
+            e.adc_mj += conversions as f64 * cfg.e_adc_pj(adc_bits) * PJ_TO_MJ;
+            e.cell_mj += (t.used_cells * phases * px) as f64 * cfg.e_cell_pj * PJ_TO_MJ;
+            e.dac_mj += (t.driven_rows * phases * px) as f64 * cfg.e_dac_pj * PJ_TO_MJ;
+            e.shift_add_mj += conversions as f64 * cfg.e_shift_add_pj * PJ_TO_MJ;
+
+            // Digital merge work scales with converted cell columns (each
+            // conversion's sample is shifted-and-added into a partial sum).
+            let accum_ops = t.cellcols * px;
+            e.accumulation_mj += accum_ops as f64 * cfg.e_accum_pj * PJ_TO_MJ;
+
+            // Buffers: ADC samples moved out (adc_bits wide) + activation
+            // bits streamed in.
+            let buf_bits = conversions * adc_bits as u64 + t.driven_rows * phases * px;
+            e.other_mj += buf_bits as f64 * cfg.e_buffer_pj_per_bit * PJ_TO_MJ;
+
+            // Conversion-bound latency contribution of this tier.
+            lat += conversions as f64 * cfg.t_adc_ns(adc_bits) / cfg.adc_lanes as f64;
+        }
+
+        // Mixed-precision stepwise accumulation: one expand-add per output
+        // value when both tiers are live (paper §4.3).
+        if n_tiers > 1 {
+            let n_out = lm.tiers.iter().map(|t| t.strips as u64).max().unwrap_or(1);
+            let adds = px * n_out;
+            e.accumulation_mj += adds as f64 * cfg.e_accum_pj * PJ_TO_MJ;
+        }
+
+        total.add(&e);
+        latency_ns += lat;
+        conv_total += conv_layer;
+        layers.push(LayerCost {
+            name: lm.name.clone(),
+            energy: e,
+            latency_ms: lat * NS_TO_MS,
+            conversions: conv_layer,
+        });
+    }
+
+    CostReport {
+        energy: total,
+        latency_ms: latency_ns * NS_TO_MS,
+        conversions: conv_total,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::BitMap;
+    use crate::xbar::mapper::{map_model, MappingStrategy};
+    use crate::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry, ModelInfo};
+    use std::collections::HashMap;
+
+    fn model_1layer(k: usize, d: usize, n: usize) -> ModelInfo {
+        ModelInfo::new(ModelEntry {
+            name: "toy".into(),
+            num_params: k * k * d * n,
+            num_conv_params: k * k * d * n,
+            fp32_test_acc: 1.0,
+            params: BinEntry { file: "x".into(), shape: vec![k * k * d * n], dtype: "f32".into() },
+            layers: vec![LayerEntry {
+                name: "s1.b0.conv1".into(),
+                shape: vec![k, k, d, n],
+                kind: "conv".into(),
+                theta_offset: 0,
+                convflat_offset: Some(0),
+            }],
+            executables: HashMap::new(),
+            batch: BatchSizes { eval: 1, serve: 1, calib: 1 },
+        })
+    }
+
+    #[test]
+    fn all_4bit_is_cheaper_than_all_8bit() {
+        let m = model_1layer(3, 32, 64);
+        let cfg = XbarConfig::default();
+        let c8 = cost(
+            &map_model(&m, &BitMap::uniform(m.num_strips(), 8), &cfg, MappingStrategy::Packed),
+            &cfg,
+        );
+        let c4 = cost(
+            &map_model(&m, &BitMap::uniform(m.num_strips(), 4), &cfg, MappingStrategy::Packed),
+            &cfg,
+        );
+        assert!(c4.energy.system_mj() < c8.energy.system_mj() * 0.25,
+            "4-bit {:.4} should be ≲ 1/4 the 8-bit energy {:.4} (½ columns × 1/16 ADC)",
+            c4.energy.system_mj(), c8.energy.system_mj());
+        assert!(c4.latency_ms < c8.latency_ms);
+        // ADC dominates (paper §2.2 / Table 3)
+        assert!(c8.energy.adc_mj / c8.energy.system_mj() > 0.8);
+    }
+
+    #[test]
+    fn mixed_sits_between_uniform_tiers() {
+        let m = model_1layer(3, 32, 64);
+        let cfg = XbarConfig::default();
+        let mut bits = vec![4u8; m.num_strips()];
+        for b in bits.iter_mut().step_by(4) {
+            *b = 8;
+        }
+        let cm = cost(&map_model(&m, &BitMap { bits }, &cfg, MappingStrategy::Packed), &cfg);
+        let c8 = cost(
+            &map_model(&m, &BitMap::uniform(m.num_strips(), 8), &cfg, MappingStrategy::Packed),
+            &cfg,
+        );
+        let c4 = cost(
+            &map_model(&m, &BitMap::uniform(m.num_strips(), 4), &cfg, MappingStrategy::Packed),
+            &cfg,
+        );
+        let (s4, sm, s8) = (c4.energy.system_mj(), cm.energy.system_mj(), c8.energy.system_mj());
+        assert!(s4 < sm && sm < s8, "{s4} < {sm} < {s8}");
+    }
+
+    #[test]
+    fn origin_mapping_costs_more_when_sparse() {
+        let m = model_1layer(3, 32, 64);
+        let cfg = XbarConfig::default();
+        let mut bits = vec![4u8; m.num_strips()];
+        for b in bits.iter_mut().step_by(5) {
+            *b = 8;
+        }
+        let bm = BitMap { bits };
+        let co = cost(&map_model(&m, &bm, &cfg, MappingStrategy::Origin), &cfg);
+        let cp = cost(&map_model(&m, &bm, &cfg, MappingStrategy::Packed), &cfg);
+        assert!(cp.energy.system_mj() < co.energy.system_mj());
+        assert!(cp.latency_ms <= co.latency_ms + 1e-12);
+    }
+}

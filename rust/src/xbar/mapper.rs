@@ -1,0 +1,504 @@
+//! Strip-to-crossbar mapping (paper §4.2/§5.4).
+//!
+//! Physical model: a strip of depth D occupies D rows × `cells_per_weight`
+//! cell-columns. Arrays are provisioned whole; idle rows/columns inside a
+//! provisioned array are the unstructured-sparsity waste of §2.2.
+//!
+//! Two strategies:
+//!
+//! * [`MappingStrategy::Origin`] — the paper's ORIGIN baseline: strips stay
+//!   at their natural (kernel-order) positions, each layer tiles its own
+//!   arrays, and every provisioned array converts *all* of its columns each
+//!   phase (holes cannot be skipped).
+//! * [`MappingStrategy::Packed`] — the paper's dynamic-clustering mapping:
+//!   partial sums merge digitally (§4.3), so array row-slots activate in
+//!   time-multiplexed phases and any strip can occupy any free slot — of
+//!   any layer. Per precision tier, strip slots from all layers are packed
+//!   into array columns first-fit-decreasing by slot height; only each
+//!   layer's own slots convert during its phases. Residual waste is the
+//!   `rows mod D` stub no slot can cover plus the ragged final array —
+//!   which is why packed utilization saturates below 100% (the paper's
+//!   ~84%), not at it.
+
+use crate::model::ModelInfo;
+use crate::quant::BitMap;
+
+use super::XbarConfig;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MappingStrategy {
+    Origin,
+    Packed,
+}
+
+/// Per-(layer, tier) accounting consumed by the energy model.
+#[derive(Clone, Debug, Default)]
+pub struct TierMapping {
+    pub bits: u8,
+    /// Cell columns converted per output pixel per input-bit phase.
+    pub cellcols: u64,
+    /// Programmed (weight-bearing) cells of this layer's strips.
+    pub used_cells: u64,
+    /// Word lines driven per pixel per phase.
+    pub driven_rows: u64,
+    /// Strips placed.
+    pub strips: usize,
+    /// Arrays this layer provisions on its own (Origin); 0 under Packed
+    /// (arrays are pooled per tier — see `ModelMapping::summary`).
+    pub arrays_local: usize,
+}
+
+impl TierMapping {
+    /// Backwards-compatible helper used by the cost model.
+    pub fn cellcols(&self, _cfg: &XbarConfig) -> u64 {
+        self.cellcols
+    }
+}
+
+/// Whole-tier provisioning summary (arrays are pooled across layers under
+/// the packed strategy).
+#[derive(Clone, Debug)]
+pub struct TierSummary {
+    pub bits: u8,
+    pub arrays: usize,
+    pub used_cells: u64,
+    pub provisioned_cells: u64,
+}
+
+impl TierSummary {
+    pub fn utilization(&self) -> f64 {
+        if self.provisioned_cells == 0 {
+            0.0
+        } else {
+            self.used_cells as f64 / self.provisioned_cells as f64
+        }
+    }
+}
+
+/// Mapping of one conv layer (both tiers).
+#[derive(Clone, Debug)]
+pub struct LayerMapping {
+    pub layer: usize,
+    pub name: String,
+    pub out_pixels: usize,
+    pub tiers: Vec<TierMapping>,
+}
+
+/// Whole-model mapping.
+#[derive(Clone, Debug)]
+pub struct ModelMapping {
+    pub strategy: MappingStrategy,
+    pub layers: Vec<LayerMapping>,
+    pub summary: Vec<TierSummary>,
+}
+
+impl ModelMapping {
+    /// Bit utilization over arrays of a given weight precision (Table 4).
+    pub fn utilization(&self, bits: u8) -> f64 {
+        self.summary
+            .iter()
+            .find(|t| t.bits == bits)
+            .map(TierSummary::utilization)
+            .unwrap_or(0.0)
+    }
+
+    /// Overall utilization across all tiers.
+    pub fn utilization_all(&self) -> f64 {
+        let used: u64 = self.summary.iter().map(|t| t.used_cells).sum();
+        let prov: u64 = self.summary.iter().map(|t| t.provisioned_cells).sum();
+        if prov == 0 {
+            0.0
+        } else {
+            used as f64 / prov as f64
+        }
+    }
+
+    pub fn total_arrays(&self) -> usize {
+        self.summary.iter().map(|t| t.arrays).sum()
+    }
+}
+
+/// Output pixels of a conv layer on the 32×32 CIFAR geometry, derived from
+/// the layer naming convention of `python/compile/model.py`.
+pub fn out_pixels(name: &str) -> usize {
+    if name.starts_with("stem") {
+        return 32 * 32;
+    }
+    if let Some(rest) = name.strip_prefix('s') {
+        if let Some(stage) = rest.chars().next().and_then(|c| c.to_digit(10)) {
+            let hw = 32usize >> stage.min(2);
+            return hw * hw;
+        }
+    }
+    32 * 32
+}
+
+fn tier_widths(model: &ModelInfo, bitmap: &BitMap) -> Vec<u8> {
+    let mut widths: Vec<u8> = Vec::new();
+    for &b in &bitmap.bits {
+        if b != 0 && !widths.contains(&b) {
+            widths.push(b);
+        }
+    }
+    widths.sort_unstable_by(|a, b| b.cmp(a));
+    let _ = model;
+    widths
+}
+
+/// Map every conv layer of `model` under `bitmap` onto crossbars.
+pub fn map_model(
+    model: &ModelInfo,
+    bitmap: &BitMap,
+    cfg: &XbarConfig,
+    strategy: MappingStrategy,
+) -> ModelMapping {
+    assert_eq!(bitmap.bits.len(), model.num_strips());
+    let widths = tier_widths(model, bitmap);
+
+    // Per-layer strip counts per tier + occupancy matrices for Origin.
+    let mut layers = Vec::new();
+    let mut strip_base = 0usize;
+    // accumulate global packing inputs: per tier -> chunk heights + used cells
+    let mut per_tier: Vec<(u8, Vec<usize>, u64)> =
+        widths.iter().map(|&b| (b, Vec::new(), 0u64)).collect();
+
+    for (li, layer) in model.conv_layers().iter().enumerate() {
+        let nstrips = layer.num_strips();
+        let segs = (layer.d + cfg.rows - 1) / cfg.rows;
+        let d_sub = (layer.d + segs - 1) / segs;
+        let mut tiers = Vec::new();
+
+        for &bits in &widths {
+            let cpw = cfg.cells_per_weight(bits);
+            // occupancy over (sub-group, channel) for this tier
+            let g_total = layer.k * layer.k * segs;
+            let mut occ = vec![vec![false; layer.n]; g_total];
+            let mut strips = 0usize;
+            for (i, s) in model.strips()[strip_base..strip_base + nstrips].iter().enumerate() {
+                if bitmap.bits[strip_base + i] == bits {
+                    strips += 1;
+                    for seg in 0..segs {
+                        occ[s.g * segs + seg][s.n] = true;
+                    }
+                }
+            }
+            if strips == 0 {
+                continue;
+            }
+            let used_cells = (strips * layer.d * cpw) as u64;
+            let tm = match strategy {
+                MappingStrategy::Origin => {
+                    let (arrays, driven_rows) = origin_arrays(&occ, d_sub, bits, cfg);
+                    TierMapping {
+                        bits,
+                        // every provisioned column converts each phase
+                        cellcols: (arrays * cfg.cols) as u64,
+                        used_cells,
+                        driven_rows,
+                        strips,
+                        arrays_local: arrays,
+                    }
+                }
+                MappingStrategy::Packed => {
+                    // Channel-group analog summation: the strips of one
+                    // output channel stack in a column and their currents
+                    // sum natively (they belong to the same dot product).
+                    // One ADC conversion per *chunk* (a channel's slots up
+                    // to the column height); distinct chunks in a column
+                    // are time-multiplexed.
+                    let spc = (cfg.rows / d_sub).max(1); // sub-slots per chunk
+                    let mut conversions = 0usize;
+                    let mut chunk_heights: Vec<usize> = Vec::new();
+                    for n in 0..layer.n {
+                        let c_n = (0..layer.k * layer.k)
+                            .filter(|&g| occ[g * segs][n])
+                            .count();
+                        if c_n == 0 {
+                            continue;
+                        }
+                        let sub_slots = c_n * segs;
+                        let full = sub_slots / spc;
+                        let rem = sub_slots % spc;
+                        conversions += full + usize::from(rem > 0);
+                        for _ in 0..full {
+                            chunk_heights.push(spc * d_sub);
+                        }
+                        if rem > 0 {
+                            chunk_heights.push(rem * d_sub);
+                        }
+                    }
+                    let entry = per_tier.iter_mut().find(|(b, _, _)| *b == bits).unwrap();
+                    entry.1.extend(chunk_heights);
+                    entry.2 += used_cells;
+                    TierMapping {
+                        bits,
+                        cellcols: (conversions * cpw) as u64,
+                        used_cells,
+                        driven_rows: (strips * segs * d_sub) as u64,
+                        strips,
+                        arrays_local: 0,
+                    }
+                }
+            };
+            if strategy == MappingStrategy::Origin {
+                let entry = per_tier.iter_mut().find(|(b, _, _)| *b == bits).unwrap();
+                entry.2 += used_cells;
+            }
+            tiers.push(tm);
+        }
+        layers.push(LayerMapping {
+            layer: li,
+            name: layer.name.clone(),
+            out_pixels: out_pixels(&layer.name),
+            tiers,
+        });
+        strip_base += nstrips;
+    }
+
+    // Global per-tier provisioning summary.
+    let mut summary = Vec::new();
+    for (bits, chunks, used_cells) in per_tier {
+        let arrays = match strategy {
+            MappingStrategy::Origin => layers
+                .iter()
+                .flat_map(|l| &l.tiers)
+                .filter(|t| t.bits == bits)
+                .map(|t| t.arrays_local)
+                .sum(),
+            MappingStrategy::Packed => pack_columns(chunks, bits, cfg),
+        };
+        if used_cells == 0 && arrays == 0 {
+            continue;
+        }
+        summary.push(TierSummary {
+            bits,
+            arrays,
+            used_cells,
+            provisioned_cells: (arrays * cfg.rows * cfg.cols) as u64,
+        });
+    }
+
+    ModelMapping { strategy, layers, summary }
+}
+
+/// Natural-order tiling: group-blocks and channels in kernel order; an array
+/// is provisioned whenever any of its cells is used. Returns (arrays,
+/// driven_rows).
+fn origin_arrays(occ: &[Vec<bool>], d_sub: usize, bits: u8, cfg: &XbarConfig) -> (usize, u64) {
+    let g_total = occ.len();
+    let n_total = occ[0].len();
+    let wcols = cfg.weight_cols_per_array(bits).max(1);
+    let gpa = (cfg.rows / d_sub).max(1);
+
+    let mut arrays = 0usize;
+    let mut driven_rows = 0u64;
+    for g0 in (0..g_total).step_by(gpa) {
+        for n0 in (0..n_total).step_by(wcols) {
+            let mut any = false;
+            let mut max_g_used = 0usize;
+            for (gi, row) in occ.iter().enumerate().skip(g0).take(gpa.min(g_total - g0)) {
+                for cell in row.iter().skip(n0).take(wcols.min(n_total - n0)) {
+                    if *cell {
+                        any = true;
+                        max_g_used = max_g_used.max(gi - g0 + 1);
+                    }
+                }
+            }
+            if any {
+                arrays += 1;
+                driven_rows += (max_g_used * d_sub) as u64;
+            }
+        }
+    }
+    (arrays, driven_rows)
+}
+
+/// Global first-fit-decreasing column packing for the packed strategy:
+/// channel-group chunks (heights in rows, from any layer of this tier) fill
+/// columns of height `rows`; arrays hold `weight_cols_per_array` columns.
+fn pack_columns(mut chunks: Vec<usize>, bits: u8, cfg: &XbarConfig) -> usize {
+    if chunks.is_empty() {
+        return 0;
+    }
+    let wcols = cfg.weight_cols_per_array(bits).max(1);
+    chunks.sort_unstable_by(|a, b| b.cmp(a));
+    let mut columns: Vec<usize> = Vec::new(); // remaining heights
+    for h in chunks {
+        let h = h.min(cfg.rows);
+        match columns.iter_mut().find(|rem| **rem >= h) {
+            Some(rem) => *rem -= h,
+            None => columns.push(cfg.rows - h),
+        }
+    }
+    let ncols = columns.len();
+    (ncols + wcols - 1) / wcols
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry};
+    use std::collections::HashMap;
+
+    fn model_1layer(k: usize, d: usize, n: usize) -> ModelInfo {
+        ModelInfo::new(ModelEntry {
+            name: "toy".into(),
+            num_params: k * k * d * n,
+            num_conv_params: k * k * d * n,
+            fp32_test_acc: 1.0,
+            params: BinEntry { file: "x".into(), shape: vec![k * k * d * n], dtype: "f32".into() },
+            layers: vec![LayerEntry {
+                name: "s1.b0.conv1".into(),
+                shape: vec![k, k, d, n],
+                kind: "conv".into(),
+                theta_offset: 0,
+                convflat_offset: Some(0),
+            }],
+            executables: HashMap::new(),
+            batch: BatchSizes { eval: 1, serve: 1, calib: 1 },
+        })
+    }
+
+    #[test]
+    fn out_pixels_by_stage() {
+        assert_eq!(out_pixels("stem.conv"), 1024);
+        assert_eq!(out_pixels("s0.b0.conv1"), 1024);
+        assert_eq!(out_pixels("s1.b0.conv2"), 256);
+        assert_eq!(out_pixels("s2.b2.shortcut"), 64);
+    }
+
+    #[test]
+    fn dense_8bit_layer_full_packing() {
+        // K²D = 288 rows of strips, N=64 channels at 4 cells/weight.
+        let m = model_1layer(3, 32, 64);
+        let bm = BitMap::uniform(m.num_strips(), 8);
+        let cfg = XbarConfig::default();
+        let packed = map_model(&m, &bm, &cfg, MappingStrategy::Packed);
+        let origin = map_model(&m, &bm, &cfg, MappingStrategy::Origin);
+        // used cells identical under both strategies (same weights stored)
+        assert_eq!(packed.summary[0].used_cells, origin.summary[0].used_cells);
+        // 576 strips × 32 rows = 18432 slot-rows; column=128 rows holds 4
+        // slots -> 144 columns -> ceil(144/32) = 5 arrays (origin: 3×2=6)
+        assert_eq!(packed.summary[0].arrays, 5);
+        assert_eq!(origin.summary[0].arrays, 6);
+        assert!(packed.utilization(8) > 0.85, "{}", packed.utilization(8));
+        assert!(packed.utilization(8) >= origin.utilization(8));
+    }
+
+    #[test]
+    fn packed_beats_origin_on_sparse_tier() {
+        let m = model_1layer(3, 32, 64);
+        // 20% of strips hi (every 5th strip), rest lo — the Table 4 regime.
+        let mut bits = vec![4u8; m.num_strips()];
+        for i in (0..bits.len()).step_by(5) {
+            bits[i] = 8;
+        }
+        let bm = BitMap { bits };
+        let cfg = XbarConfig::default();
+        let packed = map_model(&m, &bm, &cfg, MappingStrategy::Packed);
+        let origin = map_model(&m, &bm, &cfg, MappingStrategy::Origin);
+        let (pu, ou) = (packed.utilization(8), origin.utilization(8));
+        assert!(pu > ou, "packed {pu} should beat origin {ou}");
+        assert!(pu > 0.5, "packed should be dense, got {pu}");
+    }
+
+    #[test]
+    fn deep_strips_split_vertically() {
+        let m = model_1layer(1, 64, 8);
+        let bm = BitMap::uniform(m.num_strips(), 8);
+        let cfg = XbarConfig::small(); // 32 rows: D=64 -> 2 segments
+        let mm = map_model(&m, &bm, &cfg, MappingStrategy::Packed);
+        // every cell of every strip placed: 64 rows × 4 cells × 8 strips
+        assert_eq!(mm.summary[0].used_cells, (64 * 4 * 8) as u64);
+        // 16 sub-strips of height 32 = 16 columns; 8 weight cols/array (32/4)
+        assert_eq!(mm.summary[0].arrays, 2);
+        assert!((mm.utilization(8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pruned_strips_are_not_mapped() {
+        let m = model_1layer(3, 16, 4);
+        let mut bits = vec![0u8; m.num_strips()];
+        bits[0] = 8;
+        let bm = BitMap { bits };
+        let mm = map_model(&m, &bm, &XbarConfig::default(), MappingStrategy::Packed);
+        assert_eq!(mm.layers[0].tiers.len(), 1);
+        assert_eq!(mm.layers[0].tiers[0].strips, 1);
+        assert_eq!(mm.summary.len(), 1);
+    }
+
+    #[test]
+    fn packed_conversions_count_channel_chunks() {
+        // K=3, D=16, N=8, dense: each channel has 9 strips; a 128-row
+        // column holds 8 -> 2 chunks per channel; 8 channels × 2 × 4 cells.
+        let m = model_1layer(3, 16, 8);
+        let bm = BitMap::uniform(m.num_strips(), 8);
+        let cfg = XbarConfig::default();
+        let packed = map_model(&m, &bm, &cfg, MappingStrategy::Packed);
+        let t = &packed.layers[0].tiers[0];
+        assert_eq!(t.cellcols, (8 * 2 * 4) as u64);
+        let origin = map_model(&m, &bm, &cfg, MappingStrategy::Origin);
+        let to = &origin.layers[0].tiers[0];
+        assert_eq!(to.cellcols, (to.arrays_local * cfg.cols) as u64);
+    }
+
+    #[test]
+    fn conversion_tradeoff_dense_vs_sparse() {
+        // Dense tier with a column-filling channel count: packed equals
+        // origin conversions (same analog summation, no wasted columns).
+        // Sparse tier: origin pays for holes; packed only for live chunks.
+        let m = model_1layer(3, 16, 32); // N = weight_cols_per_array(8)
+        let cfg = XbarConfig::default();
+        let dense = BitMap::uniform(m.num_strips(), 8);
+        let od = map_model(&m, &dense, &cfg, MappingStrategy::Origin).layers[0].tiers[0].cellcols;
+        let pd = map_model(&m, &dense, &cfg, MappingStrategy::Packed).layers[0].tiers[0].cellcols;
+        assert_eq!(od, pd, "dense full-width layer: origin {od} == packed {pd}");
+
+        let mut bits = vec![4u8; m.num_strips()];
+        for b in bits.iter_mut().step_by(9) {
+            *b = 8; // 1-in-9 hi strips
+        }
+        let sparse = BitMap { bits };
+        let os = map_model(&m, &sparse, &cfg, MappingStrategy::Origin).layers[0].tiers[0].cellcols;
+        let ps = map_model(&m, &sparse, &cfg, MappingStrategy::Packed).layers[0].tiers[0].cellcols;
+        assert!(ps < os, "sparse: packed {ps} should be < origin {os}");
+    }
+
+    #[test]
+    fn cross_layer_pooling_shares_arrays() {
+        // two small layers, each needing half an array, share one.
+        let l = 1 * 1 * 32 * 8; // 8 strips × 32 rows = 8 columns at 4 slots...
+        let m = ModelInfo::new(ModelEntry {
+            name: "two".into(),
+            num_params: 2 * l,
+            num_conv_params: 2 * l,
+            fp32_test_acc: 1.0,
+            params: BinEntry { file: "x".into(), shape: vec![2 * l], dtype: "f32".into() },
+            layers: vec![
+                LayerEntry {
+                    name: "s1.a".into(),
+                    shape: vec![1, 1, 32, 8],
+                    kind: "conv".into(),
+                    theta_offset: 0,
+                    convflat_offset: Some(0),
+                },
+                LayerEntry {
+                    name: "s1.b".into(),
+                    shape: vec![1, 1, 32, 8],
+                    kind: "conv".into(),
+                    theta_offset: l,
+                    convflat_offset: Some(l),
+                },
+            ],
+            executables: HashMap::new(),
+            batch: BatchSizes { eval: 1, serve: 1, calib: 1 },
+        });
+        let bm = BitMap::uniform(m.num_strips(), 8);
+        let cfg = XbarConfig::default();
+        let packed = map_model(&m, &bm, &cfg, MappingStrategy::Packed);
+        // 16 slots of height 32: 4 per column -> 4 columns -> 1 array (32 cols)
+        assert_eq!(packed.summary[0].arrays, 1);
+        let origin = map_model(&m, &bm, &cfg, MappingStrategy::Origin);
+        assert_eq!(origin.summary[0].arrays, 2, "origin cannot share across layers");
+    }
+}

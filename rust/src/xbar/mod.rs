@@ -1,0 +1,11 @@
+//! NeuroSim-lite ReRAM crossbar simulator — the paper's hardware substrate
+//! (DNN+NeuroSim replacement; see DESIGN.md §5 for the substitution
+//! rationale and §8 for the cost-model constants).
+
+mod config;
+pub mod energy;
+pub mod mapper;
+
+pub use config::XbarConfig;
+pub use energy::{cost, CostReport, EnergyBreakdown, LayerCost};
+pub use mapper::{map_model, out_pixels, LayerMapping, MappingStrategy, ModelMapping, TierMapping};

@@ -1,0 +1,263 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//! Require `make artifacts` to have run; they share one runtime because
+//! the PJRT client is per-thread expensive.
+
+use std::sync::OnceLock;
+
+use reram_mpq::coordinator::{evaluate_batches, Engine, EngineConfig, Pipeline, ThresholdMode};
+use reram_mpq::dataset::TestSet;
+use reram_mpq::tensor::Tensor;
+use reram_mpq::util::rng::Rng;
+use reram_mpq::xbar::MappingStrategy;
+use reram_mpq::{artifacts_dir, Manifest, RunConfig, Runtime};
+
+fn manifest() -> &'static Manifest {
+    static M: OnceLock<Manifest> = OnceLock::new();
+    M.get_or_init(|| Manifest::load(&artifacts_dir()).expect("run `make artifacts` first"))
+}
+
+// PJRT clients are not Send/Sync, so every test builds its own runtime
+// (cargo test runs tests on separate threads).
+fn runtime() -> Runtime {
+    Runtime::new(artifacts_dir()).expect("pjrt cpu client")
+}
+
+#[test]
+fn manifest_contract_holds() {
+    let m = manifest();
+    assert!(m.models.contains_key("resnet8"));
+    assert!(m.models.contains_key("resnet14"));
+    assert!(m.models.contains_key("resnet20"));
+    for entry in m.models.values() {
+        let info = reram_mpq::model::ModelInfo::new(entry.clone());
+        // strips cover exactly the conv params
+        let strip_params: usize = info
+            .strips()
+            .iter()
+            .map(|s| info.layer(s.layer).d)
+            .sum();
+        assert_eq!(strip_params, entry.num_conv_params);
+        // params tensor length matches
+        assert_eq!(entry.params.shape.iter().product::<usize>(), entry.num_params);
+    }
+}
+
+#[test]
+fn fp32_eval_reproduces_training_accuracy() {
+    let m = manifest();
+    let rt = runtime();
+    let info = m.model("resnet8").unwrap();
+    let theta = info.load_params(m).unwrap();
+    let test = TestSet::load(m).unwrap();
+    let acc = evaluate_batches(&rt, &info, &theta, &test, 4).unwrap();
+    // python-side accuracy was measured on the same split; allow slack for
+    // the 4-batch subset.
+    assert!(
+        (acc.top1 - info.entry.fp32_test_acc).abs() < 0.08,
+        "rust eval {:.4} vs python {:.4}",
+        acc.top1,
+        info.entry.fp32_test_acc
+    );
+    assert!(acc.top5 >= acc.top1);
+}
+
+#[test]
+fn pallas_fwd_matches_plain_fwd() {
+    // The L1-in-L2 composition artifact must agree with the lax-conv graph.
+    let m = manifest();
+    let rt = runtime();
+    let info = m.model("resnet8").unwrap();
+    let theta = Tensor::from_vec(info.load_params(m).unwrap());
+    let test = TestSet::load(m).unwrap();
+    let b = info.entry.batch.serve;
+    let (x, _) = test.batch(0, b);
+
+    let plain = rt
+        .exec(&info.entry.executables["fwd_serve"], &[theta.clone(), x.clone()])
+        .unwrap();
+    let pallas = rt
+        .exec(&info.entry.executables["fwd_pallas"], &[theta, x])
+        .unwrap();
+    let max_err = plain[0]
+        .data()
+        .iter()
+        .zip(pallas[0].data())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-2, "pallas fwd deviates: {max_err}");
+}
+
+#[test]
+fn strip_mvm_kernel_matches_rust_oracle() {
+    let m = manifest();
+    let rt = runtime();
+    let k = &m.kernel;
+    let (t, d, g, n) = (k.t, k.d, k.g, k.n);
+    let mut rng = Rng::seed_from_u64(5);
+    let a: Vec<f32> = (0..t * g * d).map(|_| rng.normal()).collect();
+    let w: Vec<f32> = (0..g * d * n).map(|_| (rng.below(255) as f32) - 127.0).collect();
+    let s: Vec<f32> = (0..g * n).map(|_| rng.range(0.001, 0.01) as f32).collect();
+    let out = rt
+        .exec(
+            &k.strip_mvm,
+            &[
+                Tensor::new(vec![t, g * d], a.clone()),
+                Tensor::new(vec![g * d, n], w.clone()),
+                Tensor::new(vec![g, n], s.clone()),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out[0].shape(), &[t, n]);
+    let mut want = vec![0.0f64; t * n];
+    for ti in 0..t {
+        for gi in 0..g {
+            for ni in 0..n {
+                let mut acc = 0.0f64;
+                for di in 0..d {
+                    acc += a[ti * g * d + gi * d + di] as f64 * w[(gi * d + di) * n + ni] as f64;
+                }
+                want[ti * n + ni] += acc * s[gi * n + ni] as f64;
+            }
+        }
+    }
+    for (got, want) in out[0].data().iter().zip(&want) {
+        assert!((*got as f64 - want).abs() < 1e-2, "{got} vs {want}");
+    }
+}
+
+#[test]
+fn mixed_kernel_equals_sum_of_clusters() {
+    // Z = Z_q + expand(Z_p): the mixed executable must equal two separate
+    // strip_mvm calls added in Rust (stepwise accumulation, paper §4.3).
+    let m = manifest();
+    let rt = runtime();
+    let k = &m.kernel;
+    let (t, d, g, n) = (k.t, k.d, k.g, k.n);
+    let mut rng = Rng::seed_from_u64(6);
+    let a = Tensor::new(vec![t, g * d], (0..t * g * d).map(|_| rng.normal()).collect());
+    // complementary random hi/lo masks at strip granularity
+    let mask: Vec<bool> = (0..g * n).map(|_| rng.bool()).collect();
+    let mut wq = vec![0.0f32; g * d * n];
+    let mut wp = vec![0.0f32; g * d * n];
+    for gi in 0..g {
+        for di in 0..d {
+            for ni in 0..n {
+                let v = (rng.below(15) as f32) - 7.0;
+                if mask[gi * n + ni] {
+                    wq[(gi * d + di) * n + ni] = v;
+                } else {
+                    wp[(gi * d + di) * n + ni] = v;
+                }
+            }
+        }
+    }
+    let sq: Vec<f32> = (0..g * n).map(|i| if mask[i] { 0.01 } else { 0.0 }).collect();
+    let sp: Vec<f32> = (0..g * n).map(|i| if mask[i] { 0.0 } else { 0.16 }).collect();
+    let wq = Tensor::new(vec![g * d, n], wq);
+    let wp = Tensor::new(vec![g * d, n], wp);
+    let sq = Tensor::new(vec![g, n], sq);
+    let sp = Tensor::new(vec![g, n], sp);
+
+    let mixed = rt
+        .exec(
+            &k.mixed_strip_mvm,
+            &[a.clone(), wq.clone(), sq.clone(), wp.clone(), sp.clone()],
+        )
+        .unwrap();
+    let zq = rt.exec(&k.strip_mvm, &[a.clone(), wq, sq]).unwrap();
+    let zp = rt.exec(&k.strip_mvm, &[a, wp, sp]).unwrap();
+    for ((m1, q), p) in mixed[0].data().iter().zip(zq[0].data()).zip(zp[0].data()) {
+        assert!((m1 - (q + p)).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn quantized_accuracy_degrades_monotonically_in_spirit() {
+    // CR 0 (all 8-bit) should be within noise of fp32; CR 1.0 (all 4-bit
+    // per-layer + device noise) should be strictly worse.
+    let m = manifest();
+    let rt = runtime();
+    let mut pipe = Pipeline::new(&rt, m, "resnet8", RunConfig::default()).unwrap();
+    let r0 = pipe
+        .run(ThresholdMode::FixedCr(0.0), true, MappingStrategy::Packed, 4)
+        .unwrap();
+    let r1 = pipe
+        .run(ThresholdMode::FixedCr(1.0), true, MappingStrategy::Packed, 4)
+        .unwrap();
+    assert!(r0.accuracy.top1 > r1.accuracy.top1, "{} !> {}", r0.accuracy.top1, r1.accuracy.top1);
+    assert!(r0.cost.energy.system_mj() > r1.cost.energy.system_mj());
+    // mixed sits between
+    let rm = pipe
+        .run(ThresholdMode::FixedCr(0.6), true, MappingStrategy::Packed, 4)
+        .unwrap();
+    assert!(rm.cost.energy.system_mj() < r0.cost.energy.system_mj());
+    assert!(rm.cost.energy.system_mj() > r1.cost.energy.system_mj());
+}
+
+#[test]
+fn sensitivity_scores_are_finite_and_informative() {
+    let m = manifest();
+    let rt = runtime();
+    let mut cfg = RunConfig::default();
+    cfg.sensitivity.probes = 2;
+    cfg.sensitivity.calib_batches = 1;
+    let mut pipe = Pipeline::new(&rt, m, "resnet8", cfg).unwrap();
+    let s = pipe.sensitivity().unwrap().clone();
+    assert_eq!(s.scores.len(), pipe.model.num_strips());
+    assert!(s.scores.iter().all(|v| v.is_finite() && *v >= 0.0));
+    // scores must not be constant — otherwise clustering is meaningless
+    let sorted = s.sorted_scores();
+    assert!(sorted[sorted.len() - 1] > sorted[0]);
+}
+
+#[test]
+fn engine_serves_correct_predictions() {
+    let m = manifest();
+    let rt = runtime();
+    let info = m.model("resnet8").unwrap();
+    let theta = info.load_params(m).unwrap();
+    let test = TestSet::load(m).unwrap();
+
+    // Reference predictions through fwd_eval.
+    let acc_ref = evaluate_batches(&rt, &info, &theta, &test, 1).unwrap();
+
+    let engine = Engine::new(artifacts_dir(), &info, theta, EngineConfig::default()).unwrap();
+    let handle = engine.start();
+    let elems = 32 * 32 * 3;
+    let n = info.entry.batch.eval; // same images as the first eval batch
+    let mut correct = 0;
+    let pend: Vec<_> = (0..n)
+        .map(|j| handle.submit(test.x.data()[j * elems..(j + 1) * elems].to_vec()).unwrap())
+        .collect();
+    for (j, p) in pend.into_iter().enumerate() {
+        let resp = p.wait().unwrap();
+        assert_eq!(resp.logits.len(), m.num_classes);
+        if resp.class == test.y[j] {
+            correct += 1;
+        }
+    }
+    let acc_engine = correct as f64 / n as f64;
+    assert!(
+        (acc_engine - acc_ref.top1).abs() < 1e-9,
+        "engine {acc_engine} vs eval {}",
+        acc_ref.top1
+    );
+    let snap = handle.metrics.snapshot();
+    assert_eq!(snap.requests, n as u64);
+    assert!(snap.batches >= (n / info.entry.batch.serve) as u64);
+}
+
+#[test]
+fn threshold_sweep_picks_interior_point() {
+    let m = manifest();
+    let rt = runtime();
+    let mut cfg = RunConfig::default();
+    cfg.sensitivity.probes = 2;
+    cfg.sensitivity.calib_batches = 1;
+    let mut pipe = Pipeline::new(&rt, m, "resnet8", cfg).unwrap();
+    let (c, evals) = pipe.choose_clustering(ThresholdMode::Sweep).unwrap();
+    assert!(evals > 1);
+    // near-Pareto choice should compress something but not everything
+    // (fim+energy joint objective); allow the extremes but assert validity.
+    assert!(c.q_hi <= pipe.model.num_strips());
+}

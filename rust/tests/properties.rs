@@ -1,0 +1,247 @@
+//! Property-based tests (hand-rolled, seeded — no proptest offline) over
+//! the coordinator invariants: clustering, alignment, mapping conservation,
+//! quantization bounds, JSON round-trips.
+
+use std::collections::HashMap;
+
+use reram_mpq::clustering::{align_to_capacity, cluster, cluster_at_cr};
+use reram_mpq::config::QuantConfig;
+use reram_mpq::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry, ModelInfo};
+use reram_mpq::quant::{self, BitMap};
+use reram_mpq::util::json::Value;
+use reram_mpq::util::rng::Rng;
+use reram_mpq::xbar::{map_model, MappingStrategy, XbarConfig};
+
+const CASES: usize = 40;
+
+/// Random single-conv-layer model.
+fn rand_model(rng: &mut Rng) -> ModelInfo {
+    let k = [1usize, 3][rng.below(2)];
+    let d = [3usize, 8, 16, 32, 64][rng.below(5)];
+    let n = 1 + rng.below(64);
+    let size = k * k * d * n;
+    ModelInfo::new(ModelEntry {
+        name: "prop".into(),
+        num_params: size,
+        num_conv_params: size,
+        fp32_test_acc: 1.0,
+        params: BinEntry { file: "x".into(), shape: vec![size], dtype: "f32".into() },
+        layers: vec![LayerEntry {
+            name: ["stem.conv", "s1.b0.conv1", "s2.b1.conv2"][rng.below(3)].into(),
+            shape: vec![k, k, d, n],
+            kind: "conv".into(),
+            theta_offset: 0,
+            convflat_offset: Some(0),
+        }],
+        executables: HashMap::new(),
+        batch: BatchSizes { eval: 1, serve: 1, calib: 1 },
+    })
+}
+
+fn rand_scores(rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.uniform() * 10.0).collect()
+}
+
+#[test]
+fn prop_cluster_at_cr_hits_exact_fraction() {
+    let mut rng = Rng::seed_from_u64(11);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(500);
+        let scores = rand_scores(&mut rng, n);
+        let cr = rng.uniform();
+        let c = cluster_at_cr(&scores, cr, 8, 4);
+        let expect_lo = ((cr * n as f64).round() as usize).min(n);
+        assert_eq!(c.q_hi, n - expect_lo);
+        assert_eq!(c.bitmap.bits.len(), n);
+        // hi strips always have scores >= every lo strip's score
+        let min_hi = c
+            .bitmap
+            .bits
+            .iter()
+            .zip(&scores)
+            .filter(|(b, _)| **b == 8)
+            .map(|(_, s)| *s)
+            .fold(f64::INFINITY, f64::min);
+        let max_lo = c
+            .bitmap
+            .bits
+            .iter()
+            .zip(&scores)
+            .filter(|(b, _)| **b == 4)
+            .map(|(_, s)| *s)
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(min_hi >= max_lo, "clustering must be threshold-consistent");
+    }
+}
+
+#[test]
+fn prop_threshold_cluster_consistent_with_scores() {
+    let mut rng = Rng::seed_from_u64(13);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(300);
+        let scores = rand_scores(&mut rng, n);
+        let t = rng.uniform() * 10.0;
+        let c = cluster(&scores, t, 8, 4);
+        for (b, s) in c.bitmap.bits.iter().zip(&scores) {
+            assert_eq!(*b == 8, *s > t);
+        }
+    }
+}
+
+#[test]
+fn prop_alignment_makes_q_divisible_and_only_demotes() {
+    let mut rng = Rng::seed_from_u64(17);
+    for _ in 0..CASES {
+        let m = rand_model(&mut rng);
+        let n = m.num_strips();
+        let scores = rand_scores(&mut rng, n);
+        let c = cluster_at_cr(&scores, rng.uniform(), 8, 4);
+        let cap = 1 + rng.below(40);
+        let aligned = align_to_capacity(&m, &scores, &c, 8, 4, |_| cap);
+        if c.q_hi >= cap {
+            assert_eq!(aligned.q_hi % cap, 0, "q_hi must align to capacity {cap}");
+        } else {
+            // sub-capacity clusters are kept rather than wiped
+            assert_eq!(aligned.q_hi, c.q_hi);
+        }
+        assert!(aligned.q_hi <= c.q_hi, "alignment only demotes");
+        // demoted strips become lo, never pruned; hi set is a subset
+        for (a, b) in aligned.bitmap.bits.iter().zip(&c.bitmap.bits) {
+            if *a == 8 {
+                assert_eq!(*b, 8);
+            } else {
+                assert_eq!(*a, 4);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_mapping_conserves_strips_and_bounds_utilization() {
+    let mut rng = Rng::seed_from_u64(19);
+    for case in 0..CASES {
+        let m = rand_model(&mut rng);
+        let n = m.num_strips();
+        // random tier assignment incl. pruning
+        let bits: Vec<u8> = (0..n).map(|_| [0u8, 4, 8][rng.below(3)]).collect();
+        let bm = BitMap { bits: bits.clone() };
+        let cfg = if rng.bool() { XbarConfig::default() } else { XbarConfig::small() };
+        for strategy in [MappingStrategy::Origin, MappingStrategy::Packed] {
+            let mm = map_model(&m, &bm, &cfg, strategy);
+            let placed: usize = mm.layers[0].tiers.iter().map(|t| t.strips).sum();
+            let expect = bits.iter().filter(|&&b| b != 0).count();
+            assert_eq!(placed, expect, "case {case}: every non-pruned strip is mapped");
+            for t in &mm.summary {
+                assert!(t.used_cells <= t.provisioned_cells, "cells over-provisioned");
+                let u = t.utilization();
+                assert!((0.0..=1.0 + 1e-12).contains(&u), "utilization {u} out of range");
+            }
+        }
+        // packed never uses more arrays than origin
+        let ao = map_model(&m, &bm, &cfg, MappingStrategy::Origin).total_arrays();
+        let ap = map_model(&m, &bm, &cfg, MappingStrategy::Packed).total_arrays();
+        assert!(ap <= ao, "case {case}: packed arrays {ap} > origin {ao}");
+    }
+}
+
+#[test]
+fn prop_packed_used_cells_equal_origin_used_cells() {
+    // Mapping strategy changes provisioning, never the weights stored.
+    let mut rng = Rng::seed_from_u64(23);
+    for _ in 0..CASES {
+        let m = rand_model(&mut rng);
+        let bits: Vec<u8> = (0..m.num_strips()).map(|_| [4u8, 8][rng.below(2)]).collect();
+        let bm = BitMap { bits };
+        let cfg = XbarConfig::default();
+        let uo: u64 = map_model(&m, &bm, &cfg, MappingStrategy::Origin)
+            .summary.iter().map(|t| t.used_cells).sum();
+        let up: u64 = map_model(&m, &bm, &cfg, MappingStrategy::Packed)
+            .summary.iter().map(|t| t.used_cells).sum();
+        assert_eq!(uo, up);
+    }
+}
+
+#[test]
+fn prop_quantization_error_bounded_by_half_step_without_noise() {
+    let mut rng = Rng::seed_from_u64(29);
+    for _ in 0..CASES {
+        let m = rand_model(&mut rng);
+        let n_params = m.entry.num_params;
+        let theta: Vec<f32> = (0..n_params).map(|_| rng.normal()).collect();
+        let bits: Vec<u8> = (0..m.num_strips()).map(|_| [4u8, 8][rng.below(2)]).collect();
+        let bm = BitMap { bits };
+        let cfg = QuantConfig { device_sigma: 0.0, ..QuantConfig::default() };
+        let qm = quant::apply(&m, &theta, &bm, &cfg);
+        for (i, s) in m.strips().iter().enumerate() {
+            let orig = m.strip_values(&theta, *s);
+            let deq = m.strip_values(&qm.theta, *s);
+            let scale = qm.scales[i];
+            for (a, b) in orig.iter().zip(deq.iter()) {
+                assert!(
+                    (a - b).abs() <= scale * 0.5 + 1e-6,
+                    "strip {i}: |{a} - {b}| > {scale}/2"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_quantization_is_deterministic_per_seed() {
+    let mut rng = Rng::seed_from_u64(31);
+    let m = rand_model(&mut rng);
+    let theta: Vec<f32> = (0..m.entry.num_params).map(|_| rng.normal()).collect();
+    let bm = BitMap::uniform(m.num_strips(), 4);
+    let cfg = QuantConfig::default();
+    let a = quant::apply(&m, &theta, &bm, &cfg);
+    let b = quant::apply(&m, &theta, &bm, &cfg);
+    assert_eq!(a.theta, b.theta);
+    let cfg2 = QuantConfig { seed: cfg.seed + 1, ..cfg };
+    let c = quant::apply(&m, &theta, &bm, &cfg2);
+    assert_ne!(a.theta, c.theta, "different seed -> different device noise");
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    let mut rng = Rng::seed_from_u64(37);
+    for _ in 0..CASES {
+        let v = rand_json(&mut rng, 0);
+        let text = v.to_json();
+        let back = Value::parse(&text).unwrap_or_else(|e| panic!("reparse {text}: {e}"));
+        assert_eq!(v, back, "roundtrip failed for {text}");
+    }
+}
+
+fn rand_json(rng: &mut Rng, depth: usize) -> Value {
+    match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.bool()),
+        2 => Value::Num((rng.below(2_000_001) as f64 - 1_000_000.0) / 64.0),
+        3 => {
+            let n = rng.below(8);
+            Value::Str((0..n).map(|_| ['a', '"', '\\', 'é', '\n', 'z'][rng.below(6)]).collect())
+        }
+        4 => Value::Arr((0..rng.below(4)).map(|_| rand_json(rng, depth + 1)).collect()),
+        _ => Value::Obj(
+            (0..rng.below(4))
+                .map(|i| (format!("k{i}"), rand_json(rng, depth + 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_capacity_strips_positive_and_monotone_in_cols() {
+    let mut rng = Rng::seed_from_u64(41);
+    for _ in 0..CASES {
+        let d = 1 + rng.below(256);
+        let cfg = XbarConfig::default();
+        let small = XbarConfig::small();
+        for bits in [4u8, 8] {
+            let c_big = cfg.capacity_strips(d, bits);
+            let c_small = small.capacity_strips(d, bits);
+            assert!(c_big >= 1 && c_small >= 1);
+            assert!(c_big >= c_small, "bigger arrays hold at least as many strips");
+        }
+    }
+}

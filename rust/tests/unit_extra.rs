@@ -1,0 +1,233 @@
+//! Additional cross-module behavioural tests that don't need artifacts:
+//! report formatting against paper row shapes, cost-model component
+//! relations, CLI/json edge cases, config overrides.
+
+use std::collections::HashMap;
+
+use reram_mpq::config::{Granularity, RunConfig};
+use reram_mpq::coordinator::{Accuracy, PipelineReport, ThresholdMode};
+use reram_mpq::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry, ModelInfo};
+use reram_mpq::quant::BitMap;
+use reram_mpq::report;
+use reram_mpq::util::cli::Args;
+use reram_mpq::util::json::Value;
+use reram_mpq::xbar::{self, MappingStrategy, XbarConfig};
+
+fn two_layer_model() -> ModelInfo {
+    // stem (K=3, D=3, N=16) + stage-2 conv (K=3, D=32, N=64)
+    let l1 = 3 * 3 * 3 * 16;
+    let l2 = 3 * 3 * 32 * 64;
+    ModelInfo::new(ModelEntry {
+        name: "two".into(),
+        num_params: l1 + l2,
+        num_conv_params: l1 + l2,
+        fp32_test_acc: 0.95,
+        params: BinEntry { file: "x".into(), shape: vec![l1 + l2], dtype: "f32".into() },
+        layers: vec![
+            LayerEntry {
+                name: "stem.conv".into(),
+                shape: vec![3, 3, 3, 16],
+                kind: "conv".into(),
+                theta_offset: 0,
+                convflat_offset: Some(0),
+            },
+            LayerEntry {
+                name: "s2.b0.conv1".into(),
+                shape: vec![3, 3, 32, 64],
+                kind: "conv".into(),
+                theta_offset: l1,
+                convflat_offset: Some(l1),
+            },
+        ],
+        executables: HashMap::new(),
+        batch: BatchSizes { eval: 128, serve: 8, calib: 32 },
+    })
+}
+
+fn fake_report(cr: f64, top1: f64, energy_scale: f64) -> PipelineReport {
+    let m = two_layer_model();
+    let bm = BitMap::uniform(m.num_strips(), 8);
+    let cfg = XbarConfig::default();
+    let mapping = xbar::map_model(&m, &bm, &cfg, MappingStrategy::Packed);
+    let mut cost = xbar::cost(&mapping, &cfg);
+    cost.energy.adc_mj *= energy_scale;
+    PipelineReport {
+        model: "resnet20".into(),
+        mode: ThresholdMode::FixedCr(cr),
+        compression_ratio: cr,
+        q_hi: ((1.0 - cr) * m.num_strips() as f64) as usize,
+        total_strips: m.num_strips(),
+        accuracy: Accuracy { top1, top5: (top1 + 0.1).min(1.0), samples: 2048 },
+        fp32_accuracy: 0.95,
+        cost,
+        utilization_hi: 0.84,
+        utilization_all: 0.8,
+        quant_mse: 1e-6,
+        threshold: 0.5,
+        fim_evals: 10,
+    }
+}
+
+#[test]
+fn table2_row_contains_paper_columns() {
+    let r = fake_report(0.74, 0.8463, 1.0);
+    let row = report::table2_row("OURS", &r);
+    assert!(row.contains("OURS"));
+    assert!(row.contains("74%"));
+    assert!(row.contains("84.63%"));
+    assert!(row.contains("ms"));
+    assert!(row.contains("mJ"));
+    // header and row have the same number of columns
+    let header_cols = report::table2_header().lines().next().unwrap().matches('|').count();
+    assert_eq!(row.matches('|').count(), header_cols);
+}
+
+#[test]
+fn table3_row_reports_energy_breakdown_units() {
+    let r = fake_report(0.7, 0.8633, 1.0);
+    let row = report::table3_row(&r);
+    assert!(row.contains("70%"));
+    assert!(row.contains("86.33%"));
+    // System and ADC in mJ, Accumulation/Other in uJ like the paper
+    assert_eq!(row.matches("mJ").count(), 2);
+    assert_eq!(row.matches("uJ").count(), 2);
+}
+
+#[test]
+fn headline_reports_reductions() {
+    let ours = fake_report(0.74, 0.85, 0.4);
+    let hap = fake_report(0.74, 0.75, 1.0);
+    let h = report::headline(&ours, &hap);
+    assert!(h.contains("accuracy 85.00%"));
+    assert!(h.contains("ADC energy -60%"), "{h}");
+}
+
+#[test]
+fn cost_layers_sum_to_total() {
+    let m = two_layer_model();
+    let bm = BitMap::uniform(m.num_strips(), 8);
+    let cfg = XbarConfig::default();
+    let mapping = xbar::map_model(&m, &bm, &cfg, MappingStrategy::Packed);
+    let cost = xbar::cost(&mapping, &cfg);
+    assert_eq!(cost.layers.len(), 2);
+    let sum_lat: f64 = cost.layers.iter().map(|l| l.latency_ms).sum();
+    assert!((sum_lat - cost.latency_ms).abs() < 1e-9);
+    let sum_conv: u64 = cost.layers.iter().map(|l| l.conversions).sum();
+    assert_eq!(sum_conv, cost.conversions);
+    let sum_adc: f64 = cost.layers.iter().map(|l| l.energy.adc_mj).sum();
+    assert!((sum_adc - cost.energy.adc_mj).abs() < 1e-12);
+}
+
+#[test]
+fn stage2_layers_cost_less_pixels_but_more_cells() {
+    // stem runs at 32×32 output; s2 at 8×8 — pixel count drives conversions.
+    let m = two_layer_model();
+    let bm = BitMap::uniform(m.num_strips(), 8);
+    let cfg = XbarConfig::default();
+    let mapping = xbar::map_model(&m, &bm, &cfg, MappingStrategy::Packed);
+    assert_eq!(mapping.layers[0].out_pixels, 1024);
+    assert_eq!(mapping.layers[1].out_pixels, 64);
+    // s2 holds far more weights...
+    assert!(mapping.layers[1].tiers[0].used_cells > mapping.layers[0].tiers[0].used_cells);
+}
+
+#[test]
+fn adc_lane_budget_scales_latency_linearly() {
+    let m = two_layer_model();
+    let bm = BitMap::uniform(m.num_strips(), 8);
+    let c1 = XbarConfig { adc_lanes: 64, ..XbarConfig::default() };
+    let c2 = XbarConfig { adc_lanes: 128, ..XbarConfig::default() };
+    let m1 = xbar::map_model(&m, &bm, &c1, MappingStrategy::Packed);
+    let m2 = xbar::map_model(&m, &bm, &c2, MappingStrategy::Packed);
+    let l1 = xbar::cost(&m1, &c1).latency_ms;
+    let l2 = xbar::cost(&m2, &c2).latency_ms;
+    assert!((l1 / l2 - 2.0).abs() < 1e-9, "doubling lanes must halve latency");
+}
+
+#[test]
+fn device_precision_changes_cell_columns() {
+    // 1-bit cells double the cell columns per weight vs 2-bit cells.
+    let c1 = XbarConfig { cell_bits: 1, ..XbarConfig::default() };
+    let c2 = XbarConfig::default();
+    assert_eq!(c1.cells_per_weight(8), 8);
+    assert_eq!(c2.cells_per_weight(8), 4);
+    assert_eq!(c1.weight_cols_per_array(8), 16);
+}
+
+#[test]
+fn run_config_partial_json_overrides() {
+    let cfg = RunConfig::from_json(
+        r#"{"quant": {"lo": {"bits": 2, "granularity": "per_strip"}, "device_sigma": 0.0},
+            "xbar": {"rows": 64, "adc_lanes": 32}}"#,
+    )
+    .unwrap();
+    assert_eq!(cfg.quant.lo.bits, 2);
+    assert_eq!(cfg.quant.lo.granularity, Granularity::PerStrip);
+    assert_eq!(cfg.quant.device_sigma, 0.0);
+    assert_eq!(cfg.xbar.rows, 64);
+    assert_eq!(cfg.xbar.adc_lanes, 32);
+    // untouched fields keep defaults
+    assert_eq!(cfg.quant.hi.bits, 8);
+    assert_eq!(cfg.xbar.cols, 128);
+    assert_eq!(cfg.sensitivity.probes, 8);
+}
+
+#[test]
+fn run_config_rejects_bad_granularity() {
+    assert!(RunConfig::from_json(r#"{"quant":{"hi":{"granularity":"per_banana"}}}"#).is_err());
+}
+
+#[test]
+fn run_config_json_roundtrip_via_util_json() {
+    let cfg = RunConfig::default();
+    let text = cfg.to_json();
+    // parses as valid JSON and round-trips the key fields
+    let v = Value::parse(&text).unwrap();
+    assert_eq!(v.get("quant").unwrap().get("hi").unwrap().get("bits").unwrap().usize().unwrap(), 8);
+    let cfg2 = RunConfig::from_json(&text).unwrap();
+    assert_eq!(cfg2.xbar.rows, cfg.xbar.rows);
+    assert_eq!(cfg2.threshold.max_iters, cfg.threshold.max_iters);
+}
+
+#[test]
+fn cli_mixed_global_and_subcommand_options() {
+    let argv: Vec<String> = ["--artifacts", "/tmp/a", "quantize", "--cr", "0.7", "--no-align"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let a = Args::parse(&argv, &["no-align"]).unwrap();
+    assert_eq!(a.subcommand.as_deref(), Some("quantize"));
+    assert_eq!(a.get("artifacts"), Some("/tmp/a"));
+    assert_eq!(a.get_f64("cr").unwrap(), Some(0.7));
+    assert!(a.has("no-align"));
+    assert!(!a.has("origin"));
+}
+
+#[test]
+fn bitmap_tracks_pruned_strips_as_compressed() {
+    let bm = BitMap { bits: vec![8, 0, 0, 4] };
+    assert!((bm.compression_ratio(8) - 0.75).abs() < 1e-12);
+    assert_eq!(bm.count_bits(0), 2);
+}
+
+#[test]
+fn mapping_skips_empty_tiers_entirely() {
+    let m = two_layer_model();
+    // prune everything -> no tiers, zero cost
+    let bm = BitMap::uniform(m.num_strips(), 0);
+    let cfg = XbarConfig::default();
+    let mapping = xbar::map_model(&m, &bm, &cfg, MappingStrategy::Packed);
+    assert_eq!(mapping.total_arrays(), 0);
+    let cost = xbar::cost(&mapping, &cfg);
+    assert_eq!(cost.conversions, 0);
+    assert!(cost.energy.system_mj() < 1e-12);
+}
+
+#[test]
+fn utilization_of_absent_bitwidth_is_zero() {
+    let m = two_layer_model();
+    let bm = BitMap::uniform(m.num_strips(), 4);
+    let mapping = xbar::map_model(&m, &bm, &XbarConfig::default(), MappingStrategy::Packed);
+    assert_eq!(mapping.utilization(8), 0.0);
+    assert!(mapping.utilization(4) > 0.0);
+}
