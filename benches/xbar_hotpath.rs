@@ -6,7 +6,7 @@
 
 mod common;
 
-use reram_mpq::coordinator::{Pipeline, ThresholdMode};
+use reram_mpq::coordinator::{CompressionPlan, ThresholdMode};
 use reram_mpq::quant;
 use reram_mpq::tensor::Tensor;
 use reram_mpq::util::bench::Bench;
@@ -19,52 +19,54 @@ fn main() {
     let cfg = RunConfig::default();
     let bench = Bench::from_env();
 
-    let mut pipe = Pipeline::new(&c.runtime, &c.manifest, "resnet20", cfg.clone())
-        .expect("pipeline");
-    let (clustering, _) = pipe
-        .choose_clustering(ThresholdMode::FixedCr(0.7))
-        .expect("clustering");
+    let plan = CompressionPlan::for_model_with(&c.runtime, &c.manifest, "resnet20", cfg.clone())
+        .expect("plan")
+        .threshold(ThresholdMode::FixedCr(0.7))
+        .cluster();
+    let clustering = plan.clustering().expect("clustering");
     let bm = clustering.bitmap.clone();
+    let model = plan.model();
+    let theta = plan.theta();
     let xcfg = XbarConfig::default();
 
     // 1. quantizer — current (buffer-reusing) vs the pre-§Perf per-strip
     // allocating loop, reproduced here for the before/after record.
     bench.run("quant::apply (resnet20, 272k params)", || {
-        quant::apply(&pipe.model, &pipe.theta, &bm, &cfg.quant)
+        quant::apply(model, theta, &bm, &cfg.quant)
     });
     bench.run("quant_apply_allocating (pre-perf baseline)", || {
         // old loop shape: three fresh Vecs per strip
-        let mut out = pipe.theta.clone();
-        for (i, s) in pipe.model.strips().iter().enumerate() {
+        let mut out = theta.to_vec();
+        for (i, s) in model.strips().iter().enumerate() {
             let bits = bm.bits[i];
-            let vals = pipe.model.strip_values(&out, *s);
+            let vals = model.strip_values(&out, *s);
             if bits == 0 {
-                pipe.model.set_strip_values(&mut out, *s, &vec![0.0; vals.len()]);
+                model.set_strip_values(&mut out, *s, &vec![0.0; vals.len()]);
                 continue;
             }
             let scale = quant::symmetric_scale(&vals, bits);
             let deq = quant::fake_quantize(&vals, bits, scale);
-            pipe.model.set_strip_values(&mut out, *s, &deq);
+            model.set_strip_values(&mut out, *s, &deq);
         }
         out
     });
 
     // 2. mapper (both strategies)
     bench.run("xbar::map_model packed (resnet20)", || {
-        xbar::map_model(&pipe.model, &bm, &xcfg, MappingStrategy::Packed)
+        xbar::map_model(model, &bm, &xcfg, MappingStrategy::Packed)
     });
     bench.run("xbar::map_model origin (resnet20)", || {
-        xbar::map_model(&pipe.model, &bm, &xcfg, MappingStrategy::Origin)
+        xbar::map_model(model, &bm, &xcfg, MappingStrategy::Origin)
     });
 
     // 3. cost model
-    let mapping = xbar::map_model(&pipe.model, &bm, &xcfg, MappingStrategy::Packed);
+    let mapping = xbar::map_model(model, &bm, &xcfg, MappingStrategy::Packed);
     bench.run("xbar::cost (resnet20)", || xbar::cost(&mapping, &xcfg));
 
     // 4. PJRT forward (one eval batch = 128 images)
-    let exe = pipe.model.entry.executables.get("fwd_eval").unwrap().clone();
-    let theta_t = Tensor::from_vec(pipe.theta.clone());
-    let (xb, _) = pipe.test.batch(0, pipe.model.entry.batch.eval);
+    let exe = model.entry.executables.get("fwd_eval").unwrap().clone();
+    let theta_t = Tensor::from_vec(theta.to_vec());
+    let (xb, _) = plan.test().batch(0, model.entry.batch.eval);
     bench.run("pjrt fwd_eval (resnet20, batch 128)", || {
         c.runtime.exec(&exe, &[theta_t.clone(), xb.clone()]).expect("exec")
     });

@@ -3,13 +3,13 @@
 //!
 //! Fixes one sensitivity clustering (resnet14 @ 80% CR) and sweeps the
 //! crossbar configuration — array size, cell precision, ADC sharing —
-//! reporting utilization, energy and latency under both mappers. This is
-//! the design-space exploration a CIM architect runs before tape-out.
+//! reporting utilization, energy and latency under both mappers. Every
+//! geometry is a plan sharing the same sensitivity prefix through the stage
+//! cache; the Hutchinson analyzer runs exactly once for the whole sweep.
 //!
 //!     cargo run --release --example crossbar_explorer
 
-use reram_mpq::clustering;
-use reram_mpq::coordinator::{Pipeline, ThresholdMode};
+use reram_mpq::coordinator::{CompressionPlan, ThresholdMode};
 use reram_mpq::xbar::{self, MappingStrategy, XbarConfig};
 use reram_mpq::{artifacts_dir, Manifest, Result, RunConfig, Runtime};
 
@@ -18,10 +18,7 @@ fn main() -> Result<()> {
     let manifest = Manifest::load(&dir)?;
     let runtime = Runtime::new(dir)?;
     let cfg = RunConfig::default();
-    let mut pipe = Pipeline::new(&runtime, &manifest, "resnet14", cfg.clone())?;
-
-    let (clustering, _) = pipe.choose_clustering(ThresholdMode::FixedCr(0.8))?;
-    let sens = pipe.sensitivity()?.clone();
+    let base = CompressionPlan::for_model_with(&runtime, &manifest, "resnet14", cfg.clone())?;
 
     println!("== crossbar design-space explorer (resnet14 @ 80% CR) ==");
     println!("| rows x cols | cell | cols/ADC | mapper | util(8b) | energy/img | latency/img | arrays |");
@@ -37,28 +34,21 @@ fn main() -> Result<()> {
                     cols_per_adc,
                     ..XbarConfig::default()
                 };
-                // Re-align the clustering to this geometry's capacity.
-                let caps: Vec<usize> = pipe
-                    .model
-                    .conv_layers()
-                    .iter()
-                    .map(|l| xcfg.capacity_strips(l.d, cfg.quant.hi.bits))
-                    .collect();
-                let aligned = clustering::align_to_capacity(
-                    &pipe.model,
-                    &sens.scores,
-                    &clustering,
-                    cfg.quant.hi.bits,
-                    cfg.quant.lo.bits,
-                    |li| caps[li],
-                );
+                let mut geo_cfg = cfg.clone();
+                geo_cfg.xbar = xcfg;
                 for strategy in [MappingStrategy::Origin, MappingStrategy::Packed] {
-                    let bm = if strategy == MappingStrategy::Packed {
-                        &aligned.bitmap
-                    } else {
-                        &clustering.bitmap
-                    };
-                    let mapping = xbar::map_model(&pipe.model, bm, &xcfg, strategy);
+                    // ORIGIN keeps the raw clustering; OUR re-aligns it to
+                    // this geometry's capacity before packing.
+                    let mut plan = base
+                        .clone()
+                        .with_config(geo_cfg.clone())
+                        .threshold(ThresholdMode::FixedCr(0.8))
+                        .cluster()
+                        .map(strategy);
+                    if strategy == MappingStrategy::Packed {
+                        plan = plan.align_to_capacity();
+                    }
+                    let mapping = plan.mapping()?;
                     let cost = xbar::cost(&mapping, &xcfg);
                     println!(
                         "| {:>4}x{:<6} | {}bit | {:>8} | {:<6} | {:>7.2}% | {:>7.3} mJ | {:>8.3} ms | {:>6} |",
@@ -80,8 +70,12 @@ fn main() -> Result<()> {
         }
     }
     println!();
-    println!("(larger arrays amplify the ORIGIN→OUR utilization gap — Table 4's trend;");
-    println!(" 1-bit cells double the cell-columns per weight; ADC sharing trades");
-    println!(" conversion parallelism for periphery area at equal conversion count.)");
+    println!(
+        "(hutchinson sensitivity ran {} time(s) for the whole sweep — the",
+        base.cache_stats().sensitivity_runs
+    );
+    println!(" stage cache shares the prefix; larger arrays amplify the ORIGIN→OUR");
+    println!(" utilization gap — Table 4's trend; 1-bit cells double the cell-columns");
+    println!(" per weight; ADC sharing trades conversion parallelism for periphery area.)");
     Ok(())
 }

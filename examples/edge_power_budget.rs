@@ -1,25 +1,25 @@
 //! Edge deployment scenario (the paper's §1/§6 motivation): given a power
 //! budget and an accuracy floor, find the mixed-precision operating point.
 //!
-//! Sweeps compression ratios, builds the accuracy-energy Pareto front, then
-//! answers: "what is the lowest-energy configuration that keeps top-1
-//! within `max_drop` of fp32?" — the question an IoT/wearable integrator
-//! actually asks.
+//! Sweeps compression ratios (one plan per CR, all sharing the sensitivity
+//! prefix), builds the accuracy-energy Pareto front, then answers: "what is
+//! the lowest-energy configuration that keeps top-1 within `max_drop` of
+//! fp32?" — the question an IoT/wearable integrator actually asks.
 //!
 //!     cargo run --release --example edge_power_budget
 
-use reram_mpq::coordinator::{Pipeline, PipelineReport, ThresholdMode};
+use reram_mpq::coordinator::{CompressionPlan, EvalOpts, PipelineReport, ThresholdMode};
 use reram_mpq::xbar::MappingStrategy;
-use reram_mpq::{artifacts_dir, Manifest, Result, RunConfig, Runtime};
+use reram_mpq::{artifacts_dir, Manifest, Result, Runtime};
 
 fn main() -> Result<()> {
     let dir = artifacts_dir();
     let manifest = Manifest::load(&dir)?;
     let runtime = Runtime::new(dir)?;
-    let mut pipe = Pipeline::new(&runtime, &manifest, "resnet8", RunConfig::default())?;
+    let base = CompressionPlan::for_model(&runtime, &manifest, "resnet8")?;
 
     let max_drop = 0.06; // accept up to 6 points of top-1 drop
-    let eval_batches = 8;
+    let opts = EvalOpts::batches(8);
 
     println!("== edge power budget explorer (resnet8, ResNet18 stand-in) ==");
     println!("accuracy floor: fp32 − {:.0} points", max_drop * 100.0);
@@ -29,12 +29,13 @@ fn main() -> Result<()> {
 
     let mut reports: Vec<PipelineReport> = Vec::new();
     for cr in [0.0, 0.2, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0] {
-        let r = pipe.run(
-            ThresholdMode::FixedCr(cr),
-            true,
-            MappingStrategy::Packed,
-            eval_batches,
-        )?;
+        let r = base
+            .clone()
+            .threshold(ThresholdMode::FixedCr(cr))
+            .cluster()
+            .align_to_capacity()
+            .map(MappingStrategy::Packed)
+            .evaluate(opts)?;
         let ok = r.accuracy.top1 >= r.fp32_accuracy - max_drop;
         println!(
             "| {:>4.0}% | {:>6.2}% | {:>7.3} mJ | {:>8.3} ms | {}  |",
@@ -75,13 +76,13 @@ fn main() -> Result<()> {
         .min_by(|a, b| a.cost.energy.system_mj().total_cmp(&b.cost.energy.system_mj()));
     match pick {
         Some(r) => {
-            let base = &reports[0];
+            let base_r = &reports[0];
             println!(
                 "\noperating point: CR {:.0}% — {:.2}% top-1, {:.3} mJ/img ({:.0}% energy saved vs 8-bit), {:.3} ms/img",
                 r.compression_ratio * 100.0,
                 r.accuracy.top1 * 100.0,
                 r.cost.energy.system_mj(),
-                (1.0 - r.cost.energy.system_mj() / base.cost.energy.system_mj()) * 100.0,
+                (1.0 - r.cost.energy.system_mj() / base_r.cost.energy.system_mj()) * 100.0,
                 r.cost.latency_ms
             );
         }

@@ -3,19 +3,19 @@
 //!
 //!   1. load the AOT artifacts (JAX/Pallas → HLO text → PJRT),
 //!   2. Hutchinson strip-sensitivity analysis through the `hvp` executable,
-//!   3. FIM-guided threshold search (Algorithm 1 *and* the §5 sweep),
+//!   3. FIM-guided threshold search (Algorithm 1 *and* the §5 sweep) — two
+//!      plans forked from one root, sharing the sensitivity stage,
 //!   4. dynamic clustering + crossbar-capacity alignment,
 //!   5. mixed-precision quantization + NeuroSim-lite mapping/cost,
 //!   6. full-test-set accuracy through the `fwd_eval` executable,
-//!   7. batched serving through the engine (the L3 request hot path),
+//!   7. batched serving through the plan's `deploy` terminal,
 //!   8. the L1 Pallas kernel executed standalone and checked in Rust.
 //!
 //!     cargo run --release --example end_to_end
 
 use std::time::Instant;
 
-use reram_mpq::coordinator::{Engine, EngineConfig, Pipeline, ThresholdMode};
-use reram_mpq::dataset::TestSet;
+use reram_mpq::coordinator::{CompressionPlan, EvalOpts, ThresholdMode};
 use reram_mpq::tensor::Tensor;
 use reram_mpq::util::rng::Rng;
 use reram_mpq::xbar::MappingStrategy;
@@ -25,16 +25,16 @@ fn main() -> Result<()> {
     let t_start = Instant::now();
     let dir = artifacts_dir();
     let manifest = Manifest::load(&dir)?;
-    let runtime = Runtime::new(dir.clone())?;
+    let runtime = Runtime::new(dir)?;
     let cfg = RunConfig::default();
 
     println!("== end-to-end: {} ==", runtime.platform());
     println!("hardware (Table 1): {}", cfg.xbar.to_value().to_json());
 
     // ---- 1+2: sensitivity analysis --------------------------------------
-    let mut pipe = Pipeline::new(&runtime, &manifest, "resnet20", cfg.clone())?;
+    let base = CompressionPlan::for_model_with(&runtime, &manifest, "resnet20", cfg.clone())?;
     let t0 = Instant::now();
-    let sens = pipe.sensitivity()?.clone();
+    let sens = base.sensitivity_scores()?;
     let sorted = sens.sorted_scores();
     println!(
         "[sensitivity] {} strips, {} probes, {:.1}s; median score {:.3e}, p99 {:.3e}",
@@ -45,29 +45,36 @@ fn main() -> Result<()> {
         sorted[sorted.len() * 99 / 100]
     );
 
-    // ---- 3: threshold search (both modes) --------------------------------
+    // ---- 3: threshold search (both modes, one shared prefix) -------------
     let t0 = Instant::now();
-    let (c_alg1, evals1) = pipe.choose_clustering(ThresholdMode::Alg1)?;
+    let alg1 = base.clone().threshold(ThresholdMode::Alg1);
+    let c_alg1 = alg1.clustering()?;
     println!(
         "[alg1 ] chose CR {:.1}% (q_hi={}) after {} FIM evals, {:.1}s",
         c_alg1.compression_ratio(8) * 100.0,
         c_alg1.q_hi,
-        evals1,
+        alg1.chosen_threshold()?.fim_evals,
         t0.elapsed().as_secs_f64()
     );
     let t0 = Instant::now();
-    let (c_sweep, evals2) = pipe.choose_clustering(ThresholdMode::Sweep)?;
+    let sweep = base.clone().threshold(ThresholdMode::Sweep);
+    let c_sweep = sweep.clustering()?;
     println!(
-        "[sweep] chose CR {:.1}% (q_hi={}) after {} FIM evals, {:.1}s",
+        "[sweep] chose CR {:.1}% (q_hi={}) after {} FIM evals, {:.1}s (sensitivity runs so far: {})",
         c_sweep.compression_ratio(8) * 100.0,
         c_sweep.q_hi,
-        evals2,
-        t0.elapsed().as_secs_f64()
+        sweep.chosen_threshold()?.fim_evals,
+        t0.elapsed().as_secs_f64(),
+        base.cache_stats().sensitivity_runs
     );
 
-    // ---- 4+5+6: full pipeline at the sweep's operating point -------------
+    // ---- 4+5+6: full plan at the sweep's operating point ------------------
     let t0 = Instant::now();
-    let report = pipe.run(ThresholdMode::Sweep, true, MappingStrategy::Packed, usize::MAX)?;
+    let report = sweep
+        .clone()
+        .align_to_capacity()
+        .map(MappingStrategy::Packed)
+        .evaluate(EvalOpts::full())?;
     println!(
         "[pipeline] CR {:.1}%: top1 {:.2}% (fp32 {:.2}%), {:.3} mJ/img, {:.3} ms/img, util(hi) {:.1}%, {:.1}s",
         report.compression_ratio * 100.0,
@@ -79,18 +86,10 @@ fn main() -> Result<()> {
         t0.elapsed().as_secs_f64()
     );
 
-    // ---- 7: serving engine -----------------------------------------------
-    let qtheta = reram_mpq::quant::apply(
-        &pipe.model,
-        &pipe.theta,
-        &c_sweep.bitmap,
-        &cfg.quant,
-    )
-    .theta;
-    let engine = Engine::new(dir.clone(), &pipe.model, qtheta, EngineConfig::default())?;
-    let handle = engine.start();
+    // ---- 7: serving through the deploy terminal ---------------------------
+    let handle = sweep.deploy(Default::default())?;
     let _ = handle.classify(vec![0.0; 32 * 32 * 3])?; // warm the executable
-    let test = TestSet::load(&manifest)?;
+    let test = sweep.test();
     let n = 256.min(test.len());
     let elems = 32 * 32 * 3;
     let t0 = Instant::now();

@@ -1,28 +1,30 @@
-//! Quickstart: compress a pre-trained model with the sensitivity-aware
-//! mixed-precision pipeline and print accuracy + hardware cost.
+//! Quickstart: the canonical `CompressionPlan` chain — build a staged
+//! compression plan, evaluate it offline, then deploy the exact same stages
+//! to the serving engine.
 //!
 //!     cargo run --release --example quickstart
 //!
 //! (Run `make artifacts` first.)
 
-use reram_mpq::coordinator::{Pipeline, ThresholdMode};
+use reram_mpq::coordinator::{CompressionPlan, EvalOpts, ThresholdMode};
 use reram_mpq::xbar::MappingStrategy;
-use reram_mpq::{artifacts_dir, Manifest, Result, RunConfig, Runtime};
+use reram_mpq::{artifacts_dir, Manifest, Result, Runtime};
 
 fn main() -> Result<()> {
     let dir = artifacts_dir();
     let manifest = Manifest::load(&dir)?;
     let runtime = Runtime::new(dir)?;
 
-    // Compress the ResNet20 backbone at 70% compression (70% of strips in
-    // 4-bit crossbars), with dynamic crossbar alignment + packed mapping.
-    let mut pipe = Pipeline::new(&runtime, &manifest, "resnet20", RunConfig::default())?;
-    let report = pipe.run(
-        ThresholdMode::FixedCr(0.7),
-        /*align=*/ true,
-        MappingStrategy::Packed,
-        /*eval_batches=*/ 4,
-    )?;
+    // Stage the plan: 70% of strips in 4-bit crossbars, dynamic crossbar
+    // alignment, packed mapping. Nothing runs until a terminal is called.
+    let plan = CompressionPlan::for_model(&runtime, &manifest, "resnet20")?
+        .threshold(ThresholdMode::FixedCr(0.7))
+        .cluster()
+        .align_to_capacity()
+        .map(MappingStrategy::Packed);
+
+    // Terminal 1 — evaluate: quantize, map, cost, measure accuracy.
+    let report = plan.evaluate(EvalOpts::batches(4))?;
 
     println!("== quickstart: sensitivity-aware mixed-precision quantization ==");
     println!("model:        {}", report.model);
@@ -44,6 +46,29 @@ fn main() -> Result<()> {
         report.cost.energy.system_mj(),
         report.cost.energy.adc_mj,
         report.cost.latency_ms
+    );
+
+    // Terminal 2 — deploy: the same quantized stages serve live requests
+    // (the quantization artifact is reused from the evaluate above).
+    let handle = plan.deploy(Default::default())?;
+    let image = plan.test().x.data()[..32 * 32 * 3].to_vec();
+    let resp = handle.classify(image)?;
+    println!(
+        "serving:      first test image -> class {} in {} us",
+        resp.class, resp.latency_us
+    );
+
+    // Exploring a second operating point shares the computed prefix: the
+    // sensitivity scores are NOT recomputed for this plan.
+    let report90 = plan
+        .clone()
+        .threshold(ThresholdMode::FixedCr(0.9))
+        .evaluate(EvalOpts::batches(4))?;
+    println!(
+        "CR 90%:       {:.2}% top-1, {:.3} mJ (sensitivity runs: {})",
+        report90.accuracy.top1 * 100.0,
+        report90.cost.energy.system_mj(),
+        plan.cache_stats().sensitivity_runs
     );
     Ok(())
 }

@@ -24,6 +24,16 @@ impl Clustering {
     pub fn compression_ratio(&self, hi_bits: u8) -> f64 {
         self.bitmap.compression_ratio(hi_bits)
     }
+
+    /// Machine-readable stage-artifact summary.
+    pub fn to_value(&self) -> crate::util::json::Value {
+        use crate::util::json::{obj, Value};
+        obj(vec![
+            ("threshold", Value::num_or_null(self.threshold)),
+            ("q_hi", Value::Num(self.q_hi as f64)),
+            ("total_strips", Value::Num(self.bitmap.bits.len() as f64)),
+        ])
+    }
 }
 
 /// Basic threshold clustering: `s_i > t` → hi bits, else lo bits.

@@ -22,7 +22,7 @@ use super::metrics::Metrics;
 struct Request {
     t0: Instant,
     image: Vec<f32>,
-    reply: SyncSender<Response>,
+    reply: SyncSender<BatchResult>,
 }
 
 /// Prediction for one image.
@@ -33,6 +33,21 @@ pub struct Response {
     /// Time spent inside the engine (queue + execute), microseconds.
     pub latency_us: u64,
 }
+
+/// Why a request's batch failed inside the engine. Every pending request of
+/// a failed batch receives this explicitly (no silently dropped channels).
+#[derive(Clone, Debug)]
+pub struct BatchError(pub String);
+
+impl std::fmt::Display for BatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for BatchError {}
+
+type BatchResult = std::result::Result<Response, BatchError>;
 
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
@@ -57,14 +72,16 @@ pub struct EngineHandle {
 
 /// A pending reply the caller can wait on.
 pub struct Pending {
-    rx: Receiver<Response>,
+    rx: Receiver<BatchResult>,
 }
 
 impl Pending {
     pub fn wait(self) -> Result<Response> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("engine dropped request"))
+        match self.rx.recv() {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(e)) => Err(anyhow::anyhow!("engine batch failed: {e}")),
+            Err(_) => Err(anyhow::anyhow!("engine dropped request")),
+        }
     }
 }
 
@@ -174,7 +191,13 @@ impl Engine {
                 }
                 if let Err(e) = worker.run_batch(&mut pending, &metrics) {
                     crate::error!("batch failed: {e}");
-                    pending.clear(); // dropped replies propagate as errors
+                    // Answer every pending request with a typed error (no
+                    // silently dropped reply channels) and count the failure.
+                    metrics.observe_batch_failure(pending.len());
+                    let err = BatchError(e.to_string());
+                    for req in pending.drain(..) {
+                        let _ = req.reply.send(Err(err.clone()));
+                    }
                 }
             }
         });
@@ -220,7 +243,7 @@ impl Worker {
                 .unwrap_or(0);
             let latency_us = now.duration_since(req.t0).as_micros() as u64;
             max_lat = max_lat.max(latency_us);
-            let _ = req.reply.send(Response { logits: row, class, latency_us });
+            let _ = req.reply.send(Ok(Response { logits: row, class, latency_us }));
         }
         debug_assert!(max_lat <= batch_lat);
         Ok(())

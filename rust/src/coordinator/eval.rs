@@ -14,6 +14,17 @@ pub struct Accuracy {
     pub samples: usize,
 }
 
+impl Accuracy {
+    pub fn to_value(&self) -> crate::util::json::Value {
+        use crate::util::json::{obj, Value};
+        obj(vec![
+            ("top1", Value::Num(self.top1)),
+            ("top5", Value::Num(self.top5)),
+            ("samples", Value::Num(self.samples as f64)),
+        ])
+    }
+}
+
 /// Evaluate `theta` on the test set through the `fwd_eval` executable.
 pub fn evaluate(
     runtime: &Runtime,

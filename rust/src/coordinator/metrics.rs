@@ -7,6 +7,11 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
+    /// Batches whose execution failed (every member request got an error
+    /// reply — see `engine::BatchError`).
+    pub failed_batches: AtomicU64,
+    /// Requests answered with an error because their batch failed.
+    pub failed_requests: AtomicU64,
     latency_us_sum: AtomicU64,
     latency_us_max: AtomicU64,
 }
@@ -16,6 +21,8 @@ pub struct Metrics {
 pub struct Snapshot {
     pub requests: u64,
     pub batches: u64,
+    pub failed_batches: u64,
+    pub failed_requests: u64,
     pub mean_batch_fill: f64,
     pub mean_latency_us: f64,
     pub max_latency_us: u64,
@@ -33,11 +40,18 @@ impl Metrics {
         self.latency_us_max.fetch_max(latency_us, Ordering::Relaxed);
     }
 
+    pub fn observe_batch_failure(&self, items: usize) {
+        self.failed_batches.fetch_add(1, Ordering::Relaxed);
+        self.failed_requests.fetch_add(items as u64, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let batches = self.batches.load(Ordering::Relaxed);
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
             batches,
+            failed_batches: self.failed_batches.load(Ordering::Relaxed),
+            failed_requests: self.failed_requests.load(Ordering::Relaxed),
             mean_batch_fill: if batches == 0 {
                 0.0
             } else {
@@ -70,5 +84,23 @@ mod tests {
         assert!((s.mean_batch_fill - 1.5).abs() < 1e-12);
         assert!((s.mean_latency_us - 200.0).abs() < 1e-12);
         assert_eq!(s.max_latency_us, 300);
+        assert_eq!(s.failed_batches, 0);
+        assert_eq!(s.failed_requests, 0);
+    }
+
+    #[test]
+    fn batch_failures_are_counted_separately() {
+        let m = Metrics::default();
+        for _ in 0..3 {
+            m.observe_request();
+        }
+        m.observe_batch(1, 50);
+        m.observe_batch_failure(2);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.batches, 1, "failed batches do not pollute the success count");
+        assert_eq!(s.failed_batches, 1);
+        assert_eq!(s.failed_requests, 2);
+        assert!((s.mean_batch_fill - 1.0).abs() < 1e-12);
     }
 }

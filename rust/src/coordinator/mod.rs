@@ -1,12 +1,17 @@
-//! L3 coordinator: the compression pipeline, the accuracy evaluator, the
-//! serving engine (dynamic batching over PJRT) and its metrics.
+//! L3 coordinator: the staged compression-plan builder, the accuracy
+//! evaluator, the serving engine (dynamic batching over PJRT) and its
+//! metrics.
 
 pub mod engine;
 pub mod eval;
 pub mod metrics;
 pub mod pipeline;
+pub mod plan;
 
-pub use engine::{Engine, EngineConfig, EngineHandle, Response};
+pub use engine::{BatchError, Engine, EngineConfig, EngineHandle, Response};
 pub use eval::{evaluate, evaluate_batches, Accuracy};
 pub use metrics::{Metrics, Snapshot};
-pub use pipeline::{Pipeline, PipelineReport, ThresholdMode};
+pub use pipeline::{PipelineReport, ThresholdMode};
+pub use plan::{
+    CacheStats, ChosenThreshold, CompressionPlan, EvalOpts, SensitivityScores, StageCache,
+};

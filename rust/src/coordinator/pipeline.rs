@@ -1,20 +1,12 @@
-//! The end-to-end compression pipeline (paper Figure 4): pre-trained model →
-//! strip sensitivity (Hessian) → threshold (FIM) → clustering + crossbar
-//! alignment → mixed-precision quantization → crossbar mapping → cost +
-//! accuracy report.
+//! Pipeline report types shared by the offline (tables/figures) and online
+//! (serving) terminals of the staged [`CompressionPlan`] builder
+//! (paper Figure 4). The builder itself lives in [`super::plan`].
+//!
+//! [`CompressionPlan`]: super::plan::CompressionPlan
 
-
-use crate::clustering::{self, Clustering};
-use crate::config::RunConfig;
-use crate::coordinator::eval::{self, Accuracy};
-use crate::dataset::{CalibSet, TestSet};
-use crate::fim::ThresholdSearch;
-use crate::model::{Manifest, ModelInfo};
-use crate::quant::{self, BitMap};
-use crate::runtime::Runtime;
-use crate::sensitivity::{Analyzer, Sensitivity};
-use crate::xbar::{self, CostReport, MappingStrategy};
-use crate::Result;
+use crate::coordinator::eval::Accuracy;
+use crate::util::json::{obj, Value};
+use crate::xbar::CostReport;
 
 /// How the operating threshold is chosen.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -27,7 +19,20 @@ pub enum ThresholdMode {
     FixedCr(f64),
 }
 
-/// Everything one pipeline run produces.
+impl ThresholdMode {
+    pub fn to_value(&self) -> Value {
+        match self {
+            ThresholdMode::Alg1 => obj(vec![("kind", Value::Str("alg1".into()))]),
+            ThresholdMode::Sweep => obj(vec![("kind", Value::Str("sweep".into()))]),
+            ThresholdMode::FixedCr(cr) => obj(vec![
+                ("kind", Value::Str("fixed_cr".into())),
+                ("cr", Value::Num(*cr)),
+            ]),
+        }
+    }
+}
+
+/// Everything one evaluated plan produces.
 #[derive(Clone, Debug)]
 pub struct PipelineReport {
     pub model: String,
@@ -45,157 +50,23 @@ pub struct PipelineReport {
     pub fim_evals: usize,
 }
 
-/// Owns the loaded state for one model and runs pipeline variants on it.
-pub struct Pipeline<'a> {
-    pub runtime: &'a Runtime,
-    pub manifest: &'a Manifest,
-    pub model: ModelInfo,
-    pub theta: Vec<f32>,
-    pub test: TestSet,
-    pub calib: CalibSet,
-    pub cfg: RunConfig,
-    sensitivity: Option<Sensitivity>,
-}
-
-impl<'a> Pipeline<'a> {
-    pub fn new(
-        runtime: &'a Runtime,
-        manifest: &'a Manifest,
-        model_name: &str,
-        cfg: RunConfig,
-    ) -> Result<Self> {
-        let model = manifest.model(model_name)?;
-        let theta = model.load_params(manifest)?;
-        let test = TestSet::load(manifest)?;
-        let calib = CalibSet::load(manifest, model.entry.batch.calib)?;
-        Ok(Self { runtime, manifest, model, theta, test, calib, cfg, sensitivity: None })
-    }
-
-    /// Hutchinson sensitivity scores (cached across runs on this pipeline).
-    pub fn sensitivity(&mut self) -> Result<&Sensitivity> {
-        if self.sensitivity.is_none() {
-            let analyzer = Analyzer {
-                runtime: self.runtime,
-                model: &self.model,
-                calib: &self.calib,
-                cfg: self.cfg.sensitivity,
-            };
-            crate::info!("hutchinson sensitivity: model={} probes={}", self.model.name(), self.cfg.sensitivity.probes);
-            self.sensitivity = Some(analyzer.run(&self.theta)?);
-        }
-        Ok(self.sensitivity.as_ref().unwrap())
-    }
-
-    /// Choose a clustering according to `mode`.
-    pub fn choose_clustering(&mut self, mode: ThresholdMode) -> Result<(Clustering, usize)> {
-        let quant_cfg = self.cfg.quant;
-        let thr_cfg = self.cfg.threshold;
-        self.sensitivity()?;
-        let sens = self.sensitivity.clone().unwrap();
-        let (clustering, evals) = match mode {
-            ThresholdMode::FixedCr(cr) => (
-                clustering::cluster_at_cr(&sens.scores, cr, quant_cfg.hi.bits, quant_cfg.lo.bits),
-                0,
-            ),
-            ThresholdMode::Alg1 | ThresholdMode::Sweep => {
-                let search = ThresholdSearch {
-                    runtime: self.runtime,
-                    model: &self.model,
-                    calib: &self.calib,
-                    sens: &sens,
-                    quant_cfg,
-                    cfg: thr_cfg,
-                };
-                let res = if mode == ThresholdMode::Alg1 {
-                    search.gradient_descent(&self.theta)?
-                } else {
-                    search.sweep(
-                        &self.theta,
-                        &[0.0, 0.1, 0.3, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0],
-                        0.5,
-                    )?
-                };
-                crate::info!("threshold chosen: q={:.3} fim={:.4e}", res.best.quantile, res.best.fim_dist);
-                (
-                    clustering::cluster_at_cr(
-                        &sens.scores,
-                        res.best.quantile,
-                        quant_cfg.hi.bits,
-                        quant_cfg.lo.bits,
-                    ),
-                    res.evals,
-                )
-            }
-        };
-        Ok((clustering, evals))
-    }
-
-    /// Run the full pipeline. `align` enables the paper's dynamic crossbar
-    /// alignment; `strategy` picks the mapper.
-    pub fn run(
-        &mut self,
-        mode: ThresholdMode,
-        align: bool,
-        strategy: MappingStrategy,
-        eval_batches: usize,
-    ) -> Result<PipelineReport> {
-        let (mut clustering, fim_evals) = self.choose_clustering(mode)?;
-        let quant_cfg = self.cfg.quant;
-        let xcfg = self.cfg.xbar;
-
-        if align {
-            let sens = self.sensitivity.clone().unwrap();
-            let model = &self.model;
-            let caps: Vec<usize> = model
-                .conv_layers()
-                .iter()
-                .map(|l| xcfg.capacity_strips(l.d, quant_cfg.hi.bits))
-                .collect();
-            clustering = clustering::align_to_capacity(
-                model,
-                &sens.scores,
-                &clustering,
-                quant_cfg.hi.bits,
-                quant_cfg.lo.bits,
-                |li| caps[li],
-            );
-        }
-
-        self.report_for_bitmap(&clustering.bitmap, mode, clustering.threshold, fim_evals, strategy, eval_batches)
-    }
-
-    /// Quantize + map + evaluate an explicit bitmap (shared by baselines).
-    pub fn report_for_bitmap(
-        &mut self,
-        bitmap: &BitMap,
-        mode: ThresholdMode,
-        threshold: f64,
-        fim_evals: usize,
-        strategy: MappingStrategy,
-        eval_batches: usize,
-    ) -> Result<PipelineReport> {
-        let quant_cfg = self.cfg.quant;
-        let xcfg = self.cfg.xbar;
-        let qm = quant::apply(&self.model, &self.theta, bitmap, &quant_cfg);
-        let mapping = xbar::map_model(&self.model, bitmap, &xcfg, strategy);
-        let cost = xbar::cost(&mapping, &xcfg);
-        let accuracy =
-            eval::evaluate_batches(self.runtime, &self.model, &qm.theta, &self.test, eval_batches)?;
-        let q_hi = bitmap.count_bits(quant_cfg.hi.bits);
-        Ok(PipelineReport {
-            model: self.model.name().to_string(),
-            mode,
-            compression_ratio: bitmap.compression_ratio(quant_cfg.hi.bits),
-            q_hi,
-            total_strips: bitmap.bits.len(),
-            accuracy,
-            fp32_accuracy: self.model.entry.fp32_test_acc,
-            cost,
-            utilization_hi: mapping.utilization(quant_cfg.hi.bits),
-            utilization_all: mapping.utilization_all(),
-            quant_mse: qm.mse,
-            threshold,
-            fim_evals,
-        })
+impl PipelineReport {
+    /// Machine-readable form (the CLI's `--json` output).
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("model", Value::Str(self.model.clone())),
+            ("mode", self.mode.to_value()),
+            ("compression_ratio", Value::Num(self.compression_ratio)),
+            ("q_hi", Value::Num(self.q_hi as f64)),
+            ("total_strips", Value::Num(self.total_strips as f64)),
+            ("accuracy", self.accuracy.to_value()),
+            ("fp32_accuracy", Value::Num(self.fp32_accuracy)),
+            ("cost", self.cost.to_value()),
+            ("utilization_hi", Value::Num(self.utilization_hi)),
+            ("utilization_all", Value::Num(self.utilization_all)),
+            ("quant_mse", Value::Num(self.quant_mse)),
+            ("threshold", Value::num_or_null(self.threshold)),
+            ("fim_evals", Value::Num(self.fim_evals as f64)),
+        ])
     }
 }

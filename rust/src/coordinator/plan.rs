@@ -1,0 +1,729 @@
+//! Staged `CompressionPlan` builder — the paper's Figure-4 dataflow as a
+//! composable, cacheable pipeline (sensitivity → FIM threshold → clustering /
+//! alignment → quantization → crossbar mapping → evaluate / deploy).
+//!
+//! Each stage produces an owned, inspectable artifact that is memoized in a
+//! [`StageCache`] shared by every plan cloned from the same
+//! [`CompressionPlan::for_model`] root: two plans that share a stage prefix
+//! share the computed prefix (the Hutchinson analyzer runs once, however
+//! many operating points are explored). Swapping *one* stage — a different
+//! bit-allocation policy, mapper, or threshold rule — is a one-line change
+//! that invalidates exactly the downstream stages and nothing else.
+//!
+//! ```no_run
+//! # use reram_mpq::coordinator::{CompressionPlan, EvalOpts, ThresholdMode};
+//! # use reram_mpq::xbar::MappingStrategy;
+//! # fn main() -> reram_mpq::Result<()> {
+//! # let dir = reram_mpq::artifacts_dir();
+//! # let manifest = reram_mpq::Manifest::load(&dir)?;
+//! # let runtime = reram_mpq::Runtime::new(dir)?;
+//! let plan = CompressionPlan::for_model(&runtime, &manifest, "resnet20")?
+//!     .threshold(ThresholdMode::FixedCr(0.7))
+//!     .cluster()
+//!     .align_to_capacity()
+//!     .map(MappingStrategy::Packed);
+//! let report = plan.evaluate(EvalOpts::batches(4))?;   // offline: tables/figures
+//! let handle = plan.deploy(Default::default())?;       // online: serving engine
+//! # Ok(()) }
+//! ```
+//!
+//! Baselines are just another bit-allocation stage: an explicit [`BitMap`]
+//! (e.g. HAP pruning) enters the plan through [`CompressionPlan::bitmap_from`]
+//! and flows through the same quantize/map/evaluate/deploy tail.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use crate::clustering::{self, Clustering};
+use crate::config::{QuantConfig, RunConfig, SensitivityConfig};
+use crate::coordinator::engine::{Engine, EngineConfig, EngineHandle};
+use crate::coordinator::eval;
+use crate::coordinator::pipeline::{PipelineReport, ThresholdMode};
+use crate::dataset::{CalibSet, TestSet};
+use crate::fim::ThresholdSearch;
+use crate::model::{Manifest, ModelInfo};
+use crate::quant::{self, BitMap, QuantizedModel};
+use crate::runtime::Runtime;
+use crate::sensitivity::{Analyzer, Sensitivity};
+use crate::util::json::{obj, Value};
+use crate::xbar::{self, MappingStrategy, ModelMapping};
+use crate::Result;
+
+/// Candidate quantiles swept by [`ThresholdMode::Sweep`] (paper §5).
+pub const SWEEP_CANDIDATES: &[f64] = &[0.0, 0.1, 0.3, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0];
+/// FIM/energy trade-off weight of the sweep's joint objective.
+pub const SWEEP_LAMBDA: f64 = 0.5;
+
+/// Per-strip Hutchinson sensitivity artifact, shared without cloning the
+/// score vectors.
+pub type SensitivityScores = Arc<Sensitivity>;
+
+/// The threshold-stage artifact: which operating point was chosen and what
+/// it cost to find it.
+#[derive(Clone, Debug)]
+pub struct ChosenThreshold {
+    pub mode: ThresholdMode,
+    /// Fraction of strips assigned to the low tier (quantile of the score
+    /// distribution).
+    pub quantile: f64,
+    /// Score-space threshold of the winning candidate (NaN when the mode
+    /// fixes the quantile directly and no search ran).
+    pub threshold: f64,
+    /// FIM evaluations spent by the search (0 for `FixedCr`).
+    pub fim_evals: usize,
+}
+
+impl ChosenThreshold {
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("mode", self.mode.to_value()),
+            ("quantile", Value::Num(self.quantile)),
+            ("threshold", Value::num_or_null(self.threshold)),
+            ("fim_evals", Value::Num(self.fim_evals as f64)),
+        ])
+    }
+}
+
+/// How many stage computations actually ran (cache misses) — the memoization
+/// contract is observable, not just an implementation detail.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub sensitivity_runs: usize,
+    pub threshold_runs: usize,
+    pub clustering_runs: usize,
+    pub quantize_runs: usize,
+    pub mapping_runs: usize,
+    pub eval_runs: usize,
+}
+
+/// Memoized stage artifacts, keyed by the exact stage configuration that
+/// produced them. Shared (via `Rc`) across all plans cloned from one root.
+#[derive(Default)]
+pub struct StageCache {
+    sensitivity: RefCell<HashMap<String, Arc<Sensitivity>>>,
+    thresholds: RefCell<HashMap<String, Arc<ChosenThreshold>>>,
+    clusterings: RefCell<HashMap<String, Arc<Clustering>>>,
+    quantized: RefCell<HashMap<String, Arc<QuantizedModel>>>,
+    mappings: RefCell<HashMap<String, Arc<ModelMapping>>>,
+    reports: RefCell<HashMap<String, Arc<PipelineReport>>>,
+    stats: Cell<CacheStats>,
+}
+
+impl StageCache {
+    pub fn stats(&self) -> CacheStats {
+        self.stats.get()
+    }
+
+    fn bump(&self, f: impl FnOnce(&mut CacheStats)) {
+        let mut s = self.stats.get();
+        f(&mut s);
+        self.stats.set(s);
+    }
+}
+
+/// Look up `key`, computing and inserting on a miss. Returns the artifact
+/// and whether it was freshly computed. The map borrow is released before
+/// `compute` runs, so stages may recursively resolve their inputs.
+fn memo<T>(
+    map: &RefCell<HashMap<String, Arc<T>>>,
+    key: &str,
+    compute: impl FnOnce() -> Result<T>,
+) -> Result<(Arc<T>, bool)> {
+    if let Some(v) = map.borrow().get(key) {
+        return Ok((v.clone(), false));
+    }
+    let v = Arc::new(compute()?);
+    map.borrow_mut().insert(key.to_string(), v.clone());
+    Ok((v, true))
+}
+
+fn fnv64(bytes: impl Iterator<Item = u8>) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Loaded per-model state shared by every plan cloned from one root: the
+/// fp32 checkpoint, the test/calibration splits and the runtime handles.
+pub struct ModelState<'a> {
+    pub runtime: &'a Runtime,
+    pub manifest: &'a Manifest,
+    pub model: ModelInfo,
+    pub theta: Vec<f32>,
+    pub test: TestSet,
+    pub calib: CalibSet,
+}
+
+#[derive(Clone)]
+struct ExplicitBitmap {
+    bitmap: Arc<BitMap>,
+    key: String,
+}
+
+/// Evaluation options for the [`CompressionPlan::evaluate`] terminal.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOpts {
+    /// Number of test batches (full test set by default; sweeps and benches
+    /// shrink this for iteration speed).
+    pub eval_batches: usize,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        Self { eval_batches: usize::MAX }
+    }
+}
+
+impl EvalOpts {
+    /// Evaluate the full test set.
+    pub fn full() -> Self {
+        Self::default()
+    }
+
+    /// Evaluate at most `n` test batches.
+    pub fn batches(n: usize) -> Self {
+        Self { eval_batches: n }
+    }
+}
+
+/// A staged compression plan over one loaded model. Cheap to clone; clones
+/// share the loaded state and the stage cache, so exploring many operating
+/// points recomputes only the stages that differ.
+#[derive(Clone)]
+pub struct CompressionPlan<'a> {
+    state: Rc<ModelState<'a>>,
+    cache: Rc<StageCache>,
+    cfg: RunConfig,
+    threshold_mode: ThresholdMode,
+    align: bool,
+    strategy: MappingStrategy,
+    explicit: Option<ExplicitBitmap>,
+    nominal: Option<ThresholdMode>,
+}
+
+impl<'a> CompressionPlan<'a> {
+    /// Load `model_name` with the default [`RunConfig`] and return the plan
+    /// root. Clone the result to fork plans that share the stage cache.
+    pub fn for_model(
+        runtime: &'a Runtime,
+        manifest: &'a Manifest,
+        model_name: &str,
+    ) -> Result<Self> {
+        Self::for_model_with(runtime, manifest, model_name, RunConfig::default())
+    }
+
+    /// Load `model_name` with an explicit configuration.
+    pub fn for_model_with(
+        runtime: &'a Runtime,
+        manifest: &'a Manifest,
+        model_name: &str,
+        cfg: RunConfig,
+    ) -> Result<Self> {
+        let model = manifest.model(model_name)?;
+        let theta = model.load_params(manifest)?;
+        let test = TestSet::load(manifest)?;
+        let calib = CalibSet::load(manifest, model.entry.batch.calib)?;
+        Ok(Self {
+            state: Rc::new(ModelState { runtime, manifest, model, theta, test, calib }),
+            cache: Rc::new(StageCache::default()),
+            cfg,
+            threshold_mode: ThresholdMode::Sweep,
+            align: false,
+            strategy: MappingStrategy::Packed,
+            explicit: None,
+            nominal: None,
+        })
+    }
+
+    // ---- stage builders ---------------------------------------------------
+
+    /// Replace the whole run configuration (keeps the loaded state + cache).
+    pub fn with_config(mut self, cfg: RunConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Configure the Hutchinson sensitivity stage.
+    pub fn sensitivity(mut self, cfg: SensitivityConfig) -> Self {
+        self.cfg.sensitivity = cfg;
+        self
+    }
+
+    /// Choose how the operating threshold is picked (default: `Sweep`).
+    pub fn threshold(mut self, mode: ThresholdMode) -> Self {
+        self.threshold_mode = mode;
+        self
+    }
+
+    /// Fluent marker for the clustering stage (clustering is implied by the
+    /// threshold stage; this names it in the chain for readability).
+    pub fn cluster(self) -> Self {
+        self
+    }
+
+    /// Enable the paper's dynamic crossbar-capacity alignment (§4.2):
+    /// per layer, demote the lowest-score high-bit strips until the hi count
+    /// is a multiple of the array capacity.
+    pub fn align_to_capacity(mut self) -> Self {
+        self.align = true;
+        self
+    }
+
+    /// Configure the mixed-precision quantization stage.
+    pub fn quantize(mut self, cfg: QuantConfig) -> Self {
+        self.cfg.quant = cfg;
+        self
+    }
+
+    /// Choose the strip-to-crossbar mapping strategy (default: `Packed`).
+    pub fn map(mut self, strategy: MappingStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Bypass sensitivity/threshold/clustering with an explicit per-strip
+    /// bit allocation — baselines (HAP pruning, uniform precision) become
+    /// just another bit-allocation stage feeding the same tail.
+    pub fn bitmap_from(mut self, bitmap: BitMap) -> Self {
+        let key = format!(
+            "bm:{:016x}:{}",
+            fnv64(bitmap.bits.iter().copied()),
+            bitmap.bits.len()
+        );
+        self.explicit = Some(ExplicitBitmap { bitmap: Arc::new(bitmap), key });
+        self
+    }
+
+    /// Label the report with a nominal operating point (e.g. the requested
+    /// compression ratio of an explicit baseline bitmap).
+    pub fn nominal(mut self, mode: ThresholdMode) -> Self {
+        self.nominal = Some(mode);
+        self
+    }
+
+    // ---- loaded-state accessors -------------------------------------------
+
+    pub fn model(&self) -> &ModelInfo {
+        &self.state.model
+    }
+
+    pub fn theta(&self) -> &[f32] {
+        &self.state.theta
+    }
+
+    pub fn test(&self) -> &TestSet {
+        &self.state.test
+    }
+
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Cache-miss counters for the shared stage cache (memoization is part
+    /// of the API contract — see the builder tests).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    // ---- stage cache keys ---------------------------------------------------
+
+    fn sens_key(&self) -> String {
+        let s = self.cfg.sensitivity;
+        format!("sens:{}:{}:{}", s.probes, s.calib_batches, s.seed)
+    }
+
+    fn quant_part(&self) -> String {
+        let q = self.cfg.quant;
+        format!(
+            "q:{}{:?}/{}{:?}:sg{}:sd{}",
+            q.hi.bits, q.hi.granularity, q.lo.bits, q.lo.granularity, q.device_sigma, q.seed
+        )
+    }
+
+    fn threshold_key(&self) -> String {
+        let t = self.cfg.threshold;
+        let mode = match self.threshold_mode {
+            ThresholdMode::Alg1 => "alg1".to_string(),
+            ThresholdMode::Sweep => "sweep".to_string(),
+            ThresholdMode::FixedCr(c) => format!("cr{c}"),
+        };
+        format!(
+            "{}|thr:{}:{}:{}:{}:{}:{}:{}|{}",
+            self.sens_key(),
+            mode,
+            t.t0_quantile,
+            t.learning_rate,
+            t.tolerance,
+            t.max_iters,
+            t.fd_step,
+            t.calib_batches,
+            self.quant_part()
+        )
+    }
+
+    fn cluster_key(&self) -> String {
+        // The crossbar geometry only shapes the clustering when alignment is
+        // on; unaligned clusterings are geometry-independent and shared
+        // across geometry sweeps (crossbar_explorer, table4's ORIGIN rows).
+        if self.align {
+            let x = self.cfg.xbar;
+            format!(
+                "{}|cl:align:r{}c{}cb{}",
+                self.threshold_key(),
+                x.rows,
+                x.cols,
+                x.cell_bits
+            )
+        } else {
+            format!("{}|cl:raw", self.threshold_key())
+        }
+    }
+
+    fn bitmap_key(&self) -> String {
+        match &self.explicit {
+            Some(e) => e.key.clone(),
+            None => self.cluster_key(),
+        }
+    }
+
+    fn quant_key(&self) -> String {
+        format!("{}|{}", self.bitmap_key(), self.quant_part())
+    }
+
+    fn map_key(&self) -> String {
+        let x = self.cfg.xbar;
+        format!(
+            "{}|map:{:?}:r{}c{}cb{}",
+            self.bitmap_key(),
+            self.strategy,
+            x.rows,
+            x.cols,
+            x.cell_bits
+        )
+    }
+
+    // ---- stage artifacts ----------------------------------------------------
+
+    /// Hutchinson per-strip sensitivity scores (paper §4.1). Computed once
+    /// per configuration across every plan sharing this cache.
+    pub fn sensitivity_scores(&self) -> Result<SensitivityScores> {
+        let key = self.sens_key();
+        let (v, fresh) = memo(&self.cache.sensitivity, &key, || {
+            let st = &self.state;
+            crate::info!(
+                "hutchinson sensitivity: model={} probes={}",
+                st.model.name(),
+                self.cfg.sensitivity.probes
+            );
+            let analyzer = Analyzer {
+                runtime: st.runtime,
+                model: &st.model,
+                calib: &st.calib,
+                cfg: self.cfg.sensitivity,
+            };
+            analyzer.run(&st.theta)
+        })?;
+        if fresh {
+            self.cache.bump(|s| s.sensitivity_runs += 1);
+        }
+        Ok(v)
+    }
+
+    /// The threshold-stage decision (paper §4.2, Algorithm 1 / §5 sweep).
+    pub fn chosen_threshold(&self) -> Result<Arc<ChosenThreshold>> {
+        anyhow::ensure!(
+            self.explicit.is_none(),
+            "plan uses an explicit bitmap; it has no threshold stage"
+        );
+        let key = self.threshold_key();
+        let (v, fresh) = memo(&self.cache.thresholds, &key, || {
+            match self.threshold_mode {
+                ThresholdMode::FixedCr(cr) => Ok(ChosenThreshold {
+                    mode: self.threshold_mode,
+                    quantile: cr,
+                    threshold: f64::NAN,
+                    fim_evals: 0,
+                }),
+                ThresholdMode::Alg1 | ThresholdMode::Sweep => {
+                    let sens = self.sensitivity_scores()?;
+                    let st = &self.state;
+                    let search = ThresholdSearch {
+                        runtime: st.runtime,
+                        model: &st.model,
+                        calib: &st.calib,
+                        sens: sens.as_ref(),
+                        quant_cfg: self.cfg.quant,
+                        cfg: self.cfg.threshold,
+                    };
+                    let res = if self.threshold_mode == ThresholdMode::Alg1 {
+                        search.gradient_descent(&st.theta)?
+                    } else {
+                        search.sweep(&st.theta, SWEEP_CANDIDATES, SWEEP_LAMBDA)?
+                    };
+                    crate::info!(
+                        "threshold chosen: q={:.3} fim={:.4e}",
+                        res.best.quantile,
+                        res.best.fim_dist
+                    );
+                    Ok(ChosenThreshold {
+                        mode: self.threshold_mode,
+                        quantile: res.best.quantile,
+                        threshold: res.best.threshold,
+                        fim_evals: res.evals,
+                    })
+                }
+            }
+        })?;
+        if fresh {
+            self.cache.bump(|s| s.threshold_runs += 1);
+        }
+        Ok(v)
+    }
+
+    /// The clustering-stage artifact (after optional capacity alignment).
+    pub fn clustering(&self) -> Result<Arc<Clustering>> {
+        anyhow::ensure!(
+            self.explicit.is_none(),
+            "plan uses an explicit bitmap; it has no clustering stage"
+        );
+        let key = self.cluster_key();
+        let (v, fresh) = memo(&self.cache.clusterings, &key, || {
+            let sens = self.sensitivity_scores()?;
+            let thr = self.chosen_threshold()?;
+            let q = self.cfg.quant;
+            let mut c = clustering::cluster_at_cr(&sens.scores, thr.quantile, q.hi.bits, q.lo.bits);
+            if self.align {
+                let st = &self.state;
+                let xcfg = self.cfg.xbar;
+                let caps: Vec<usize> = st
+                    .model
+                    .conv_layers()
+                    .iter()
+                    .map(|l| xcfg.capacity_strips(l.d, q.hi.bits))
+                    .collect();
+                c = clustering::align_to_capacity(
+                    &st.model,
+                    &sens.scores,
+                    &c,
+                    q.hi.bits,
+                    q.lo.bits,
+                    |li| caps[li],
+                );
+            }
+            Ok(c)
+        })?;
+        if fresh {
+            self.cache.bump(|s| s.clustering_runs += 1);
+        }
+        Ok(v)
+    }
+
+    /// The per-strip bit allocation this plan quantizes and maps with:
+    /// the explicit bitmap if one was injected, else the clustering's.
+    pub fn bitmap(&self) -> Result<Arc<BitMap>> {
+        match &self.explicit {
+            Some(e) => Ok(e.bitmap.clone()),
+            None => Ok(Arc::new(self.clustering()?.bitmap.clone())),
+        }
+    }
+
+    /// The quantization-stage artifact: fake-quantized parameters + per-strip
+    /// scales + quantization MSE (paper §4.1/§4.3).
+    pub fn quantized(&self) -> Result<Arc<QuantizedModel>> {
+        let key = self.quant_key();
+        let (v, fresh) = memo(&self.cache.quantized, &key, || {
+            let st = &self.state;
+            let clustering;
+            let bm: &BitMap = match &self.explicit {
+                Some(e) => e.bitmap.as_ref(),
+                None => {
+                    clustering = self.clustering()?;
+                    &clustering.bitmap
+                }
+            };
+            Ok(quant::apply(&st.model, &st.theta, bm, &self.cfg.quant))
+        })?;
+        if fresh {
+            self.cache.bump(|s| s.quantize_runs += 1);
+        }
+        Ok(v)
+    }
+
+    /// The mapping-stage artifact: strips placed onto crossbar arrays.
+    pub fn mapping(&self) -> Result<Arc<ModelMapping>> {
+        let key = self.map_key();
+        let (v, fresh) = memo(&self.cache.mappings, &key, || {
+            let st = &self.state;
+            let clustering;
+            let bm: &BitMap = match &self.explicit {
+                Some(e) => e.bitmap.as_ref(),
+                None => {
+                    clustering = self.clustering()?;
+                    &clustering.bitmap
+                }
+            };
+            Ok(xbar::map_model(&st.model, bm, &self.cfg.xbar, self.strategy))
+        })?;
+        if fresh {
+            self.cache.bump(|s| s.mapping_runs += 1);
+        }
+        Ok(v)
+    }
+
+    // ---- terminal operations ------------------------------------------------
+
+    /// Offline terminal: quantize, map, cost and evaluate accuracy — the
+    /// report every table/figure of the paper consumes.
+    pub fn evaluate(&self, opts: EvalOpts) -> Result<PipelineReport> {
+        let key = format!(
+            "{}|{}|eval{}|nom{:?}|x{:016x}",
+            self.quant_key(),
+            self.map_key(),
+            opts.eval_batches,
+            self.nominal,
+            fnv64(self.cfg.xbar.to_value().to_json().bytes())
+        );
+        let (r, fresh) = memo(&self.cache.reports, &key, || {
+            let st = &self.state;
+            let q = self.cfg.quant;
+            let qm = self.quantized()?;
+            let mapping = self.mapping()?;
+            let cost = xbar::cost(&mapping, &self.cfg.xbar);
+            let accuracy = eval::evaluate_batches(
+                st.runtime,
+                &st.model,
+                &qm.theta,
+                &st.test,
+                opts.eval_batches,
+            )?;
+            let clustering;
+            let bm: &BitMap = match &self.explicit {
+                Some(e) => e.bitmap.as_ref(),
+                None => {
+                    clustering = self.clustering()?;
+                    &clustering.bitmap
+                }
+            };
+            let (mode, threshold, fim_evals) = match &self.explicit {
+                Some(e) => (
+                    self.nominal
+                        .unwrap_or(ThresholdMode::FixedCr(e.bitmap.compression_ratio(q.hi.bits))),
+                    f64::NAN,
+                    0,
+                ),
+                None => {
+                    let thr = self.chosen_threshold()?;
+                    let c = self.clustering()?;
+                    (self.nominal.unwrap_or(self.threshold_mode), c.threshold, thr.fim_evals)
+                }
+            };
+            Ok(PipelineReport {
+                model: st.model.name().to_string(),
+                mode,
+                compression_ratio: bm.compression_ratio(q.hi.bits),
+                q_hi: bm.count_bits(q.hi.bits),
+                total_strips: bm.bits.len(),
+                accuracy,
+                fp32_accuracy: st.model.entry.fp32_test_acc,
+                cost,
+                utilization_hi: mapping.utilization(q.hi.bits),
+                utilization_all: mapping.utilization_all(),
+                quant_mse: qm.mse,
+                threshold,
+                fim_evals,
+            })
+        })?;
+        if fresh {
+            self.cache.bump(|s| s.eval_runs += 1);
+        }
+        Ok((*r).clone())
+    }
+
+    /// Online terminal: quantize through the plan's stages and start the
+    /// dynamic-batching serving engine on the result.
+    pub fn deploy(&self, cfg: EngineConfig) -> Result<EngineHandle> {
+        let qm = self.quantized()?;
+        let st = &self.state;
+        let engine = Engine::new(st.manifest.dir.clone(), &st.model, qm.theta.clone(), cfg)?;
+        Ok(engine.start())
+    }
+
+    /// Serve the unquantized fp32 checkpoint (reference deployments).
+    pub fn deploy_fp32(&self, cfg: EngineConfig) -> Result<EngineHandle> {
+        let st = &self.state;
+        let engine = Engine::new(st.manifest.dir.clone(), &st.model, st.theta.clone(), cfg)?;
+        Ok(engine.start())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memo_computes_once_per_key() {
+        let map: RefCell<HashMap<String, Arc<usize>>> = RefCell::new(HashMap::new());
+        let mut calls = 0usize;
+        for _ in 0..3 {
+            let (v, _) = memo(&map, "k", || {
+                calls += 1;
+                Ok(42)
+            })
+            .unwrap();
+            assert_eq!(*v, 42);
+        }
+        assert_eq!(calls, 1);
+        let (_, fresh) = memo(&map, "k2", || Ok(7)).unwrap();
+        assert!(fresh);
+    }
+
+    #[test]
+    fn memo_error_is_not_cached() {
+        let map: RefCell<HashMap<String, Arc<usize>>> = RefCell::new(HashMap::new());
+        assert!(memo(&map, "k", || anyhow::bail!("boom")).is_err());
+        let (v, fresh) = memo(&map, "k", || Ok(1)).unwrap();
+        assert!(fresh);
+        assert_eq!(*v, 1);
+    }
+
+    #[test]
+    fn fnv_is_stable_and_input_sensitive() {
+        let a = fnv64([1u8, 2, 3].into_iter());
+        let b = fnv64([1u8, 2, 3].into_iter());
+        let c = fnv64([3u8, 2, 1].into_iter());
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn cache_stats_bump() {
+        let cache = StageCache::default();
+        cache.bump(|s| s.sensitivity_runs += 1);
+        cache.bump(|s| s.sensitivity_runs += 1);
+        cache.bump(|s| s.eval_runs += 1);
+        let s = cache.stats();
+        assert_eq!(s.sensitivity_runs, 2);
+        assert_eq!(s.eval_runs, 1);
+        assert_eq!(s.mapping_runs, 0);
+    }
+
+    #[test]
+    fn chosen_threshold_json_handles_nan() {
+        let t = ChosenThreshold {
+            mode: ThresholdMode::FixedCr(0.7),
+            quantile: 0.7,
+            threshold: f64::NAN,
+            fim_evals: 0,
+        };
+        let v = t.to_value();
+        assert_eq!(v.get("threshold").unwrap(), &Value::Null);
+        // serializes to valid JSON
+        let text = v.to_json();
+        assert!(Value::parse(&text).is_ok(), "{text}");
+    }
+}

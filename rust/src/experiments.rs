@@ -1,25 +1,55 @@
 //! Experiment drivers regenerating every table and figure of the paper's
-//! evaluation section (shared by the CLI, the examples and the criterion
-//! benches). See DESIGN.md §4 for the experiment index.
+//! evaluation section (shared by the CLI, the examples and the benches).
+//!
+//! All drivers run over a [`Lab`]: one [`CompressionPlan`] root per model,
+//! so every table/figure drawing on the same model shares the computed
+//! stage prefix (sensitivity, thresholds, clusterings) through the plan's
+//! stage cache instead of recomputing it per table.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
 
 use crate::baselines;
-use crate::coordinator::{Pipeline, PipelineReport, ThresholdMode};
+use crate::coordinator::{CompressionPlan, EvalOpts, PipelineReport, ThresholdMode};
 use crate::model::Manifest;
 use crate::report;
 use crate::runtime::Runtime;
-use crate::xbar::{self, MappingStrategy, XbarConfig};
-use crate::{RunConfig, Result};
+use crate::util::json::{obj, Value};
+use crate::xbar::{MappingStrategy, XbarConfig};
+use crate::{Result, RunConfig};
 
-/// How many eval batches the experiments use (full test set by default;
-/// benches shrink this for iteration speed).
-#[derive(Clone, Copy, Debug)]
-pub struct ExpOpts {
-    pub eval_batches: usize,
+/// Backwards-friendly alias: experiment options are exactly the evaluate
+/// terminal's options.
+pub type ExpOpts = EvalOpts;
+
+/// A set of compression plans sharing one runtime + configuration. Tables
+/// and figures over the same model reuse its loaded state and stage cache.
+pub struct Lab<'a> {
+    pub runtime: &'a Runtime,
+    pub manifest: &'a Manifest,
+    pub cfg: RunConfig,
+    plans: RefCell<HashMap<String, CompressionPlan<'a>>>,
 }
 
-impl Default for ExpOpts {
-    fn default() -> Self {
-        Self { eval_batches: usize::MAX }
+impl<'a> Lab<'a> {
+    pub fn new(runtime: &'a Runtime, manifest: &'a Manifest, cfg: RunConfig) -> Self {
+        Self { runtime, manifest, cfg, plans: RefCell::new(HashMap::new()) }
+    }
+
+    /// A plan rooted at `model` (loaded once per lab; every returned clone
+    /// shares the model state and stage cache).
+    pub fn plan(&self, model: &str) -> Result<CompressionPlan<'a>> {
+        let mut plans = self.plans.borrow_mut();
+        if !plans.contains_key(model) {
+            let plan = CompressionPlan::for_model_with(
+                self.runtime,
+                self.manifest,
+                model,
+                self.cfg.clone(),
+            )?;
+            plans.insert(model.to_string(), plan);
+        }
+        Ok(plans.get(model).unwrap().clone())
     }
 }
 
@@ -29,35 +59,28 @@ pub struct Table2 {
     pub ours: PipelineReport,
 }
 
-pub fn table2(
-    runtime: &Runtime,
-    manifest: &Manifest,
-    cfg: &RunConfig,
-    opts: ExpOpts,
-) -> Result<Table2> {
+pub fn table2(lab: &Lab, opts: ExpOpts) -> Result<Table2> {
     let cr = 0.74;
-    let mut pipe = Pipeline::new(runtime, manifest, "resnet20", cfg.clone())?;
+    let base = lab.plan("resnet20")?;
 
     // HAP: prune `cr` of strips by the same Hessian score, 8-bit survivors,
-    // unstructured (ORIGIN) mapping.
-    let sens = pipe.sensitivity()?.clone();
-    let hap_bm = baselines::hap_bitmap(&sens, cr, cfg.quant.hi.bits);
-    let hap = pipe.report_for_bitmap(
-        &hap_bm,
-        ThresholdMode::FixedCr(cr),
-        f64::NAN,
-        0,
-        MappingStrategy::Origin,
-        opts.eval_batches,
-    )?;
+    // unstructured (ORIGIN) mapping — an explicit bit-allocation stage.
+    let sens = base.sensitivity_scores()?;
+    let hap_bm = baselines::hap_bitmap(&sens, cr, lab.cfg.quant.hi.bits);
+    let hap = base
+        .clone()
+        .bitmap_from(hap_bm)
+        .nominal(ThresholdMode::FixedCr(cr))
+        .map(MappingStrategy::Origin)
+        .evaluate(opts)?;
 
     // OURS: mixed precision at the same CR, aligned + packed mapping.
-    let ours = pipe.run(
-        ThresholdMode::FixedCr(cr),
-        true,
-        MappingStrategy::Packed,
-        opts.eval_batches,
-    )?;
+    let ours = base
+        .threshold(ThresholdMode::FixedCr(cr))
+        .cluster()
+        .align_to_capacity()
+        .map(MappingStrategy::Packed)
+        .evaluate(opts)?;
     Ok(Table2 { hap, ours })
 }
 
@@ -74,23 +97,22 @@ pub fn render_table2(t: &Table2) -> String {
     out
 }
 
+pub fn table2_value(t: &Table2) -> Value {
+    obj(vec![("hap", t.hap.to_value()), ("ours", t.ours.to_value())])
+}
+
 /// Table 3: CR sweep on the ResNet18 stand-in with energy breakdown.
-pub fn table3(
-    runtime: &Runtime,
-    manifest: &Manifest,
-    cfg: &RunConfig,
-    opts: ExpOpts,
-    crs: &[f64],
-) -> Result<Vec<PipelineReport>> {
-    let mut pipe = Pipeline::new(runtime, manifest, "resnet8", cfg.clone())?;
+pub fn table3(lab: &Lab, opts: ExpOpts, crs: &[f64]) -> Result<Vec<PipelineReport>> {
+    let base = lab.plan("resnet8")?;
     let mut rows = Vec::new();
     for &cr in crs {
-        let r = pipe.run(
-            ThresholdMode::FixedCr(cr),
-            true,
-            MappingStrategy::Packed,
-            opts.eval_batches,
-        )?;
+        let r = base
+            .clone()
+            .threshold(ThresholdMode::FixedCr(cr))
+            .cluster()
+            .align_to_capacity()
+            .map(MappingStrategy::Packed)
+            .evaluate(opts)?;
         rows.push(r);
     }
     Ok(rows)
@@ -110,6 +132,10 @@ pub fn render_table3(rows: &[PipelineReport]) -> String {
     out
 }
 
+pub fn table3_value(rows: &[PipelineReport]) -> Value {
+    Value::Arr(rows.iter().map(PipelineReport::to_value).collect())
+}
+
 /// Table 4: bit utilization, ORIGIN vs OUR mapper, two array sizes.
 pub struct Table4Row {
     pub method: &'static str,
@@ -118,46 +144,36 @@ pub struct Table4Row {
     pub improvement: Option<f64>,
 }
 
-pub fn table4(
-    runtime: &Runtime,
-    manifest: &Manifest,
-    cfg: &RunConfig,
-) -> Result<Vec<Table4Row>> {
+pub fn table4(lab: &Lab) -> Result<Vec<Table4Row>> {
     let cr = 0.8;
+    let base = lab.plan("resnet14")?;
+    let hi_bits = lab.cfg.quant.hi.bits;
     let mut rows = Vec::new();
-    let mut pipe = Pipeline::new(runtime, manifest, "resnet14", cfg.clone())?;
-    let sens = pipe.sensitivity()?.clone();
-    let clustering = crate::clustering::cluster_at_cr(
-        &sens.scores,
-        cr,
-        cfg.quant.hi.bits,
-        cfg.quant.lo.bits,
-    );
 
     for xcfg in [XbarConfig::default(), XbarConfig::small()] {
         let size = (xcfg.rows, xcfg.cols);
+        let mut cfg = lab.cfg.clone();
+        cfg.xbar = xcfg;
+
         // ORIGIN: raw clustering, natural mapping.
-        let mo = xbar::map_model(&pipe.model, &clustering.bitmap, &xcfg, MappingStrategy::Origin);
-        let uo = mo.utilization(cfg.quant.hi.bits);
+        let origin = base
+            .clone()
+            .with_config(cfg.clone())
+            .threshold(ThresholdMode::FixedCr(cr))
+            .cluster()
+            .map(MappingStrategy::Origin);
+        let uo = origin.mapping()?.utilization(hi_bits);
         rows.push(Table4Row { method: "ORIGIN", size, utilization: uo, improvement: None });
 
         // OUR: capacity-aligned clustering + packed mapping.
-        let caps: Vec<usize> = pipe
-            .model
-            .conv_layers()
-            .iter()
-            .map(|l| xcfg.capacity_strips(l.d, cfg.quant.hi.bits))
-            .collect();
-        let aligned = crate::clustering::align_to_capacity(
-            &pipe.model,
-            &sens.scores,
-            &clustering,
-            cfg.quant.hi.bits,
-            cfg.quant.lo.bits,
-            |li| caps[li],
-        );
-        let mp = xbar::map_model(&pipe.model, &aligned.bitmap, &xcfg, MappingStrategy::Packed);
-        let up = mp.utilization(cfg.quant.hi.bits);
+        let ours = base
+            .clone()
+            .with_config(cfg)
+            .threshold(ThresholdMode::FixedCr(cr))
+            .cluster()
+            .align_to_capacity()
+            .map(MappingStrategy::Packed);
+        let up = ours.mapping()?.utilization(hi_bits);
         rows.push(Table4Row {
             method: "OUR",
             size,
@@ -187,24 +203,38 @@ pub fn render_table4(rows: &[Table4Row]) -> String {
     out
 }
 
+pub fn table4_value(rows: &[Table4Row]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("method", Value::Str(r.method.to_string())),
+                    ("rows", Value::Num(r.size.0 as f64)),
+                    ("cols", Value::Num(r.size.1 as f64)),
+                    ("utilization", Value::Num(r.utilization)),
+                    (
+                        "improvement",
+                        r.improvement.map_or(Value::Null, Value::Num),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Figure 8: accuracy vs CR for the shallow vs deep backbone.
-pub fn fig8(
-    runtime: &Runtime,
-    manifest: &Manifest,
-    cfg: &RunConfig,
-    opts: ExpOpts,
-    crs: &[f64],
-) -> Result<Vec<(String, f64, PipelineReport)>> {
+pub fn fig8(lab: &Lab, opts: ExpOpts, crs: &[f64]) -> Result<Vec<(String, f64, PipelineReport)>> {
     let mut out = Vec::new();
     for (name, label) in [("resnet8", "ResNet18*"), ("resnet14", "ResNet50*")] {
-        let mut pipe = Pipeline::new(runtime, manifest, name, cfg.clone())?;
+        let base = lab.plan(name)?;
         for &cr in crs {
-            let r = pipe.run(
-                ThresholdMode::FixedCr(cr),
-                true,
-                MappingStrategy::Packed,
-                opts.eval_batches,
-            )?;
+            let r = base
+                .clone()
+                .threshold(ThresholdMode::FixedCr(cr))
+                .cluster()
+                .align_to_capacity()
+                .map(MappingStrategy::Packed)
+                .evaluate(opts)?;
             out.push((label.to_string(), cr, r));
         }
     }
@@ -223,4 +253,18 @@ pub fn render_fig8(rows: &[(String, f64, PipelineReport)]) -> String {
         out.push('\n');
     }
     out
+}
+
+pub fn fig8_value(rows: &[(String, f64, PipelineReport)]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|(label, cr, r)| {
+                obj(vec![
+                    ("model", Value::Str(label.clone())),
+                    ("cr", Value::Num(*cr)),
+                    ("report", r.to_value()),
+                ])
+            })
+            .collect(),
+    )
 }

@@ -4,6 +4,51 @@
 //! computing-in-memory — a reproduction of Chen et al. (CS.AR 2025) as a
 //! three-layer Rust + JAX + Pallas system.
 //!
+//! ## The staged `CompressionPlan` builder
+//!
+//! The paper's Figure-4 dataflow — sensitivity → FIM threshold → clustering
+//! + crossbar alignment → quantization → mapping → cost/accuracy — is
+//! exposed as a typed, staged builder. Stages are composable (swap one,
+//! keep the rest), and their artifacts are memoized in a cache shared by
+//! every plan cloned from the same root, so exploring many operating points
+//! recomputes only what changed:
+//!
+//! ```no_run
+//! use reram_mpq::coordinator::{CompressionPlan, EvalOpts, ThresholdMode};
+//! use reram_mpq::xbar::MappingStrategy;
+//!
+//! # fn main() -> reram_mpq::Result<()> {
+//! let dir = reram_mpq::artifacts_dir();
+//! let manifest = reram_mpq::Manifest::load(&dir)?;
+//! let runtime = reram_mpq::Runtime::new(dir)?;
+//!
+//! let plan = CompressionPlan::for_model(&runtime, &manifest, "resnet20")?
+//!     .threshold(ThresholdMode::FixedCr(0.7))   // or Alg1 / Sweep
+//!     .cluster()
+//!     .align_to_capacity()                      // paper §4.2 alignment
+//!     .map(MappingStrategy::Packed);
+//!
+//! // Offline terminal: accuracy + hardware cost (tables/figures).
+//! let report = plan.evaluate(EvalOpts::batches(4))?;
+//! println!("top-1 {:.2}%", report.accuracy.top1 * 100.0);
+//!
+//! // Online terminal: the same stages feed the serving engine.
+//! let handle = plan.deploy(Default::default())?;
+//! let prediction = handle.classify(vec![0.0; 32 * 32 * 3])?;
+//! # let _ = prediction;
+//!
+//! // A clone shares the stage cache: only the changed suffix recomputes.
+//! let sweep = plan.clone().threshold(ThresholdMode::Sweep);
+//! let _ = sweep.evaluate(EvalOpts::batches(4))?;
+//! # Ok(()) }
+//! ```
+//!
+//! Baselines are just another bit-allocation stage: inject an explicit
+//! bitmap with `bitmap_from` (e.g. `baselines::hap_bitmap`) and reuse the
+//! same quantize/map/evaluate/deploy tail.
+//!
+//! ## Layers
+//!
 //! The Rust layer (this crate) is the paper's framework itself plus every
 //! substrate it depends on:
 //!
@@ -23,9 +68,9 @@
 //!   capacity alignment (paper §4.2).
 //! * [`xbar`] — NeuroSim-lite ReRAM crossbar simulator: arrays, ADC/DAC
 //!   energy, latency, mapping, utilization (substrate for §5).
-//! * [`coordinator`] — the execution engine: pipeline orchestration,
-//!   request batching, accuracy evaluation, stepwise mixed-precision
-//!   accumulation (paper §4.3).
+//! * [`coordinator`] — the execution engine: the staged `CompressionPlan`
+//!   builder and its stage cache, request batching, accuracy evaluation,
+//!   stepwise mixed-precision accumulation (paper §4.3).
 //! * [`baselines`] — HAP structured pruning and uniform-precision
 //!   comparators used by the paper's tables.
 //! * [`report`] — emitters that regenerate the paper's tables/figures.
@@ -47,6 +92,7 @@ pub mod util;
 pub mod xbar;
 
 pub use config::RunConfig;
+pub use coordinator::{CompressionPlan, EvalOpts, PipelineReport, ThresholdMode};
 pub use model::{Manifest, ModelInfo};
 pub use runtime::Runtime;
 pub use tensor::Tensor;

@@ -1,10 +1,10 @@
 //! `reram-mpq` CLI — leader entrypoint for the mixed-precision quantization
 //! framework. All subcommands run purely from the AOT artifacts (Python is
-//! never invoked on the request path).
+//! never invoked on the request path) and drive the staged
+//! `CompressionPlan` builder.
 
-use reram_mpq::coordinator::{Engine, EngineConfig, Pipeline, ThresholdMode};
-use reram_mpq::dataset::TestSet;
-use reram_mpq::experiments::{self, ExpOpts};
+use reram_mpq::coordinator::{EngineConfig, EvalOpts, ThresholdMode};
+use reram_mpq::experiments::{self, ExpOpts, Lab};
 use reram_mpq::util::cli::Args;
 use reram_mpq::xbar::MappingStrategy;
 use reram_mpq::{artifacts_dir, Manifest, Result, RunConfig, Runtime};
@@ -18,12 +18,12 @@ COMMANDS:
   hw-config                      print the hardware configuration (Table 1)
   sensitivity [--model M]        Hutchinson sensitivity score distribution
   quantize [--model M] [--cr R] [--search alg1|sweep] [--no-align]
-           [--origin] [--eval-batches N]
-                                 run the full pipeline once
-  table2   [--eval-batches N]    regenerate Table 2 (HAP vs OURS)
-  table3   [--eval-batches N]    regenerate Table 3 (CR sweep + energy)
-  table4                         regenerate Table 4 (crossbar utilization)
-  fig8     [--eval-batches N]    regenerate Figure 8 (accuracy vs CR)
+           [--origin] [--eval-batches N] [--json]
+                                 run the full compression plan once
+  table2   [--eval-batches N] [--json]   regenerate Table 2 (HAP vs OURS)
+  table3   [--eval-batches N] [--json]   regenerate Table 3 (CR sweep + energy)
+  table4   [--json]                      regenerate Table 4 (crossbar utilization)
+  fig8     [--eval-batches N] [--json]   regenerate Figure 8 (accuracy vs CR)
   serve    [--model M] [--requests N] [--cr R]
                                  run the batching engine over test images
 ";
@@ -36,7 +36,7 @@ fn opts(args: &Args) -> Result<ExpOpts> {
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, &["no-align", "origin", "help"])?;
+    let args = Args::parse(&argv, &["no-align", "origin", "json", "help"])?;
     if args.has("help") || args.subcommand.is_none() {
         print!("{USAGE}");
         return Ok(());
@@ -53,6 +53,7 @@ fn main() -> Result<()> {
 
     let manifest = Manifest::load(&dir)?;
     let runtime = Runtime::new(dir)?;
+    let lab = Lab::new(&runtime, &manifest, cfg.clone());
 
     match args.subcommand.as_deref().unwrap() {
         "hw-config" => {
@@ -61,8 +62,8 @@ fn main() -> Result<()> {
         }
         "sensitivity" => {
             let model = args.get_or("model", "resnet20");
-            let mut pipe = Pipeline::new(&runtime, &manifest, &model, cfg)?;
-            let s = pipe.sensitivity()?;
+            let plan = lab.plan(&model)?;
+            let s = plan.sensitivity_scores()?;
             let sorted = s.sorted_scores();
             println!("strips: {}", sorted.len());
             for q in [0.0, 0.25, 0.5, 0.75, 0.9, 0.99] {
@@ -73,7 +74,6 @@ fn main() -> Result<()> {
         }
         "quantize" => {
             let model = args.get_or("model", "resnet20");
-            let mut pipe = Pipeline::new(&runtime, &manifest, &model, cfg)?;
             let mode = match (args.get_f64("cr")?, args.get_or("search", "sweep").as_str()) {
                 (Some(c), _) => ThresholdMode::FixedCr(c),
                 (None, "alg1") => ThresholdMode::Alg1,
@@ -85,60 +85,72 @@ fn main() -> Result<()> {
                 MappingStrategy::Packed
             };
             let eb = args.get_usize("eval-batches")?.unwrap_or(usize::MAX);
-            let r = pipe.run(mode, !args.has("no-align"), strategy, eb)?;
-            println!(
-                "model={} cr={:.1}% q_hi={}/{} top1={:.2}% top5={:.2}% (fp32 {:.2}%)",
-                r.model,
-                r.compression_ratio * 100.0,
-                r.q_hi,
-                r.total_strips,
-                r.accuracy.top1 * 100.0,
-                r.accuracy.top5 * 100.0,
-                r.fp32_accuracy * 100.0
-            );
-            println!(
-                "energy={:.3} mJ (ADC {:.3}) latency={:.3} ms util(hi)={:.2}% util(all)={:.2}% fim_evals={}",
-                r.cost.energy.system_mj(),
-                r.cost.energy.adc_mj,
-                r.cost.latency_ms,
-                r.utilization_hi * 100.0,
-                r.utilization_all * 100.0,
-                r.fim_evals
-            );
+            let mut plan = lab.plan(&model)?.threshold(mode).cluster().map(strategy);
+            if !args.has("no-align") {
+                plan = plan.align_to_capacity();
+            }
+            let r = plan.evaluate(EvalOpts::batches(eb))?;
+            if args.has("json") {
+                println!("{}", r.to_value().to_json());
+            } else {
+                println!(
+                    "model={} cr={:.1}% q_hi={}/{} top1={:.2}% top5={:.2}% (fp32 {:.2}%)",
+                    r.model,
+                    r.compression_ratio * 100.0,
+                    r.q_hi,
+                    r.total_strips,
+                    r.accuracy.top1 * 100.0,
+                    r.accuracy.top5 * 100.0,
+                    r.fp32_accuracy * 100.0
+                );
+                println!(
+                    "energy={:.3} mJ (ADC {:.3}) latency={:.3} ms util(hi)={:.2}% util(all)={:.2}% fim_evals={}",
+                    r.cost.energy.system_mj(),
+                    r.cost.energy.adc_mj,
+                    r.cost.latency_ms,
+                    r.utilization_hi * 100.0,
+                    r.utilization_all * 100.0,
+                    r.fim_evals
+                );
+            }
         }
         "table2" => {
-            let t = experiments::table2(&runtime, &manifest, &cfg, opts(&args)?)?;
-            println!("{}", experiments::render_table2(&t));
+            let t = experiments::table2(&lab, opts(&args)?)?;
+            if args.has("json") {
+                println!("{}", experiments::table2_value(&t).to_json());
+            } else {
+                println!("{}", experiments::render_table2(&t));
+            }
         }
         "table3" => {
-            let rows = experiments::table3(
-                &runtime,
-                &manifest,
-                &cfg,
-                opts(&args)?,
-                experiments::TABLE3_CRS,
-            )?;
-            println!("{}", experiments::render_table3(&rows));
+            let rows = experiments::table3(&lab, opts(&args)?, experiments::TABLE3_CRS)?;
+            if args.has("json") {
+                println!("{}", experiments::table3_value(&rows).to_json());
+            } else {
+                println!("{}", experiments::render_table3(&rows));
+            }
         }
         "table4" => {
-            let rows = experiments::table4(&runtime, &manifest, &cfg)?;
-            println!("{}", experiments::render_table4(&rows));
+            let rows = experiments::table4(&lab)?;
+            if args.has("json") {
+                println!("{}", experiments::table4_value(&rows).to_json());
+            } else {
+                println!("{}", experiments::render_table4(&rows));
+            }
         }
         "fig8" => {
-            let rows = experiments::fig8(
-                &runtime,
-                &manifest,
-                &cfg,
-                opts(&args)?,
-                experiments::FIG8_CRS,
-            )?;
-            println!("{}", experiments::render_fig8(&rows));
+            let rows = experiments::fig8(&lab, opts(&args)?, experiments::FIG8_CRS)?;
+            if args.has("json") {
+                println!("{}", experiments::fig8_value(&rows).to_json());
+            } else {
+                println!("{}", experiments::render_fig8(&rows));
+            }
         }
         "serve" => {
             let model = args.get_or("model", "resnet8");
             let requests = args.get_usize("requests")?.unwrap_or(512);
             let cr = args.get_f64("cr")?;
-            serve(runtime, manifest, cfg, &model, requests, cr)?;
+            serve(&lab, &model, requests, cr)?;
         }
         other => {
             eprintln!("unknown command '{other}'\n");
@@ -149,31 +161,22 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// Push test images through the batching engine from several client threads
-/// and report throughput + latency + accuracy.
-fn serve(
-    runtime: Runtime,
-    manifest: Manifest,
-    cfg: RunConfig,
-    model: &str,
-    requests: usize,
-    cr: Option<f64>,
-) -> Result<()> {
-    let mut pipe = Pipeline::new(&runtime, &manifest, model, cfg.clone())?;
+/// Push test images through the batching engine from the plan's `deploy`
+/// terminal and report throughput + latency + accuracy.
+fn serve(lab: &Lab, model: &str, requests: usize, cr: Option<f64>) -> Result<()> {
+    let plan = lab.plan(model)?;
     // Quantize at the requested CR (or serve fp32).
-    let theta = match cr {
-        Some(c) => {
-            let r = pipe.choose_clustering(ThresholdMode::FixedCr(c))?;
-            reram_mpq::quant::apply(&pipe.model, &pipe.theta, &r.0.bitmap, &cfg.quant).theta
-        }
-        None => pipe.theta.clone(),
+    let handle = match cr {
+        Some(c) => plan
+            .clone()
+            .threshold(ThresholdMode::FixedCr(c))
+            .deploy(EngineConfig::default())?,
+        None => plan.deploy_fp32(EngineConfig::default())?,
     };
-    let engine = Engine::new(manifest.dir.clone(), &pipe.model, theta, EngineConfig::default())?;
-    let handle = engine.start();
     // Warm the executable before timing.
     let _ = handle.classify(vec![0.0; 32 * 32 * 3])?;
 
-    let test = TestSet::load(&manifest)?;
+    let test = plan.test();
     let n = requests.min(test.len());
     let elems = 32 * 32 * 3;
     let t0 = std::time::Instant::now();
@@ -204,8 +207,8 @@ fn serve(
         correct as f64 / n as f64 * 100.0
     );
     println!(
-        "batches={} mean_fill={:.2} mean_batch_latency={:.1}us max={}us",
-        m.batches, m.mean_batch_fill, m.mean_latency_us, m.max_latency_us
+        "batches={} mean_fill={:.2} mean_batch_latency={:.1}us max={}us failed={}",
+        m.batches, m.mean_batch_fill, m.mean_latency_us, m.max_latency_us, m.failed_requests
     );
     Ok(())
 }

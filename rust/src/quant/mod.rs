@@ -89,6 +89,19 @@ pub struct QuantizedModel {
     pub mse: f64,
 }
 
+impl QuantizedModel {
+    /// Machine-readable stage-artifact summary (the parameter vector itself
+    /// stays binary).
+    pub fn to_value(&self) -> crate::util::json::Value {
+        use crate::util::json::{obj, Value};
+        obj(vec![
+            ("mse", Value::Num(self.mse)),
+            ("strips", Value::Num(self.bits.len() as f64)),
+            ("params", Value::Num(self.theta.len() as f64)),
+        ])
+    }
+}
+
 /// Per-layer shared scale for a tier (one conductance window per array bank).
 fn layer_scale(model: &ModelInfo, theta: &[f32], layer: usize, bits: u8) -> f32 {
     let l = model.layer(layer);

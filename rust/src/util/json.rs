@@ -21,6 +21,16 @@ pub enum Value {
 }
 
 impl Value {
+    /// A number, or `null` when it is not finite (JSON has no NaN/Inf — the
+    /// stage artifacts use NaN for "no threshold applies").
+    pub fn num_or_null(v: f64) -> Value {
+        if v.is_finite() {
+            Value::Num(v)
+        } else {
+            Value::Null
+        }
+    }
+
     pub fn parse(text: &str) -> Result<Value> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();

@@ -40,6 +40,19 @@ impl EnergyBreakdown {
             + self.accumulation_mj + self.other_mj
     }
 
+    pub fn to_value(&self) -> crate::util::json::Value {
+        use crate::util::json::{obj, Value};
+        obj(vec![
+            ("adc_mj", Value::Num(self.adc_mj)),
+            ("cell_mj", Value::Num(self.cell_mj)),
+            ("dac_mj", Value::Num(self.dac_mj)),
+            ("shift_add_mj", Value::Num(self.shift_add_mj)),
+            ("accumulation_mj", Value::Num(self.accumulation_mj)),
+            ("other_mj", Value::Num(self.other_mj)),
+            ("system_mj", Value::Num(self.system_mj())),
+        ])
+    }
+
     fn add(&mut self, o: &EnergyBreakdown) {
         self.adc_mj += o.adc_mj;
         self.cell_mj += o.cell_mj;
@@ -66,6 +79,33 @@ pub struct CostReport {
     pub latency_ms: f64,
     pub conversions: u64,
     pub layers: Vec<LayerCost>,
+}
+
+impl CostReport {
+    pub fn to_value(&self) -> crate::util::json::Value {
+        use crate::util::json::{obj, Value};
+        obj(vec![
+            ("energy", self.energy.to_value()),
+            ("latency_ms", Value::Num(self.latency_ms)),
+            ("conversions", Value::Num(self.conversions as f64)),
+            (
+                "layers",
+                Value::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            obj(vec![
+                                ("name", Value::Str(l.name.clone())),
+                                ("energy", l.energy.to_value()),
+                                ("latency_ms", Value::Num(l.latency_ms)),
+                                ("conversions", Value::Num(l.conversions as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 const PJ_TO_MJ: f64 = 1e-9;

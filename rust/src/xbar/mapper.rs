@@ -116,6 +116,40 @@ impl ModelMapping {
     pub fn total_arrays(&self) -> usize {
         self.summary.iter().map(|t| t.arrays).sum()
     }
+
+    /// Machine-readable stage-artifact summary (per-tier provisioning).
+    pub fn to_value(&self) -> crate::util::json::Value {
+        use crate::util::json::{obj, Value};
+        obj(vec![
+            (
+                "strategy",
+                Value::Str(
+                    match self.strategy {
+                        MappingStrategy::Origin => "origin",
+                        MappingStrategy::Packed => "packed",
+                    }
+                    .to_string(),
+                ),
+            ),
+            (
+                "tiers",
+                Value::Arr(
+                    self.summary
+                        .iter()
+                        .map(|t| {
+                            obj(vec![
+                                ("bits", Value::Num(t.bits as f64)),
+                                ("arrays", Value::Num(t.arrays as f64)),
+                                ("used_cells", Value::Num(t.used_cells as f64)),
+                                ("provisioned_cells", Value::Num(t.provisioned_cells as f64)),
+                                ("utilization", Value::Num(t.utilization())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 /// Output pixels of a conv layer on the 32×32 CIFAR geometry, derived from

@@ -224,6 +224,61 @@ fn mapping_skips_empty_tiers_entirely() {
 }
 
 #[test]
+fn pipeline_report_serializes_to_valid_json() {
+    let r = fake_report(0.74, 0.8463, 1.0);
+    let text = r.to_value().to_json();
+    let v = Value::parse(&text).unwrap_or_else(|e| panic!("invalid JSON: {e}\n{text}"));
+    assert_eq!(v.get("model").unwrap().str().unwrap(), "resnet20");
+    assert_eq!(v.get("mode").unwrap().get("kind").unwrap().str().unwrap(), "fixed_cr");
+    assert!((v.get("mode").unwrap().get("cr").unwrap().num().unwrap() - 0.74).abs() < 1e-12);
+    assert!((v.get("accuracy").unwrap().get("top1").unwrap().num().unwrap() - 0.8463).abs() < 1e-12);
+    let system = v.get("cost").unwrap().get("energy").unwrap().get("system_mj").unwrap().num().unwrap();
+    assert!((system - r.cost.energy.system_mj()).abs() < 1e-12);
+    assert_eq!(
+        v.get("cost").unwrap().get("layers").unwrap().arr().unwrap().len(),
+        r.cost.layers.len()
+    );
+}
+
+#[test]
+fn nan_threshold_serializes_as_null() {
+    // Explicit-bitmap plans (HAP baseline) report threshold = NaN; the JSON
+    // output must stay valid.
+    let mut r = fake_report(0.74, 0.8, 1.0);
+    r.threshold = f64::NAN;
+    let text = r.to_value().to_json();
+    let v = Value::parse(&text).unwrap_or_else(|e| panic!("invalid JSON: {e}\n{text}"));
+    assert_eq!(v.get("threshold").unwrap(), &Value::Null);
+}
+
+#[test]
+fn threshold_mode_json_kinds() {
+    assert_eq!(
+        ThresholdMode::Alg1.to_value().get("kind").unwrap().str().unwrap(),
+        "alg1"
+    );
+    assert_eq!(
+        ThresholdMode::Sweep.to_value().get("kind").unwrap().str().unwrap(),
+        "sweep"
+    );
+    let f = ThresholdMode::FixedCr(0.5).to_value();
+    assert_eq!(f.get("kind").unwrap().str().unwrap(), "fixed_cr");
+    assert!((f.get("cr").unwrap().num().unwrap() - 0.5).abs() < 1e-12);
+}
+
+#[test]
+fn mapping_summary_serializes_per_tier() {
+    let m = two_layer_model();
+    let bm = BitMap::uniform(m.num_strips(), 8);
+    let mapping = xbar::map_model(&m, &bm, &XbarConfig::default(), MappingStrategy::Packed);
+    let v = Value::parse(&mapping.to_value().to_json()).unwrap();
+    assert_eq!(v.get("strategy").unwrap().str().unwrap(), "packed");
+    let tiers = v.get("tiers").unwrap().arr().unwrap();
+    assert_eq!(tiers.len(), mapping.summary.len());
+    assert_eq!(tiers[0].get("bits").unwrap().usize().unwrap(), 8);
+}
+
+#[test]
 fn utilization_of_absent_bitwidth_is_zero() {
     let m = two_layer_model();
     let bm = BitMap::uniform(m.num_strips(), 4);
