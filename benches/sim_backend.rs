@@ -1,0 +1,49 @@
+//! Bench: the native crossbar-simulator hot paths — exact-f32 forward,
+//! bit-serial integer forward, and the faithful phase-loop conv with ADC +
+//! conductance noise. Fully hermetic (no artifacts), so this is the one
+//! bench that runs on a fresh clone:
+//!
+//!     cargo bench --bench sim_backend
+
+use reram_mpq::backend::{ExecBackend, FwdKind, SimXbar, SimXbarConfig, StripPrecision};
+use reram_mpq::quant::{self, BitMap};
+use reram_mpq::tensor::Tensor;
+use reram_mpq::util::bench::Bench;
+use reram_mpq::{fixture, RunConfig};
+
+fn main() {
+    let bench = Bench::from_env();
+    let fx = fixture::tiny(1);
+    let model = &fx.model;
+    let theta_t = Tensor::from_vec(fx.theta.clone());
+    let xb = fx.test.x.slice_rows(0, model.entry.batch.eval);
+
+    // 1. exact f32 native forward (fp32 reference deployments)
+    let exact = SimXbar::new(SimXbarConfig::default());
+    bench.run("sim exact-f32 forward (tiny, batch 4)", || {
+        exact.forward(model, FwdKind::Eval, &theta_t, &xb).expect("forward")
+    });
+
+    // 2. bit-serial integer forward on mixed 4/8-bit strips (the serving
+    // fast path: ideal converters)
+    let mut cfg = RunConfig::default();
+    cfg.quant.device_sigma = 0.0;
+    let bits: Vec<u8> = (0..model.num_strips())
+        .map(|i| if i % 2 == 0 { 8 } else { 4 })
+        .collect();
+    let qm = quant::apply(model, &fx.theta, &BitMap { bits }, &cfg.quant);
+    let qtheta_t = Tensor::from_vec(qm.theta.clone());
+    let sim = SimXbar::from_quantized(SimXbarConfig::default(), &qm);
+    bench.run("sim bit-serial forward, ideal ADC (tiny, batch 4)", || {
+        sim.forward(model, FwdKind::Eval, &qtheta_t, &xb).expect("forward")
+    });
+
+    // 3. the faithful phase loop with a 4-bit ADC and conductance noise —
+    // one image, since every input-bit phase converts separately
+    let noisy = SimXbar::new(SimXbarConfig::default().with_adc(4).with_noise(0.1, 3))
+        .with_strips(StripPrecision::from_quantized(&qm));
+    let x1 = fx.test.x.slice_rows(0, 1);
+    bench.run("sim phase-loop forward, 4b ADC + noise (1 image)", || {
+        noisy.forward(model, FwdKind::Eval, &qtheta_t, &x1).expect("forward")
+    });
+}

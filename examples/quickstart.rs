@@ -4,14 +4,56 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! (Run `make artifacts` first.)
+//! Prefers the AOT artifacts + PJRT backend when `make artifacts` has run;
+//! otherwise it falls back to the native crossbar simulator on an in-memory
+//! fixture, so the quickstart works on a fresh clone too.
 
-use reram_mpq::coordinator::{CompressionPlan, EvalOpts, ThresholdMode};
+use reram_mpq::backend::SimXbarConfig;
+use reram_mpq::coordinator::{
+    CompressionPlan, EvalOpts, Executor, ModelState, ThresholdMode,
+};
+use reram_mpq::fixture;
 use reram_mpq::xbar::MappingStrategy;
-use reram_mpq::{artifacts_dir, Manifest, Result, Runtime};
+use reram_mpq::{artifacts_dir, Manifest, Result, RunConfig, Runtime};
+
+/// Artifact-free variant: the same staged chain on `SimXbar`.
+fn sim_quickstart() -> Result<()> {
+    println!("== quickstart (sim backend: no AOT artifacts found) ==");
+    let fx = fixture::tiny(0);
+    let plan = CompressionPlan::from_state(
+        ModelState {
+            exec: Executor::Sim(SimXbarConfig::default()),
+            model: fx.model,
+            theta: fx.theta,
+            test: fx.test,
+            calib: fx.calib,
+        },
+        RunConfig::default(),
+    )
+    .threshold(ThresholdMode::FixedCr(0.7))
+    .cluster()
+    .align_to_capacity()
+    .map(MappingStrategy::Packed);
+    let report = plan.evaluate(EvalOpts::batches(2))?;
+    println!(
+        "evaluate:     top-1 {:.1}% at CR {:.0}% ({} hi / {} strips)",
+        report.accuracy.top1 * 100.0,
+        report.compression_ratio * 100.0,
+        report.q_hi,
+        report.total_strips
+    );
+    let handle = plan.deploy(Default::default())?;
+    let resp = handle.classify(plan.test().x.data()[..32 * 32 * 3].to_vec())?;
+    println!("serving:      first test image -> class {}", resp.class);
+    println!("(run `make artifacts` for the PJRT path on the real checkpoints)");
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return sim_quickstart();
+    }
     let manifest = Manifest::load(&dir)?;
     let runtime = Runtime::new(dir)?;
 

@@ -1,0 +1,104 @@
+//! Pluggable execution backends for batched forward execution.
+//!
+//! Every consumer of a forward pass — the accuracy evaluator, the serving
+//! engine, the parity tests — talks to an [`ExecBackend`] instead of the
+//! PJRT runtime directly. Two implementations exist:
+//!
+//! * **pjrt** — [`crate::runtime::Runtime`]: executes the AOT-compiled
+//!   `fwd_eval`/`fwd_serve` HLO artifacts. Bit-exact with the Python-side
+//!   training graphs, but requires `make artifacts` to have run.
+//! * **sim** — [`SimXbar`]: a native (pure-Rust) bit-serial crossbar
+//!   simulator. Conv layers execute strip-by-strip at the bitmap's per-strip
+//!   precision — weight codes sliced across multi-bit ReRAM cells on a
+//!   differential column pair, activations streamed as input-bit phases,
+//!   optional per-column ADC quantization and seeded conductance noise —
+//!   while every non-conv op (GroupNorm, ReLU, residual adds, pooling, the
+//!   dense head) runs in exact f32. Needs no artifacts at all, so the whole
+//!   evaluate/deploy pipeline is testable on any machine.
+//!
+//! The simulator is the higher-fidelity model of what the paper's hardware
+//! actually computes (the PJRT graphs fake-quantize weights but still do
+//! ideal f32 MACs); the PJRT backend is the faster, training-parity path.
+
+pub mod nn;
+pub mod simxbar;
+
+pub use simxbar::{SimXbar, SimXbarConfig, StripPrecision};
+
+use crate::model::ModelInfo;
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// Which forward graph a backend call serves. The PJRT backend dispatches to
+/// the matching AOT executable; the simulator runs the same native graph for
+/// both (the distinction only exists because the AOT artifacts are compiled
+/// per batch shape).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FwdKind {
+    /// Offline accuracy evaluation (`fwd_eval` batch shape).
+    Eval,
+    /// Online serving (`fwd_serve` batch shape).
+    Serve,
+}
+
+/// A batched forward-execution substrate.
+pub trait ExecBackend {
+    /// Short stable identifier ("pjrt" / "sim") used in cache keys, logs and
+    /// startup errors.
+    fn name(&self) -> &'static str;
+
+    /// Run the forward pass: `theta` is the flat parameter vector, `x` the
+    /// image batch `[B, 32, 32, 3]`. Returns logits `[B, num_classes]`.
+    fn forward(&self, model: &ModelInfo, kind: FwdKind, theta: &Tensor, x: &Tensor)
+        -> Result<Tensor>;
+
+    /// Cheap validation run by the serving engine's readiness handshake
+    /// before it starts accepting requests, so a misconfigured deployment
+    /// fails loudly at startup instead of on the first batch.
+    fn ready_check(&self, _model: &ModelInfo, _theta: &Tensor) -> Result<()> {
+        Ok(())
+    }
+}
+
+impl ExecBackend for crate::runtime::Runtime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn forward(
+        &self,
+        model: &ModelInfo,
+        kind: FwdKind,
+        theta: &Tensor,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        let key = match kind {
+            FwdKind::Eval => "fwd_eval",
+            FwdKind::Serve => "fwd_serve",
+        };
+        let exe = model
+            .entry
+            .executables
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("model has no {key} executable"))?;
+        let out = self.exec(exe, &[theta.clone(), x.clone()])?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("{key} returned no outputs"))
+    }
+
+    fn ready_check(&self, model: &ModelInfo, _theta: &Tensor) -> Result<()> {
+        let exe = model
+            .entry
+            .executables
+            .get("fwd_serve")
+            .ok_or_else(|| anyhow::anyhow!("model has no fwd_serve executable"))?;
+        let path = self.artifacts().join(exe);
+        anyhow::ensure!(
+            path.exists(),
+            "serve artifact missing: {} (run `make artifacts`)",
+            path.display()
+        );
+        Ok(())
+    }
+}

@@ -1,0 +1,470 @@
+//! Native (pure-Rust) forward pass of the strip-conv ResNet family.
+//!
+//! The network structure is *parsed from the manifest's parameter layout*
+//! (`ModelEntry::layers`), mirroring `python/compile/model.py`: a stem conv,
+//! stages of pre-activation residual blocks named `s{stage}.b{block}.*`
+//! (stride 2 on the first block of every non-zero stage), and a
+//! GroupNorm → ReLU → mean-pool → dense head. Conv execution is pluggable
+//! through [`ConvExec`] so the bit-serial crossbar simulator can take over
+//! exactly the layers the paper quantizes while everything else stays in
+//! exact f32.
+
+use std::collections::HashMap;
+
+use crate::model::{ConvLayer, LayerEntry, ModelInfo};
+use crate::tensor::Tensor;
+use crate::Result;
+
+/// GroupNorm parameter reference: offsets of gamma/beta in the flat vector.
+#[derive(Clone, Copy, Debug)]
+pub struct GnRef {
+    pub gamma: usize,
+    pub beta: usize,
+    pub c: usize,
+}
+
+/// One pre-activation residual block.
+#[derive(Clone, Debug)]
+pub struct BlockSpec {
+    pub gn1: GnRef,
+    /// Index into `ModelInfo::conv_layers`.
+    pub conv1: usize,
+    pub gn2: GnRef,
+    pub conv2: usize,
+    /// 1×1 projection when the channel count changes.
+    pub shortcut: Option<usize>,
+    pub stride: usize,
+}
+
+/// The parsed network graph.
+#[derive(Clone, Debug)]
+pub struct NetSpec {
+    pub stem: usize,
+    pub blocks: Vec<BlockSpec>,
+    pub head_gn: GnRef,
+    /// Theta offset of the dense weight `[C, classes]`.
+    pub dense_w: usize,
+    /// Theta offset of the dense bias `[classes]`.
+    pub dense_b: usize,
+    pub classes: usize,
+}
+
+fn gn_ref(entries: &HashMap<&str, &LayerEntry>, pfx: &str) -> Result<GnRef> {
+    let g = entries
+        .get(format!("{pfx}.gamma").as_str())
+        .ok_or_else(|| anyhow::anyhow!("layer {pfx}.gamma missing from manifest"))?;
+    let b = entries
+        .get(format!("{pfx}.beta").as_str())
+        .ok_or_else(|| anyhow::anyhow!("layer {pfx}.beta missing from manifest"))?;
+    anyhow::ensure!(
+        g.shape.len() == 1 && g.shape == b.shape,
+        "groupnorm {pfx} has malformed shapes {:?}/{:?}",
+        g.shape,
+        b.shape
+    );
+    // The reference model reshapes to (groups, c/groups); a width whose
+    // channel counts don't divide min(8, c) must fail here, loudly, not
+    // leave trailing channels unnormalized.
+    let c = g.shape[0];
+    anyhow::ensure!(
+        c % c.min(8) == 0,
+        "groupnorm {pfx}: {c} channels not divisible by {} groups",
+        c.min(8)
+    );
+    Ok(GnRef { gamma: g.theta_offset, beta: b.theta_offset, c })
+}
+
+impl NetSpec {
+    /// Reconstruct the graph from the parameter layout. Fails loudly when
+    /// the layer naming convention does not match the strip-conv ResNet
+    /// family (the simulator cannot execute arbitrary manifests).
+    pub fn parse(model: &ModelInfo) -> Result<NetSpec> {
+        let conv_idx: HashMap<&str, usize> = model
+            .conv_layers()
+            .iter()
+            .map(|l| (l.name.as_str(), l.index))
+            .collect();
+        let entries: HashMap<&str, &LayerEntry> = model
+            .entry
+            .layers
+            .iter()
+            .map(|l| (l.name.as_str(), l))
+            .collect();
+
+        let stem = *conv_idx
+            .get("stem.conv")
+            .ok_or_else(|| anyhow::anyhow!("model has no stem.conv layer"))?;
+
+        let mut blocks = Vec::new();
+        let mut s = 0usize;
+        while conv_idx.contains_key(format!("s{s}.b0.conv1").as_str()) {
+            let mut b = 0usize;
+            while let Some(&conv1) = conv_idx.get(format!("s{s}.b{b}.conv1").as_str()) {
+                let pfx = format!("s{s}.b{b}");
+                let conv2 = *conv_idx
+                    .get(format!("{pfx}.conv2").as_str())
+                    .ok_or_else(|| anyhow::anyhow!("block {pfx} has conv1 but no conv2"))?;
+                let shortcut = conv_idx.get(format!("{pfx}.shortcut").as_str()).copied();
+                blocks.push(BlockSpec {
+                    gn1: gn_ref(&entries, &format!("{pfx}.gn1"))?,
+                    conv1,
+                    gn2: gn_ref(&entries, &format!("{pfx}.gn2"))?,
+                    conv2,
+                    shortcut,
+                    stride: if s > 0 && b == 0 { 2 } else { 1 },
+                });
+                b += 1;
+            }
+            s += 1;
+        }
+        anyhow::ensure!(!blocks.is_empty(), "no residual blocks parsed from layer names");
+
+        let head_gn = gn_ref(&entries, "head.gn")?;
+        let dw = entries
+            .get("head.dense.w")
+            .ok_or_else(|| anyhow::anyhow!("model has no head.dense.w layer"))?;
+        let db = entries
+            .get("head.dense.b")
+            .ok_or_else(|| anyhow::anyhow!("model has no head.dense.b layer"))?;
+        anyhow::ensure!(
+            dw.shape.len() == 2 && dw.shape[0] == head_gn.c,
+            "dense weight shape {:?} does not match head width {}",
+            dw.shape,
+            head_gn.c
+        );
+        Ok(NetSpec {
+            stem,
+            blocks,
+            head_gn,
+            dense_w: dw.theta_offset,
+            dense_b: db.theta_offset,
+            classes: dw.shape[1],
+        })
+    }
+}
+
+/// Pluggable conv execution over im2col patches.
+pub trait ConvExec {
+    /// `patches` is `[t, K²·D]` (column order `(kh·K + kw)·D + d`, matching
+    /// the HWIO theta layout); returns `[t, N]`.
+    fn conv(
+        &self,
+        model: &ModelInfo,
+        layer: &ConvLayer,
+        theta: &[f32],
+        patches: &[f32],
+        t: usize,
+    ) -> Result<Vec<f32>>;
+}
+
+/// Ideal f32 conv (the reference the simulator is property-tested against).
+pub struct ExactConv;
+
+impl ConvExec for ExactConv {
+    fn conv(
+        &self,
+        _model: &ModelInfo,
+        layer: &ConvLayer,
+        theta: &[f32],
+        patches: &[f32],
+        t: usize,
+    ) -> Result<Vec<f32>> {
+        let cols = layer.k * layer.k * layer.d;
+        let n = layer.n;
+        let w = &theta[layer.theta_offset..layer.theta_offset + cols * n];
+        let mut out = vec![0.0f32; t * n];
+        for ti in 0..t {
+            let row = &patches[ti * cols..(ti + 1) * cols];
+            let o = &mut out[ti * n..(ti + 1) * n];
+            for (ci, &a) in row.iter().enumerate() {
+                if a == 0.0 {
+                    continue; // padding zeros dominate the border patches
+                }
+                for (ov, &wv) in o.iter_mut().zip(&w[ci * n..(ci + 1) * n]) {
+                    *ov += a * wv;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// im2col with SAME padding: `x` is `[b, h, w, c]` row-major; returns
+/// (`patches [b·oh·ow, k²·c]`, oh, ow). Out-of-bounds taps stay zero.
+pub fn im2col(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+) -> (Vec<f32>, usize, usize) {
+    let oh = (h + stride - 1) / stride;
+    let ow = (w + stride - 1) / stride;
+    // XLA-style SAME: total = max((o-1)*stride + k - in, 0), low half first.
+    let pt = ((oh - 1) * stride + k).saturating_sub(h) / 2;
+    let pl = ((ow - 1) * stride + k).saturating_sub(w) / 2;
+    let cols = k * k * c;
+    let mut out = vec![0.0f32; b * oh * ow * cols];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let base = ((bi * oh + oy) * ow + ox) * cols;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pt as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pl as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                        let dst = base + (ky * k + kx) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+/// GroupNorm (groups = min(8, C), eps 1e-5), matching `model.py`.
+fn group_norm(x: &mut [f32], b: usize, hw: usize, c: usize, theta: &[f32], gn: &GnRef) {
+    debug_assert_eq!(gn.c, c);
+    let groups = c.min(8);
+    let gs = c / groups;
+    let gamma = &theta[gn.gamma..gn.gamma + c];
+    let beta = &theta[gn.beta..gn.beta + c];
+    for bi in 0..b {
+        for g in 0..groups {
+            let mut sum = 0.0f64;
+            let mut sumsq = 0.0f64;
+            for p in 0..hw {
+                let base = (bi * hw + p) * c + g * gs;
+                for &v in &x[base..base + gs] {
+                    let v = v as f64;
+                    sum += v;
+                    sumsq += v * v;
+                }
+            }
+            let n = (hw * gs) as f64;
+            let mu = sum / n;
+            let var = (sumsq / n - mu * mu).max(0.0);
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for p in 0..hw {
+                let base = (bi * hw + p) * c + g * gs;
+                for (j, v) in x[base..base + gs].iter_mut().enumerate() {
+                    let ch = g * gs + j;
+                    *v = ((*v as f64 - mu) * inv) as f32 * gamma[ch] + beta[ch];
+                }
+            }
+        }
+    }
+}
+
+fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+fn conv_layer<C: ConvExec + ?Sized>(
+    model: &ModelInfo,
+    idx: usize,
+    theta: &[f32],
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    stride: usize,
+    conv: &C,
+) -> Result<(Vec<f32>, usize, usize)> {
+    let layer = model.layer(idx);
+    anyhow::ensure!(
+        layer.d == c,
+        "layer {} expects {} input channels, got {c}",
+        layer.name,
+        layer.d
+    );
+    let (patches, oh, ow) = im2col(x, b, h, w, c, layer.k, stride);
+    let out = conv.conv(model, layer, theta, &patches, b * oh * ow)?;
+    Ok((out, oh, ow))
+}
+
+/// Full forward pass: images `[B, H, W, 3]` (or flat `[B, H·W·3]`) → logits
+/// `[B, classes]`. Every conv goes through `conv`; everything else is f32.
+pub fn forward<C: ConvExec + ?Sized>(
+    model: &ModelInfo,
+    spec: &NetSpec,
+    theta: &[f32],
+    x: &Tensor,
+    conv: &C,
+) -> Result<Tensor> {
+    anyhow::ensure!(
+        theta.len() == model.entry.num_params,
+        "theta length {} does not match model ({} params)",
+        theta.len(),
+        model.entry.num_params
+    );
+    let shape = x.shape();
+    let (b, mut h, mut w, mut c) = match shape.len() {
+        4 => (shape[0], shape[1], shape[2], shape[3]),
+        2 if shape[1] == 32 * 32 * 3 => (shape[0], 32, 32, 3),
+        _ => anyhow::bail!("unsupported input shape {shape:?}"),
+    };
+
+    // Stem.
+    let (mut act, oh, ow) = conv_layer(model, spec.stem, theta, x.data(), b, h, w, c, 1, conv)?;
+    h = oh;
+    w = ow;
+    c = model.layer(spec.stem).n;
+
+    // Residual stages.
+    for blk in &spec.blocks {
+        let mut y = act.clone();
+        group_norm(&mut y, b, h * w, c, theta, &blk.gn1);
+        relu(&mut y);
+        let pre = y.clone();
+        let (y1, oh, ow) = conv_layer(model, blk.conv1, theta, &y, b, h, w, c, blk.stride, conv)?;
+        let c_out = model.layer(blk.conv1).n;
+        let mut y = y1;
+        group_norm(&mut y, b, oh * ow, c_out, theta, &blk.gn2);
+        relu(&mut y);
+        let (y2, oh2, ow2) = conv_layer(model, blk.conv2, theta, &y, b, oh, ow, c_out, 1, conv)?;
+        debug_assert_eq!((oh, ow), (oh2, ow2));
+        if let Some(sc) = blk.shortcut {
+            let (sh, _, _) = conv_layer(model, sc, theta, &pre, b, h, w, c, blk.stride, conv)?;
+            act = sh;
+        } else {
+            anyhow::ensure!(
+                blk.stride == 1 && c == c_out,
+                "identity shortcut requires matching dims"
+            );
+        }
+        for (a, v) in act.iter_mut().zip(&y2) {
+            *a += v;
+        }
+        h = oh;
+        w = ow;
+        c = c_out;
+    }
+
+    // Head: GN → ReLU → global mean pool → dense.
+    group_norm(&mut act, b, h * w, c, theta, &spec.head_gn);
+    relu(&mut act);
+    let hw = h * w;
+    let k = spec.classes;
+    let dw = &theta[spec.dense_w..spec.dense_w + c * k];
+    let db = &theta[spec.dense_b..spec.dense_b + k];
+    let mut logits = vec![0.0f32; b * k];
+    for bi in 0..b {
+        // mean over pixels
+        let mut pooled = vec![0.0f64; c];
+        for p in 0..hw {
+            let base = (bi * hw + p) * c;
+            for (pc, &v) in pooled.iter_mut().zip(&act[base..base + c]) {
+                *pc += v as f64;
+            }
+        }
+        for pc in pooled.iter_mut() {
+            *pc /= hw as f64;
+        }
+        let row = &mut logits[bi * k..(bi + 1) * k];
+        row.copy_from_slice(db);
+        for (ci, &p) in pooled.iter().enumerate() {
+            for (rv, &wv) in row.iter_mut().zip(&dw[ci * k..(ci + 1) * k]) {
+                *rv += p as f32 * wv;
+            }
+        }
+    }
+    Ok(Tensor::new(vec![b, k], logits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixture;
+
+    #[test]
+    fn im2col_same_stride1_centers_patch() {
+        // 1×3×3×1 input, K=3, stride 1: center patch sees the whole image.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let (p, oh, ow) = im2col(&x, 1, 3, 3, 1, 3, 1);
+        assert_eq!((oh, ow), (3, 3));
+        // center output pixel (1,1): full image in kernel order
+        let center = &p[(1 * 3 + 1) * 9..(1 * 3 + 1) * 9 + 9];
+        assert_eq!(center, &x[..]);
+        // corner (0,0): top-left taps are padding zeros
+        let corner = &p[..9];
+        assert_eq!(corner, &[0., 0., 0., 0., 1., 2., 0., 4., 5.]);
+    }
+
+    #[test]
+    fn im2col_same_stride2_shapes() {
+        let x = vec![1.0f32; 1 * 32 * 32 * 2];
+        let (p, oh, ow) = im2col(&x, 1, 32, 32, 2, 3, 2);
+        assert_eq!((oh, ow), (16, 16));
+        assert_eq!(p.len(), 16 * 16 * 9 * 2);
+        // stride-2 SAME over 32 with K=3: pad low = 0 — output (0,0) reads
+        // input rows 0..3 directly (no zero taps at the top-left).
+        assert_eq!(p[0], 1.0);
+        // 1×1 conv never pads
+        let (p1, oh1, _) = im2col(&x, 1, 32, 32, 2, 1, 2);
+        assert_eq!(oh1, 16);
+        assert!(p1.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn group_norm_normalizes_and_scales() {
+        // 1 sample, 2 pixels, 2 channels, groups = min(8,2) = 2 (one channel
+        // per group): each channel normalized independently over pixels.
+        let mut x = vec![1.0f32, 10.0, 3.0, 30.0]; // [p0c0, p0c1, p1c0, p1c1]
+        let theta = vec![2.0f32, 1.0, 0.5, 0.0]; // gamma=[2,1], beta=[0.5,0]
+        let gn = GnRef { gamma: 0, beta: 2, c: 2 };
+        group_norm(&mut x, 1, 2, 2, &theta, &gn);
+        // channel 0: values {1,3} -> normalized {-1, 1} -> ×2 + 0.5
+        assert!((x[0] - (-1.5)).abs() < 1e-3, "{:?}", x);
+        assert!((x[2] - 2.5).abs() < 1e-3, "{:?}", x);
+        // channel 1: {10,30} -> {-1,1} -> ×1 + 0
+        assert!((x[1] + 1.0).abs() < 1e-3, "{:?}", x);
+        assert!((x[3] - 1.0).abs() < 1e-3, "{:?}", x);
+    }
+
+    #[test]
+    fn parse_recovers_fixture_structure() {
+        let fx = fixture::tiny(3);
+        let spec = NetSpec::parse(&fx.model).unwrap();
+        assert_eq!(spec.blocks.len(), 3);
+        // first block of stages 1 and 2 downsample; stage 0 does not
+        assert_eq!(spec.blocks[0].stride, 1);
+        assert_eq!(spec.blocks[1].stride, 2);
+        assert_eq!(spec.blocks[2].stride, 2);
+        assert!(spec.blocks[0].shortcut.is_none());
+        assert!(spec.blocks[1].shortcut.is_some());
+        assert!(spec.blocks[2].shortcut.is_some());
+        assert_eq!(spec.classes, 10);
+    }
+
+    #[test]
+    fn forward_produces_finite_logits_per_sample() {
+        let fx = fixture::tiny(5);
+        let spec = NetSpec::parse(&fx.model).unwrap();
+        let xb = fx.test.x.slice_rows(0, 2);
+        let logits = forward(&fx.model, &spec, &fx.theta, &xb, &ExactConv).unwrap();
+        assert_eq!(logits.shape(), &[2, 10]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+        // per-sample independence: row 0 of a batch equals a solo forward
+        let solo = forward(&fx.model, &spec, &fx.theta, &fx.test.x.slice_rows(0, 1), &ExactConv)
+            .unwrap();
+        for (a, b) in solo.data().iter().zip(logits.data()) {
+            assert_eq!(a, b, "batch composition must not change a sample's logits");
+        }
+    }
+}

@@ -1,0 +1,478 @@
+//! `SimXbar` — native bit-serial crossbar MVM simulator.
+//!
+//! Models what the paper's ReRAM substrate physically computes, per strip:
+//!
+//! * **Weight storage** — each strip's integer codes (re-derived from the
+//!   quantized parameter vector and the per-strip scale) are stored on a
+//!   *differential column pair* (G⁺/G⁻ for positive/negative code parts),
+//!   each sliced across `ceil(bits / cell_bits)` multi-bit cells.
+//! * **Input streaming** — activations are DAC-quantized to `input_bits`
+//!   symmetric codes (per conversion window, i.e. per output pixel — so a
+//!   sample's result never depends on what else shares its batch) and
+//!   streamed bit-serially; each input-bit phase drives the word lines with
+//!   a binary vector.
+//! * **Column currents** — one analog current per (input-bit phase × cell
+//!   slice × polarity × row segment of at most `rows` word lines). With
+//!   `adc_bits > 0` every current is quantized by a SAR ADC of that
+//!   resolution before the shift-and-add merge; with `noise_sigma > 0`
+//!   zero-mean Gaussian conductance noise (in cell-level units, seeded and
+//!   deterministic) perturbs every programmed cell.
+//! * **Digital merge** — phase/slice partial sums are shift-added and
+//!   scaled by `sa·sw`, exactly the paper's §4.3 stepwise accumulation.
+//!
+//! With ideal converters (`adc_bits == 0`, `noise_sigma == 0`) the phase
+//! decomposition telescopes back to the exact integer dot product, so the
+//! simulator takes an algebraically identical fast path (property-tested
+//! against the explicit phase loop). Non-conv layers (GroupNorm, ReLU,
+//! residual adds, pooling, dense head) run in exact f32 — the paper
+//! quantizes conv weights only.
+
+use std::sync::Mutex;
+
+use crate::backend::nn::{self, ConvExec, ExactConv, NetSpec};
+use crate::backend::{ExecBackend, FwdKind};
+use crate::model::{ConvLayer, ModelInfo};
+use crate::quant::{self, QuantizedModel};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::xbar::XbarConfig;
+use crate::Result;
+
+/// Crossbar fidelity knobs for the simulator.
+#[derive(Clone, Copy, Debug)]
+pub struct SimXbarConfig {
+    /// Word lines per array: strips deeper than this split into row
+    /// segments, each converted (and ADC-quantized) separately.
+    pub rows: usize,
+    /// Bits stored per ReRAM cell.
+    pub cell_bits: u8,
+    /// DAC resolution for the bit-serial activation stream.
+    pub input_bits: u8,
+    /// SAR ADC resolution applied to every column current; 0 = ideal
+    /// (lossless) conversion.
+    pub adc_bits: u8,
+    /// Zero-mean Gaussian conductance noise per programmed cell, in units
+    /// of one cell level; 0 = noise-free.
+    pub noise_sigma: f64,
+    /// Seed for the conductance-noise draw (deterministic per seed).
+    pub seed: u64,
+    /// Testing knob: run the explicit phase/slice loop even when ideal
+    /// converters would permit the algebraically equal integer fast path.
+    pub force_phase_loop: bool,
+}
+
+impl Default for SimXbarConfig {
+    fn default() -> Self {
+        Self {
+            rows: 128,
+            cell_bits: 2,
+            input_bits: 8,
+            adc_bits: 0,
+            noise_sigma: 0.0,
+            seed: 0x51b,
+            force_phase_loop: false,
+        }
+    }
+}
+
+impl SimXbarConfig {
+    /// Inherit the array geometry from the hardware cost-model config
+    /// (ideal converters; opt into ADC/noise with the builder helpers).
+    pub fn from_xbar(x: &XbarConfig) -> Self {
+        Self {
+            rows: x.rows,
+            cell_bits: x.cell_bits,
+            input_bits: x.input_bits,
+            ..Self::default()
+        }
+    }
+
+    /// Near-lossless DAC for reference comparisons: 20-bit input codes keep
+    /// the activation-quantization error below ~1e-5 relative.
+    pub fn high_fidelity() -> Self {
+        Self { input_bits: 20, ..Self::default() }
+    }
+
+    pub fn with_adc(mut self, bits: u8) -> Self {
+        self.adc_bits = bits;
+        self
+    }
+
+    pub fn with_noise(mut self, sigma: f64, seed: u64) -> Self {
+        self.noise_sigma = sigma;
+        self.seed = seed;
+        self
+    }
+}
+
+/// Per-strip weight precision feeding the simulator (bit widths + scales,
+/// exactly the quantization stage's artifact).
+#[derive(Clone, Debug)]
+pub struct StripPrecision {
+    /// Bits per strip, `ModelInfo::strips()` order; 0 = pruned.
+    pub bits: Vec<u8>,
+    /// Per-strip quantization scale (LSB).
+    pub scales: Vec<f32>,
+}
+
+impl StripPrecision {
+    pub fn from_quantized(qm: &QuantizedModel) -> Self {
+        Self { bits: qm.bits.clone(), scales: qm.scales.clone() }
+    }
+}
+
+/// The simulator backend. Without strip metadata every conv runs in exact
+/// f32 (fp32 reference deployments); with it, conv layers execute on the
+/// simulated crossbars at their assigned per-strip precision.
+pub struct SimXbar {
+    pub cfg: SimXbarConfig,
+    strips: Option<StripPrecision>,
+    /// Parsed network graph of the last model seen, so the eval loop and the
+    /// serving hot path don't re-parse the manifest layout on every batch.
+    spec: Mutex<Option<(String, usize, NetSpec)>>,
+}
+
+impl SimXbar {
+    pub fn new(cfg: SimXbarConfig) -> Self {
+        Self { cfg, strips: None, spec: Mutex::new(None) }
+    }
+
+    /// Graph for `model`, parsed once per (name, param-count) and cached.
+    fn spec_for(&self, model: &ModelInfo) -> Result<NetSpec> {
+        let mut guard = self.spec.lock().unwrap();
+        if let Some((name, params, spec)) = guard.as_ref() {
+            if name == model.name() && *params == model.entry.num_params {
+                return Ok(spec.clone());
+            }
+        }
+        let spec = NetSpec::parse(model)?;
+        *guard = Some((model.name().to_string(), model.entry.num_params, spec.clone()));
+        Ok(spec)
+    }
+
+    pub fn with_strips(mut self, strips: StripPrecision) -> Self {
+        self.strips = Some(strips);
+        self
+    }
+
+    pub fn from_quantized(cfg: SimXbarConfig, qm: &QuantizedModel) -> Self {
+        Self::new(cfg).with_strips(StripPrecision::from_quantized(qm))
+    }
+
+    /// Bit-serial conv of one layer over im2col patches (the crossbar hot
+    /// path). Exposed for the property tests.
+    pub fn conv_bitserial(
+        &self,
+        model: &ModelInfo,
+        layer: &ConvLayer,
+        theta: &[f32],
+        patches: &[f32],
+        t: usize,
+        sp: &StripPrecision,
+    ) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        anyhow::ensure!(cfg.rows >= 1, "sim rows must be >= 1");
+        anyhow::ensure!(
+            (1..=8).contains(&cfg.cell_bits),
+            "sim cell_bits {} out of range 1..=8",
+            cfg.cell_bits
+        );
+        anyhow::ensure!(
+            (2..=24).contains(&cfg.input_bits),
+            "sim input_bits {} out of range 2..=24",
+            cfg.input_bits
+        );
+        anyhow::ensure!(cfg.adc_bits <= 16, "sim adc_bits {} out of range 0..=16", cfg.adc_bits);
+        anyhow::ensure!(
+            sp.bits.len() == model.num_strips() && sp.scales.len() == sp.bits.len(),
+            "strip precision covers {} strips, model has {}",
+            sp.bits.len(),
+            model.num_strips()
+        );
+        let d = layer.d;
+        let n = layer.n;
+        let kk = layer.k * layer.k;
+        let cols = kk * d;
+        let base: usize = model.conv_layers()[..layer.index]
+            .iter()
+            .map(ConvLayer::num_strips)
+            .sum();
+
+        // ---- DAC: symmetric input codes, scaled per conversion window ----
+        let q_in = ((1i64 << (cfg.input_bits - 1)) - 1) as f32;
+        let mut codes_a = vec![0i32; t * cols];
+        let mut sa = vec![1.0f32; t];
+        for ti in 0..t {
+            let row = &patches[ti * cols..(ti + 1) * cols];
+            let amax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            if amax > 0.0 {
+                let s = amax / q_in;
+                sa[ti] = s;
+                for (c, &v) in codes_a[ti * cols..(ti + 1) * cols].iter_mut().zip(row) {
+                    *c = (v / s).round().clamp(-q_in, q_in) as i32;
+                }
+            }
+        }
+
+        let exact = cfg.adc_bits == 0 && cfg.noise_sigma == 0.0 && !cfg.force_phase_loop;
+        // Conductance noise is drawn per programmed cell in a fixed
+        // (strip-major) order from a per-layer stream, so a given
+        // (seed, layer) pair always programs the same array state.
+        let mut rng = Rng::seed_from_u64(
+            cfg.seed ^ (layer.index as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15),
+        );
+
+        let mut out = vec![0.0f32; t * n];
+        let mut codes_w = vec![0i32; d];
+        for g in 0..kk {
+            for ch in 0..n {
+                let idx = base + g * n + ch;
+                let bits = sp.bits[idx];
+                if bits == 0 {
+                    continue; // pruned strip: no cells programmed
+                }
+                anyhow::ensure!(
+                    (1..=16).contains(&bits),
+                    "strip {idx} has unsupported bit width {bits}"
+                );
+                let sw = sp.scales[idx];
+                if sw <= 0.0 {
+                    continue;
+                }
+                let q_w = quant::qmax(bits);
+                for (dd, cw) in codes_w.iter_mut().enumerate() {
+                    let wv = theta[layer.theta_index(g, dd, ch)];
+                    *cw = (wv / sw).round().clamp(-q_w, q_w) as i32;
+                }
+
+                if exact {
+                    // Ideal converters: the phase/slice decomposition
+                    // telescopes to the plain integer dot product.
+                    for ti in 0..t {
+                        let arow = &codes_a[ti * cols + g * d..ti * cols + (g + 1) * d];
+                        let mut acc = 0i64;
+                        for (&a, &cw) in arow.iter().zip(codes_w.iter()) {
+                            acc += a as i64 * cw as i64;
+                        }
+                        out[ti * n + ch] += (acc as f64 * sa[ti] as f64 * sw as f64) as f32;
+                    }
+                    continue;
+                }
+
+                // ---- program the differential, bit-sliced cell columns ----
+                let ncells = ((bits + cfg.cell_bits - 1) / cfg.cell_bits) as usize;
+                let mask = (1i32 << cfg.cell_bits) - 1;
+                let mut gpos = vec![0.0f64; ncells * d];
+                let mut gneg = vec![0.0f64; ncells * d];
+                for (dd, &cw) in codes_w.iter().enumerate() {
+                    let (p, q) = (cw.max(0), (-cw).max(0));
+                    for j in 0..ncells {
+                        let sh = (j as u32) * cfg.cell_bits as u32;
+                        gpos[j * d + dd] = ((p >> sh) & mask) as f64;
+                        gneg[j * d + dd] = ((q >> sh) & mask) as f64;
+                    }
+                }
+                if cfg.noise_sigma > 0.0 {
+                    for v in gpos.iter_mut().chain(gneg.iter_mut()) {
+                        *v += rng.normal() as f64 * cfg.noise_sigma;
+                    }
+                }
+
+                // ---- input-bit phases × cell slices × row segments ----
+                let adc = |i_raw: f64, seg_rows: usize| -> f64 {
+                    if cfg.adc_bits == 0 {
+                        return i_raw;
+                    }
+                    let fs = seg_rows as f64 * mask as f64;
+                    if fs <= 0.0 {
+                        return i_raw;
+                    }
+                    let levels = (1u64 << cfg.adc_bits) as f64 - 1.0;
+                    let step = (fs / levels).max(1.0);
+                    (i_raw / step).round().clamp(0.0, levels) * step
+                };
+                for ti in 0..t {
+                    let arow = &codes_a[ti * cols + g * d..ti * cols + (g + 1) * d];
+                    let mut total = 0.0f64;
+                    let mut seg_start = 0usize;
+                    while seg_start < d {
+                        let seg_end = (seg_start + cfg.rows).min(d);
+                        let seg_rows = seg_end - seg_start;
+                        for p in 0..(cfg.input_bits - 1) as u32 {
+                            let pbit = 1i32 << p;
+                            for j in 0..ncells {
+                                // four currents: input polarity × column
+                                let (mut ipp, mut ipn) = (0.0f64, 0.0f64);
+                                let (mut inp, mut inn) = (0.0f64, 0.0f64);
+                                for dd in seg_start..seg_end {
+                                    let a = arow[dd];
+                                    if a == 0 || (a.abs() & pbit) == 0 {
+                                        continue;
+                                    }
+                                    let gp = gpos[j * d + dd];
+                                    let gm = gneg[j * d + dd];
+                                    if a > 0 {
+                                        ipp += gp;
+                                        ipn += gm;
+                                    } else {
+                                        inp += gp;
+                                        inn += gm;
+                                    }
+                                }
+                                let w2 = 2.0f64.powi(p as i32 + (j as i32) * cfg.cell_bits as i32);
+                                total += w2
+                                    * ((adc(ipp, seg_rows) + adc(inn, seg_rows))
+                                        - (adc(ipn, seg_rows) + adc(inp, seg_rows)));
+                            }
+                        }
+                        seg_start = seg_end;
+                    }
+                    out[ti * n + ch] += (total * sa[ti] as f64 * sw as f64) as f32;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl ConvExec for SimXbar {
+    fn conv(
+        &self,
+        model: &ModelInfo,
+        layer: &ConvLayer,
+        theta: &[f32],
+        patches: &[f32],
+        t: usize,
+    ) -> Result<Vec<f32>> {
+        match &self.strips {
+            None => ExactConv.conv(model, layer, theta, patches, t),
+            Some(sp) => self.conv_bitserial(model, layer, theta, patches, t, sp),
+        }
+    }
+}
+
+impl ExecBackend for SimXbar {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn forward(
+        &self,
+        model: &ModelInfo,
+        _kind: FwdKind,
+        theta: &Tensor,
+        x: &Tensor,
+    ) -> Result<Tensor> {
+        let spec = self.spec_for(model)?;
+        nn::forward(model, &spec, theta.data(), x, self)
+    }
+
+    fn ready_check(&self, model: &ModelInfo, _theta: &Tensor) -> Result<()> {
+        if let Some(sp) = &self.strips {
+            anyhow::ensure!(
+                sp.bits.len() == model.num_strips() && sp.scales.len() == sp.bits.len(),
+                "strip precision covers {} strips, model has {}",
+                sp.bits.len(),
+                model.num_strips()
+            );
+        }
+        self.spec_for(model)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry};
+    use std::collections::HashMap;
+
+    fn layer_model(k: usize, d: usize, n: usize) -> ModelInfo {
+        ModelInfo::new(ModelEntry {
+            name: "sim-layer".into(),
+            num_params: k * k * d * n,
+            num_conv_params: k * k * d * n,
+            fp32_test_acc: 1.0,
+            params: BinEntry { file: "x".into(), shape: vec![k * k * d * n], dtype: "f32".into() },
+            layers: vec![LayerEntry {
+                name: "stem.conv".into(),
+                shape: vec![k, k, d, n],
+                kind: "conv".into(),
+                theta_offset: 0,
+                convflat_offset: Some(0),
+            }],
+            executables: HashMap::new(),
+            batch: BatchSizes { eval: 1, serve: 1, calib: 1 },
+        })
+    }
+
+    fn quantized_layer(m: &ModelInfo, seed: u64, bits: u8) -> (Vec<f32>, StripPrecision) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let theta: Vec<f32> = (0..m.entry.num_params).map(|_| rng.normal() * 0.3).collect();
+        let bm = crate::quant::BitMap::uniform(m.num_strips(), bits);
+        let cfg = crate::config::QuantConfig {
+            device_sigma: 0.0,
+            ..crate::config::QuantConfig::default()
+        };
+        let qm = quant::apply(m, &theta, &bm, &cfg);
+        (qm.theta, StripPrecision::from_quantized(&qm))
+    }
+
+    #[test]
+    fn sim_phase_loop_equals_integer_fast_path() {
+        let m = layer_model(1, 19, 3);
+        let layer = m.layer(0).clone();
+        let (theta, sp) = quantized_layer(&m, 7, 8);
+        let mut rng = Rng::seed_from_u64(9);
+        let t = 5;
+        let patches: Vec<f32> =
+            (0..t * layer.k * layer.k * layer.d).map(|_| rng.normal()).collect();
+        // rows=4 forces multi-segment conversion on the 19-row strips
+        let base = SimXbarConfig { rows: 4, input_bits: 6, ..SimXbarConfig::default() };
+        let fast = SimXbar::new(base)
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        let phased = SimXbar::new(SimXbarConfig { force_phase_loop: true, ..base })
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        for (a, b) in fast.iter().zip(&phased) {
+            assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sim_pruned_and_zero_scale_strips_contribute_nothing() {
+        let m = layer_model(1, 4, 2);
+        let layer = m.layer(0).clone();
+        let theta = vec![1.0f32; m.entry.num_params];
+        let sp = StripPrecision { bits: vec![0, 8], scales: vec![0.0, 0.5] };
+        let patches = vec![1.0f32; 4];
+        let out = SimXbar::new(SimXbarConfig::default())
+            .conv_bitserial(&m, &layer, &theta, &patches, 1, &sp)
+            .unwrap();
+        assert_eq!(out[0], 0.0, "pruned channel must stay silent");
+        assert!(out[1] > 0.0);
+    }
+
+    #[test]
+    fn sim_adc_and_noise_are_deterministic_per_seed() {
+        let m = layer_model(3, 8, 4);
+        let layer = m.layer(0).clone();
+        let (theta, sp) = quantized_layer(&m, 21, 8);
+        let mut rng = Rng::seed_from_u64(2);
+        let t = 3;
+        let patches: Vec<f32> =
+            (0..t * layer.k * layer.k * layer.d).map(|_| rng.normal()).collect();
+        let cfg = SimXbarConfig::default().with_adc(4).with_noise(0.05, 99);
+        let run = || {
+            SimXbar::new(cfg)
+                .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+                .unwrap()
+        };
+        assert_eq!(run(), run(), "fixed seed must reproduce bit-identically");
+        let other = SimXbar::new(cfg.with_noise(0.05, 100))
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        assert_ne!(run(), other, "different seed must redraw the noise");
+    }
+}

@@ -1,22 +1,67 @@
 //! Serving engine: the L3 request hot path. Requests are dynamically
-//! batched (size- or deadline-triggered), padded to the static `fwd_serve`
-//! batch shape, executed on PJRT, and answered through per-request channels.
+//! batched (size- or deadline-triggered), padded to the static serve batch
+//! shape, executed on a pluggable [`ExecBackend`] (PJRT artifacts or the
+//! native crossbar simulator), and answered through per-request channels.
 //! Python is never involved.
 //!
 //! Built on std threads + channels (this environment has no tokio; the
-//! batching discipline is the same as a vLLM-style router's).
+//! batching discipline is the same as a vLLM-style router's). The backend
+//! is constructed *inside* the worker thread — PJRT handles are not `Send` —
+//! and [`Engine::start`] blocks on a readiness handshake so a backend that
+//! cannot come up surfaces a typed [`StartupError`] to the caller instead
+//! of a log line and a silently dead queue.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::backend::{ExecBackend, FwdKind, SimXbar, SimXbarConfig, StripPrecision};
 use crate::model::ModelInfo;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::Result;
 
 use super::metrics::Metrics;
+
+/// How the engine worker constructs its execution backend (inside the
+/// worker thread — PJRT handles are not `Send`, the simulator is).
+#[derive(Clone)]
+pub enum BackendSpec {
+    /// PJRT over the AOT artifacts directory.
+    Pjrt { artifacts: PathBuf },
+    /// Native bit-serial crossbar simulator; `strips` carries the deployed
+    /// quantization (None = exact-f32 fp32 deployment).
+    Sim { cfg: SimXbarConfig, strips: Option<StripPrecision> },
+}
+
+impl BackendSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendSpec::Pjrt { .. } => "pjrt",
+            BackendSpec::Sim { .. } => "sim",
+        }
+    }
+}
+
+/// Why the engine failed to come up. Returned by [`Engine::start`]'s
+/// readiness handshake so callers see *why* serving is down (missing
+/// artifacts, PJRT client failure, malformed deployment) instead of a
+/// swallowed log line.
+#[derive(Clone, Debug)]
+pub struct StartupError {
+    /// Which backend failed ("pjrt" / "sim").
+    pub backend: &'static str,
+    pub reason: String,
+}
+
+impl std::fmt::Display for StartupError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "engine {} backend failed to start: {}", self.backend, self.reason)
+    }
+}
+
+impl std::error::Error for StartupError {}
 
 /// One classification request: a 32×32×3 image.
 struct Request {
@@ -102,12 +147,11 @@ impl EngineHandle {
     }
 }
 
-/// The engine: owns its *own* PJRT runtime (xla handles are not `Send`, so
-/// the client lives entirely inside the batching thread), the quantized
-/// weights and the batching loop.
+/// The engine: owns its backend spec (the backend itself lives entirely
+/// inside the batching thread), the deployed weights and the batching loop.
 pub struct Engine {
-    artifacts: PathBuf,
-    exe: String,
+    spec: BackendSpec,
+    model: ModelInfo,
     theta: Tensor,
     batch: usize,
     image_elems: usize,
@@ -116,8 +160,8 @@ pub struct Engine {
 
 /// Worker-side state (constructed inside the engine thread).
 struct Worker {
-    runtime: Runtime,
-    exe: String,
+    backend: Box<dyn ExecBackend>,
+    model: ModelInfo,
     theta: Tensor,
     batch: usize,
     image_elems: usize,
@@ -125,20 +169,21 @@ struct Worker {
 
 impl Engine {
     pub fn new(
-        artifacts: PathBuf,
+        spec: BackendSpec,
         model: &ModelInfo,
         theta: Vec<f32>,
         cfg: EngineConfig,
     ) -> Result<Self> {
-        let exe = model
-            .entry
-            .executables
-            .get("fwd_serve")
-            .ok_or_else(|| anyhow::anyhow!("model has no fwd_serve executable"))?
-            .clone();
+        if matches!(spec, BackendSpec::Pjrt { .. }) {
+            model
+                .entry
+                .executables
+                .get("fwd_serve")
+                .ok_or_else(|| anyhow::anyhow!("model has no fwd_serve executable"))?;
+        }
         Ok(Self {
-            artifacts,
-            exe,
+            spec,
+            model: model.clone(),
             theta: Tensor::from_vec(theta),
             batch: model.entry.batch.serve,
             image_elems: 32 * 32 * 3,
@@ -146,26 +191,70 @@ impl Engine {
         })
     }
 
-    /// Spawn the batching loop; returns the submission handle. The loop
-    /// exits when every handle is dropped.
-    pub fn start(self) -> EngineHandle {
+    /// PJRT engine over an artifacts directory (the pre-backend API shape).
+    pub fn pjrt(
+        artifacts: PathBuf,
+        model: &ModelInfo,
+        theta: Vec<f32>,
+        cfg: EngineConfig,
+    ) -> Result<Self> {
+        Self::new(BackendSpec::Pjrt { artifacts }, model, theta, cfg)
+    }
+
+    fn build_worker(self) -> Result<Worker> {
+        // Backend-independent deployment validation; each backend's
+        // ready_check adds only its own substrate checks on top.
+        anyhow::ensure!(
+            self.theta.len() == self.model.entry.num_params,
+            "theta length {} does not match model ({} params)",
+            self.theta.len(),
+            self.model.entry.num_params
+        );
+        let backend: Box<dyn ExecBackend> = match &self.spec {
+            BackendSpec::Pjrt { artifacts } => Box::new(Runtime::new(artifacts.clone())?),
+            BackendSpec::Sim { cfg, strips } => {
+                let mut sim = SimXbar::new(*cfg);
+                if let Some(sp) = strips {
+                    sim = sim.with_strips(sp.clone());
+                }
+                Box::new(sim)
+            }
+        };
+        backend.ready_check(&self.model, &self.theta)?;
+        Ok(Worker {
+            backend,
+            model: self.model,
+            theta: self.theta,
+            batch: self.batch,
+            image_elems: self.image_elems,
+        })
+    }
+
+    /// Spawn the batching loop. Blocks until the worker thread has built its
+    /// backend and passed the readiness check, then returns the submission
+    /// handle; a backend that cannot come up yields a typed [`StartupError`]
+    /// instead of a dead queue. The loop exits when every handle is dropped.
+    pub fn start(self) -> std::result::Result<EngineHandle, StartupError> {
         let (tx, rx) = sync_channel::<Request>(self.cfg.queue);
+        let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(), StartupError>>(1);
         let metrics = Arc::new(Metrics::default());
         let handle = EngineHandle { tx, metrics: metrics.clone() };
 
         let cfg = self.cfg;
+        let backend_name = self.spec.name();
         std::thread::spawn(move || {
-            // The PJRT client is created inside this thread (xla is !Send).
-            let worker = match Runtime::new(self.artifacts.clone()) {
-                Ok(runtime) => Worker {
-                    runtime,
-                    exe: self.exe,
-                    theta: self.theta,
-                    batch: self.batch,
-                    image_elems: self.image_elems,
-                },
+            // The backend is created inside this thread (PJRT is !Send).
+            let worker = match self.build_worker() {
+                Ok(w) => {
+                    let _ = ready_tx.send(Ok(()));
+                    w
+                }
                 Err(e) => {
-                    crate::error!("engine runtime failed to start: {e}");
+                    crate::error!("engine {backend_name} backend failed to start: {e:#}");
+                    let _ = ready_tx.send(Err(StartupError {
+                        backend: backend_name,
+                        reason: format!("{e:#}"),
+                    }));
                     return;
                 }
             };
@@ -201,7 +290,15 @@ impl Engine {
                 }
             }
         });
-        handle
+
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(handle),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(StartupError {
+                backend: backend_name,
+                reason: "engine worker exited before the readiness handshake".into(),
+            }),
+        }
     }
 }
 
@@ -219,8 +316,7 @@ impl Worker {
             x[i * self.image_elems..(i + 1) * self.image_elems].copy_from_slice(&req.image);
         }
         let xt = Tensor::new(vec![self.batch, 32, 32, 3], x);
-        let out = self.runtime.exec(&self.exe, &[self.theta.clone(), xt])?;
-        let logits = &out[0];
+        let logits = self.backend.forward(&self.model, FwdKind::Serve, &self.theta, &xt)?;
         let k = logits.shape()[1];
 
         let now = Instant::now();

@@ -1,8 +1,9 @@
-//! Accuracy evaluation over the PJRT forward executable.
+//! Accuracy evaluation over any [`ExecBackend`] (PJRT `fwd_eval` artifact
+//! or the native crossbar simulator).
 
+use crate::backend::{ExecBackend, FwdKind};
 use crate::dataset::TestSet;
 use crate::model::ModelInfo;
-use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::Result;
 
@@ -25,30 +26,24 @@ impl Accuracy {
     }
 }
 
-/// Evaluate `theta` on the test set through the `fwd_eval` executable.
-pub fn evaluate(
-    runtime: &Runtime,
+/// Evaluate `theta` on the test set through the backend's eval forward.
+pub fn evaluate<B: ExecBackend + ?Sized>(
+    backend: &B,
     model: &ModelInfo,
     theta: &[f32],
     test: &TestSet,
 ) -> Result<Accuracy> {
-    evaluate_batches(runtime, model, theta, test, usize::MAX)
+    evaluate_batches(backend, model, theta, test, usize::MAX)
 }
 
 /// Evaluate on at most `max_batches` eval batches (for quick sweeps).
-pub fn evaluate_batches(
-    runtime: &Runtime,
+pub fn evaluate_batches<B: ExecBackend + ?Sized>(
+    backend: &B,
     model: &ModelInfo,
     theta: &[f32],
     test: &TestSet,
     max_batches: usize,
 ) -> Result<Accuracy> {
-    let exe = model
-        .entry
-        .executables
-        .get("fwd_eval")
-        .ok_or_else(|| anyhow::anyhow!("model has no fwd_eval executable"))?
-        .clone();
     let b = model.entry.batch.eval;
     let theta_t = Tensor::from_vec(theta.to_vec());
     let nb = test.num_batches(b).min(max_batches);
@@ -57,8 +52,7 @@ pub fn evaluate_batches(
     let (mut c1, mut c5, mut n) = (0usize, 0usize, 0usize);
     for i in 0..nb {
         let (x, y) = test.batch(i, b);
-        let out = runtime.exec(&exe, &[theta_t.clone(), x])?;
-        let logits = &out[0];
+        let logits = backend.forward(model, FwdKind::Eval, &theta_t, &x)?;
         let k = logits.shape()[1];
         for (row, &label) in logits.data().chunks_exact(k).zip(y.iter()) {
             let mut idx: Vec<usize> = (0..k).collect();

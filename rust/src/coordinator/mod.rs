@@ -1,5 +1,6 @@
 //! L3 coordinator: the staged compression-plan builder, the accuracy
-//! evaluator, the serving engine (dynamic batching over PJRT) and its
+//! evaluator (generic over execution backends), the serving engine
+//! (dynamic batching over PJRT or the native crossbar simulator) and its
 //! metrics.
 
 pub mod engine;
@@ -8,10 +9,13 @@ pub mod metrics;
 pub mod pipeline;
 pub mod plan;
 
-pub use engine::{BatchError, Engine, EngineConfig, EngineHandle, Response};
+pub use engine::{
+    BackendSpec, BatchError, Engine, EngineConfig, EngineHandle, Response, StartupError,
+};
 pub use eval::{evaluate, evaluate_batches, Accuracy};
 pub use metrics::{Metrics, Snapshot};
 pub use pipeline::{PipelineReport, ThresholdMode};
 pub use plan::{
-    CacheStats, ChosenThreshold, CompressionPlan, EvalOpts, SensitivityScores, StageCache,
+    CacheStats, ChosenThreshold, CompressionPlan, EvalOpts, Executor, ModelState,
+    SensitivityScores, StageCache,
 };

@@ -36,9 +36,10 @@ use std::collections::HashMap;
 use std::rc::Rc;
 use std::sync::Arc;
 
+use crate::backend::{SimXbar, SimXbarConfig, StripPrecision};
 use crate::clustering::{self, Clustering};
 use crate::config::{QuantConfig, RunConfig, SensitivityConfig};
-use crate::coordinator::engine::{Engine, EngineConfig, EngineHandle};
+use crate::coordinator::engine::{BackendSpec, Engine, EngineConfig, EngineHandle};
 use crate::coordinator::eval;
 use crate::coordinator::pipeline::{PipelineReport, ThresholdMode};
 use crate::dataset::{CalibSet, TestSet};
@@ -46,10 +47,54 @@ use crate::fim::ThresholdSearch;
 use crate::model::{Manifest, ModelInfo};
 use crate::quant::{self, BitMap, QuantizedModel};
 use crate::runtime::Runtime;
-use crate::sensitivity::{Analyzer, Sensitivity};
+use crate::sensitivity::{self, Analyzer, Sensitivity};
 use crate::util::json::{obj, Value};
 use crate::xbar::{self, MappingStrategy, ModelMapping};
 use crate::Result;
+
+/// Which execution substrate a plan's forward passes run on.
+///
+/// * `Pjrt` — the AOT-compiled HLO artifacts through the PJRT runtime
+///   (training-parity numerics; requires `make artifacts`). Sensitivity and
+///   FIM search also need this backend (they drive the `hvp`/`gsq` graphs).
+/// * `Sim` — the native bit-serial crossbar simulator
+///   ([`crate::backend::SimXbar`]): no artifacts, no XLA. Sensitivity falls
+///   back to the magnitude proxy and the FIM search modes are unavailable,
+///   but the whole quantize → map → evaluate → deploy tail runs anywhere.
+#[derive(Clone, Copy)]
+pub enum Executor<'a> {
+    Pjrt(&'a Runtime),
+    Sim(SimXbarConfig),
+}
+
+impl Executor<'_> {
+    /// Stable tag used in logs and error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Executor::Pjrt(_) => "pjrt",
+            Executor::Sim(_) => "sim",
+        }
+    }
+
+    /// Full cache-key tag: two sim evaluations with different fidelity knobs
+    /// (ADC resolution, noise sigma/seed, geometry) are different artifacts
+    /// and must never alias in the stage cache.
+    fn cache_tag(&self) -> String {
+        match self {
+            Executor::Pjrt(_) => "pjrt".into(),
+            Executor::Sim(c) => format!(
+                "sim:r{}c{}i{}a{}n{}s{}p{}",
+                c.rows,
+                c.cell_bits,
+                c.input_bits,
+                c.adc_bits,
+                c.noise_sigma,
+                c.seed,
+                c.force_phase_loop as u8
+            ),
+        }
+    }
+}
 
 /// Candidate quantiles swept by [`ThresholdMode::Sweep`] (paper §5).
 pub const SWEEP_CANDIDATES: &[f64] = &[0.0, 0.1, 0.3, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0];
@@ -149,10 +194,9 @@ fn fnv64(bytes: impl Iterator<Item = u8>) -> u64 {
 }
 
 /// Loaded per-model state shared by every plan cloned from one root: the
-/// fp32 checkpoint, the test/calibration splits and the runtime handles.
+/// fp32 checkpoint, the test/calibration splits and the execution backend.
 pub struct ModelState<'a> {
-    pub runtime: &'a Runtime,
-    pub manifest: &'a Manifest,
+    pub exec: Executor<'a>,
     pub model: ModelInfo,
     pub theta: Vec<f32>,
     pub test: TestSet,
@@ -220,7 +264,19 @@ impl<'a> CompressionPlan<'a> {
     /// Load `model_name` with an explicit configuration.
     pub fn for_model_with(
         runtime: &'a Runtime,
-        manifest: &'a Manifest,
+        manifest: &Manifest,
+        model_name: &str,
+        cfg: RunConfig,
+    ) -> Result<Self> {
+        Self::for_model_on(Executor::Pjrt(runtime), manifest, model_name, cfg)
+    }
+
+    /// Load `model_name` onto an explicit execution backend. The simulator
+    /// backend needs only the manifest's data artifacts (parameters +
+    /// dataset bins), never the compiled HLO.
+    pub fn for_model_on(
+        exec: Executor<'a>,
+        manifest: &Manifest,
         model_name: &str,
         cfg: RunConfig,
     ) -> Result<Self> {
@@ -228,8 +284,18 @@ impl<'a> CompressionPlan<'a> {
         let theta = model.load_params(manifest)?;
         let test = TestSet::load(manifest)?;
         let calib = CalibSet::load(manifest, model.entry.batch.calib)?;
-        Ok(Self {
-            state: Rc::new(ModelState { runtime, manifest, model, theta, test, calib }),
+        Ok(Self::from_state(
+            ModelState { exec, model, theta, test, calib },
+            cfg,
+        ))
+    }
+
+    /// Root a plan on already-loaded state — the hermetic entrypoint used by
+    /// in-memory fixtures ([`crate::fixture`]), where no manifest exists on
+    /// disk at all.
+    pub fn from_state(state: ModelState<'a>, cfg: RunConfig) -> Self {
+        Self {
+            state: Rc::new(state),
             cache: Rc::new(StageCache::default()),
             cfg,
             threshold_mode: ThresholdMode::Sweep,
@@ -237,7 +303,19 @@ impl<'a> CompressionPlan<'a> {
             strategy: MappingStrategy::Packed,
             explicit: None,
             nominal: None,
-        })
+        }
+    }
+
+    /// The PJRT runtime behind this plan, for stages that can only run on
+    /// the AOT artifacts (Hutchinson HVP, FIM search).
+    fn pjrt_runtime(&self) -> Result<&'a Runtime> {
+        match self.state.exec {
+            Executor::Pjrt(rt) => Ok(rt),
+            Executor::Sim(_) => anyhow::bail!(
+                "this stage drives the AOT hvp/gsq executables and requires the pjrt backend \
+                 (the sim backend supports FixedCr thresholds with proxy sensitivity)"
+            ),
+        }
     }
 
     // ---- stage builders ---------------------------------------------------
@@ -334,7 +412,9 @@ impl<'a> CompressionPlan<'a> {
 
     fn sens_key(&self) -> String {
         let s = self.cfg.sensitivity;
-        format!("sens:{}:{}:{}", s.probes, s.calib_batches, s.seed)
+        // The backend is part of the key: the sim backend's magnitude proxy
+        // and the pjrt Hutchinson estimate are different artifacts.
+        format!("sens:{}:{}:{}:{}", self.state.exec.name(), s.probes, s.calib_batches, s.seed)
     }
 
     fn quant_part(&self) -> String {
@@ -409,24 +489,38 @@ impl<'a> CompressionPlan<'a> {
 
     // ---- stage artifacts ----------------------------------------------------
 
-    /// Hutchinson per-strip sensitivity scores (paper §4.1). Computed once
-    /// per configuration across every plan sharing this cache.
+    /// Per-strip sensitivity scores (paper §4.1). Computed once per
+    /// configuration across every plan sharing this cache. On the PJRT
+    /// backend this is the Hutchinson Hessian estimate through the `hvp`
+    /// executable; on the simulator backend it falls back to the
+    /// artifact-free magnitude proxy.
     pub fn sensitivity_scores(&self) -> Result<SensitivityScores> {
         let key = self.sens_key();
         let (v, fresh) = memo(&self.cache.sensitivity, &key, || {
             let st = &self.state;
-            crate::info!(
-                "hutchinson sensitivity: model={} probes={}",
-                st.model.name(),
-                self.cfg.sensitivity.probes
-            );
-            let analyzer = Analyzer {
-                runtime: st.runtime,
-                model: &st.model,
-                calib: &st.calib,
-                cfg: self.cfg.sensitivity,
-            };
-            analyzer.run(&st.theta)
+            match st.exec {
+                Executor::Pjrt(runtime) => {
+                    crate::info!(
+                        "hutchinson sensitivity: model={} probes={}",
+                        st.model.name(),
+                        self.cfg.sensitivity.probes
+                    );
+                    let analyzer = Analyzer {
+                        runtime,
+                        model: &st.model,
+                        calib: &st.calib,
+                        cfg: self.cfg.sensitivity,
+                    };
+                    analyzer.run(&st.theta)
+                }
+                Executor::Sim(_) => {
+                    crate::info!(
+                        "magnitude-proxy sensitivity (sim backend): model={}",
+                        st.model.name()
+                    );
+                    Ok(sensitivity::magnitude_proxy(&st.model, &st.theta))
+                }
+            }
         })?;
         if fresh {
             self.cache.bump(|s| s.sensitivity_runs += 1);
@@ -450,10 +544,11 @@ impl<'a> CompressionPlan<'a> {
                     fim_evals: 0,
                 }),
                 ThresholdMode::Alg1 | ThresholdMode::Sweep => {
+                    let runtime = self.pjrt_runtime()?;
                     let sens = self.sensitivity_scores()?;
                     let st = &self.state;
                     let search = ThresholdSearch {
-                        runtime: st.runtime,
+                        runtime,
                         model: &st.model,
                         calib: &st.calib,
                         sens: sens.as_ref(),
@@ -578,12 +673,23 @@ impl<'a> CompressionPlan<'a> {
     // ---- terminal operations ------------------------------------------------
 
     /// Offline terminal: quantize, map, cost and evaluate accuracy — the
-    /// report every table/figure of the paper consumes.
+    /// report every table/figure of the paper consumes. Runs on the plan's
+    /// root backend; use [`CompressionPlan::evaluate_on`] to pick another.
     pub fn evaluate(&self, opts: EvalOpts) -> Result<PipelineReport> {
+        self.evaluate_on(self.state.exec, opts)
+    }
+
+    /// Evaluate on an explicit backend. On `Executor::Sim` the accuracy pass
+    /// executes the quantized strips bit-serially on the simulated crossbars
+    /// (the per-strip bits/scales feed the cell programming); on
+    /// `Executor::Pjrt` the fake-quantized parameters run through the AOT
+    /// `fwd_eval` graph.
+    pub fn evaluate_on(&self, exec: Executor<'_>, opts: EvalOpts) -> Result<PipelineReport> {
         let key = format!(
-            "{}|{}|eval{}|nom{:?}|x{:016x}",
+            "{}|{}|eval{}:{}|nom{:?}|x{:016x}",
             self.quant_key(),
             self.map_key(),
+            exec.cache_tag(),
             opts.eval_batches,
             self.nominal,
             fnv64(self.cfg.xbar.to_value().to_json().bytes())
@@ -594,13 +700,25 @@ impl<'a> CompressionPlan<'a> {
             let qm = self.quantized()?;
             let mapping = self.mapping()?;
             let cost = xbar::cost(&mapping, &self.cfg.xbar);
-            let accuracy = eval::evaluate_batches(
-                st.runtime,
-                &st.model,
-                &qm.theta,
-                &st.test,
-                opts.eval_batches,
-            )?;
+            let accuracy = match exec {
+                Executor::Pjrt(rt) => eval::evaluate_batches(
+                    rt,
+                    &st.model,
+                    &qm.theta,
+                    &st.test,
+                    opts.eval_batches,
+                )?,
+                Executor::Sim(scfg) => {
+                    let sim = SimXbar::from_quantized(scfg, &qm);
+                    eval::evaluate_batches(
+                        &sim,
+                        &st.model,
+                        &qm.theta,
+                        &st.test,
+                        opts.eval_batches,
+                    )?
+                }
+            };
             let clustering;
             let bm: &BitMap = match &self.explicit {
                 Some(e) => e.bitmap.as_ref(),
@@ -645,19 +763,43 @@ impl<'a> CompressionPlan<'a> {
     }
 
     /// Online terminal: quantize through the plan's stages and start the
-    /// dynamic-batching serving engine on the result.
+    /// dynamic-batching serving engine on the result. Runs on the plan's
+    /// root backend; use [`CompressionPlan::deploy_on`] to pick another.
     pub fn deploy(&self, cfg: EngineConfig) -> Result<EngineHandle> {
-        let qm = self.quantized()?;
-        let st = &self.state;
-        let engine = Engine::new(st.manifest.dir.clone(), &st.model, qm.theta.clone(), cfg)?;
-        Ok(engine.start())
+        self.deploy_on(self.state.exec, cfg)
     }
 
-    /// Serve the unquantized fp32 checkpoint (reference deployments).
+    /// Deploy on an explicit backend. Sim deployments carry the quantized
+    /// per-strip precision into the worker so serving executes on the
+    /// simulated crossbars; startup failures surface as a typed
+    /// [`crate::coordinator::StartupError`] through the readiness handshake.
+    pub fn deploy_on(&self, exec: Executor<'_>, cfg: EngineConfig) -> Result<EngineHandle> {
+        let qm = self.quantized()?;
+        let st = &self.state;
+        let spec = match exec {
+            // The engine worker rebuilds its own PJRT client, from the same
+            // artifacts the passed runtime loads (not the plan root's —
+            // a sim-rooted plan can deploy_on a pjrt runtime).
+            Executor::Pjrt(rt) => BackendSpec::Pjrt { artifacts: rt.artifacts().to_path_buf() },
+            Executor::Sim(scfg) => BackendSpec::Sim {
+                cfg: scfg,
+                strips: Some(StripPrecision::from_quantized(&qm)),
+            },
+        };
+        let engine = Engine::new(spec, &st.model, qm.theta.clone(), cfg)?;
+        Ok(engine.start()?)
+    }
+
+    /// Serve the unquantized fp32 checkpoint (reference deployments). On the
+    /// simulator backend this runs every layer in exact f32.
     pub fn deploy_fp32(&self, cfg: EngineConfig) -> Result<EngineHandle> {
         let st = &self.state;
-        let engine = Engine::new(st.manifest.dir.clone(), &st.model, st.theta.clone(), cfg)?;
-        Ok(engine.start())
+        let spec = match st.exec {
+            Executor::Pjrt(rt) => BackendSpec::Pjrt { artifacts: rt.artifacts().to_path_buf() },
+            Executor::Sim(scfg) => BackendSpec::Sim { cfg: scfg, strips: None },
+        };
+        let engine = Engine::new(spec, &st.model, st.theta.clone(), cfg)?;
+        Ok(engine.start()?)
     }
 }
 

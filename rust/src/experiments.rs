@@ -10,7 +10,7 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 
 use crate::baselines;
-use crate::coordinator::{CompressionPlan, EvalOpts, PipelineReport, ThresholdMode};
+use crate::coordinator::{CompressionPlan, EvalOpts, Executor, PipelineReport, ThresholdMode};
 use crate::model::Manifest;
 use crate::report;
 use crate::runtime::Runtime;
@@ -22,18 +22,26 @@ use crate::{Result, RunConfig};
 /// terminal's options.
 pub type ExpOpts = EvalOpts;
 
-/// A set of compression plans sharing one runtime + configuration. Tables
-/// and figures over the same model reuse its loaded state and stage cache.
+/// A set of compression plans sharing one execution backend + configuration.
+/// Tables and figures over the same model reuse its loaded state and stage
+/// cache.
 pub struct Lab<'a> {
-    pub runtime: &'a Runtime,
+    pub exec: Executor<'a>,
     pub manifest: &'a Manifest,
     pub cfg: RunConfig,
     plans: RefCell<HashMap<String, CompressionPlan<'a>>>,
 }
 
 impl<'a> Lab<'a> {
+    /// A lab over the PJRT runtime (the pre-backend API shape).
     pub fn new(runtime: &'a Runtime, manifest: &'a Manifest, cfg: RunConfig) -> Self {
-        Self { runtime, manifest, cfg, plans: RefCell::new(HashMap::new()) }
+        Self::new_on(Executor::Pjrt(runtime), manifest, cfg)
+    }
+
+    /// A lab over an explicit execution backend (`--backend sim` runs every
+    /// table/figure on the native crossbar simulator).
+    pub fn new_on(exec: Executor<'a>, manifest: &'a Manifest, cfg: RunConfig) -> Self {
+        Self { exec, manifest, cfg, plans: RefCell::new(HashMap::new()) }
     }
 
     /// A plan rooted at `model` (loaded once per lab; every returned clone
@@ -41,12 +49,8 @@ impl<'a> Lab<'a> {
     pub fn plan(&self, model: &str) -> Result<CompressionPlan<'a>> {
         let mut plans = self.plans.borrow_mut();
         if !plans.contains_key(model) {
-            let plan = CompressionPlan::for_model_with(
-                self.runtime,
-                self.manifest,
-                model,
-                self.cfg.clone(),
-            )?;
+            let plan =
+                CompressionPlan::for_model_on(self.exec, self.manifest, model, self.cfg.clone())?;
             plans.insert(model.to_string(), plan);
         }
         Ok(plans.get(model).unwrap().clone())

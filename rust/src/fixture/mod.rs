@@ -1,0 +1,223 @@
+//! Synthetic, in-memory model + dataset fixtures.
+//!
+//! Everything the hermetic (artifact-free) test suite, the simulator
+//! example and the sim bench need: a `ModelEntry` whose parameter layout
+//! exactly mirrors `python/compile/model.py::param_specs`, an He-initialized
+//! flat checkpoint, and random CIFAR-shaped test/calibration splits. No
+//! file IO, no AOT artifacts, fully deterministic per seed.
+
+use std::collections::HashMap;
+
+use crate::dataset::{CalibSet, TestSet};
+use crate::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry, ModelInfo};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Classes of the synthetic CIFAR stand-in.
+pub const NUM_CLASSES: usize = 10;
+
+struct LayoutBuilder {
+    layers: Vec<LayerEntry>,
+    off: usize,
+    conv_off: usize,
+}
+
+impl LayoutBuilder {
+    fn add(&mut self, name: String, shape: Vec<usize>, kind: &str) {
+        let size: usize = shape.iter().product();
+        let convflat = (kind == "conv").then_some(self.conv_off);
+        self.layers.push(LayerEntry {
+            name,
+            shape,
+            kind: kind.to_string(),
+            theta_offset: self.off,
+            convflat_offset: convflat,
+        });
+        self.off += size;
+        if kind == "conv" {
+            self.conv_off += size;
+        }
+    }
+}
+
+/// Build a strip-conv ResNet `ModelEntry` with the `model.py` layout:
+/// stage widths `(width, 2·width, 4·width)`, `blocks[s]` residual blocks
+/// per stage, GroupNorm parameters interleaved exactly as the manifest
+/// exporter writes them.
+pub fn resnet_entry(name: &str, width: usize, blocks: &[usize; 3], batch: BatchSizes) -> ModelEntry {
+    let widths = [width, 2 * width, 4 * width];
+    let mut b = LayoutBuilder { layers: Vec::new(), off: 0, conv_off: 0 };
+
+    b.add("stem.conv".into(), vec![3, 3, 3, widths[0]], "conv");
+    let mut c_in = widths[0];
+    for (s, (&nblocks, &c_out)) in blocks.iter().zip(widths.iter()).enumerate() {
+        for blk in 0..nblocks {
+            let pfx = format!("s{s}.b{blk}");
+            b.add(format!("{pfx}.gn1.gamma"), vec![c_in], "gn");
+            b.add(format!("{pfx}.gn1.beta"), vec![c_in], "gn");
+            b.add(format!("{pfx}.conv1"), vec![3, 3, c_in, c_out], "conv");
+            b.add(format!("{pfx}.gn2.gamma"), vec![c_out], "gn");
+            b.add(format!("{pfx}.gn2.beta"), vec![c_out], "gn");
+            b.add(format!("{pfx}.conv2"), vec![3, 3, c_out, c_out], "conv");
+            if c_in != c_out {
+                b.add(format!("{pfx}.shortcut"), vec![1, 1, c_in, c_out], "conv");
+            }
+            c_in = c_out;
+        }
+    }
+    b.add("head.gn.gamma".into(), vec![c_in], "gn");
+    b.add("head.gn.beta".into(), vec![c_in], "gn");
+    b.add("head.dense.w".into(), vec![c_in, NUM_CLASSES], "dense_w");
+    b.add("head.dense.b".into(), vec![NUM_CLASSES], "dense_b");
+
+    let num_params = b.off;
+    let num_conv_params = b.conv_off;
+    ModelEntry {
+        name: name.to_string(),
+        num_params,
+        num_conv_params,
+        fp32_test_acc: 1.0 / NUM_CLASSES as f64, // untrained: chance level
+        params: BinEntry {
+            file: "<synthetic>".into(),
+            shape: vec![num_params],
+            dtype: "f32".into(),
+        },
+        layers: b.layers,
+        executables: HashMap::new(),
+        batch,
+    }
+}
+
+/// He-init conv/dense weights, unit gamma / zero beta — `model.py::init_params`.
+pub fn he_init(entry: &ModelEntry, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut theta = vec![0.0f32; entry.num_params];
+    for l in &entry.layers {
+        let size: usize = l.shape.iter().product();
+        let dst = &mut theta[l.theta_offset..l.theta_offset + size];
+        match l.kind.as_str() {
+            "conv" => {
+                let fan_in = (l.shape[0] * l.shape[1] * l.shape[2]) as f64;
+                let std = (2.0 / fan_in).sqrt() as f32;
+                for v in dst.iter_mut() {
+                    *v = rng.normal() * std;
+                }
+            }
+            "dense_w" => {
+                let std = (1.0 / l.shape[0] as f64).sqrt() as f32;
+                for v in dst.iter_mut() {
+                    *v = rng.normal() * std;
+                }
+            }
+            _ => {
+                if l.name.ends_with("gamma") {
+                    dst.fill(1.0);
+                }
+            }
+        }
+    }
+    theta
+}
+
+/// Random test split: `n` images `[n, 32, 32, 3]` + labels.
+pub fn synthetic_test_set(n: usize, seed: u64) -> TestSet {
+    let mut rng = Rng::seed_from_u64(seed);
+    let x = Tensor::new(
+        vec![n, 32, 32, 3],
+        (0..n * 32 * 32 * 3).map(|_| rng.normal() * 0.5).collect(),
+    );
+    let y = (0..n).map(|_| rng.below(NUM_CLASSES)).collect();
+    TestSet { x, y }
+}
+
+/// Random calibration split with one-hot labels.
+pub fn synthetic_calib_set(n: usize, batch: usize, seed: u64) -> CalibSet {
+    let mut rng = Rng::seed_from_u64(seed);
+    let x = Tensor::new(
+        vec![n, 32, 32, 3],
+        (0..n * 32 * 32 * 3).map(|_| rng.normal() * 0.5).collect(),
+    );
+    let mut y1h = vec![0.0f32; n * NUM_CLASSES];
+    for i in 0..n {
+        y1h[i * NUM_CLASSES + rng.below(NUM_CLASSES)] = 1.0;
+    }
+    CalibSet { x, y1h: Tensor::new(vec![n, NUM_CLASSES], y1h), batch }
+}
+
+/// A complete in-memory workload: model + checkpoint + data.
+pub struct Fixture {
+    pub model: ModelInfo,
+    pub theta: Vec<f32>,
+    pub test: TestSet,
+    pub calib: CalibSet,
+}
+
+/// The hermetic test workload: a width-8 / one-block-per-stage strip-conv
+/// ResNet (the `resnet8` layout at quarter width, so debug-mode bit-serial
+/// simulation stays fast), 16 test images in eval/serve batches of 4.
+pub fn tiny(seed: u64) -> Fixture {
+    let entry = resnet_entry(
+        "simnet-tiny",
+        8,
+        &[1, 1, 1],
+        BatchSizes { eval: 4, serve: 4, calib: 4 },
+    );
+    let model = ModelInfo::new(entry);
+    let theta = he_init(&model.entry, seed);
+    let test = synthetic_test_set(16, seed ^ 0xaaaa_5555);
+    let calib = synthetic_calib_set(8, 4, seed ^ 0x5555_aaaa);
+    Fixture { model, theta, test, calib }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_contiguous_and_conv_covered() {
+        let e = resnet_entry("t", 8, &[1, 1, 1], BatchSizes { eval: 4, serve: 4, calib: 4 });
+        let mut off = 0usize;
+        let mut conv = 0usize;
+        for l in &e.layers {
+            assert_eq!(l.theta_offset, off, "layer {} misplaced", l.name);
+            if l.kind == "conv" {
+                assert_eq!(l.convflat_offset, Some(conv));
+                conv += l.shape.iter().product::<usize>();
+            } else {
+                assert_eq!(l.convflat_offset, None);
+            }
+            off += l.shape.iter().product::<usize>();
+        }
+        assert_eq!(off, e.num_params);
+        assert_eq!(conv, e.num_conv_params);
+
+        // strips cover exactly the conv params (the manifest contract,
+        // asserted hermetically)
+        let info = ModelInfo::new(e);
+        let strip_params: usize = info.strips().iter().map(|s| info.layer(s.layer).d).sum();
+        assert_eq!(strip_params, info.entry.num_conv_params);
+    }
+
+    #[test]
+    fn he_init_is_deterministic_and_scaled() {
+        let e = resnet_entry("t", 8, &[1, 1, 1], BatchSizes { eval: 4, serve: 4, calib: 4 });
+        let a = he_init(&e, 3);
+        let b = he_init(&e, 3);
+        assert_eq!(a, b);
+        let c = he_init(&e, 4);
+        assert_ne!(a, c);
+        // gammas are exactly 1
+        let gn = e.layers.iter().find(|l| l.name.ends_with("gn1.gamma")).unwrap();
+        assert!(a[gn.theta_offset..gn.theta_offset + gn.shape[0]].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn tiny_fixture_shapes_cohere() {
+        let fx = tiny(1);
+        assert_eq!(fx.theta.len(), fx.model.entry.num_params);
+        assert_eq!(fx.test.x.shape(), &[16, 32, 32, 3]);
+        assert_eq!(fx.test.num_batches(fx.model.entry.batch.eval), 4);
+        assert_eq!(fx.calib.num_batches(), 2);
+        assert!(fx.model.num_strips() > 0);
+    }
+}

@@ -47,14 +47,39 @@
 //! bitmap with `bitmap_from` (e.g. `baselines::hap_bitmap`) and reuse the
 //! same quantize/map/evaluate/deploy tail.
 //!
+//! ## Execution backends
+//!
+//! Every forward pass — the accuracy evaluator, the serving engine, the
+//! parity tests — runs on an [`backend::ExecBackend`]. Two implementations
+//! ship, selected per plan root (`CompressionPlan::for_model_on`), per
+//! terminal (`evaluate_on`/`deploy_on`), or on the CLI via `--backend`:
+//!
+//! | backend | substrate | fidelity | requires |
+//! |---------|-----------|----------|----------|
+//! | `pjrt`  | AOT-compiled HLO through PJRT | training-parity f32 MACs on fake-quantized weights | `make artifacts` (manifest + HLO + XLA) |
+//! | `sim`   | [`backend::SimXbar`] native bit-serial crossbar simulator | per-strip cell slicing, input-bit phases, optional ADC quantization + seeded conductance noise; exact f32 for non-conv ops | nothing — runs anywhere |
+//!
+//! The simulator consumes the same quantization artifacts the mapper does
+//! (per-strip bits + scales), so the evaluate/deploy pipeline is exercised
+//! end to end on machines with no artifacts at all; [`fixture`] provides
+//! fully in-memory models/datasets for exactly that. With ideal converters
+//! the bit-serial decomposition is algebraically exact (property-tested
+//! against a reference f32 conv); with `adc_bits`/`noise_sigma` set it
+//! models the converter rounding and device variation the paper's §1 cites.
+//!
 //! ## Layers
 //!
 //! The Rust layer (this crate) is the paper's framework itself plus every
 //! substrate it depends on:
 //!
+//! * [`backend`] — pluggable execution backends: the `ExecBackend` trait,
+//!   the native bit-serial crossbar simulator (`SimXbar`) and the native
+//!   ResNet graph it runs on.
 //! * [`runtime`] — PJRT client wrapper: loads the AOT-compiled HLO-text
 //!   artifacts produced by `python/compile/aot.py` and executes them on the
 //!   request path (Python never runs at inference time).
+//! * [`fixture`] — synthetic in-memory models/datasets for the hermetic
+//!   (artifact-free) test suite and simulator demos.
 //! * [`tensor`] — minimal dense tensor + binary artifact IO.
 //! * [`model`] — manifest contract: parameter layout, conv layers, strips.
 //! * [`dataset`] — CIFAR-Syn test/calibration data loading + batching.
@@ -75,6 +100,7 @@
 //!   comparators used by the paper's tables.
 //! * [`report`] — emitters that regenerate the paper's tables/figures.
 
+pub mod backend;
 pub mod baselines;
 pub mod clustering;
 pub mod config;
@@ -82,6 +108,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod experiments;
 pub mod fim;
+pub mod fixture;
 pub mod model;
 pub mod quant;
 pub mod report;
@@ -91,8 +118,9 @@ pub mod tensor;
 pub mod util;
 pub mod xbar;
 
+pub use backend::{ExecBackend, SimXbar, SimXbarConfig};
 pub use config::RunConfig;
-pub use coordinator::{CompressionPlan, EvalOpts, PipelineReport, ThresholdMode};
+pub use coordinator::{CompressionPlan, EvalOpts, Executor, PipelineReport, ThresholdMode};
 pub use model::{Manifest, ModelInfo};
 pub use runtime::Runtime;
 pub use tensor::Tensor;

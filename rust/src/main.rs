@@ -3,7 +3,8 @@
 //! never invoked on the request path) and drive the staged
 //! `CompressionPlan` builder.
 
-use reram_mpq::coordinator::{EngineConfig, EvalOpts, ThresholdMode};
+use reram_mpq::backend::SimXbarConfig;
+use reram_mpq::coordinator::{EngineConfig, EvalOpts, Executor, ThresholdMode};
 use reram_mpq::experiments::{self, ExpOpts, Lab};
 use reram_mpq::util::cli::Args;
 use reram_mpq::xbar::MappingStrategy;
@@ -12,7 +13,14 @@ use reram_mpq::{artifacts_dir, Manifest, Result, RunConfig, Runtime};
 const USAGE: &str = "\
 reram-mpq — sensitivity-aware mixed-precision quantization for ReRAM CIM
 
-USAGE: reram-mpq [--artifacts DIR] [--config FILE.json] <command> [options]
+USAGE: reram-mpq [--artifacts DIR] [--config FILE.json] [--backend pjrt|sim]
+                 <command> [options]
+
+BACKENDS:
+  pjrt (default)  AOT-compiled HLO artifacts through the PJRT runtime
+  sim             native bit-serial crossbar simulator (no XLA / compiled
+                  HLO needed; sensitivity uses the magnitude proxy and the
+                  FIM search modes require pjrt)
 
 COMMANDS:
   hw-config                      print the hardware configuration (Table 1)
@@ -52,8 +60,18 @@ fn main() -> Result<()> {
     };
 
     let manifest = Manifest::load(&dir)?;
-    let runtime = Runtime::new(dir)?;
-    let lab = Lab::new(&runtime, &manifest, cfg.clone());
+    // The PJRT client only exists for the pjrt backend; the simulator needs
+    // no runtime (and no compiled HLO) at all.
+    let runtime = match args.get_or("backend", "pjrt").as_str() {
+        "pjrt" => Some(Runtime::new(dir)?),
+        "sim" => None,
+        other => anyhow::bail!("unknown backend '{other}' (expected pjrt|sim)"),
+    };
+    let exec = match &runtime {
+        Some(rt) => Executor::Pjrt(rt),
+        None => Executor::Sim(SimXbarConfig::from_xbar(&cfg.xbar)),
+    };
+    let lab = Lab::new_on(exec, &manifest, cfg.clone());
 
     match args.subcommand.as_deref().unwrap() {
         "hw-config" => {

@@ -46,6 +46,11 @@ impl Runtime {
         self.client.platform_name()
     }
 
+    /// Artifacts directory this runtime loads from.
+    pub fn artifacts(&self) -> &std::path::Path {
+        &self.dir
+    }
+
     /// Load + compile (or fetch from cache) the HLO-text artifact `file`.
     pub fn load(&self, file: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         if let Some(e) = self.cache.lock().unwrap().get(file) {

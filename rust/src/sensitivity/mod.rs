@@ -111,6 +111,18 @@ impl<'a> Analyzer<'a> {
     }
 }
 
+/// Artifact-free sensitivity proxy used by the native simulator backend
+/// (which has no HVP executable to drive): unit curvature per strip, so the
+/// score reduces to the HAP loss form with magnitude only,
+/// `s_i = ‖w_strip‖² / (2 · p_strip)`. Coarser than the Hutchinson estimate
+/// but order-preserving enough to exercise the clustering/alignment/mapping
+/// tail hermetically.
+pub fn magnitude_proxy(model: &ModelInfo, theta: &[f32]) -> Sensitivity {
+    let traces = vec![1.0f64; model.num_strips()];
+    let scores = score_strips(model, theta, &traces);
+    Sensitivity { scores, traces, probes: 0 }
+}
+
 /// Pure scoring helper (exposed for tests and the HAP baseline): combines
 /// externally-computed traces with weight norms.
 pub fn score_strips(model: &ModelInfo, theta: &[f32], traces: &[f64]) -> Vec<f64> {

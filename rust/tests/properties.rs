@@ -4,6 +4,7 @@
 
 use std::collections::HashMap;
 
+use reram_mpq::backend::{SimXbar, SimXbarConfig, StripPrecision};
 use reram_mpq::clustering::{align_to_capacity, cluster, cluster_at_cr};
 use reram_mpq::config::QuantConfig;
 use reram_mpq::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry, ModelInfo};
@@ -244,4 +245,131 @@ fn prop_capacity_strips_positive_and_monotone_in_cols() {
             assert!(c_big >= c_small, "bigger arrays hold at least as many strips");
         }
     }
+}
+
+// ---- SimXbar bit-serial simulator invariants -------------------------------
+
+/// Random quantized single-layer workload: (quantized theta, per-strip
+/// precision, patches, patch-row count).
+fn rand_sim_case(
+    rng: &mut Rng,
+    m: &ModelInfo,
+    mixed: bool,
+) -> (Vec<f32>, StripPrecision, Vec<f32>, usize) {
+    let theta: Vec<f32> = (0..m.entry.num_params).map(|_| rng.normal() * 0.5).collect();
+    let bits: Vec<u8> = (0..m.num_strips())
+        .map(|_| if mixed { [0u8, 4, 8][rng.below(3)] } else { 8 })
+        .collect();
+    let bm = BitMap { bits };
+    let qcfg = QuantConfig { device_sigma: 0.0, ..QuantConfig::default() };
+    let qm = quant::apply(m, &theta, &bm, &qcfg);
+    let l = m.layer(0);
+    let t = 1 + rng.below(4);
+    let patches: Vec<f32> = (0..t * l.k * l.k * l.d).map(|_| rng.normal()).collect();
+    (qm.theta.clone(), StripPrecision::from_quantized(&qm), patches, t)
+}
+
+#[test]
+fn prop_sim_full_precision_noise_off_matches_f32_reference() {
+    // The acceptance property: with a near-lossless DAC, ideal ADC and no
+    // noise, the bit-serial crossbar result equals a reference f32 conv on
+    // the same quantized weights within 1e-4.
+    let mut rng = Rng::seed_from_u64(43);
+    for case in 0..12 {
+        let m = rand_model(&mut rng);
+        let layer = m.layer(0).clone();
+        let (theta, sp, patches, t) = rand_sim_case(&mut rng, &m, case % 2 == 0);
+        let cfg = SimXbarConfig { input_bits: 24, ..SimXbarConfig::default() };
+        let got = SimXbar::new(cfg)
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        // f64-accumulated reference conv over the dequantized weights
+        let (k2, d, n) = (layer.k * layer.k, layer.d, layer.n);
+        for ti in 0..t {
+            for ch in 0..n {
+                let mut want = 0.0f64;
+                for g in 0..k2 {
+                    if sp.bits[g * n + ch] == 0 {
+                        continue; // pruned strips store nothing
+                    }
+                    for dd in 0..d {
+                        want += patches[ti * k2 * d + g * d + dd] as f64
+                            * theta[layer.theta_index(g, dd, ch)] as f64;
+                    }
+                }
+                let gotv = got[ti * n + ch] as f64;
+                assert!(
+                    (gotv - want).abs() < 1e-4,
+                    "case {case} t={ti} ch={ch}: sim {gotv} vs f32 reference {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sim_phase_decomposition_equals_integer_fast_path() {
+    // The explicit input-bit-phase × cell-slice × polarity loop must
+    // telescope to the integer fast path exactly when converters are ideal,
+    // across strip depths that do and do not span multiple row segments.
+    let mut rng = Rng::seed_from_u64(47);
+    for case in 0..8 {
+        let m = rand_model(&mut rng);
+        let layer = m.layer(0).clone();
+        let (theta, sp, patches, t) = rand_sim_case(&mut rng, &m, true);
+        let base = SimXbarConfig {
+            rows: [4usize, 16, 128][rng.below(3)],
+            input_bits: 7,
+            cell_bits: [1u8, 2, 3][rng.below(3)],
+            ..SimXbarConfig::default()
+        };
+        let fast = SimXbar::new(base)
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        let phased = SimXbar::new(SimXbarConfig { force_phase_loop: true, ..base })
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        for (i, (a, b)) in fast.iter().zip(&phased).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-5 * a.abs().max(1.0),
+                "case {case} elem {i}: fast {a} vs phased {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sim_adc_output_is_deterministic_and_actually_quantizes() {
+    let mut rng = Rng::seed_from_u64(53);
+    let m = rand_model(&mut rng);
+    let layer = m.layer(0).clone();
+    let (theta, sp, patches, t) = rand_sim_case(&mut rng, &m, false);
+    let ideal = SimXbar::new(SimXbarConfig::default())
+        .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+        .unwrap();
+    let cfg = SimXbarConfig::default().with_adc(4).with_noise(0.1, 7);
+    let run = |c: SimXbarConfig| {
+        SimXbar::new(c)
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap()
+    };
+    let a = run(cfg);
+    assert_eq!(a, run(cfg), "fixed seed must reproduce bit-identically");
+    assert_ne!(a, run(cfg.with_noise(0.1, 8)), "new seed must redraw device noise");
+    assert_ne!(a, ideal, "a 4-bit ADC over 128-row columns must cost accuracy");
+    // non-idealities distort but do not destroy the computation
+    let rms_ideal = (ideal.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
+        / ideal.len() as f64)
+        .sqrt();
+    let rms_err = (a
+        .iter()
+        .zip(&ideal)
+        .map(|(x, y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64)
+        .sqrt();
+    assert!(
+        rms_err < rms_ideal,
+        "ADC+noise error ({rms_err}) should stay below signal power ({rms_ideal})"
+    );
 }
