@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Perf gate over the bench-JSON pipeline.
+
+Compares `BENCH_*.json` files (emitted by `rust/src/util/bench.rs`; schema
+per record: name / iters / mean_ns / stddev_ns / min_ns / git_sha) against
+the committed `benches/baseline.json` and fails when any measurement's mean
+regresses by more than the tolerance (default 30%).
+
+Baseline entries whose `mean_ns` is null are *bootstrap* entries: they pin
+the measurement name into the pipeline (so a silently renamed/dropped bench
+is noticed) without gating its timing yet. Refresh them from a trusted run:
+
+    BENCH_QUICK=1 cargo bench --bench xbar_hotpath
+    BENCH_QUICK=1 cargo bench --bench sim_backend
+    python3 benches/check_regression.py --update BENCH_*.json
+
+Usage:
+    python3 benches/check_regression.py [--baseline benches/baseline.json]
+        [--tolerance 0.30] [--update] BENCH_*.json
+
+Exit status: 0 when no gated measurement regresses, 1 otherwise.
+Stdlib only — runs on a bare CI runner.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_current(paths):
+    """name -> mean_ns across every BENCH_*.json given."""
+    current = {}
+    for path in paths:
+        with open(path) as f:
+            doc = json.load(f)
+        for rec in doc.get("results", []):
+            current[rec["name"]] = float(rec["mean_ns"])
+    return current
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="benches/baseline.json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=None,
+        help="allowed fractional mean regression (default: baseline's, else 0.30)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline's mean_ns from the current runs instead of gating",
+    )
+    ap.add_argument(
+        "--require-all",
+        action="store_true",
+        help="fail when a baseline name is missing from the current runs "
+        "(use where every baseline bench is known to run, e.g. CI's "
+        "hermetic runner) — so a renamed/dropped bench breaks the gate "
+        "instead of silently shrinking it",
+    )
+    ap.add_argument("bench_json", nargs="+", help="BENCH_*.json files to check")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    tolerance = args.tolerance
+    if tolerance is None:
+        tolerance = float(baseline.get("tolerance", 0.30))
+    base = {r["name"]: r.get("mean_ns") for r in baseline.get("results", [])}
+    current = load_current(args.bench_json)
+
+    if args.update:
+        for rec in baseline.get("results", []):
+            if rec["name"] in current:
+                rec["mean_ns"] = current[rec["name"]]
+        known = {r["name"] for r in baseline.get("results", [])}
+        for name, mean in sorted(current.items()):
+            if name not in known:
+                baseline.setdefault("results", []).append(
+                    {"name": name, "mean_ns": mean}
+                )
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2)
+            f.write("\n")
+        print(f"baseline updated: {args.baseline} ({len(current)} measurements)")
+        return 0
+
+    regressions = []
+    bootstraps = []
+    missing = []
+    gated = 0
+    for name, ref in sorted(base.items()):
+        if name not in current:
+            # Environment-dependent rows (e.g. pjrt-only benches on an
+            # artifact-less runner) are reported, not failed — unless
+            # --require-all says every baseline name must be present.
+            missing.append(name)
+            print(f"note: baseline '{name}' not measured in this run")
+            continue
+        mean = current[name]
+        if ref is None:
+            bootstraps.append(name)
+            print(f"bootstrap {name}: mean {mean / 1e6:.3f} ms (no gate yet)")
+            continue
+        gated += 1
+        ratio = mean / ref if ref > 0 else float("inf")
+        status = "ok"
+        if ratio > 1.0 + tolerance:
+            status = "REGRESSION"
+            regressions.append((name, ref, mean, ratio))
+        print(
+            f"{status:>10} {name}: {mean / 1e6:.3f} ms vs baseline "
+            f"{ref / 1e6:.3f} ms ({ratio:.0%} of baseline)"
+        )
+    for name in sorted(set(current) - set(base)):
+        print(f"note: new measurement '{name}' not in baseline (add via --update)")
+
+    print(
+        f"perf gate: {gated} gated, {len(bootstraps)} bootstrap, "
+        f"{len(missing)} missing, {len(regressions)} regression(s), "
+        f"tolerance {tolerance:.0%}"
+    )
+    failed = False
+    if args.require_all and missing:
+        for name in missing:
+            print(
+                f"::error::bench '{name}' is in the baseline but was not "
+                "measured (renamed or dropped?)",
+                file=sys.stderr,
+            )
+        failed = True
+    if regressions:
+        for name, ref, mean, ratio in regressions:
+            print(
+                f"::error::bench '{name}' regressed {ratio - 1.0:+.1%} "
+                f"({ref / 1e6:.3f} ms -> {mean / 1e6:.3f} ms)",
+                file=sys.stderr,
+            )
+        failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,6 +16,13 @@ pub fn ctx() -> Ctx {
     Ctx { manifest, runtime }
 }
 
+/// Whether the AOT artifacts exist. Benches that can degrade to a hermetic
+/// subset check this instead of aborting — CI's `bench-smoke` job runs on
+/// a bare runner with no artifacts at all.
+pub fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
 /// Benches evaluate on a few batches — the cost model and mapper dominate
 /// what the tables measure; accuracy numbers for the record come from the
 /// CLI/EXPERIMENTS runs on the full test set.

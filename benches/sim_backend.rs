@@ -1,11 +1,18 @@
 //! Bench: the native crossbar-simulator hot paths — exact-f32 forward,
-//! bit-serial integer forward, and the faithful phase-loop conv with ADC +
-//! conductance noise. Fully hermetic (no artifacts), so this is the one
-//! bench that runs on a fresh clone:
+//! bit-serial integer forward, the faithful phase loop (packed bit-planes
+//! vs. scalar lane scan, with ADC + conductance noise), and the sharded
+//! serving engine at 1/2/4/8 workers. Fully hermetic (no artifacts), so
+//! this is the one bench that runs on a fresh clone:
 //!
 //!     cargo bench --bench sim_backend
+//!
+//! Every measurement is also emitted to `BENCH_sim_backend.json` (see
+//! `util::bench`) — CI's `bench-smoke` job runs this in quick mode
+//! (`BENCH_QUICK=1`), uploads the JSON, and gates the means against
+//! `benches/baseline.json`.
 
 use reram_mpq::backend::{ExecBackend, FwdKind, SimXbar, SimXbarConfig, StripPrecision};
+use reram_mpq::coordinator::{BackendSpec, Engine, EngineConfig};
 use reram_mpq::quant::{self, BitMap};
 use reram_mpq::tensor::Tensor;
 use reram_mpq::util::bench::Bench;
@@ -46,4 +53,60 @@ fn main() {
     bench.run("sim phase-loop forward, 4b ADC + noise (1 image)", || {
         noisy.forward(model, FwdKind::Eval, &qtheta_t, &x1).expect("forward")
     });
+
+    // 4. packed bit-planes vs scalar lane scan: the same noise-free 4-bit
+    // ADC phase loop, once through the u64 popcount path and once through
+    // the per-lane reference — bit-identical outputs, different speed.
+    // Single-threaded so the packing speedup is isolated from sharding.
+    let adc_cfg = SimXbarConfig::default().with_adc(4).with_threads(1);
+    let packed = SimXbar::new(adc_cfg).with_strips(StripPrecision::from_quantized(&qm));
+    bench.run("sim phase-loop 4b ADC, packed bit-planes (1 image)", || {
+        packed.forward(model, FwdKind::Eval, &qtheta_t, &x1).expect("forward")
+    });
+    let scalar = SimXbar::new(SimXbarConfig { scalar_lanes: true, ..adc_cfg })
+        .with_strips(StripPrecision::from_quantized(&qm));
+    bench.run("sim phase-loop 4b ADC, scalar lanes (1 image)", || {
+        scalar.forward(model, FwdKind::Eval, &qtheta_t, &x1).expect("forward")
+    });
+
+    // 5. sharded-engine throughput: 32 requests through the dynamic batcher
+    // at 1/2/4/8 backend workers. The simulator pins threads=1 so the
+    // engine-level sharding is what scales (not the per-conv tile shards).
+    let elems = 32 * 32 * 3;
+    let images: Vec<Vec<f32>> = (0..32)
+        .map(|j| {
+            let s = (j % fx.test.len()) * elems;
+            fx.test.x.data()[s..s + elems].to_vec()
+        })
+        .collect();
+    for workers in [1usize, 2, 4, 8] {
+        let spec = BackendSpec::Sim {
+            cfg: SimXbarConfig::default().with_threads(1),
+            strips: Some(StripPrecision::from_quantized(&qm)),
+        };
+        let engine = Engine::new(
+            spec,
+            model,
+            qm.theta.clone(),
+            EngineConfig::default().with_workers(workers),
+        )
+        .expect("engine");
+        let handle = engine.start().expect("engine start");
+        // warm the batcher once outside the timer
+        let _ = handle.classify(images[0].clone()).expect("warmup");
+        bench.run(
+            &format!("sim engine throughput, {workers} worker(s), 32 reqs"),
+            || {
+                let pendings: Vec<_> = images
+                    .iter()
+                    .map(|img| handle.submit(img.clone()).expect("submit"))
+                    .collect();
+                for p in pendings {
+                    p.wait().expect("reply");
+                }
+            },
+        );
+    }
+
+    bench.emit_json("sim_backend").expect("bench json");
 }

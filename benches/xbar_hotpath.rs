@@ -3,21 +3,63 @@
 //! profile that drives the §Perf optimization loop.
 //!
 //!     cargo bench --bench xbar_hotpath
+//!
+//! Without AOT artifacts the bench degrades to its hermetic subset
+//! (quantizer / mapper / cost model over the in-memory fixture) instead of
+//! aborting — CI's `bench-smoke` job runs exactly that on a bare runner.
+//! Every measurement is emitted to `BENCH_xbar_hotpath.json` and gated
+//! against `benches/baseline.json`.
 
 mod common;
 
 use reram_mpq::coordinator::{CompressionPlan, ThresholdMode};
-use reram_mpq::quant;
+use reram_mpq::quant::{self, BitMap};
 use reram_mpq::tensor::Tensor;
 use reram_mpq::util::bench::Bench;
 use reram_mpq::util::rng::Rng;
 use reram_mpq::xbar::{self, MappingStrategy, XbarConfig};
-use reram_mpq::RunConfig;
+use reram_mpq::{fixture, RunConfig};
 
 fn main() {
+    let bench = Bench::from_env();
+    if !common::have_artifacts() {
+        eprintln!("xbar_hotpath: no AOT artifacts — running the hermetic subset");
+        hermetic(&bench);
+        bench.emit_json("xbar_hotpath").expect("bench json");
+        return;
+    }
+    full(&bench);
+    bench.emit_json("xbar_hotpath").expect("bench json");
+}
+
+/// Artifact-free subset: quantizer, mapper and cost model over the
+/// in-memory fixture (the PJRT forward/kernel rows need `make artifacts`).
+fn hermetic(bench: &Bench) {
+    let cfg = RunConfig::default();
+    let fx = fixture::tiny(1);
+    let model = &fx.model;
+    let bits: Vec<u8> = (0..model.num_strips())
+        .map(|i| if i % 2 == 0 { 8 } else { 4 })
+        .collect();
+    let bm = BitMap { bits };
+    let xcfg = XbarConfig::default();
+
+    bench.run("quant::apply (fixture)", || {
+        quant::apply(model, &fx.theta, &bm, &cfg.quant)
+    });
+    bench.run("xbar::map_model packed (fixture)", || {
+        xbar::map_model(model, &bm, &xcfg, MappingStrategy::Packed)
+    });
+    bench.run("xbar::map_model origin (fixture)", || {
+        xbar::map_model(model, &bm, &xcfg, MappingStrategy::Origin)
+    });
+    let mapping = xbar::map_model(model, &bm, &xcfg, MappingStrategy::Packed);
+    bench.run("xbar::cost (fixture)", || xbar::cost(&mapping, &xcfg));
+}
+
+fn full(bench: &Bench) {
     let c = common::ctx();
     let cfg = RunConfig::default();
-    let bench = Bench::from_env();
 
     let plan = CompressionPlan::for_model_with(&c.runtime, &c.manifest, "resnet20", cfg.clone())
         .expect("plan")

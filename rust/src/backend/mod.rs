@@ -19,6 +19,34 @@
 //! The simulator is the higher-fidelity model of what the paper's hardware
 //! actually computes (the PJRT graphs fake-quantize weights but still do
 //! ideal f32 MACs); the PJRT backend is the faster, training-parity path.
+//!
+//! ## Bit-plane packing and the tile-sharding invariants
+//!
+//! The simulator's hot path is engineered for throughput without giving up
+//! fidelity. The phase loop's word-line drive vectors are packed into `u64`
+//! **bit-plane words** — one plane per (input-bit phase × polarity) on the
+//! activation side, one per (cell slice × cell bit × polarity) on the
+//! weight side — so each simulated column current is a popcount/shift
+//! accumulation over 64 lanes at a time instead of a branchy per-lane scan.
+//! Because a column current is a sum of small non-negative integers, the
+//! popcount total equals the scalar sum *exactly*, and the SAR-ADC transfer
+//! function sees identical inputs either way. On top of that, the per-tile
+//! (row-segment × column-strip) MVM loop shards across scoped worker
+//! threads (`SimXbarConfig::threads`; 0 = one per core).
+//!
+//! Two invariants make this safe to enable everywhere:
+//!
+//! 1. **Order preservation** — each shard owns a contiguous output-channel
+//!    range with a private accumulator, and per-(sample, channel) partial
+//!    sums are added in the same kernel-tap order as the sequential loop,
+//!    so floating-point accumulation is unchanged.
+//! 2. **Shard-stable noise** — the conductance-noise stream is seeded per
+//!    (seed, layer, strip), never from evaluation order, so a given strip
+//!    programs the same array state under any shard count.
+//!
+//! Together they guarantee results are **bit-identical** for every
+//! `threads` value and for the packed vs. scalar (`scalar_lanes`) path —
+//! property-tested in `tests/properties.rs`.
 
 pub mod nn;
 pub mod simxbar;

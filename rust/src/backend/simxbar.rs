@@ -15,8 +15,8 @@
 //!   slice × polarity × row segment of at most `rows` word lines). With
 //!   `adc_bits > 0` every current is quantized by a SAR ADC of that
 //!   resolution before the shift-and-add merge; with `noise_sigma > 0`
-//!   zero-mean Gaussian conductance noise (in cell-level units, seeded and
-//!   deterministic) perturbs every programmed cell.
+//!   zero-mean Gaussian conductance noise (in cell-level units, seeded per
+//!   (seed, layer, strip) and deterministic) perturbs every programmed cell.
 //! * **Digital merge** — phase/slice partial sums are shift-added and
 //!   scaled by `sa·sw`, exactly the paper's §4.3 stepwise accumulation.
 //!
@@ -26,6 +26,30 @@
 //! against the explicit phase loop). Non-conv layers (GroupNorm, ReLU,
 //! residual adds, pooling, dense head) run in exact f32 — the paper
 //! quantizes conv weights only.
+//!
+//! ## Execution strategy: bit-plane packing + tile sharding
+//!
+//! Two orthogonal optimizations keep the simulation faithful *and* fast,
+//! both **bit-identical** to the scalar reference by construction:
+//!
+//! * **Bit-plane packing.** The phase loop's word-line drive vectors are
+//!   packed into `u64` bit-plane words (one plane per input-bit phase ×
+//!   polarity, one per stored cell bit × polarity), and each column current
+//!   becomes a popcount/shift accumulation over the packed lanes instead of
+//!   a branchy per-lane scan. Currents are sums of small non-negative
+//!   integers, so the popcount total equals the scalar `f64` sum exactly;
+//!   the SAR-ADC transfer function sees identical inputs either way. The
+//!   packed path engages whenever cell conductances are integral
+//!   (`noise_sigma == 0`); conductance noise makes them real-valued, which
+//!   falls back to the scalar lane scan (`scalar_lanes` forces the fallback
+//!   for benchmarking).
+//! * **Tile sharding.** The per-tile (row-segment × column-strip) MVM loop
+//!   is sharded over `threads` scoped worker threads
+//!   (`std::thread::scope`), each owning a contiguous output-channel range
+//!   and a private accumulator. Per-(sample, channel) accumulation order is
+//!   the same as the sequential loop and the conductance-noise stream is
+//!   seeded per strip (not per evaluation order), so any worker count
+//!   produces bit-identical results.
 
 use std::sync::Mutex;
 
@@ -54,11 +78,21 @@ pub struct SimXbarConfig {
     /// Zero-mean Gaussian conductance noise per programmed cell, in units
     /// of one cell level; 0 = noise-free.
     pub noise_sigma: f64,
-    /// Seed for the conductance-noise draw (deterministic per seed).
+    /// Seed for the conductance-noise draw (deterministic per seed; the
+    /// stream is derived per (seed, layer, strip) so programmed array state
+    /// does not depend on evaluation order or thread sharding).
     pub seed: u64,
     /// Testing knob: run the explicit phase/slice loop even when ideal
     /// converters would permit the algebraically equal integer fast path.
     pub force_phase_loop: bool,
+    /// Worker threads sharding the per-tile (row-segment × column-strip)
+    /// MVM loop; 0 = one per available core, 1 = sequential. Results are
+    /// bit-identical for every value (see the module docs).
+    pub threads: usize,
+    /// Testing/bench knob: disable the packed u64 bit-plane popcount path
+    /// inside the phase loop and use the scalar per-lane scan instead
+    /// (numerically identical; this only trades speed).
+    pub scalar_lanes: bool,
 }
 
 impl Default for SimXbarConfig {
@@ -71,6 +105,8 @@ impl Default for SimXbarConfig {
             noise_sigma: 0.0,
             seed: 0x51b,
             force_phase_loop: false,
+            threads: 0,
+            scalar_lanes: false,
         }
     }
 }
@@ -103,6 +139,12 @@ impl SimXbarConfig {
         self.seed = seed;
         self
     }
+
+    /// Pin the tile-sharding worker count (0 = auto, 1 = sequential).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
 }
 
 /// Per-strip weight precision feeding the simulator (bit widths + scales,
@@ -119,6 +161,58 @@ impl StripPrecision {
     pub fn from_quantized(qm: &QuantizedModel) -> Self {
         Self { bits: qm.bits.clone(), scales: qm.scales.clone() }
     }
+}
+
+/// u64 words covering a `len`-lane row segment.
+fn words_of(len: usize) -> usize {
+    len.div_ceil(64)
+}
+
+/// Row-segment partition of `d` word lines into ranges of at most `rows`
+/// lanes: (lane start, lane count, u64-word offset) per segment, plus the
+/// total packed word count. Each segment packs into its own words so
+/// popcounts never cross a conversion boundary.
+fn segments(d: usize, rows: usize) -> (Vec<(usize, usize, usize)>, usize) {
+    let mut segs = Vec::new();
+    let mut start = 0usize;
+    let mut woff = 0usize;
+    while start < d {
+        let len = rows.min(d - start);
+        segs.push((start, len, woff));
+        woff += words_of(len);
+        start += len;
+    }
+    (segs, woff)
+}
+
+/// Immutable per-call state of one bit-serial conv, shared by every channel
+/// shard (everything here is read-only during the sharded MVM loop).
+struct ConvCtx<'a> {
+    layer: &'a ConvLayer,
+    theta: &'a [f32],
+    /// DAC codes, `[t, k²·d]`.
+    codes_a: &'a [i32],
+    /// Per-conversion-window activation scales, `[t]`.
+    sa: &'a [f32],
+    t: usize,
+    sp: &'a StripPrecision,
+    /// Strip-index base of this layer in `ModelInfo::strips()` order.
+    base: usize,
+    /// Row-segment partition of the layer depth `d`.
+    segs: Vec<(usize, usize, usize)>,
+    /// Packed u64 words per (phase/cell-bit × polarity) plane.
+    total_words: usize,
+    /// Ideal converters: take the integer-dot-product fast path.
+    exact: bool,
+    /// Run the phase loop on packed bit-planes (decided once here so the
+    /// plane builder below and the shard readers can never disagree).
+    use_packed: bool,
+    /// Input-bit phases (`input_bits - 1`).
+    phases: usize,
+    /// Packed activation bit-planes per kernel tap (empty unless
+    /// `use_packed`). Built once per conv call and shared read-only by
+    /// every channel shard — the planes are channel-independent.
+    a_planes: Vec<Vec<u64>>,
 }
 
 /// The simulator backend. Without strip metadata every conv runs in exact
@@ -157,6 +251,16 @@ impl SimXbar {
 
     pub fn from_quantized(cfg: SimXbarConfig, qm: &QuantizedModel) -> Self {
         Self::new(cfg).with_strips(StripPrecision::from_quantized(qm))
+    }
+
+    /// Effective shard count for a layer with `n` output channels.
+    fn effective_threads(&self, n: usize) -> usize {
+        let req = if self.cfg.threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            self.cfg.threads
+        };
+        req.min(n).max(1)
     }
 
     /// Bit-serial conv of one layer over im2col patches (the crossbar hot
@@ -214,20 +318,121 @@ impl SimXbar {
             }
         }
 
+        let (segs, total_words) = segments(d, cfg.rows);
         let exact = cfg.adc_bits == 0 && cfg.noise_sigma == 0.0 && !cfg.force_phase_loop;
-        // Conductance noise is drawn per programmed cell in a fixed
-        // (strip-major) order from a per-layer stream, so a given
-        // (seed, layer) pair always programs the same array state.
-        let mut rng = Rng::seed_from_u64(
-            cfg.seed ^ (layer.index as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15),
-        );
+        let mut ctx = ConvCtx {
+            layer,
+            theta,
+            codes_a: &codes_a,
+            sa: &sa,
+            t,
+            sp,
+            base,
+            segs,
+            total_words,
+            exact,
+            use_packed: !exact && cfg.noise_sigma == 0.0 && !cfg.scalar_lanes,
+            phases: (cfg.input_bits - 1) as usize,
+            a_planes: Vec::new(),
+        };
+        if ctx.use_packed {
+            let planes: Vec<Vec<u64>> =
+                (0..kk).map(|g| pack_activation_planes(&ctx, g)).collect();
+            ctx.a_planes = planes;
+        }
 
         let mut out = vec![0.0f32; t * n];
+        let threads = self.effective_threads(n);
+        if threads <= 1 {
+            self.conv_channel_range(&ctx, 0, n, &mut out)?;
+        } else {
+            // Shard the column-strip loop: each worker owns a contiguous
+            // channel range and a private [t, width] accumulator, so the
+            // per-(sample, channel) accumulation order is exactly the
+            // sequential loop's and the merged result is bit-identical for
+            // every worker count.
+            let chunk = n.div_ceil(threads);
+            let ranges: Vec<(usize, usize)> = (0..threads)
+                .map(|w| (w * chunk, ((w + 1) * chunk).min(n)))
+                .filter(|(c0, c1)| c1 > c0)
+                .collect();
+            let parts: Vec<Result<Vec<f32>>> = std::thread::scope(|scope| {
+                let ctx = &ctx;
+                let handles: Vec<_> = ranges
+                    .iter()
+                    .map(|&(c0, c1)| {
+                        scope.spawn(move || {
+                            let mut part = vec![0.0f32; t * (c1 - c0)];
+                            self.conv_channel_range(ctx, c0, c1, &mut part)?;
+                            Ok(part)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("sim shard thread panicked"))
+                    .collect()
+            });
+            for (&(c0, c1), part) in ranges.iter().zip(parts) {
+                let part = part?;
+                let w = c1 - c0;
+                for ti in 0..t {
+                    out[ti * n + c0..ti * n + c1].copy_from_slice(&part[ti * w..(ti + 1) * w]);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Execute every strip whose output channel lies in `[c0, c1)` over all
+    /// conversion windows, accumulating into `out` of shape `[t, c1 - c0]`.
+    fn conv_channel_range(
+        &self,
+        ctx: &ConvCtx<'_>,
+        c0: usize,
+        c1: usize,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let cfg = &self.cfg;
+        let layer = ctx.layer;
+        let d = layer.d;
+        let n = layer.n;
+        let kk = layer.k * layer.k;
+        let cols = kk * d;
+        let cw = c1 - c0;
+        let t = ctx.t;
+        let (exact, use_packed, phases) = (ctx.exact, ctx.use_packed, ctx.phases);
+        let mask = (1i32 << cfg.cell_bits) - 1;
+        let total_words = ctx.total_words;
+        let segs = &ctx.segs;
+
+        // SAR ADC transfer function over one row segment's column current.
+        let adc = |i_raw: f64, seg_rows: usize| -> f64 {
+            if cfg.adc_bits == 0 {
+                return i_raw;
+            }
+            let fs = seg_rows as f64 * mask as f64;
+            if fs <= 0.0 {
+                return i_raw;
+            }
+            let levels = (1u64 << cfg.adc_bits) as f64 - 1.0;
+            let step = (fs / levels).max(1.0);
+            (i_raw / step).round().clamp(0.0, levels) * step
+        };
+
         let mut codes_w = vec![0i32; d];
+        // Packed weight planes of the current strip, layout
+        // [cell slice × cell bit][polarity][segment words].
+        let mut w_planes: Vec<u64> = Vec::new();
+
         for g in 0..kk {
-            for ch in 0..n {
-                let idx = base + g * n + ch;
-                let bits = sp.bits[idx];
+            // Activation planes for this kernel tap, layout
+            // [ti][phase][polarity][segment words] — packed once per conv
+            // call in `ctx`, shared read-only across channel shards.
+            let a_planes: &[u64] = if use_packed { &ctx.a_planes[g] } else { &[] };
+            for ch in c0..c1 {
+                let idx = ctx.base + g * n + ch;
+                let bits = ctx.sp.bits[idx];
                 if bits == 0 {
                     continue; // pruned strip: no cells programmed
                 }
@@ -235,37 +440,86 @@ impl SimXbar {
                     (1..=16).contains(&bits),
                     "strip {idx} has unsupported bit width {bits}"
                 );
-                let sw = sp.scales[idx];
+                let sw = ctx.sp.scales[idx];
                 if sw <= 0.0 {
                     continue;
                 }
                 let q_w = quant::qmax(bits);
-                for (dd, cw) in codes_w.iter_mut().enumerate() {
-                    let wv = theta[layer.theta_index(g, dd, ch)];
-                    *cw = (wv / sw).round().clamp(-q_w, q_w) as i32;
+                for (dd, cwv) in codes_w.iter_mut().enumerate() {
+                    let wv = ctx.theta[layer.theta_index(g, dd, ch)];
+                    *cwv = (wv / sw).round().clamp(-q_w, q_w) as i32;
                 }
 
                 if exact {
                     // Ideal converters: the phase/slice decomposition
                     // telescopes to the plain integer dot product.
                     for ti in 0..t {
-                        let arow = &codes_a[ti * cols + g * d..ti * cols + (g + 1) * d];
+                        let arow = &ctx.codes_a[ti * cols + g * d..ti * cols + (g + 1) * d];
                         let mut acc = 0i64;
-                        for (&a, &cw) in arow.iter().zip(codes_w.iter()) {
-                            acc += a as i64 * cw as i64;
+                        for (&a, &cwv) in arow.iter().zip(codes_w.iter()) {
+                            acc += a as i64 * cwv as i64;
                         }
-                        out[ti * n + ch] += (acc as f64 * sa[ti] as f64 * sw as f64) as f32;
+                        out[ti * cw + (ch - c0)] +=
+                            (acc as f64 * ctx.sa[ti] as f64 * sw as f64) as f32;
                     }
                     continue;
                 }
 
-                // ---- program the differential, bit-sliced cell columns ----
-                let ncells = ((bits + cfg.cell_bits - 1) / cfg.cell_bits) as usize;
-                let mask = (1i32 << cfg.cell_bits) - 1;
+                let ncells = bits.div_ceil(cfg.cell_bits) as usize;
+
+                if use_packed {
+                    // ---- packed bit-plane phase loop (integral cells) ----
+                    pack_weight_planes(&mut w_planes, &codes_w, cfg.cell_bits, ncells, ctx);
+                    let cell_bits = cfg.cell_bits as usize;
+                    let stride_ti = phases * 2 * total_words;
+                    for ti in 0..t {
+                        let tb = ti * stride_ti;
+                        let mut total = 0.0f64;
+                        for &(_, len, woff) in segs {
+                            let nw = words_of(len);
+                            for p in 0..phases {
+                                let app = &a_planes[tb + (p * 2) * total_words + woff..][..nw];
+                                let apn = &a_planes[tb + (p * 2 + 1) * total_words + woff..][..nw];
+                                for j in 0..ncells {
+                                    // four currents: input polarity × column
+                                    let (mut ipp, mut ipn) = (0u64, 0u64);
+                                    let (mut inp, mut inn) = (0u64, 0u64);
+                                    for b in 0..cell_bits {
+                                        let row = (j * cell_bits + b) * 2;
+                                        let gp = &w_planes[row * total_words + woff..][..nw];
+                                        let gm = &w_planes[(row + 1) * total_words + woff..][..nw];
+                                        let (mut cpp, mut cpn) = (0u32, 0u32);
+                                        let (mut cnp, mut cnn) = (0u32, 0u32);
+                                        for w in 0..nw {
+                                            cpp += (app[w] & gp[w]).count_ones();
+                                            cpn += (app[w] & gm[w]).count_ones();
+                                            cnp += (apn[w] & gp[w]).count_ones();
+                                            cnn += (apn[w] & gm[w]).count_ones();
+                                        }
+                                        ipp += (cpp as u64) << b;
+                                        ipn += (cpn as u64) << b;
+                                        inp += (cnp as u64) << b;
+                                        inn += (cnn as u64) << b;
+                                    }
+                                    let w2 =
+                                        2.0f64.powi(p as i32 + (j as i32) * cfg.cell_bits as i32);
+                                    total += w2
+                                        * ((adc(ipp as f64, len) + adc(inn as f64, len))
+                                            - (adc(ipn as f64, len) + adc(inp as f64, len)));
+                                }
+                            }
+                        }
+                        out[ti * cw + (ch - c0)] += (total * ctx.sa[ti] as f64 * sw as f64) as f32;
+                    }
+                    continue;
+                }
+
+                // ---- scalar lane scan (noisy cells, or packing disabled) --
+                // program the differential, bit-sliced cell columns
                 let mut gpos = vec![0.0f64; ncells * d];
                 let mut gneg = vec![0.0f64; ncells * d];
-                for (dd, &cw) in codes_w.iter().enumerate() {
-                    let (p, q) = (cw.max(0), (-cw).max(0));
+                for (dd, &cwv) in codes_w.iter().enumerate() {
+                    let (p, q) = (cwv.max(0), (-cwv).max(0));
                     for j in 0..ncells {
                         let sh = (j as u32) * cfg.cell_bits as u32;
                         gpos[j * d + dd] = ((p >> sh) & mask) as f64;
@@ -273,32 +527,26 @@ impl SimXbar {
                     }
                 }
                 if cfg.noise_sigma > 0.0 {
+                    // Per-strip stream: a given (seed, layer, strip) always
+                    // programs the same array state, independent of which
+                    // shard evaluates it or in what order.
+                    let mut rng = Rng::seed_from_u64(
+                        cfg.seed
+                            ^ (layer.index as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                            ^ (idx as u64 + 1).wrapping_mul(0xbf58_476d_1ce4_e5b9),
+                    );
                     for v in gpos.iter_mut().chain(gneg.iter_mut()) {
                         *v += rng.normal() as f64 * cfg.noise_sigma;
                     }
                 }
 
                 // ---- input-bit phases × cell slices × row segments ----
-                let adc = |i_raw: f64, seg_rows: usize| -> f64 {
-                    if cfg.adc_bits == 0 {
-                        return i_raw;
-                    }
-                    let fs = seg_rows as f64 * mask as f64;
-                    if fs <= 0.0 {
-                        return i_raw;
-                    }
-                    let levels = (1u64 << cfg.adc_bits) as f64 - 1.0;
-                    let step = (fs / levels).max(1.0);
-                    (i_raw / step).round().clamp(0.0, levels) * step
-                };
                 for ti in 0..t {
-                    let arow = &codes_a[ti * cols + g * d..ti * cols + (g + 1) * d];
+                    let arow = &ctx.codes_a[ti * cols + g * d..ti * cols + (g + 1) * d];
                     let mut total = 0.0f64;
-                    let mut seg_start = 0usize;
-                    while seg_start < d {
-                        let seg_end = (seg_start + cfg.rows).min(d);
-                        let seg_rows = seg_end - seg_start;
-                        for p in 0..(cfg.input_bits - 1) as u32 {
+                    for &(seg_start, len, _) in segs {
+                        let seg_end = seg_start + len;
+                        for p in 0..phases as u32 {
                             let pbit = 1i32 << p;
                             for j in 0..ncells {
                                 // four currents: input polarity × column
@@ -321,17 +569,96 @@ impl SimXbar {
                                 }
                                 let w2 = 2.0f64.powi(p as i32 + (j as i32) * cfg.cell_bits as i32);
                                 total += w2
-                                    * ((adc(ipp, seg_rows) + adc(inn, seg_rows))
-                                        - (adc(ipn, seg_rows) + adc(inp, seg_rows)));
+                                    * ((adc(ipp, len) + adc(inn, len))
+                                        - (adc(ipn, len) + adc(inp, len)));
                             }
                         }
-                        seg_start = seg_end;
                     }
-                    out[ti * n + ch] += (total * sa[ti] as f64 * sw as f64) as f32;
+                    out[ti * cw + (ch - c0)] += (total * ctx.sa[ti] as f64 * sw as f64) as f32;
                 }
             }
         }
-        Ok(out)
+        Ok(())
+    }
+}
+
+/// Pack kernel tap `g`'s DAC codes into u64 bit-plane words: one plane per
+/// (input-bit phase × polarity), segmented like the row partition so a
+/// popcount never crosses a conversion boundary. Layout per sample:
+/// `[phase][polarity][segment words]`.
+fn pack_activation_planes(ctx: &ConvCtx<'_>, g: usize) -> Vec<u64> {
+    let d = ctx.layer.d;
+    let cols = ctx.layer.k * ctx.layer.k * d;
+    let total_words = ctx.total_words;
+    let stride_ti = ctx.phases * 2 * total_words;
+    let mut planes = vec![0u64; ctx.t * stride_ti];
+    for ti in 0..ctx.t {
+        let arow = &ctx.codes_a[ti * cols + g * d..ti * cols + (g + 1) * d];
+        let tb = ti * stride_ti;
+        for &(start, len, woff) in &ctx.segs {
+            for l in 0..len {
+                let a = arow[start + l];
+                if a == 0 {
+                    continue;
+                }
+                let pol = usize::from(a < 0);
+                let bit = 1u64 << (l % 64);
+                let w = woff + l / 64;
+                let mut m = a.unsigned_abs();
+                let mut p = 0usize;
+                while m != 0 {
+                    if m & 1 != 0 {
+                        planes[tb + (p * 2 + pol) * total_words + w] |= bit;
+                    }
+                    m >>= 1;
+                    p += 1;
+                }
+            }
+        }
+    }
+    planes
+}
+
+/// Pack one strip's integer weight codes into u64 cell-bit planes: one
+/// plane per (cell slice × cell bit × polarity), segmented like the row
+/// partition. Layout: `[cell slice × cell bit][polarity][segment words]`.
+fn pack_weight_planes(
+    planes: &mut Vec<u64>,
+    codes_w: &[i32],
+    cell_bits: u8,
+    ncells: usize,
+    ctx: &ConvCtx<'_>,
+) {
+    let total_words = ctx.total_words;
+    let cb = cell_bits as usize;
+    let mask = (1i32 << cell_bits) - 1;
+    planes.clear();
+    planes.resize(ncells * cb * 2 * total_words, 0);
+    for &(start, len, woff) in &ctx.segs {
+        for l in 0..len {
+            let cwv = codes_w[start + l];
+            if cwv == 0 {
+                continue;
+            }
+            let (p, q) = (cwv.max(0), (-cwv).max(0));
+            let bit = 1u64 << (l % 64);
+            let w = woff + l / 64;
+            for j in 0..ncells {
+                let sh = (j as u32) * cell_bits as u32;
+                let pv = (p >> sh) & mask;
+                let qv = (q >> sh) & mask;
+                for b in 0..cb {
+                    let cellbit = 1i32 << b;
+                    let row = (j * cb + b) * 2;
+                    if pv & cellbit != 0 {
+                        planes[row * total_words + w] |= bit;
+                    }
+                    if qv & cellbit != 0 {
+                        planes[(row + 1) * total_words + w] |= bit;
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -474,5 +801,51 @@ mod tests {
             .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
             .unwrap();
         assert_ne!(run(), other, "different seed must redraw the noise");
+    }
+
+    #[test]
+    fn sim_packed_adc_phase_loop_matches_scalar_lanes_exactly() {
+        // The packed popcount path and the scalar lane scan feed identical
+        // currents to the ADC — outputs must match bit for bit.
+        let m = layer_model(3, 10, 4);
+        let layer = m.layer(0).clone();
+        let (theta, sp) = quantized_layer(&m, 5, 8);
+        let mut rng = Rng::seed_from_u64(55);
+        let t = 3;
+        let patches: Vec<f32> =
+            (0..t * layer.k * layer.k * layer.d).map(|_| rng.normal()).collect();
+        let base = SimXbarConfig { rows: 4, ..SimXbarConfig::default() }.with_adc(5);
+        let packed = SimXbar::new(base)
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        let scalar = SimXbar::new(SimXbarConfig { scalar_lanes: true, ..base })
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        assert_eq!(packed, scalar);
+    }
+
+    #[test]
+    fn sim_thread_sharding_is_bit_identical_even_with_noise() {
+        // The noise stream is seeded per strip, so any shard count programs
+        // the same array state and sums in the same per-channel order.
+        let m = layer_model(3, 8, 6);
+        let layer = m.layer(0).clone();
+        let (theta, sp) = quantized_layer(&m, 8, 8);
+        let mut rng = Rng::seed_from_u64(77);
+        let t = 2;
+        let patches: Vec<f32> =
+            (0..t * layer.k * layer.k * layer.d).map(|_| rng.normal()).collect();
+        let noisy = SimXbarConfig { threads: 1, ..SimXbarConfig::default() }
+            .with_adc(4)
+            .with_noise(0.05, 11);
+        let single = SimXbar::new(noisy)
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        for threads in [2usize, 3, 8] {
+            let got = SimXbar::new(SimXbarConfig { threads, ..noisy })
+                .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+                .unwrap();
+            assert_eq!(single, got, "{threads}-way shard must not change results");
+        }
     }
 }

@@ -5,14 +5,23 @@
 //! Python is never involved.
 //!
 //! Built on std threads + channels (this environment has no tokio; the
-//! batching discipline is the same as a vLLM-style router's). The backend
-//! is constructed *inside* the worker thread — PJRT handles are not `Send` —
-//! and [`Engine::start`] blocks on a readiness handshake so a backend that
-//! cannot come up surfaces a typed [`StartupError`] to the caller instead
-//! of a log line and a silently dead queue.
+//! batching discipline is the same as a vLLM-style router's). The
+//! [`ShardedEngine`] runs one dispatcher thread (the batching loop) in
+//! front of `EngineConfig::workers` backend worker threads. Each worker
+//! constructs its own backend *inside* its thread — PJRT handles are not
+//! `Send` — and [`ShardedEngine::start`] blocks on a per-worker readiness
+//! handshake, aggregating failures into a typed [`StartupError`] so a
+//! backend that cannot come up surfaces to the caller instead of a log
+//! line and a silently dead queue. Formed batches are handed to the first
+//! worker with a free queue slot (falling back to a blocking round-robin
+//! send when all are busy), and shutdown drains every accepted request —
+//! replies are always delivered, as a [`Response`] or a typed
+//! [`BatchError`], never a dropped channel.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SendError, SyncSender, TrySendError,
+};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -24,7 +33,7 @@ use crate::Result;
 
 use super::metrics::Metrics;
 
-/// How the engine worker constructs its execution backend (inside the
+/// How each engine worker constructs its execution backend (inside the
 /// worker thread — PJRT handles are not `Send`, the simulator is).
 #[derive(Clone)]
 pub enum BackendSpec {
@@ -44,20 +53,27 @@ impl BackendSpec {
     }
 }
 
-/// Why the engine failed to come up. Returned by [`Engine::start`]'s
+/// Why the engine failed to come up. Returned by [`ShardedEngine::start`]'s
 /// readiness handshake so callers see *why* serving is down (missing
 /// artifacts, PJRT client failure, malformed deployment) instead of a
-/// swallowed log line.
+/// swallowed log line. With several workers, the first failure wins and
+/// `worker` names the shard that reported it.
 #[derive(Clone, Debug)]
 pub struct StartupError {
     /// Which backend failed ("pjrt" / "sim").
     pub backend: &'static str,
+    /// Index of the worker whose backend failed to build.
+    pub worker: usize,
     pub reason: String,
 }
 
 impl std::fmt::Display for StartupError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "engine {} backend failed to start: {}", self.backend, self.reason)
+        write!(
+            f,
+            "engine {} backend failed to start (worker {}): {}",
+            self.backend, self.worker, self.reason
+        )
     }
 }
 
@@ -100,11 +116,24 @@ pub struct EngineConfig {
     pub max_wait: Duration,
     /// Bounded queue length (backpressure).
     pub queue: usize,
+    /// Backend worker threads behind the batching loop. Each builds its own
+    /// backend instance in-thread; 1 is the classic single-worker engine.
+    /// Responses are bit-identical for every worker count (both backends
+    /// are per-sample deterministic).
+    pub workers: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { max_wait: Duration::from_millis(2), queue: 1024 }
+        Self { max_wait: Duration::from_millis(2), queue: 1024, workers: 1 }
+    }
+}
+
+impl EngineConfig {
+    /// `workers` sharded backend workers, defaults otherwise.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
     }
 }
 
@@ -147,9 +176,9 @@ impl EngineHandle {
     }
 }
 
-/// The engine: owns its backend spec (the backend itself lives entirely
-/// inside the batching thread), the deployed weights and the batching loop.
-pub struct Engine {
+/// The engine: owns its backend spec (backends live entirely inside the
+/// worker threads), the deployed weights, and the batching/dispatch loops.
+pub struct ShardedEngine {
     spec: BackendSpec,
     model: ModelInfo,
     theta: Tensor,
@@ -158,7 +187,20 @@ pub struct Engine {
     cfg: EngineConfig,
 }
 
-/// Worker-side state (constructed inside the engine thread).
+/// The pre-sharding name, kept as an alias: a `ShardedEngine` with
+/// `workers == 1` *is* the classic single-worker engine.
+pub type Engine = ShardedEngine;
+
+/// Everything a worker thread needs to build its in-thread backend.
+struct WorkerSeed {
+    spec: BackendSpec,
+    model: ModelInfo,
+    theta: Tensor,
+    batch: usize,
+    image_elems: usize,
+}
+
+/// Worker-side state (constructed inside a worker thread).
 struct Worker {
     backend: Box<dyn ExecBackend>,
     model: ModelInfo,
@@ -167,7 +209,38 @@ struct Worker {
     image_elems: usize,
 }
 
-impl Engine {
+impl WorkerSeed {
+    fn build(self) -> Result<Worker> {
+        // Backend-independent deployment validation; each backend's
+        // ready_check adds only its own substrate checks on top.
+        anyhow::ensure!(
+            self.theta.len() == self.model.entry.num_params,
+            "theta length {} does not match model ({} params)",
+            self.theta.len(),
+            self.model.entry.num_params
+        );
+        let backend: Box<dyn ExecBackend> = match &self.spec {
+            BackendSpec::Pjrt { artifacts } => Box::new(Runtime::new(artifacts.clone())?),
+            BackendSpec::Sim { cfg, strips } => {
+                let mut sim = SimXbar::new(*cfg);
+                if let Some(sp) = strips {
+                    sim = sim.with_strips(sp.clone());
+                }
+                Box::new(sim)
+            }
+        };
+        backend.ready_check(&self.model, &self.theta)?;
+        Ok(Worker {
+            backend,
+            model: self.model,
+            theta: self.theta,
+            batch: self.batch,
+            image_elems: self.image_elems,
+        })
+    }
+}
+
+impl ShardedEngine {
     pub fn new(
         spec: BackendSpec,
         model: &ModelInfo,
@@ -201,73 +274,141 @@ impl Engine {
         Self::new(BackendSpec::Pjrt { artifacts }, model, theta, cfg)
     }
 
-    fn build_worker(self) -> Result<Worker> {
-        // Backend-independent deployment validation; each backend's
-        // ready_check adds only its own substrate checks on top.
-        anyhow::ensure!(
-            self.theta.len() == self.model.entry.num_params,
-            "theta length {} does not match model ({} params)",
-            self.theta.len(),
-            self.model.entry.num_params
-        );
-        let backend: Box<dyn ExecBackend> = match &self.spec {
-            BackendSpec::Pjrt { artifacts } => Box::new(Runtime::new(artifacts.clone())?),
-            BackendSpec::Sim { cfg, strips } => {
-                let mut sim = SimXbar::new(*cfg);
-                if let Some(sp) = strips {
-                    sim = sim.with_strips(sp.clone());
-                }
-                Box::new(sim)
-            }
-        };
-        backend.ready_check(&self.model, &self.theta)?;
-        Ok(Worker {
-            backend,
-            model: self.model,
-            theta: self.theta,
-            batch: self.batch,
-            image_elems: self.image_elems,
-        })
-    }
-
-    /// Spawn the batching loop. Blocks until the worker thread has built its
-    /// backend and passed the readiness check, then returns the submission
-    /// handle; a backend that cannot come up yields a typed [`StartupError`]
-    /// instead of a dead queue. The loop exits when every handle is dropped.
+    /// Spawn the worker pool and the batching/dispatch loop. Blocks until
+    /// every worker thread has built its backend and passed the readiness
+    /// check, then returns the submission handle; any worker that cannot
+    /// come up yields a typed [`StartupError`] (first failure wins) instead
+    /// of a dead queue. The loops exit when every handle is dropped, after
+    /// draining and answering everything already accepted.
     pub fn start(self) -> std::result::Result<EngineHandle, StartupError> {
+        let workers = self.cfg.workers.max(1);
         let (tx, rx) = sync_channel::<Request>(self.cfg.queue);
-        let (ready_tx, ready_rx) = sync_channel::<std::result::Result<(), StartupError>>(1);
         let metrics = Arc::new(Metrics::default());
         let handle = EngineHandle { tx, metrics: metrics.clone() };
-
-        let cfg = self.cfg;
         let backend_name = self.spec.name();
-        std::thread::spawn(move || {
-            // The backend is created inside this thread (PJRT is !Send).
-            let worker = match self.build_worker() {
-                Ok(w) => {
-                    let _ = ready_tx.send(Ok(()));
-                    w
+        let cfg = self.cfg;
+        let batch_size = self.batch;
+
+        // With several workers, split the machine between them: an
+        // auto-threaded simulator (threads == 0) would otherwise spawn one
+        // tile shard per core *per worker*, oversubscribing the host by
+        // `workers ×` and inverting the engine-level scaling. Results are
+        // bit-identical for any thread count, so this is purely a
+        // scheduling choice.
+        let mut spec = self.spec;
+        if workers > 1 {
+            if let BackendSpec::Sim { cfg: scfg, .. } = &mut spec {
+                if scfg.threads == 0 {
+                    let cores =
+                        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+                    scfg.threads = (cores / workers).max(1);
                 }
-                Err(e) => {
-                    crate::error!("engine {backend_name} backend failed to start: {e:#}");
-                    let _ = ready_tx.send(Err(StartupError {
-                        backend: backend_name,
-                        reason: format!("{e:#}"),
-                    }));
-                    return;
-                }
+            }
+        }
+
+        // Per-worker readiness handshake: every worker reports exactly once
+        // (tagged with its index) and then *drops its sender*, so a worker
+        // that panics inside backend construction — reporting nothing —
+        // closes the channel instead of deadlocking the aggregation below.
+        type Readiness = (usize, std::result::Result<(), StartupError>);
+        let (ready_tx, ready_rx) = sync_channel::<Readiness>(workers);
+        // Per-worker batch queues, capacity 1: at most one batch waits
+        // behind the one a worker is executing, so dispatch can spill to a
+        // free worker instead of piling onto a busy one.
+        let mut batch_txs: Vec<SyncSender<Vec<Request>>> = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (btx, brx) = sync_channel::<Vec<Request>>(1);
+            batch_txs.push(btx);
+            let seed = WorkerSeed {
+                spec: spec.clone(),
+                model: self.model.clone(),
+                theta: self.theta.clone(),
+                batch: self.batch,
+                image_elems: self.image_elems,
             };
-            let mut pending: Vec<Request> = Vec::with_capacity(worker.batch);
+            let ready = ready_tx.clone();
+            let metrics = metrics.clone();
+            std::thread::spawn(move || {
+                // The backend is created inside this thread (PJRT is !Send).
+                let worker = match seed.build() {
+                    Ok(wk) => {
+                        let _ = ready.send((w, Ok(())));
+                        drop(ready);
+                        wk
+                    }
+                    Err(e) => {
+                        crate::error!("engine {backend_name} worker {w} failed to start: {e:#}");
+                        let _ = ready.send((
+                            w,
+                            Err(StartupError {
+                                backend: backend_name,
+                                worker: w,
+                                reason: format!("{e:#}"),
+                            }),
+                        ));
+                        return;
+                    }
+                };
+                // Batches arrive until the dispatcher drops this queue; each
+                // is answered in full — successes per request, failures with
+                // typed BatchError replies (no silently dropped channels).
+                while let Ok(mut batch) = brx.recv() {
+                    if let Err(e) = worker.run_batch(&mut batch, &metrics) {
+                        crate::error!("batch failed on worker {w}: {e}");
+                        metrics.observe_batch_failure(batch.len());
+                        let err = BatchError(e.to_string());
+                        for req in batch.drain(..) {
+                            let _ = req.reply.send(Err(err.clone()));
+                        }
+                    }
+                }
+            });
+        }
+        drop(ready_tx);
+
+        let mut failure: Option<StartupError> = None;
+        let mut reported = vec![false; workers];
+        for _ in 0..workers {
+            match ready_rx.recv() {
+                Ok((w, Ok(()))) => reported[w] = true,
+                Ok((w, Err(e))) => {
+                    reported[w] = true;
+                    failure.get_or_insert(e);
+                }
+                Err(_) => {
+                    // Every live worker has reported and dropped its sender,
+                    // yet reports are missing: a worker thread panicked
+                    // during backend construction. Still a typed failure,
+                    // attributed to the first silent worker.
+                    let w = reported.iter().position(|&r| !r).unwrap_or(0);
+                    failure.get_or_insert(StartupError {
+                        backend: backend_name,
+                        worker: w,
+                        reason: "engine worker exited before the readiness handshake".into(),
+                    });
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            // Dropping batch_txs here lets any healthy workers exit cleanly.
+            return Err(e);
+        }
+
+        // Dispatcher: the batching loop (size- or deadline-triggered), then
+        // hand-off to the worker pool.
+        std::thread::spawn(move || {
+            let mut rr = 0usize;
+            let mut pending: Vec<Request> = Vec::with_capacity(batch_size);
             loop {
                 // Wait for the first request of a batch.
                 match rx.recv() {
                     Ok(r) => pending.push(r),
-                    Err(_) => break, // all senders gone
+                    Err(_) => break, // all handles gone and the queue drained
                 }
                 let deadline = Instant::now() + cfg.max_wait;
                 // Fill until size- or deadline-triggered.
-                while pending.len() < worker.batch {
+                while pending.len() < batch_size {
                     let now = Instant::now();
                     if now >= deadline {
                         break;
@@ -278,27 +419,64 @@ impl Engine {
                         Err(RecvTimeoutError::Disconnected) => break,
                     }
                 }
-                if let Err(e) = worker.run_batch(&mut pending, &metrics) {
-                    crate::error!("batch failed: {e}");
-                    // Answer every pending request with a typed error (no
-                    // silently dropped reply channels) and count the failure.
-                    metrics.observe_batch_failure(pending.len());
-                    let err = BatchError(e.to_string());
-                    for req in pending.drain(..) {
-                        let _ = req.reply.send(Err(err.clone()));
-                    }
-                }
+                let batch = std::mem::replace(&mut pending, Vec::with_capacity(batch_size));
+                dispatch(&batch_txs, &mut rr, batch, &metrics);
             }
+            // Dropping the worker queues ends the worker loops once they
+            // finish what was dispatched; every accepted request has been
+            // handed off, so every reply channel gets an answer.
         });
 
-        match ready_rx.recv() {
-            Ok(Ok(())) => Ok(handle),
-            Ok(Err(e)) => Err(e),
-            Err(_) => Err(StartupError {
-                backend: backend_name,
-                reason: "engine worker exited before the readiness handshake".into(),
-            }),
+        Ok(handle)
+    }
+}
+
+/// Hand a formed batch to the worker pool: first worker with a free queue
+/// slot starting at the round-robin cursor (cheap least-loaded — a busy
+/// worker is skipped, uniform load still spreads evenly). When every live
+/// queue is full, block on the first known-alive (Full) worker seen —
+/// never on a disconnected one — and only when *no* worker is left alive
+/// answer the batch with typed errors.
+fn dispatch(
+    batch_txs: &[SyncSender<Vec<Request>>],
+    rr: &mut usize,
+    mut batch: Vec<Request>,
+    metrics: &Metrics,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let target = *rr % batch_txs.len();
+    *rr = rr.wrapping_add(1);
+    let mut alive: Option<usize> = None;
+    for i in 0..batch_txs.len() {
+        let k = (target + i) % batch_txs.len();
+        match batch_txs[k].try_send(batch) {
+            Ok(()) => return,
+            Err(TrySendError::Full(b)) => {
+                alive.get_or_insert(k);
+                batch = b;
+            }
+            Err(TrySendError::Disconnected(b)) => batch = b,
         }
+    }
+    let Some(k) = alive else {
+        // Every worker is gone (they can only have panicked mid-run):
+        // answer the requests with typed errors, not dropped channels.
+        fail_batch(batch, metrics);
+        return;
+    };
+    if let Err(SendError(b)) = batch_txs[k].send(batch) {
+        fail_batch(b, metrics);
+    }
+}
+
+/// Answer every request of an undeliverable batch with a typed error.
+fn fail_batch(batch: Vec<Request>, metrics: &Metrics) {
+    metrics.observe_batch_failure(batch.len());
+    let err = BatchError("engine worker unavailable".into());
+    for req in batch {
+        let _ = req.reply.send(Err(err.clone()));
     }
 }
 

@@ -1,7 +1,7 @@
 //! L3 coordinator: the staged compression-plan builder, the accuracy
-//! evaluator (generic over execution backends), the serving engine
-//! (dynamic batching over PJRT or the native crossbar simulator) and its
-//! metrics.
+//! evaluator (generic over execution backends), the sharded serving engine
+//! (dynamic batching dispatched over N backend workers, PJRT or the native
+//! crossbar simulator) and its metrics.
 
 pub mod engine;
 pub mod eval;
@@ -10,7 +10,8 @@ pub mod pipeline;
 pub mod plan;
 
 pub use engine::{
-    BackendSpec, BatchError, Engine, EngineConfig, EngineHandle, Response, StartupError,
+    BackendSpec, BatchError, Engine, EngineConfig, EngineHandle, Response, ShardedEngine,
+    StartupError,
 };
 pub use eval::{evaluate, evaluate_batches, Accuracy};
 pub use metrics::{Metrics, Snapshot};

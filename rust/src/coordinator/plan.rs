@@ -78,7 +78,9 @@ impl Executor<'_> {
 
     /// Full cache-key tag: two sim evaluations with different fidelity knobs
     /// (ADC resolution, noise sigma/seed, geometry) are different artifacts
-    /// and must never alias in the stage cache.
+    /// and must never alias in the stage cache. The execution-strategy knobs
+    /// (`threads`, `scalar_lanes`) are deliberately excluded: they are
+    /// bit-identical by construction, so they *should* alias.
     fn cache_tag(&self) -> String {
         match self {
             Executor::Pjrt(_) => "pjrt".into(),
@@ -770,9 +772,12 @@ impl<'a> CompressionPlan<'a> {
     }
 
     /// Deploy on an explicit backend. Sim deployments carry the quantized
-    /// per-strip precision into the worker so serving executes on the
-    /// simulated crossbars; startup failures surface as a typed
-    /// [`crate::coordinator::StartupError`] through the readiness handshake.
+    /// per-strip precision into every engine worker so serving executes on
+    /// the simulated crossbars; `cfg.workers` shards the engine across N
+    /// backend workers (responses stay bit-identical — both backends are
+    /// per-sample deterministic), and startup failures surface as a typed
+    /// [`crate::coordinator::StartupError`] through the per-worker
+    /// readiness handshake.
     pub fn deploy_on(&self, exec: Executor<'_>, cfg: EngineConfig) -> Result<EngineHandle> {
         let qm = self.quantized()?;
         let st = &self.state;

@@ -10,7 +10,9 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 
 use crate::baselines;
-use crate::coordinator::{CompressionPlan, EvalOpts, Executor, PipelineReport, ThresholdMode};
+use crate::coordinator::{
+    CompressionPlan, EngineConfig, EvalOpts, Executor, PipelineReport, ThresholdMode,
+};
 use crate::model::Manifest;
 use crate::report;
 use crate::runtime::Runtime;
@@ -29,6 +31,7 @@ pub struct Lab<'a> {
     pub exec: Executor<'a>,
     pub manifest: &'a Manifest,
     pub cfg: RunConfig,
+    engine: EngineConfig,
     plans: RefCell<HashMap<String, CompressionPlan<'a>>>,
 }
 
@@ -41,7 +44,32 @@ impl<'a> Lab<'a> {
     /// A lab over an explicit execution backend (`--backend sim` runs every
     /// table/figure on the native crossbar simulator).
     pub fn new_on(exec: Executor<'a>, manifest: &'a Manifest, cfg: RunConfig) -> Self {
-        Self { exec, manifest, cfg, plans: RefCell::new(HashMap::new()) }
+        Self {
+            exec,
+            manifest,
+            cfg,
+            engine: EngineConfig::default(),
+            plans: RefCell::new(HashMap::new()),
+        }
+    }
+
+    /// Serving-engine configuration for deployments driven from this lab
+    /// (the CLI `serve` command passes it to the plan's deploy terminal).
+    pub fn engine_config(&self) -> EngineConfig {
+        self.engine
+    }
+
+    /// Replace the serving-engine configuration (queue, batching deadline,
+    /// sharded worker count) used by subsequent deploys.
+    pub fn with_engine_config(mut self, engine: EngineConfig) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Shorthand: shard subsequent deploys across `workers` engine workers.
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.engine.workers = workers;
+        self
     }
 
     /// A plan rooted at `model` (loaded once per lab; every returned clone

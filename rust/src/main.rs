@@ -4,7 +4,7 @@
 //! `CompressionPlan` builder.
 
 use reram_mpq::backend::SimXbarConfig;
-use reram_mpq::coordinator::{EngineConfig, EvalOpts, Executor, ThresholdMode};
+use reram_mpq::coordinator::{EvalOpts, Executor, ThresholdMode};
 use reram_mpq::experiments::{self, ExpOpts, Lab};
 use reram_mpq::util::cli::Args;
 use reram_mpq::xbar::MappingStrategy;
@@ -32,8 +32,9 @@ COMMANDS:
   table3   [--eval-batches N] [--json]   regenerate Table 3 (CR sweep + energy)
   table4   [--json]                      regenerate Table 4 (crossbar utilization)
   fig8     [--eval-batches N] [--json]   regenerate Figure 8 (accuracy vs CR)
-  serve    [--model M] [--requests N] [--cr R]
-                                 run the batching engine over test images
+  serve    [--model M] [--requests N] [--cr R] [--workers N]
+                                 run the sharded batching engine over test
+                                 images (N backend workers; default 1)
 ";
 
 fn opts(args: &Args) -> Result<ExpOpts> {
@@ -71,7 +72,11 @@ fn main() -> Result<()> {
         Some(rt) => Executor::Pjrt(rt),
         None => Executor::Sim(SimXbarConfig::from_xbar(&cfg.xbar)),
     };
-    let lab = Lab::new_on(exec, &manifest, cfg.clone());
+    let mut lab = Lab::new_on(exec, &manifest, cfg.clone());
+    if let Some(workers) = args.get_usize("workers")? {
+        anyhow::ensure!(workers >= 1, "--workers must be >= 1");
+        lab = lab.with_workers(workers);
+    }
 
     match args.subcommand.as_deref().unwrap() {
         "hw-config" => {
@@ -183,13 +188,14 @@ fn main() -> Result<()> {
 /// terminal and report throughput + latency + accuracy.
 fn serve(lab: &Lab, model: &str, requests: usize, cr: Option<f64>) -> Result<()> {
     let plan = lab.plan(model)?;
+    let ecfg = lab.engine_config();
     // Quantize at the requested CR (or serve fp32).
     let handle = match cr {
         Some(c) => plan
             .clone()
             .threshold(ThresholdMode::FixedCr(c))
-            .deploy(EngineConfig::default())?,
-        None => plan.deploy_fp32(EngineConfig::default())?,
+            .deploy(ecfg)?,
+        None => plan.deploy_fp32(ecfg)?,
     };
     // Warm the executable before timing.
     let _ = handle.classify(vec![0.0; 32 * 32 * 3])?;
@@ -219,9 +225,10 @@ fn serve(lab: &Lab, model: &str, requests: usize, cr: Option<f64>) -> Result<()>
     let dt = t0.elapsed();
     let m = handle.metrics.snapshot();
     println!(
-        "served {n} requests in {:.3}s  ({:.1} req/s)  acc={:.2}%",
+        "served {n} requests in {:.3}s  ({:.1} req/s, {} worker(s))  acc={:.2}%",
         dt.as_secs_f64(),
         n as f64 / dt.as_secs_f64(),
+        ecfg.workers.max(1),
         correct as f64 / n as f64 * 100.0
     );
     println!(

@@ -1,9 +1,23 @@
 //! Minimal benchmark harness (offline build — no `criterion`).
 //!
-//! Warmup + timed iterations, reporting mean / stddev / min. Used by the
-//! `benches/*.rs` targets (declared `harness = false`).
+//! Warmup + timed iterations, reporting mean / stddev / min — and, so
+//! benches stop being write-only, machine-readable JSON: every measurement
+//! a runner records can be emitted to `BENCH_<name>.json` (schema per
+//! record: `name` / `iters` / `mean_ns` / `stddev_ns` / `min_ns` /
+//! `git_sha`), which CI's `bench-smoke` job uploads and gates against
+//! `benches/baseline.json`. Used by the `benches/*.rs` targets (declared
+//! `harness = false`).
+//!
+//! Environment knobs (see [`Bench::from_env`]): `BENCH_QUICK=1` switches to
+//! the CI smoke profile, and `BENCH_WARMUP` / `BENCH_MIN_ITERS` /
+//! `BENCH_MAX_ITERS` / `BENCH_BUDGET_SECS` override fields individually.
+//! `BENCH_JSON_DIR` redirects where the JSON lands (default: cwd).
 
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::{obj, Value};
 
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
@@ -26,14 +40,50 @@ impl Measurement {
             self.iters
         )
     }
+
+    /// JSON record for the perf pipeline (nanosecond units).
+    pub fn to_value(&self, git_sha: &str) -> Value {
+        obj(vec![
+            ("name", Value::Str(self.name.clone())),
+            ("iters", Value::Num(self.iters as f64)),
+            ("mean_ns", Value::Num(self.mean.as_nanos() as f64)),
+            ("stddev_ns", Value::Num(self.stddev.as_nanos() as f64)),
+            ("min_ns", Value::Num(self.min.as_nanos() as f64)),
+            ("git_sha", Value::Str(git_sha.to_string())),
+        ])
+    }
 }
 
-/// Benchmark runner with a time budget per benchmark.
+/// Git SHA stamped into the bench JSON: the short working-tree hash, the
+/// `GITHUB_SHA` env (detached CI checkouts), or "unknown".
+pub fn git_sha() -> String {
+    if let Ok(out) = std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+    {
+        if out.status.success() {
+            let s = String::from_utf8_lossy(&out.stdout).trim().to_string();
+            if !s.is_empty() {
+                return s;
+            }
+        }
+    }
+    if let Ok(s) = std::env::var("GITHUB_SHA") {
+        if !s.is_empty() {
+            return s.chars().take(12).collect();
+        }
+    }
+    "unknown".into()
+}
+
+/// Benchmark runner with a time budget per benchmark. Records every
+/// measurement it takes so the run can be emitted as JSON afterwards.
 pub struct Bench {
     pub warmup: usize,
     pub min_iters: usize,
     pub max_iters: usize,
     pub budget: Duration,
+    results: RefCell<Vec<Measurement>>,
 }
 
 impl Default for Bench {
@@ -43,30 +93,57 @@ impl Default for Bench {
             min_iters: 3,
             max_iters: 30,
             budget: Duration::from_secs(10),
+            results: RefCell::new(Vec::new()),
         }
     }
 }
 
 impl Bench {
-    /// Fast profile for CI-style runs (override with BENCH_BUDGET_SECS).
+    /// The default profile with the environment overrides applied:
+    /// `BENCH_QUICK=1` first (CI smoke mode: no warmup, 1–3 iterations,
+    /// 1 s budget), then any individual `BENCH_WARMUP` / `BENCH_MIN_ITERS`
+    /// / `BENCH_MAX_ITERS` / `BENCH_BUDGET_SECS` on top.
     pub fn from_env() -> Self {
         let mut b = Self::default();
-        if let Ok(s) = std::env::var("BENCH_BUDGET_SECS") {
-            if let Ok(secs) = s.parse::<u64>() {
-                b.budget = Duration::from_secs(secs);
-            }
-        }
+        b.apply_env(&|k| std::env::var(k).ok());
         b
     }
 
-    /// Run `f` repeatedly, returning the measurement (and printing it).
+    /// Apply the env-style overrides through `get` (injected for tests).
+    pub fn apply_env(&mut self, get: &dyn Fn(&str) -> Option<String>) {
+        if get("BENCH_QUICK").as_deref() == Some("1") {
+            self.warmup = 0;
+            self.min_iters = 1;
+            self.max_iters = 3;
+            self.budget = Duration::from_secs(1);
+        }
+        if let Some(v) = get("BENCH_WARMUP").and_then(|s| s.parse::<usize>().ok()) {
+            self.warmup = v;
+        }
+        if let Some(v) = get("BENCH_MIN_ITERS").and_then(|s| s.parse::<usize>().ok()) {
+            self.min_iters = v;
+        }
+        if let Some(v) = get("BENCH_MAX_ITERS").and_then(|s| s.parse::<usize>().ok()) {
+            self.max_iters = v;
+        }
+        if let Some(secs) = get("BENCH_BUDGET_SECS").and_then(|s| s.parse::<u64>().ok()) {
+            self.budget = Duration::from_secs(secs);
+        }
+        // At least one measured iteration, and a coherent min/max pair —
+        // the quick profile must never divide by zero or emit NaN.
+        self.min_iters = self.min_iters.max(1);
+        self.max_iters = self.max_iters.max(self.min_iters);
+    }
+
+    /// Run `f` repeatedly, returning the measurement (and printing and
+    /// recording it).
     pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
         }
         let t_start = Instant::now();
         let mut times = Vec::new();
-        while times.len() < self.min_iters
+        while times.len() < self.min_iters.max(1)
             || (times.len() < self.max_iters && t_start.elapsed() < self.budget)
         {
             let t0 = Instant::now();
@@ -75,11 +152,18 @@ impl Bench {
         }
         let n = times.len();
         let mean_s = times.iter().map(|d| d.as_secs_f64()).sum::<f64>() / n as f64;
-        let var = times
-            .iter()
-            .map(|d| (d.as_secs_f64() - mean_s).powi(2))
-            .sum::<f64>()
-            / n as f64;
+        // Sample stddev (n−1 divisor), guarded so a single-iteration quick
+        // run reports 0 instead of leaking a division by zero / NaN into
+        // the JSON output.
+        let var = if n < 2 {
+            0.0
+        } else {
+            times
+                .iter()
+                .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+                .sum::<f64>()
+                / (n - 1) as f64
+        };
         let m = Measurement {
             name: name.to_string(),
             iters: n,
@@ -88,7 +172,38 @@ impl Bench {
             min: *times.iter().min().unwrap(),
         };
         println!("{}", m.report());
+        self.results.borrow_mut().push(m.clone());
         m
+    }
+
+    /// Everything recorded by [`Bench::run`] so far.
+    pub fn measurements(&self) -> Vec<Measurement> {
+        self.results.borrow().clone()
+    }
+
+    /// Write every recorded measurement to `BENCH_<name>.json` under `dir`.
+    pub fn emit_json_to(&self, dir: &Path, name: &str) -> crate::Result<PathBuf> {
+        let sha = git_sha();
+        let results = self.results.borrow();
+        let v = obj(vec![
+            ("bench", Value::Str(name.to_string())),
+            ("git_sha", Value::Str(sha.clone())),
+            (
+                "results",
+                Value::Arr(results.iter().map(|m| m.to_value(&sha)).collect()),
+            ),
+        ]);
+        let path = dir.join(format!("BENCH_{name}.json"));
+        std::fs::write(&path, v.to_json())?;
+        println!("bench json: {}", path.display());
+        Ok(path)
+    }
+
+    /// [`Bench::emit_json_to`] rooted at `$BENCH_JSON_DIR` (default: the
+    /// current directory — CI uploads `BENCH_*.json` from the workspace).
+    pub fn emit_json(&self, name: &str) -> crate::Result<PathBuf> {
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+        self.emit_json_to(Path::new(&dir), name)
     }
 }
 
@@ -98,10 +213,90 @@ mod tests {
 
     #[test]
     fn measures_at_least_min_iters() {
-        let b = Bench { warmup: 0, min_iters: 4, max_iters: 8, budget: Duration::ZERO };
+        let b = Bench {
+            warmup: 0,
+            min_iters: 4,
+            max_iters: 8,
+            budget: Duration::ZERO,
+            ..Bench::default()
+        };
         let mut count = 0;
         let m = b.run("noop", || count += 1);
         assert_eq!(m.iters, 4);
         assert_eq!(count, 4);
+    }
+
+    #[test]
+    fn single_iteration_has_zero_stddev_not_nan() {
+        let b = Bench {
+            warmup: 0,
+            min_iters: 1,
+            max_iters: 1,
+            budget: Duration::ZERO,
+            ..Bench::default()
+        };
+        let m = b.run("one", || std::hint::black_box(1 + 1));
+        assert_eq!(m.iters, 1);
+        assert_eq!(m.stddev, Duration::ZERO);
+        let v = m.to_value("abc");
+        assert_eq!(v.get("stddev_ns").unwrap(), &Value::Num(0.0));
+        assert!(Value::parse(&v.to_json()).is_ok());
+    }
+
+    #[test]
+    fn quick_profile_and_overrides_from_env() {
+        let mut b = Bench::default();
+        b.apply_env(&|k| match k {
+            "BENCH_QUICK" => Some("1".into()),
+            "BENCH_MAX_ITERS" => Some("2".into()),
+            _ => None,
+        });
+        assert_eq!(b.warmup, 0);
+        assert_eq!(b.min_iters, 1);
+        assert_eq!(b.max_iters, 2);
+        assert_eq!(b.budget, Duration::from_secs(1));
+
+        // degenerate overrides are clamped to a coherent profile
+        let mut b = Bench::default();
+        b.apply_env(&|k| match k {
+            "BENCH_MIN_ITERS" => Some("0".into()),
+            "BENCH_MAX_ITERS" => Some("0".into()),
+            _ => None,
+        });
+        assert_eq!(b.min_iters, 1);
+        assert_eq!(b.max_iters, 1);
+    }
+
+    #[test]
+    fn emit_json_roundtrips_schema() {
+        let b = Bench {
+            warmup: 0,
+            min_iters: 2,
+            max_iters: 2,
+            budget: Duration::ZERO,
+            ..Bench::default()
+        };
+        b.run("alpha", || std::hint::black_box(3 * 7));
+        b.run("beta", || std::hint::black_box(2 + 2));
+        let dir = std::env::temp_dir();
+        let name = format!("selftest-{}", std::process::id());
+        let path = b.emit_json_to(&dir, &name).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Value::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().str().unwrap(), name);
+        assert!(!v.get("git_sha").unwrap().str().unwrap().is_empty());
+        let results = match v.get("results").unwrap() {
+            Value::Arr(a) => a,
+            other => panic!("results not an array: {other:?}"),
+        };
+        assert_eq!(results.len(), 2);
+        for (r, want) in results.iter().zip(["alpha", "beta"]) {
+            assert_eq!(r.get("name").unwrap().str().unwrap(), want);
+            assert_eq!(r.get("iters").unwrap().num().unwrap(), 2.0);
+            assert!(r.get("mean_ns").unwrap().num().unwrap() >= 0.0);
+            assert!(r.get("min_ns").unwrap().num().unwrap() >= 0.0);
+            assert!(r.get("stddev_ns").unwrap().num().unwrap() >= 0.0);
+        }
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -13,6 +13,7 @@
 
 use std::path::PathBuf;
 use std::sync::OnceLock;
+use std::time::Duration;
 
 use reram_mpq::backend::{ExecBackend, FwdKind, SimXbar, SimXbarConfig};
 use reram_mpq::clustering;
@@ -687,6 +688,126 @@ fn parity_pjrt_and_sim_agree_in_argmax() {
             "sample {i}: pjrt logits {a:?} vs sim logits {b:?}"
         );
     }
+}
+
+// ---- sharded engine (workers > 1) ------------------------------------------
+
+#[test]
+fn sim_sharded_engine_is_bit_identical_to_single_worker() {
+    // N concurrent clients against a 4-worker engine must observe logits
+    // bit-identical to the single-worker engine: the simulator is
+    // per-sample deterministic and padding never leaks across requests, so
+    // neither worker count nor batch composition may change a reply.
+    let base = sim_plan(fixture::tiny(41), SimXbarConfig::default(), RunConfig::default())
+        .threshold(ThresholdMode::FixedCr(0.5));
+    let single = base.deploy(EngineConfig::default()).unwrap();
+    let sharded = base.deploy(EngineConfig::default().with_workers(4)).unwrap();
+    let test = base.test();
+    let elems = 32 * 32 * 3;
+    let n = 8usize;
+    let want: Vec<Vec<f32>> = (0..n)
+        .map(|j| {
+            single
+                .classify(test.x.data()[j * elems..(j + 1) * elems].to_vec())
+                .unwrap()
+                .logits
+        })
+        .collect();
+    let got: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|j| {
+                let h = sharded.clone();
+                let img = test.x.data()[j * elems..(j + 1) * elems].to_vec();
+                s.spawn(move || h.classify(img).unwrap().logits)
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g, w, "sample {j}: sharded logits differ from single-worker");
+    }
+    let snap = sharded.metrics.snapshot();
+    assert_eq!(snap.requests, n as u64);
+    assert_eq!(snap.failed_requests, 0);
+}
+
+#[test]
+fn sim_sharded_engine_startup_failure_is_typed_not_hung() {
+    // A malformed deployment must fail every worker's readiness check and
+    // surface the first failure as a typed StartupError — never hang the
+    // aggregated handshake waiting for workers that already died.
+    let fx = fixture::tiny(43);
+    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None };
+    let engine = Engine::new(
+        spec,
+        &fx.model,
+        vec![0.0; 5],
+        EngineConfig::default().with_workers(3),
+    )
+    .unwrap();
+    let err = engine.start().unwrap_err();
+    assert_eq!(err.backend, "sim");
+    assert!(err.worker < 3, "worker index {} out of range", err.worker);
+    assert!(err.reason.contains("theta length"), "{}", err.reason);
+    let msg = err.to_string();
+    assert!(msg.contains("sim") && msg.contains("failed to start"), "{msg}");
+}
+
+#[test]
+fn sim_sharded_engine_drains_pending_ok_replies_on_shutdown() {
+    // Dropping every handle while requests are still queued must drain
+    // them: each pending reply arrives as a normal Response, never a
+    // dropped channel ("engine dropped request").
+    let fx = fixture::tiny(47);
+    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None };
+    let engine = Engine::new(
+        spec,
+        &fx.model,
+        fx.theta.clone(),
+        EngineConfig {
+            max_wait: Duration::from_millis(1),
+            ..EngineConfig::default()
+        }
+        .with_workers(2),
+    )
+    .unwrap();
+    let handle = engine.start().unwrap();
+    let elems = 32 * 32 * 3;
+    let pend: Vec<_> = (0..8)
+        .map(|j| handle.submit(fx.test.x.data()[j * elems..(j + 1) * elems].to_vec()).unwrap())
+        .collect();
+    drop(handle);
+    for (j, p) in pend.into_iter().enumerate() {
+        let resp = p.wait().unwrap_or_else(|e| panic!("request {j} dropped on shutdown: {e}"));
+        assert_eq!(resp.logits.len(), fixture::NUM_CLASSES);
+    }
+}
+
+#[test]
+fn sim_sharded_engine_drains_failures_with_batch_errors_on_shutdown() {
+    // Same drain path, but with batches that fail to execute: every queued
+    // request must be answered with a typed BatchError reply (the batch
+    // failure is also counted), not a dropped channel.
+    let fx = fixture::tiny(53);
+    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None };
+    let engine = Engine::new(
+        spec,
+        &fx.model,
+        fx.theta.clone(),
+        EngineConfig::default().with_workers(2),
+    )
+    .unwrap();
+    let handle = engine.start().unwrap();
+    let metrics = handle.metrics.clone();
+    let pend: Vec<_> = (0..6).map(|_| handle.submit(vec![0.0; 7]).unwrap()).collect();
+    drop(handle);
+    for p in pend {
+        let err = p.wait().unwrap_err();
+        assert!(err.to_string().contains("batch failed"), "{err}");
+    }
+    let snap = metrics.snapshot();
+    assert_eq!(snap.failed_requests, 6);
+    assert!(snap.failed_batches >= 1);
 }
 
 #[test]

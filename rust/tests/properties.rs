@@ -339,6 +339,68 @@ fn prop_sim_phase_decomposition_equals_integer_fast_path() {
 }
 
 #[test]
+fn prop_sim_packed_phase_loop_is_bit_identical_to_scalar_lanes() {
+    // The packed u64 bit-plane popcount path feeds exactly the same column
+    // currents to the (optional) ADC as the scalar per-lane scan, so the
+    // two must agree bit for bit across geometries, cell widths, mixed
+    // precisions and row segmentations.
+    let mut rng = Rng::seed_from_u64(59);
+    for case in 0..8 {
+        let m = rand_model(&mut rng);
+        let layer = m.layer(0).clone();
+        let (theta, sp, patches, t) = rand_sim_case(&mut rng, &m, true);
+        let base = SimXbarConfig {
+            rows: [4usize, 16, 128][rng.below(3)],
+            input_bits: 7,
+            cell_bits: [1u8, 2, 3][rng.below(3)],
+            adc_bits: [0u8, 4][rng.below(2)],
+            force_phase_loop: true,
+            ..SimXbarConfig::default()
+        };
+        let packed = SimXbar::new(base)
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        let scalar = SimXbar::new(SimXbarConfig { scalar_lanes: true, ..base })
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        assert_eq!(packed, scalar, "case {case}: packed path must be bit-identical");
+    }
+}
+
+#[test]
+fn prop_sim_tile_sharding_is_bit_identical_for_every_thread_count() {
+    // The per-tile MVM shards own contiguous channel ranges with private
+    // accumulators and the noise stream is seeded per strip, so any worker
+    // count must reproduce the sequential result exactly — including under
+    // ADC quantization and conductance noise.
+    let mut rng = Rng::seed_from_u64(61);
+    for case in 0..8 {
+        let m = rand_model(&mut rng);
+        let layer = m.layer(0).clone();
+        let (theta, sp, patches, t) = rand_sim_case(&mut rng, &m, true);
+        let base = SimXbarConfig {
+            rows: [8usize, 128][rng.below(2)],
+            adc_bits: if case % 3 == 0 { 4 } else { 0 },
+            noise_sigma: if case % 2 == 1 { 0.05 } else { 0.0 },
+            threads: 1,
+            ..SimXbarConfig::default()
+        };
+        let single = SimXbar::new(base)
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        for threads in [2usize, 4, 8] {
+            let sharded = SimXbar::new(SimXbarConfig { threads, ..base })
+                .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+                .unwrap();
+            assert_eq!(
+                single, sharded,
+                "case {case}: {threads}-thread conv must be bit-identical"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_sim_adc_output_is_deterministic_and_actually_quantizes() {
     let mut rng = Rng::seed_from_u64(53);
     let m = rand_model(&mut rng);
