@@ -1,0 +1,87 @@
+//! Serving front-end throughput over TCP loopback — fully hermetic: the
+//! in-memory fixture model on the sim backend, the real server (dynamic
+//! micro-batching + admission control) on an ephemeral port, and the real
+//! protocol client as the load generator.
+//!
+//!     cargo bench --bench serve_throughput
+//!
+//! Emits `BENCH_serve_throughput.json`; each record carries `req_per_s`,
+//! `p50_ns`, and `p99_ns` extras next to the standard mean/stddev fields,
+//! so the perf pipeline sees request-rate and tail latency, not just
+//! wall-clock per iteration.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use reram_mpq::backend::SimXbarConfig;
+use reram_mpq::coordinator::{CompressionPlan, EngineConfig, Executor, ModelState};
+use reram_mpq::fixture;
+use reram_mpq::serve::{bench_client, BatchPolicy, ServeConfig, Server};
+use reram_mpq::util::bench::Bench;
+use reram_mpq::RunConfig;
+
+fn main() -> reram_mpq::Result<()> {
+    let b = Bench::from_env();
+    let quick = std::env::var("BENCH_QUICK").as_deref() == Ok("1");
+    let requests = if quick { 64 } else { 256 };
+
+    let fx = fixture::tiny(5);
+    let elems = 32 * 32 * 3;
+    let images: Vec<Vec<f32>> = (0..fx.test.len())
+        .map(|j| fx.test.x.data()[j * elems..(j + 1) * elems].to_vec())
+        .collect();
+    let plan = CompressionPlan::from_state(
+        ModelState {
+            exec: Executor::Sim(SimXbarConfig::default()),
+            model: fx.model,
+            theta: fx.theta,
+            test: fx.test,
+            calib: fx.calib,
+        },
+        RunConfig::default(),
+    );
+    let handle = plan.deploy_fp32(EngineConfig::default().with_workers(2))?;
+    let server = Server::start(
+        TcpListener::bind("127.0.0.1:0")?,
+        handle,
+        ServeConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                flush_after: Duration::from_millis(2),
+                queue: 512,
+            },
+            ..ServeConfig::default()
+        },
+    )?;
+    let addr = server.local_addr().to_string();
+
+    for conns in [2usize, 4] {
+        let name = format!("serve throughput, {conns} conns over tcp loopback");
+        let mut last = None;
+        b.run(&name, || {
+            let report = bench_client(&addr, conns, requests, &images).unwrap();
+            assert_eq!(report.failed, 0, "failed frames during bench: {report:?}");
+            last = Some(report);
+        });
+        if let Some(report) = last {
+            b.annotate(
+                &name,
+                &[
+                    ("req_per_s", report.req_per_s()),
+                    ("p50_ns", report.p50_us as f64 * 1e3),
+                    ("p99_ns", report.p99_us as f64 * 1e3),
+                    ("rejected", report.rejected as f64),
+                ],
+            );
+            println!(
+                "  {conns} conns: {:.1} req/s, p50 {} us, p99 {} us, rejected {}",
+                report.req_per_s(),
+                report.p50_us,
+                report.p99_us,
+                report.rejected
+            );
+        }
+    }
+    b.emit_json("serve_throughput")?;
+    Ok(())
+}

@@ -110,6 +110,33 @@ impl std::error::Error for BatchError {}
 
 type BatchResult = std::result::Result<Response, BatchError>;
 
+/// Why a [`Pending::wait_timeout`] produced no [`Response`]. `Timeout` is
+/// the load-bearing variant: it is what keeps a dead or wedged worker from
+/// hanging a serving connection thread forever (the `serve` front-end
+/// converts it into a typed error frame).
+#[derive(Clone, Debug)]
+pub enum WaitError {
+    /// No reply within the deadline (slow, overloaded, or dead worker).
+    Timeout,
+    /// The engine dropped the request's reply channel (shutdown before
+    /// dispatch — the drain paths normally answer everything).
+    Dropped,
+    /// The request's batch failed inside the engine, with its typed error.
+    Failed(BatchError),
+}
+
+impl std::fmt::Display for WaitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WaitError::Timeout => write!(f, "engine reply timed out"),
+            WaitError::Dropped => write!(f, "engine dropped request"),
+            WaitError::Failed(e) => write!(f, "engine batch failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WaitError {}
+
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
     /// Flush a partial batch after this long.
@@ -157,6 +184,18 @@ impl Pending {
             Err(_) => Err(anyhow::anyhow!("engine dropped request")),
         }
     }
+
+    /// [`Pending::wait`] with an upper bound: a worker that died or wedged
+    /// mid-batch can never park the caller forever. Takes `&self` so a
+    /// caller may keep waiting after a timeout if it wants to.
+    pub fn wait_timeout(&self, timeout: Duration) -> std::result::Result<Response, WaitError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(e)) => Err(WaitError::Failed(e)),
+            Err(RecvTimeoutError::Timeout) => Err(WaitError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(WaitError::Dropped),
+        }
+    }
 }
 
 impl EngineHandle {
@@ -173,6 +212,28 @@ impl EngineHandle {
     /// Submit and wait (convenience).
     pub fn classify(&self, image: Vec<f32>) -> Result<Response> {
         self.submit(image)?.wait()
+    }
+
+    /// Submit a pre-formed group of images as one unit: the requests enter
+    /// the engine queue back-to-back, so the dispatcher coalesces them into
+    /// execution batches instead of re-discovering them one batching
+    /// deadline at a time. This is the hand-off path of the `serve`
+    /// front-end's micro-batcher. Returns one [`Pending`] per image, in
+    /// submission order. On error (engine stopped) the already-enqueued
+    /// prefix is answered through the engine's normal drain paths; the
+    /// caller only ever sees the `Err`.
+    pub fn submit_batch(&self, images: Vec<Vec<f32>>) -> Result<Vec<Pending>> {
+        let t0 = Instant::now();
+        let mut pendings = Vec::with_capacity(images.len());
+        for image in images {
+            let (reply, rx) = sync_channel(1);
+            self.metrics.observe_request();
+            self.tx
+                .send(Request { t0, image, reply })
+                .map_err(|_| anyhow::anyhow!("engine stopped"))?;
+            pendings.push(Pending { rx });
+        }
+        Ok(pendings)
     }
 }
 
@@ -517,9 +578,50 @@ impl Worker {
                 .unwrap_or(0);
             let latency_us = now.duration_since(req.t0).as_micros() as u64;
             max_lat = max_lat.max(latency_us);
+            // Per-request latency into the log2 histogram (percentiles),
+            // before replying — callers may snapshot on reply arrival.
+            metrics.observe_latency(latency_us);
             let _ = req.reply.send(Ok(Response { logits: row, class, latency_us }));
         }
         debug_assert!(max_lat <= batch_lat);
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pending_wait_timeout_distinguishes_timeout_drop_and_failure() {
+        // Timeout: a reply channel nobody answers must bound the wait.
+        let (tx, rx) = sync_channel::<BatchResult>(1);
+        let p = Pending { rx };
+        match p.wait_timeout(Duration::from_millis(10)) {
+            Err(WaitError::Timeout) => {}
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        // Dropped: the engine went away without replying.
+        drop(tx);
+        match p.wait_timeout(Duration::from_millis(10)) {
+            Err(WaitError::Dropped) => {}
+            other => panic!("expected Dropped, got {other:?}"),
+        }
+        // Failed: a typed batch error passes through intact.
+        let (tx, rx) = sync_channel::<BatchResult>(1);
+        tx.send(Err(BatchError("boom".into()))).unwrap();
+        let p = Pending { rx };
+        match p.wait_timeout(Duration::from_millis(10)) {
+            Err(WaitError::Failed(e)) => assert_eq!(e.0, "boom"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        // And a real response still comes through.
+        let (tx, rx) = sync_channel::<BatchResult>(1);
+        tx.send(Ok(Response { logits: vec![0.5], class: 0, latency_us: 7 }))
+            .unwrap();
+        let p = Pending { rx };
+        let r = p.wait_timeout(Duration::from_millis(10)).unwrap();
+        assert_eq!(r.class, 0);
+        assert_eq!(r.latency_us, 7);
     }
 }

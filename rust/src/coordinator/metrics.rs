@@ -1,8 +1,55 @@
-//! Lightweight serving metrics (lock-free counters + latency aggregation).
+//! Lightweight serving metrics: lock-free counters, latency aggregation,
+//! and a fixed-bucket log2 latency histogram.
+//!
+//! The histogram records **per-request** latencies (the engine feeds it one
+//! observation per answered request) into 64 power-of-two buckets — bucket
+//! `k` covers `[2^k, 2^(k+1))` microseconds, bucket 0 additionally holds 0.
+//! Percentile queries return the *upper edge* of the bucket holding the
+//! requested rank, so they over- rather than under-report tail latency and
+//! never interpolate between observations that were not taken.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-#[derive(Default)]
+/// Number of log2 latency buckets. 64 covers the entire `u64` microsecond
+/// range (bucket 63 is `[2^63, u64::MAX]`), so no observation saturates.
+const HIST_BUCKETS: usize = 64;
+
+/// Bucket index of a latency: `floor(log2(us))`, with 0 mapping onto
+/// bucket 0 alongside 1.
+fn bucket(latency_us: u64) -> usize {
+    if latency_us == 0 {
+        0
+    } else {
+        63 - latency_us.leading_zeros() as usize
+    }
+}
+
+/// Largest latency a bucket can hold (the value a percentile query reports).
+fn bucket_upper_edge(k: usize) -> u64 {
+    if k >= 63 {
+        u64::MAX
+    } else {
+        (1u64 << (k + 1)) - 1
+    }
+}
+
+/// Smallest rank (1-based) covered by quantile `q` over `total` samples,
+/// then the upper edge of the bucket where the cumulative count reaches it.
+fn quantile_from(counts: &[u64; HIST_BUCKETS], q: f64, total: u64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
+    for (k, &c) in counts.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return bucket_upper_edge(k);
+        }
+    }
+    bucket_upper_edge(HIST_BUCKETS - 1)
+}
+
 pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
@@ -14,9 +61,29 @@ pub struct Metrics {
     pub failed_requests: AtomicU64,
     latency_us_sum: AtomicU64,
     latency_us_max: AtomicU64,
+    /// Per-request latency histogram (log2 buckets, microseconds).
+    hist: [AtomicU64; HIST_BUCKETS],
 }
 
-/// Point-in-time snapshot of the serving metrics.
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_items: AtomicU64::new(0),
+            failed_batches: AtomicU64::new(0),
+            failed_requests: AtomicU64::new(0),
+            latency_us_sum: AtomicU64::new(0),
+            latency_us_max: AtomicU64::new(0),
+            hist: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Point-in-time snapshot of the serving metrics. The percentiles come from
+/// the per-request log2 histogram: each is the upper edge of its bucket
+/// (conservative — never below the true percentile by more than the bucket
+/// resolution, never above a real observation's bucket).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Snapshot {
     pub requests: u64,
@@ -26,6 +93,11 @@ pub struct Snapshot {
     pub mean_batch_fill: f64,
     pub mean_latency_us: f64,
     pub max_latency_us: u64,
+    /// Per-request latencies observed by the histogram (answered requests).
+    pub observed_requests: u64,
+    pub p50_latency_us: u64,
+    pub p95_latency_us: u64,
+    pub p99_latency_us: u64,
 }
 
 impl Metrics {
@@ -40,6 +112,11 @@ impl Metrics {
         self.latency_us_max.fetch_max(latency_us, Ordering::Relaxed);
     }
 
+    /// One answered request's end-to-end engine latency into the histogram.
+    pub fn observe_latency(&self, latency_us: u64) {
+        self.hist[bucket(latency_us)].fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn observe_batch_failure(&self, items: usize) {
         self.failed_batches.fetch_add(1, Ordering::Relaxed);
         self.failed_requests.fetch_add(items as u64, Ordering::Relaxed);
@@ -47,6 +124,12 @@ impl Metrics {
 
     pub fn snapshot(&self) -> Snapshot {
         let batches = self.batches.load(Ordering::Relaxed);
+        let mut counts = [0u64; HIST_BUCKETS];
+        let mut observed = 0u64;
+        for (dst, src) in counts.iter_mut().zip(self.hist.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+            observed += *dst;
+        }
         Snapshot {
             requests: self.requests.load(Ordering::Relaxed),
             batches,
@@ -63,6 +146,10 @@ impl Metrics {
                 self.latency_us_sum.load(Ordering::Relaxed) as f64 / batches as f64
             },
             max_latency_us: self.latency_us_max.load(Ordering::Relaxed),
+            observed_requests: observed,
+            p50_latency_us: quantile_from(&counts, 0.50, observed),
+            p95_latency_us: quantile_from(&counts, 0.95, observed),
+            p99_latency_us: quantile_from(&counts, 0.99, observed),
         }
     }
 }
@@ -102,5 +189,61 @@ mod tests {
         assert_eq!(s.failed_batches, 1);
         assert_eq!(s.failed_requests, 2);
         assert!((s.mean_batch_fill - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // bucket k covers [2^k, 2^(k+1)); 0 shares bucket 0 with 1.
+        assert_eq!(bucket(0), 0);
+        assert_eq!(bucket(1), 0);
+        assert_eq!(bucket(2), 1);
+        assert_eq!(bucket(3), 1);
+        assert_eq!(bucket(4), 2);
+        assert_eq!(bucket(7), 2);
+        assert_eq!(bucket(8), 3);
+        assert_eq!(bucket(1023), 9);
+        assert_eq!(bucket(1024), 10);
+        assert_eq!(bucket(u64::MAX), 63);
+        // upper edges are the largest member of each bucket
+        assert_eq!(bucket_upper_edge(0), 1);
+        assert_eq!(bucket_upper_edge(1), 3);
+        assert_eq!(bucket_upper_edge(9), 1023);
+        assert_eq!(bucket_upper_edge(63), u64::MAX);
+        // every bucket's upper edge maps back into that bucket
+        for k in 0..HIST_BUCKETS {
+            assert_eq!(bucket(bucket_upper_edge(k)), k, "edge of bucket {k}");
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_report_bucket_upper_edges() {
+        let m = Metrics::default();
+        // Four fast requests (bucket 0) and one slow outlier at 100 us
+        // (bucket 6: [64, 128), upper edge 127).
+        for _ in 0..4 {
+            m.observe_latency(1);
+        }
+        m.observe_latency(100);
+        let s = m.snapshot();
+        assert_eq!(s.observed_requests, 5);
+        // p50 rank = ceil(0.5 * 5) = 3 -> bucket 0 -> edge 1.
+        assert_eq!(s.p50_latency_us, 1);
+        // p95 rank = ceil(4.75) = 5 -> the outlier's bucket edge.
+        assert_eq!(s.p95_latency_us, 127);
+        assert_eq!(s.p99_latency_us, 127);
+    }
+
+    #[test]
+    fn histogram_empty_and_saturated() {
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert_eq!(s.observed_requests, 0);
+        assert_eq!(s.p50_latency_us, 0);
+        assert_eq!(s.p99_latency_us, 0);
+        // The top bucket accepts the largest representable latency.
+        m.observe_latency(u64::MAX);
+        let s = m.snapshot();
+        assert_eq!(s.observed_requests, 1);
+        assert_eq!(s.p50_latency_us, u64::MAX);
     }
 }

@@ -10,8 +10,8 @@ pub mod pipeline;
 pub mod plan;
 
 pub use engine::{
-    BackendSpec, BatchError, Engine, EngineConfig, EngineHandle, Response, ShardedEngine,
-    StartupError,
+    BackendSpec, BatchError, Engine, EngineConfig, EngineHandle, Pending, Response,
+    ShardedEngine, StartupError, WaitError,
 };
 pub use eval::{evaluate, evaluate_batches, Accuracy};
 pub use metrics::{Metrics, Snapshot};

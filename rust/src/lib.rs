@@ -96,6 +96,10 @@
 //! * [`coordinator`] — the execution engine: the staged `CompressionPlan`
 //!   builder and its stage cache, request batching, accuracy evaluation,
 //!   stepwise mixed-precision accumulation (paper §4.3).
+//! * [`serve`] — the network serving front-end: length-prefixed binary
+//!   wire protocol, TCP server with per-connection threads, dynamic
+//!   micro-batching with bounded-queue admission control, a plain-text
+//!   stats frame, and the load-generating client behind `bench-client`.
 //! * [`baselines`] — HAP structured pruning and uniform-precision
 //!   comparators used by the paper's tables.
 //! * [`report`] — emitters that regenerate the paper's tables/figures.
@@ -114,6 +118,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod sensitivity;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 pub mod xbar;

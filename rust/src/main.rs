@@ -1,14 +1,21 @@
 //! `reram-mpq` CLI — leader entrypoint for the mixed-precision quantization
 //! framework. All subcommands run purely from the AOT artifacts (Python is
 //! never invoked on the request path) and drive the staged
-//! `CompressionPlan` builder.
+//! `CompressionPlan` builder. `serve --listen` and `bench-client` expose
+//! the network serving front-end (`reram_mpq::serve`): a TCP server with
+//! dynamic micro-batching + admission control, and its load generator.
+
+use std::time::Duration;
 
 use reram_mpq::backend::SimXbarConfig;
-use reram_mpq::coordinator::{EvalOpts, Executor, ThresholdMode};
+use reram_mpq::coordinator::{
+    EngineConfig, EngineHandle, EvalOpts, Executor, ModelState, ThresholdMode,
+};
 use reram_mpq::experiments::{self, ExpOpts, Lab};
+use reram_mpq::serve::{bench_client, BatchPolicy, ServeConfig, Server};
 use reram_mpq::util::cli::Args;
 use reram_mpq::xbar::MappingStrategy;
-use reram_mpq::{artifacts_dir, Manifest, Result, RunConfig, Runtime};
+use reram_mpq::{artifacts_dir, fixture, CompressionPlan, Manifest, Result, RunConfig, Runtime};
 
 const USAGE: &str = "\
 reram-mpq — sensitivity-aware mixed-precision quantization for ReRAM CIM
@@ -33,8 +40,20 @@ COMMANDS:
   table4   [--json]                      regenerate Table 4 (crossbar utilization)
   fig8     [--eval-batches N] [--json]   regenerate Figure 8 (accuracy vs CR)
   serve    [--model M] [--requests N] [--cr R] [--workers N]
-                                 run the sharded batching engine over test
-                                 images (N backend workers; default 1)
+           [--listen ADDR] [--max-batch N] [--flush-ms MS]
+           [--admit-queue N] [--wait-timeout-s S] [--fixture]
+                                 without --listen: push test images through
+                                 the engine in-process and report latency
+                                 percentiles; with --listen: run the TCP
+                                 serving front-end (micro-batching +
+                                 admission control) until killed. With
+                                 --backend sim and no artifacts (or
+                                 --fixture), serves the hermetic in-memory
+                                 fixture model.
+  bench-client --addr HOST:PORT [--conns N] [--requests N]
+                                 drive load at a running server and report
+                                 req/s + latency percentiles (exits
+                                 non-zero on any failed frame)
 ";
 
 fn opts(args: &Args) -> Result<ExpOpts> {
@@ -45,10 +64,15 @@ fn opts(args: &Args) -> Result<ExpOpts> {
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, &["no-align", "origin", "json", "help"])?;
+    let args = Args::parse(&argv, &["no-align", "origin", "json", "help", "fixture"])?;
     if args.has("help") || args.subcommand.is_none() {
         print!("{USAGE}");
         return Ok(());
+    }
+
+    // bench-client is a pure network client: no artifacts, no manifest.
+    if args.subcommand.as_deref() == Some("bench-client") {
+        return bench_client_cmd(&args);
     }
 
     let dir = args
@@ -59,6 +83,16 @@ fn main() -> Result<()> {
         Some(p) => RunConfig::from_json(&std::fs::read_to_string(p)?)?,
         None => RunConfig::default(),
     };
+
+    // Hermetic serving: on the sim backend a missing manifest (or an
+    // explicit --fixture) serves the in-memory fixture model instead of
+    // failing — CI's serve-smoke drives this path on a bare runner.
+    if args.subcommand.as_deref() == Some("serve")
+        && args.get_or("backend", "pjrt") == "sim"
+        && (args.has("fixture") || !dir.join("manifest.json").exists())
+    {
+        return serve_fixture(&args, &cfg);
+    }
 
     let manifest = Manifest::load(&dir)?;
     // The PJRT client only exists for the pjrt backend; the simulator needs
@@ -171,9 +205,8 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let model = args.get_or("model", "resnet8");
-            let requests = args.get_usize("requests")?.unwrap_or(512);
-            let cr = args.get_f64("cr")?;
-            serve(&lab, &model, requests, cr)?;
+            let plan = lab.plan(&model)?;
+            deploy_and_serve(&plan, lab.engine_config(), &args)?;
         }
         other => {
             eprintln!("unknown command '{other}'\n");
@@ -184,19 +217,127 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// Push test images through the batching engine from the plan's `deploy`
-/// terminal and report throughput + latency + accuracy.
-fn serve(lab: &Lab, model: &str, requests: usize, cr: Option<f64>) -> Result<()> {
-    let plan = lab.plan(model)?;
-    let ecfg = lab.engine_config();
-    // Quantize at the requested CR (or serve fp32).
-    let handle = match cr {
+/// `serve` on the sim backend with no AOT artifacts: deploy the hermetic
+/// in-memory fixture model (the same workload the sim test suite and the
+/// serve bench use) so the front-end runs on a bare machine.
+fn serve_fixture(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let fx = fixture::tiny(seed);
+    println!(
+        "no AOT artifacts: serving hermetic fixture model {} ({} params)",
+        fx.model.name(),
+        fx.model.entry.num_params
+    );
+    let plan = CompressionPlan::from_state(
+        ModelState {
+            exec: Executor::Sim(SimXbarConfig::from_xbar(&cfg.xbar)),
+            model: fx.model,
+            theta: fx.theta,
+            test: fx.test,
+            calib: fx.calib,
+        },
+        cfg.clone(),
+    );
+    let mut ecfg = EngineConfig::default();
+    if let Some(workers) = args.get_usize("workers")? {
+        anyhow::ensure!(workers >= 1, "--workers must be >= 1");
+        ecfg.workers = workers;
+    }
+    deploy_and_serve(&plan, ecfg, args)
+}
+
+/// Shared tail of both `serve` paths (artifact-backed and fixture):
+/// quantize at the requested CR (or serve fp32), deploy, then either run
+/// the TCP front-end (`--listen`) or the in-process loop.
+fn deploy_and_serve(plan: &CompressionPlan<'_>, ecfg: EngineConfig, args: &Args) -> Result<()> {
+    let handle = match args.get_f64("cr")? {
         Some(c) => plan
             .clone()
             .threshold(ThresholdMode::FixedCr(c))
             .deploy(ecfg)?,
         None => plan.deploy_fp32(ecfg)?,
     };
+    match args.get("listen") {
+        Some(addr) => run_server(handle, addr, args),
+        None => serve_local(
+            plan,
+            handle,
+            args.get_usize("requests")?.unwrap_or(512),
+            ecfg.workers.max(1),
+        ),
+    }
+}
+
+/// `serve --listen`: bind, announce the bound address (the smoke script
+/// greps the `serving on` line for the ephemeral port), and block on the
+/// accept loop until the process is killed.
+fn run_server(handle: EngineHandle, addr: &str, args: &Args) -> Result<()> {
+    let mut policy = BatchPolicy::default();
+    if let Some(b) = args.get_usize("max-batch")? {
+        policy.max_batch = b.max(1);
+    }
+    if let Some(ms) = args.get_f64("flush-ms")? {
+        // Bounded up front: Duration::from_secs_f64 panics on negative,
+        // non-finite, or absurdly large inputs.
+        anyhow::ensure!(
+            (0.0..=86_400_000.0).contains(&ms),
+            "--flush-ms must be between 0 and 86400000 (one day)"
+        );
+        policy.flush_after = Duration::from_secs_f64(ms / 1e3);
+    }
+    if let Some(q) = args.get_usize("admit-queue")? {
+        policy.queue = q.max(1);
+    }
+    let mut cfg = ServeConfig { policy, ..ServeConfig::default() };
+    if let Some(s) = args.get_f64("wait-timeout-s")? {
+        anyhow::ensure!(
+            (0.0..=86_400.0).contains(&s),
+            "--wait-timeout-s must be between 0 and 86400 (one day)"
+        );
+        cfg.wait_timeout = Duration::from_secs_f64(s);
+    }
+    let listener = std::net::TcpListener::bind(addr)?;
+    let server = Server::start(listener, handle, cfg)?;
+    println!("serving on {}", server.local_addr());
+    println!(
+        "policy: max_batch={} flush_after={:?} admit_queue={} wait_timeout={:?}",
+        cfg.policy.max_batch, cfg.policy.flush_after, cfg.policy.queue, cfg.wait_timeout
+    );
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    server.join();
+    Ok(())
+}
+
+/// `bench-client`: drive load at a running server, print the summary, and
+/// exit non-zero on any failed frame (the CI smoke gate).
+fn bench_client_cmd(args: &Args) -> Result<()> {
+    let addr = args.require("addr")?;
+    let conns = args.get_usize("conns")?.unwrap_or(4).max(1);
+    let requests = args.get_usize("requests")?.unwrap_or(200);
+    // Deterministic synthetic traffic: the server classifies, the client
+    // counts frames — labels are irrelevant here.
+    let test = fixture::synthetic_test_set(64, 7);
+    let elems = 32 * 32 * 3;
+    let images: Vec<Vec<f32>> = (0..test.len())
+        .map(|j| test.x.data()[j * elems..(j + 1) * elems].to_vec())
+        .collect();
+    let report = bench_client(addr, conns, requests, &images)?;
+    println!("{}", report.summary());
+    if report.failed > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// `serve` without `--listen`: push test images through the batching engine
+/// in-process and report throughput + latency percentiles + accuracy.
+fn serve_local(
+    plan: &CompressionPlan<'_>,
+    handle: EngineHandle,
+    requests: usize,
+    workers: usize,
+) -> Result<()> {
     // Warm the executable before timing.
     let _ = handle.classify(vec![0.0; 32 * 32 * 3])?;
 
@@ -228,12 +369,16 @@ fn serve(lab: &Lab, model: &str, requests: usize, cr: Option<f64>) -> Result<()>
         "served {n} requests in {:.3}s  ({:.1} req/s, {} worker(s))  acc={:.2}%",
         dt.as_secs_f64(),
         n as f64 / dt.as_secs_f64(),
-        ecfg.workers.max(1),
+        workers,
         correct as f64 / n as f64 * 100.0
     );
     println!(
         "batches={} mean_fill={:.2} mean_batch_latency={:.1}us max={}us failed={}",
         m.batches, m.mean_batch_fill, m.mean_latency_us, m.max_latency_us, m.failed_requests
+    );
+    println!(
+        "request latency: p50={}us p95={}us p99={}us ({} observed)",
+        m.p50_latency_us, m.p95_latency_us, m.p99_latency_us, m.observed_requests
     );
     Ok(())
 }

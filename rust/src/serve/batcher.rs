@@ -1,0 +1,227 @@
+//! Dynamic micro-batching front-end with admission control.
+//!
+//! Connection threads [`Batcher::submit`] individual images into a
+//! **bounded** admission queue; a single coalescing thread drains it,
+//! groups up to [`BatchPolicy::max_batch`] requests (or whatever arrived
+//! before the [`BatchPolicy::flush_after`] deadline) and hands the group to
+//! the engine through [`EngineHandle::submit_batch`], so the engine's
+//! dispatcher sees the whole group back-to-back and executes it as full
+//! batches.
+//!
+//! Admission control is the load-shedding half: `submit` **never blocks**.
+//! When the queue is full it answers [`Admission::Rejected`] with the
+//! current queue depth immediately — the TCP server turns that into a typed
+//! `Rejected` wire frame, so an overloaded deployment degrades into fast,
+//! explicit rejections instead of unbounded connection-thread pile-up.
+//! Backpressure *inside* the pipeline is still blocking by design: the one
+//! coalescing thread may block handing a group to a full engine queue,
+//! which is exactly what makes the admission queue fill and shed.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::engine::{BatchError, EngineHandle, Pending, Response, WaitError};
+
+/// Coalescing and admission knobs of the serving front-end.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Coalesce at most this many requests into one engine hand-off.
+    pub max_batch: usize,
+    /// Flush a partial group after this long (measured from its first
+    /// request).
+    pub flush_after: Duration,
+    /// Bounded admission queue length; overflow is rejected, never waited
+    /// on.
+    pub queue: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, flush_after: Duration::from_millis(2), queue: 256 }
+    }
+}
+
+/// Front-end counters (admission + coalescing), separate from the engine's
+/// own [`crate::coordinator::Metrics`]: these describe what the *door* did,
+/// the engine metrics describe what execution did.
+#[derive(Default)]
+pub struct BatcherStats {
+    pub accepted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+}
+
+impl BatcherStats {
+    /// Mean requests per engine hand-off (1.0 = no coalescing happened).
+    pub fn mean_fill(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+/// What the coalescing thread eventually gives a ticket holder.
+enum Handoff {
+    /// The request is inside the engine; wait on this.
+    Handed(Pending),
+    /// The engine refused the whole group (it stopped).
+    Failed(String),
+}
+
+/// An admitted request's claim check. The reply crosses two stages — the
+/// coalescing hand-off, then engine execution — and
+/// [`Ticket::wait_timeout`] bounds the *sum*.
+pub struct Ticket {
+    rx: Receiver<Handoff>,
+}
+
+impl Ticket {
+    /// Wait for the engine's reply, bounded end-to-end by `timeout`.
+    pub fn wait_timeout(self, timeout: Duration) -> std::result::Result<Response, WaitError> {
+        let deadline = Instant::now() + timeout;
+        let pending = match self.rx.recv_timeout(timeout) {
+            Ok(Handoff::Handed(p)) => p,
+            Ok(Handoff::Failed(msg)) => return Err(WaitError::Failed(BatchError(msg))),
+            Err(RecvTimeoutError::Timeout) => return Err(WaitError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => return Err(WaitError::Dropped),
+        };
+        pending.wait_timeout(deadline.saturating_duration_since(Instant::now()))
+    }
+}
+
+/// Admission verdict: a claim check, or an immediate, typed "no".
+pub enum Admission {
+    Accepted(Ticket),
+    /// The admission queue was full; `queue_depth` is how many requests
+    /// were already waiting when this one was turned away.
+    Rejected { queue_depth: usize },
+}
+
+struct Item {
+    image: Vec<f32>,
+    reply: SyncSender<Handoff>,
+}
+
+/// The micro-batching front-end over an [`EngineHandle`]. Cloneable and
+/// thread-safe: every connection thread submits through its own clone, all
+/// feeding the one coalescing thread.
+#[derive(Clone)]
+pub struct Batcher {
+    tx: SyncSender<Item>,
+    depth: Arc<AtomicUsize>,
+    pub stats: Arc<BatcherStats>,
+}
+
+impl Batcher {
+    /// Spawn the coalescing thread over `engine`. The thread exits when
+    /// every `Batcher` clone is dropped (after flushing what was admitted).
+    pub fn start(engine: EngineHandle, policy: BatchPolicy) -> Batcher {
+        let max_batch = policy.max_batch.max(1);
+        let (tx, rx) = sync_channel::<Item>(policy.queue.max(1));
+        let depth = Arc::new(AtomicUsize::new(0));
+        let stats = Arc::new(BatcherStats::default());
+        {
+            let depth = depth.clone();
+            let stats = stats.clone();
+            let flush_after = policy.flush_after;
+            std::thread::spawn(move || {
+                batch_loop(rx, engine, max_batch, flush_after, &depth, &stats)
+            });
+        }
+        Batcher { tx, depth, stats }
+    }
+
+    /// Admit one request, without ever blocking. A full queue — or a
+    /// coalescing thread that is gone — answers [`Admission::Rejected`]
+    /// immediately.
+    pub fn submit(&self, image: Vec<f32>) -> Admission {
+        let (reply, rx) = sync_channel(1);
+        // Count before sending: the coalescing thread decrements as it
+        // pops, and every popped item must already be counted or the
+        // counter could transiently wrap below zero.
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(Item { image, reply }) {
+            Ok(()) => {
+                self.stats.accepted.fetch_add(1, Ordering::Relaxed);
+                Admission::Accepted(Ticket { rx })
+            }
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                Admission::Rejected { queue_depth: self.depth.load(Ordering::Relaxed) }
+            }
+        }
+    }
+
+    /// Requests currently waiting in the admission queue (approximate —
+    /// the counters are relaxed).
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+}
+
+/// The coalescing loop: group, deadline-flush, hand off, repeat.
+fn batch_loop(
+    rx: Receiver<Item>,
+    engine: EngineHandle,
+    max_batch: usize,
+    flush_after: Duration,
+    depth: &AtomicUsize,
+    stats: &BatcherStats,
+) {
+    loop {
+        // Block for the first request of a group.
+        let first = match rx.recv() {
+            Ok(item) => item,
+            Err(_) => break, // every Batcher clone dropped, queue drained
+        };
+        depth.fetch_sub(1, Ordering::Relaxed);
+        let mut items = Vec::with_capacity(max_batch);
+        items.push(first);
+        let deadline = Instant::now() + flush_after;
+        while items.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(item) => {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    items.push(item);
+                }
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.batched_items.fetch_add(items.len() as u64, Ordering::Relaxed);
+
+        let mut images = Vec::with_capacity(items.len());
+        let mut replies = Vec::with_capacity(items.len());
+        for item in items {
+            images.push(item.image);
+            replies.push(item.reply);
+        }
+        // This send may block on a full engine queue: that is the designed
+        // in-pipeline backpressure, and it is what fills the admission
+        // queue above so `submit` starts shedding.
+        match engine.submit_batch(images) {
+            Ok(pendings) => {
+                for (pending, reply) in pendings.into_iter().zip(replies) {
+                    let _ = reply.send(Handoff::Handed(pending));
+                }
+            }
+            Err(e) => {
+                let msg = format!("engine unavailable: {e}");
+                for reply in replies {
+                    let _ = reply.send(Handoff::Failed(msg.clone()));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Client side of the serving protocol: a blocking request/reply
+//! [`ServeClient`] over one connection, and [`bench_client`], the
+//! multi-connection load generator used by the CLI `bench-client`
+//! subcommand, the loopback tests, and CI's serve-smoke step.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::proto::Frame;
+use crate::Result;
+
+/// Blocking request/reply client over one TCP connection.
+pub struct ServeClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+/// A classify answer as seen by a client: every server reply is typed,
+/// including the load-shedding and failure paths.
+#[derive(Clone, Debug)]
+pub enum ClientReply {
+    Ok { id: u64, class: usize, latency_us: u64, logits: Vec<f32> },
+    /// Admission control turned the request away; `queue_depth` requests
+    /// were already waiting. Back off and retry.
+    Rejected { id: u64, queue_depth: u32 },
+    /// The server answered a typed error frame (bad request, engine
+    /// failure, or reply timeout).
+    Error { id: u64, message: String },
+}
+
+impl ServeClient {
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(ServeClient { stream, next_id: 1 })
+    }
+
+    /// Classify one image, blocking for the server's reply.
+    pub fn classify(&mut self, image: Vec<f32>) -> Result<ClientReply> {
+        let id = self.next_id;
+        self.next_id += 1;
+        Frame::ClassifyReq { id, image }.write_to(&mut self.stream)?;
+        match Frame::read_from(&mut self.stream) {
+            Ok(Frame::ClassifyOk { id, class, latency_us, logits }) => {
+                Ok(ClientReply::Ok { id, class: class as usize, latency_us, logits })
+            }
+            Ok(Frame::Rejected { id, queue_depth }) => {
+                Ok(ClientReply::Rejected { id, queue_depth })
+            }
+            Ok(Frame::Error { id, message }) => Ok(ClientReply::Error { id, message }),
+            Ok(other) => anyhow::bail!("unexpected reply frame: {}", other.kind_name()),
+            Err(e) => anyhow::bail!("reading reply: {e}"),
+        }
+    }
+
+    /// Fetch the server's plain-text stats snapshot.
+    pub fn stats(&mut self) -> Result<String> {
+        Frame::StatsReq.write_to(&mut self.stream)?;
+        match Frame::read_from(&mut self.stream) {
+            Ok(Frame::Stats { text }) => Ok(text),
+            Ok(other) => anyhow::bail!("unexpected reply frame: {}", other.kind_name()),
+            Err(e) => anyhow::bail!("reading stats: {e}"),
+        }
+    }
+}
+
+/// Aggregate outcome of a [`bench_client`] run. Latency percentiles are
+/// exact (computed from every Ok reply's client-side round-trip time, not
+/// bucketed).
+#[derive(Clone, Debug, Default)]
+pub struct BenchReport {
+    pub requests: usize,
+    pub ok: usize,
+    pub rejected: usize,
+    /// Error frames plus protocol-level failures — the smoke gate asserts
+    /// this is zero.
+    pub failed: usize,
+    pub elapsed: Duration,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+impl BenchReport {
+    /// Completed-Ok requests per wall-clock second.
+    pub fn req_per_s(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.ok as f64 / secs
+        }
+    }
+
+    /// One-line summary (the CLI prints this; CI greps ` failed=0 `).
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} ok={} rejected={} failed={} elapsed={:.3}s req_per_s={:.1} \
+             p50_us={} p99_us={}",
+            self.requests,
+            self.ok,
+            self.rejected,
+            self.failed,
+            self.elapsed.as_secs_f64(),
+            self.req_per_s(),
+            self.p50_us,
+            self.p99_us,
+        )
+    }
+}
+
+/// Exact percentile by rank over a sorted sample (ceil-rank convention,
+/// matching the histogram side's definition).
+fn percentile(sorted_us: &[u64], q: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let rank = ((q * sorted_us.len() as f64).ceil() as usize).clamp(1, sorted_us.len());
+    sorted_us[rank - 1]
+}
+
+/// Drive `requests` classify calls against `addr` from `conns` concurrent
+/// connections, round-robining over `images`. Every reply is counted; an
+/// unusable connection fails the run (the smoke gate wants hard failures,
+/// not silent undercounting).
+pub fn bench_client(
+    addr: &str,
+    conns: usize,
+    requests: usize,
+    images: &[Vec<f32>],
+) -> Result<BenchReport> {
+    anyhow::ensure!(!images.is_empty(), "bench_client needs at least one image");
+    let conns = conns.max(1).min(requests.max(1));
+    let t0 = Instant::now();
+    let mut report = BenchReport { requests, ..BenchReport::default() };
+    let mut latencies: Vec<u64> = Vec::with_capacity(requests);
+    let results = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(conns);
+        for c in 0..conns {
+            // Split `requests` across connections, remainder to the first.
+            let n = requests / conns + usize::from(c < requests % conns);
+            handles.push(s.spawn(move || -> Result<(usize, usize, usize, Vec<u64>)> {
+                let mut client = ServeClient::connect(addr)?;
+                let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
+                let mut lats = Vec::with_capacity(n);
+                for i in 0..n {
+                    let image = images[(c + i * conns) % images.len()].clone();
+                    let t = Instant::now();
+                    match client.classify(image)? {
+                        ClientReply::Ok { .. } => {
+                            ok += 1;
+                            lats.push(t.elapsed().as_micros() as u64);
+                        }
+                        ClientReply::Rejected { .. } => rejected += 1,
+                        ClientReply::Error { .. } => failed += 1,
+                    }
+                }
+                Ok((ok, rejected, failed, lats))
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("bench connection thread panicked"))
+            .collect::<Vec<_>>()
+    });
+    for r in results {
+        let (ok, rejected, failed, lats) = r?;
+        report.ok += ok;
+        report.rejected += rejected;
+        report.failed += failed;
+        latencies.extend(lats);
+    }
+    report.elapsed = t0.elapsed();
+    latencies.sort_unstable();
+    report.p50_us = percentile(&latencies, 0.50);
+    report.p99_us = percentile(&latencies, 0.99);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_uses_ceil_rank() {
+        let v = [10u64, 20, 30, 40, 50];
+        assert_eq!(percentile(&v, 0.50), 30); // rank ceil(2.5)=3
+        assert_eq!(percentile(&v, 0.99), 50);
+        assert_eq!(percentile(&v, 0.0), 10); // clamped to rank 1
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.99), 7);
+    }
+
+    #[test]
+    fn report_summary_and_rate() {
+        let r = BenchReport {
+            requests: 4,
+            ok: 2,
+            rejected: 1,
+            failed: 1,
+            elapsed: Duration::from_secs(2),
+            p50_us: 5,
+            p99_us: 9,
+        };
+        assert!((r.req_per_s() - 1.0).abs() < 1e-12);
+        let s = r.summary();
+        assert!(s.contains(" failed=1 "), "{s}");
+        assert!(s.contains("p99_us=9"), "{s}");
+        assert_eq!(BenchReport::default().req_per_s(), 0.0);
+    }
+}

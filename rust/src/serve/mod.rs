@@ -1,0 +1,55 @@
+//! Network serving front-end: the subsystem between the sharded engine and
+//! the outside world.
+//!
+//! The engine ([`crate::coordinator::ShardedEngine`]) batches and executes;
+//! this module puts a socket in front of it:
+//!
+//! * [`proto`] — the length-prefixed, versioned binary wire protocol.
+//!   Typed request/response/error frames; logits cross the wire as raw
+//!   IEEE-754 bits, so a served prediction is **bit-identical** to a direct
+//!   [`crate::coordinator::EngineHandle::classify`] call (asserted by the
+//!   loopback tests).
+//! * [`batcher`] — dynamic micro-batching with admission control: a
+//!   bounded queue that coalesces concurrent requests up to
+//!   [`batcher::BatchPolicy::max_batch`] (or a `flush_after` deadline) into
+//!   single [`crate::coordinator::EngineHandle::submit_batch`] hand-offs,
+//!   and answers overflow with an immediate typed rejection instead of
+//!   blocking.
+//! * [`server`] — `std::net::TcpListener` + per-connection threads. Every
+//!   reply is bounded by [`server::ServeConfig::wait_timeout`], so a dead
+//!   engine worker degrades into typed `Error` frames, never hung
+//!   connections. A `StatsReq` frame returns a plain-text observability
+//!   snapshot (server/batcher/engine counters + p50/p95/p99 latency).
+//! * [`client`] — the blocking protocol client and the multi-connection
+//!   load generator behind the CLI `bench-client` subcommand, the loopback
+//!   tests, and CI's serve-smoke gate.
+//!
+//! Backpressure, end to end: connection threads never queue unboundedly —
+//! the admission queue is the only place requests wait for a batch slot,
+//! the engine queue is the only place formed groups wait for a worker, and
+//! when both are full the front door says `Rejected { queue_depth }` in
+//! constant time. Load shedding is part of the protocol, not an accident
+//! of TCP buffers. Everything is std-only (no tokio, no serde): threads +
+//! channels, same as the engine underneath.
+//!
+//! ```no_run
+//! use reram_mpq::serve::{ServeConfig, Server};
+//! # fn main() -> reram_mpq::Result<()> {
+//! # let handle: reram_mpq::coordinator::EngineHandle = todo!();
+//! // `handle` is any deployed engine, e.g. `plan.deploy(..)`.
+//! let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+//! let server = Server::start(listener, handle, ServeConfig::default())?;
+//! println!("serving on {}", server.local_addr());
+//! server.join();
+//! # Ok(()) }
+//! ```
+
+pub mod batcher;
+pub mod client;
+pub mod proto;
+pub mod server;
+
+pub use batcher::{Admission, BatchPolicy, Batcher, BatcherStats, Ticket};
+pub use client::{bench_client, BenchReport, ClientReply, ServeClient};
+pub use proto::{Frame, ProtoError, IMAGE_ELEMS, MAX_FRAME_LEN, PROTO_VERSION};
+pub use server::{ServeConfig, Server, ServerStats};

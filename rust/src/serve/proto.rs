@@ -1,0 +1,440 @@
+//! Wire protocol of the serving front-end: length-prefixed binary frames.
+//!
+//! Every frame is `[payload_len: u32 LE][payload]`, and every payload opens
+//! with `[version: u8][kind: u8]` followed by the kind's body. All integers
+//! are little-endian; floats are IEEE-754 `f32` LE bit patterns, so logits
+//! survive the wire **bit-exactly** (the loopback parity tests depend on
+//! this). Strings are `u32` length + UTF-8 bytes.
+//!
+//! | kind | frame         | direction | body |
+//! |------|---------------|-----------|------|
+//! | 1    | `ClassifyReq` | c -> s    | `id:u64`, `n:u32`, `n × f32` pixels |
+//! | 2    | `ClassifyOk`  | s -> c    | `id:u64`, `class:u16`, `latency_us:u64`, `k:u32`, `k × f32` logits |
+//! | 3    | `StatsReq`    | c -> s    | (empty) |
+//! | 4    | `Stats`       | s -> c    | `text:str` (plain-text metrics) |
+//! | 5    | `Rejected`    | s -> c    | `id:u64`, `queue_depth:u32` — admission control said no |
+//! | 6    | `Error`       | s -> c    | `id:u64`, `message:str` |
+//!
+//! Decoding is strict: an unknown version or kind, a truncated body, or
+//! trailing bytes after the body are all typed [`ProtoError`]s — a server
+//! answers one final `Error` frame and drops the connection rather than
+//! resynchronizing on a corrupt stream. A clean close *between* frames is
+//! [`ProtoError::Closed`], distinguishable from a mid-frame EOF (an
+//! [`ProtoError::Io`]).
+
+use std::io::{self, Read, Write};
+
+/// Protocol version stamped into (and required of) every payload.
+pub const PROTO_VERSION: u8 = 1;
+
+/// Upper bound on a payload length; anything larger is rejected before
+/// allocation so a corrupt or hostile length prefix cannot OOM the server.
+pub const MAX_FRAME_LEN: u32 = 16 << 20;
+
+/// Pixels per classify request: the 32x32x3 image contract shared with
+/// [`crate::coordinator::EngineHandle::classify`].
+pub const IMAGE_ELEMS: usize = 32 * 32 * 3;
+
+/// One protocol frame (see the module table for the wire layout).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    ClassifyReq { id: u64, image: Vec<f32> },
+    ClassifyOk { id: u64, class: u16, latency_us: u64, logits: Vec<f32> },
+    StatsReq,
+    Stats { text: String },
+    Rejected { id: u64, queue_depth: u32 },
+    Error { id: u64, message: String },
+}
+
+/// Why a frame could not be read.
+#[derive(Debug)]
+pub enum ProtoError {
+    /// The peer closed the connection cleanly at a frame boundary.
+    Closed,
+    /// Socket-level failure, including EOF in the middle of a frame.
+    Io(io::Error),
+    /// The payload's version byte does not match [`PROTO_VERSION`].
+    Version { got: u8 },
+    /// Unknown frame kind byte.
+    Kind(u8),
+    /// Declared payload length exceeds [`MAX_FRAME_LEN`].
+    TooLarge(u32),
+    /// The payload did not parse as its declared kind.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Closed => write!(f, "connection closed"),
+            ProtoError::Io(e) => write!(f, "io error: {e}"),
+            ProtoError::Version { got } => {
+                write!(f, "protocol version mismatch: got {got}, want {PROTO_VERSION}")
+            }
+            ProtoError::Kind(k) => write!(f, "unknown frame kind {k}"),
+            ProtoError::TooLarge(n) => {
+                write!(f, "frame length {n} exceeds the {MAX_FRAME_LEN}-byte cap")
+            }
+            ProtoError::Malformed(why) => write!(f, "malformed frame: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl From<io::Error> for ProtoError {
+    fn from(e: io::Error) -> Self {
+        ProtoError::Io(e)
+    }
+}
+
+const KIND_CLASSIFY_REQ: u8 = 1;
+const KIND_CLASSIFY_OK: u8 = 2;
+const KIND_STATS_REQ: u8 = 3;
+const KIND_STATS: u8 = 4;
+const KIND_REJECTED: u8 = 5;
+const KIND_ERROR: u8 = 6;
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(buf, vs.len() as u32);
+    for v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Strict little-endian cursor over a payload body.
+struct Cur<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.off + n > self.b.len() {
+            return Err(ProtoError::Malformed("truncated body"));
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, ProtoError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, ProtoError> {
+        let n = self.u32()? as usize;
+        let bytes = n.checked_mul(4).ok_or(ProtoError::Malformed("vector too long"))?;
+        let raw = self.take(bytes)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn str(&mut self) -> Result<String, ProtoError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| ProtoError::Malformed("string not utf-8"))
+    }
+
+    fn done(&self) -> Result<(), ProtoError> {
+        if self.off == self.b.len() {
+            Ok(())
+        } else {
+            Err(ProtoError::Malformed("trailing bytes after body"))
+        }
+    }
+}
+
+impl Frame {
+    /// Stable name of the frame kind (log lines, error messages).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::ClassifyReq { .. } => "ClassifyReq",
+            Frame::ClassifyOk { .. } => "ClassifyOk",
+            Frame::StatsReq => "StatsReq",
+            Frame::Stats { .. } => "Stats",
+            Frame::Rejected { .. } => "Rejected",
+            Frame::Error { .. } => "Error",
+        }
+    }
+
+    /// The complete wire image (length prefix included) as one buffer, so a
+    /// frame goes out in a single `write_all`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(32);
+        put_u32(&mut p, 0); // length prefix, patched below
+        p.push(PROTO_VERSION);
+        match self {
+            Frame::ClassifyReq { id, image } => {
+                p.push(KIND_CLASSIFY_REQ);
+                put_u64(&mut p, *id);
+                put_f32s(&mut p, image);
+            }
+            Frame::ClassifyOk { id, class, latency_us, logits } => {
+                p.push(KIND_CLASSIFY_OK);
+                put_u64(&mut p, *id);
+                p.extend_from_slice(&class.to_le_bytes());
+                put_u64(&mut p, *latency_us);
+                put_f32s(&mut p, logits);
+            }
+            Frame::StatsReq => p.push(KIND_STATS_REQ),
+            Frame::Stats { text } => {
+                p.push(KIND_STATS);
+                put_str(&mut p, text);
+            }
+            Frame::Rejected { id, queue_depth } => {
+                p.push(KIND_REJECTED);
+                put_u64(&mut p, *id);
+                put_u32(&mut p, *queue_depth);
+            }
+            Frame::Error { id, message } => {
+                p.push(KIND_ERROR);
+                put_u64(&mut p, *id);
+                put_str(&mut p, message);
+            }
+        }
+        let len = (p.len() - 4) as u32;
+        p[..4].copy_from_slice(&len.to_le_bytes());
+        p
+    }
+
+    /// Serialize onto a writer (one `write_all` of [`Frame::to_bytes`]).
+    pub fn write_to(&self, w: &mut impl Write) -> io::Result<()> {
+        w.write_all(&self.to_bytes())
+    }
+
+    /// Read exactly one frame. A clean close before the first prefix byte
+    /// is [`ProtoError::Closed`]; EOF anywhere later is an IO error.
+    pub fn read_from(r: &mut impl Read) -> Result<Frame, ProtoError> {
+        let len = match read_prefix(r)? {
+            Some(len) => len,
+            None => return Err(ProtoError::Closed),
+        };
+        if len > MAX_FRAME_LEN {
+            return Err(ProtoError::TooLarge(len));
+        }
+        if len < 2 {
+            return Err(ProtoError::Malformed("payload shorter than its header"));
+        }
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload)?;
+        if payload[0] != PROTO_VERSION {
+            return Err(ProtoError::Version { got: payload[0] });
+        }
+        let kind = payload[1];
+        let mut cur = Cur { b: &payload[2..], off: 0 };
+        let frame = match kind {
+            KIND_CLASSIFY_REQ => {
+                let id = cur.u64()?;
+                let image = cur.f32s()?;
+                Frame::ClassifyReq { id, image }
+            }
+            KIND_CLASSIFY_OK => {
+                let id = cur.u64()?;
+                let class = cur.u16()?;
+                let latency_us = cur.u64()?;
+                let logits = cur.f32s()?;
+                Frame::ClassifyOk { id, class, latency_us, logits }
+            }
+            KIND_STATS_REQ => Frame::StatsReq,
+            KIND_STATS => Frame::Stats { text: cur.str()? },
+            KIND_REJECTED => {
+                let id = cur.u64()?;
+                let queue_depth = cur.u32()?;
+                Frame::Rejected { id, queue_depth }
+            }
+            KIND_ERROR => {
+                let id = cur.u64()?;
+                let message = cur.str()?;
+                Frame::Error { id, message }
+            }
+            other => return Err(ProtoError::Kind(other)),
+        };
+        cur.done()?;
+        Ok(frame)
+    }
+}
+
+/// Read the 4-byte length prefix; `None` on clean EOF before any byte.
+fn read_prefix(r: &mut impl Read) -> Result<Option<u32>, ProtoError> {
+    let mut buf = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(ProtoError::Io(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof inside a frame length prefix",
+                )));
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    Ok(Some(u32::from_le_bytes(buf)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let bytes = f.to_bytes();
+        let got = Frame::read_from(&mut &bytes[..]).unwrap();
+        assert_eq!(got, f);
+    }
+
+    #[test]
+    fn all_frames_roundtrip_bit_exactly() {
+        roundtrip(Frame::ClassifyReq { id: 7, image: vec![0.0, -1.5, f32::MIN_POSITIVE] });
+        roundtrip(Frame::ClassifyOk {
+            id: u64::MAX,
+            class: 9,
+            latency_us: 123_456,
+            logits: vec![1.0e-30, -0.0, 3.25],
+        });
+        roundtrip(Frame::StatsReq);
+        roundtrip(Frame::Stats { text: "requests=3\nok=3\n".into() });
+        roundtrip(Frame::Rejected { id: 1, queue_depth: 42 });
+        roundtrip(Frame::Error { id: 2, message: "bad image size".into() });
+        // empty vectors / strings are legal
+        roundtrip(Frame::ClassifyReq { id: 0, image: vec![] });
+        roundtrip(Frame::Error { id: 0, message: String::new() });
+    }
+
+    #[test]
+    fn nan_payloads_survive_the_wire() {
+        // PartialEq can't see NaN, so check the bit pattern by hand.
+        let f = Frame::ClassifyOk {
+            id: 1,
+            class: 0,
+            latency_us: 0,
+            logits: vec![f32::NAN],
+        };
+        let bytes = f.to_bytes();
+        match Frame::read_from(&mut &bytes[..]).unwrap() {
+            Frame::ClassifyOk { logits, .. } => {
+                assert_eq!(logits.len(), 1);
+                assert_eq!(logits[0].to_bits(), f32::NAN.to_bits());
+            }
+            other => panic!("wrong frame: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_close_is_distinguished_from_midframe_eof() {
+        // Nothing at all: a clean close.
+        match Frame::read_from(&mut &b""[..]) {
+            Err(ProtoError::Closed) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // Half a prefix, then EOF: an IO error.
+        match Frame::read_from(&mut &[1u8, 0][..]) {
+            Err(ProtoError::Io(_)) => {}
+            other => panic!("expected Io, got {other:?}"),
+        }
+        // Full prefix, truncated payload: also IO.
+        let mut bytes = Frame::StatsReq.to_bytes();
+        bytes.pop();
+        match Frame::read_from(&mut &bytes[..]) {
+            Err(ProtoError::Io(_)) => {}
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_kind_and_length_are_enforced() {
+        let mut bytes = Frame::StatsReq.to_bytes();
+        bytes[4] = PROTO_VERSION + 1; // payload[0]
+        match Frame::read_from(&mut &bytes[..]) {
+            Err(ProtoError::Version { got }) => assert_eq!(got, PROTO_VERSION + 1),
+            other => panic!("expected Version, got {other:?}"),
+        }
+
+        let mut bytes = Frame::StatsReq.to_bytes();
+        bytes[5] = 250; // payload[1]
+        match Frame::read_from(&mut &bytes[..]) {
+            Err(ProtoError::Kind(250)) => {}
+            other => panic!("expected Kind, got {other:?}"),
+        }
+
+        let huge = (MAX_FRAME_LEN + 1).to_le_bytes();
+        match Frame::read_from(&mut &huge[..]) {
+            Err(ProtoError::TooLarge(n)) => assert_eq!(n, MAX_FRAME_LEN + 1),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+
+        // A one-byte payload can't even hold version + kind.
+        let runt = [1u8, 0, 0, 0, PROTO_VERSION];
+        match Frame::read_from(&mut &runt[..]) {
+            Err(ProtoError::Malformed(_)) => {}
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_and_padded_bodies_are_malformed() {
+        // Chop the last logit float out of the payload but fix the prefix.
+        let f = Frame::ClassifyOk { id: 3, class: 1, latency_us: 9, logits: vec![1.0, 2.0] };
+        let mut bytes = f.to_bytes();
+        bytes.truncate(bytes.len() - 4);
+        let len = (bytes.len() - 4) as u32;
+        bytes[..4].copy_from_slice(&len.to_le_bytes());
+        match Frame::read_from(&mut &bytes[..]) {
+            Err(ProtoError::Malformed(_)) => {}
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+
+        // Trailing junk after a well-formed body.
+        let mut bytes = Frame::Rejected { id: 4, queue_depth: 2 }.to_bytes();
+        bytes.push(0xab);
+        let len = (bytes.len() - 4) as u32;
+        bytes[..4].copy_from_slice(&len.to_le_bytes());
+        match Frame::read_from(&mut &bytes[..]) {
+            Err(ProtoError::Malformed(_)) => {}
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frames_stream_back_to_back() {
+        let a = Frame::ClassifyReq { id: 1, image: vec![0.5; 4] };
+        let b = Frame::StatsReq;
+        let mut stream = a.to_bytes();
+        stream.extend_from_slice(&b.to_bytes());
+        let mut r = &stream[..];
+        assert_eq!(Frame::read_from(&mut r).unwrap(), a);
+        assert_eq!(Frame::read_from(&mut r).unwrap(), b);
+        match Frame::read_from(&mut r) {
+            Err(ProtoError::Closed) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+}

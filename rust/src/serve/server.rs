@@ -1,0 +1,261 @@
+//! TCP serving front-end: accept loop + one thread per connection, every
+//! request funneled through the shared micro-batching [`Batcher`].
+//!
+//! Each connection is strict request/reply: the connection thread reads one
+//! frame, answers it, and only then reads the next — concurrency (and
+//! batch fill) comes from the number of connections, which matches how the
+//! load client drives traffic. Per request the thread:
+//!
+//! 1. validates the image size (a typed `Error` frame on mismatch, so one
+//!    bad request can never poison a batch inside the engine),
+//! 2. asks the batcher for admission — a full queue answers a `Rejected`
+//!    frame with the observed queue depth, *without blocking*,
+//! 3. waits on the admitted ticket with [`ServeConfig::wait_timeout`] — a
+//!    dead or wedged worker becomes an `Error` frame, never a hung
+//!    connection.
+//!
+//! A `StatsReq` frame answers a plain-text snapshot merging the server's
+//! own counters, the batcher's admission/coalescing stats, and the engine
+//! metrics (including the p50/p95/p99 latency percentiles).
+
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::batcher::{Admission, BatchPolicy, Batcher};
+use super::proto::{Frame, ProtoError, IMAGE_ELEMS};
+use crate::coordinator::engine::EngineHandle;
+use crate::Result;
+
+/// Server configuration: the batching policy plus the per-request reply
+/// deadline.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    pub policy: BatchPolicy,
+    /// Upper bound on one request's end-to-end wait inside the server
+    /// (batcher hand-off + engine execution).
+    pub wait_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { policy: BatchPolicy::default(), wait_timeout: Duration::from_secs(30) }
+    }
+}
+
+/// Server-level counters (all frames, all connections).
+#[derive(Default)]
+pub struct ServerStats {
+    pub connections: AtomicU64,
+    pub frames_in: AtomicU64,
+    pub ok: AtomicU64,
+    pub rejected: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+/// A running server. Dropping it stops the accept loop (in-flight
+/// connections drain on their own).
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    pub stats: Arc<ServerStats>,
+}
+
+impl Server {
+    /// Serve `engine` on an already-bound listener (bind with port 0 for an
+    /// ephemeral port; [`Server::local_addr`] reports what was assigned).
+    pub fn start(listener: TcpListener, engine: EngineHandle, cfg: ServeConfig) -> Result<Server> {
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ServerStats::default());
+        let batcher = Batcher::start(engine.clone(), cfg.policy);
+        let accept_thread = {
+            let stop = stop.clone();
+            let stats = stats.clone();
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            stats.connections.fetch_add(1, Ordering::Relaxed);
+                            let batcher = batcher.clone();
+                            let engine = engine.clone();
+                            let stats = stats.clone();
+                            let wait = cfg.wait_timeout;
+                            std::thread::spawn(move || {
+                                if let Err(e) = serve_conn(stream, &batcher, &engine, wait, &stats)
+                                {
+                                    crate::debug!("serve connection ended: {e:#}");
+                                }
+                            });
+                        }
+                        Err(e) => crate::warn_!("serve accept failed: {e}"),
+                    }
+                }
+            })
+        };
+        Ok(Server { addr, stop, accept_thread: Some(accept_thread), stats })
+    }
+
+    /// The bound address (resolves port 0 to the assigned ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block the caller on the accept loop forever (CLI `serve --listen`).
+    pub fn join(mut self) {
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Stop accepting new connections. Idempotent; called on drop.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Wake the blocking accept with a throwaway connection so the loop
+        // observes the stop flag. An unspecified bind address (0.0.0.0/[::])
+        // is not connectable everywhere — dial loopback on the bound port
+        // instead.
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let woke = TcpStream::connect_timeout(&wake, Duration::from_millis(250)).is_ok();
+        if let Some(t) = self.accept_thread.take() {
+            if woke {
+                let _ = t.join();
+            }
+            // If the wake-up dial failed, leave the accept thread parked on
+            // the listener rather than blocking this thread forever; it
+            // exits with the process and accepts nothing once stopped.
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One connection's request/reply loop. Returns `Ok` on a clean close and
+/// `Err` after an unrecoverable protocol error (answered with a final
+/// `Error` frame when the socket still accepts one).
+fn serve_conn(
+    mut stream: TcpStream,
+    batcher: &Batcher,
+    engine: &EngineHandle,
+    wait_timeout: Duration,
+    stats: &ServerStats,
+) -> Result<()> {
+    let _ = stream.set_nodelay(true);
+    loop {
+        let frame = match Frame::read_from(&mut stream) {
+            Ok(f) => f,
+            Err(ProtoError::Closed) => return Ok(()),
+            Err(e) => {
+                // Framing is unrecoverable after a malformed prefix: answer
+                // what we can, then drop the connection.
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = Frame::Error { id: 0, message: format!("protocol error: {e}") }
+                    .write_to(&mut stream);
+                anyhow::bail!("protocol error: {e}");
+            }
+        };
+        stats.frames_in.fetch_add(1, Ordering::Relaxed);
+        match frame {
+            Frame::ClassifyReq { id, image } => {
+                if image.len() != IMAGE_ELEMS {
+                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                    Frame::Error {
+                        id,
+                        message: format!(
+                            "bad image size {} (want {IMAGE_ELEMS})",
+                            image.len()
+                        ),
+                    }
+                    .write_to(&mut stream)?;
+                    continue;
+                }
+                match batcher.submit(image) {
+                    Admission::Rejected { queue_depth } => {
+                        stats.rejected.fetch_add(1, Ordering::Relaxed);
+                        Frame::Rejected { id, queue_depth: queue_depth as u32 }
+                            .write_to(&mut stream)?;
+                    }
+                    Admission::Accepted(ticket) => match ticket.wait_timeout(wait_timeout) {
+                        Ok(resp) => {
+                            stats.ok.fetch_add(1, Ordering::Relaxed);
+                            Frame::ClassifyOk {
+                                id,
+                                class: resp.class as u16,
+                                latency_us: resp.latency_us,
+                                logits: resp.logits,
+                            }
+                            .write_to(&mut stream)?;
+                        }
+                        Err(e) => {
+                            stats.errors.fetch_add(1, Ordering::Relaxed);
+                            Frame::Error { id, message: e.to_string() }.write_to(&mut stream)?;
+                        }
+                    },
+                }
+            }
+            Frame::StatsReq => {
+                Frame::Stats { text: stats_text(stats, batcher, engine) }
+                    .write_to(&mut stream)?;
+            }
+            other => {
+                // Server-to-client frames arriving at the server are a
+                // client bug, not a stream corruption: answer and carry on.
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                Frame::Error {
+                    id: 0,
+                    message: format!("unexpected frame kind: {}", other.kind_name()),
+                }
+                .write_to(&mut stream)?;
+            }
+        }
+    }
+}
+
+/// The plain-text stats payload: server frames, batcher admission, engine
+/// execution, latency percentiles — one `key=value` line per layer.
+fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> String {
+    let m = engine.metrics.snapshot();
+    let b = &batcher.stats;
+    format!(
+        "server: connections={} frames_in={} ok={} rejected={} errors={} queue_depth={}\n\
+         batcher: accepted={} rejected={} batches={} mean_fill={:.2}\n\
+         engine: requests={} batches={} mean_batch_fill={:.2} failed_requests={}\n\
+         latency_us: mean_batch={:.1} max={} p50={} p95={} p99={}\n",
+        stats.connections.load(Ordering::Relaxed),
+        stats.frames_in.load(Ordering::Relaxed),
+        stats.ok.load(Ordering::Relaxed),
+        stats.rejected.load(Ordering::Relaxed),
+        stats.errors.load(Ordering::Relaxed),
+        batcher.queue_depth(),
+        b.accepted.load(Ordering::Relaxed),
+        b.rejected.load(Ordering::Relaxed),
+        b.batches.load(Ordering::Relaxed),
+        b.mean_fill(),
+        m.requests,
+        m.batches,
+        m.mean_batch_fill,
+        m.failed_requests,
+        m.mean_latency_us,
+        m.max_latency_us,
+        m.p50_latency_us,
+        m.p95_latency_us,
+        m.p99_latency_us,
+    )
+}

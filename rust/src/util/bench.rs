@@ -4,9 +4,10 @@
 //! benches stop being write-only, machine-readable JSON: every measurement
 //! a runner records can be emitted to `BENCH_<name>.json` (schema per
 //! record: `name` / `iters` / `mean_ns` / `stddev_ns` / `min_ns` /
-//! `git_sha`), which CI's `bench-smoke` job uploads and gates against
-//! `benches/baseline.json`. Used by the `benches/*.rs` targets (declared
-//! `harness = false`).
+//! `git_sha`, plus any [`Bench::annotate`] extras such as the serving
+//! bench's `req_per_s` / `p99_ns`), which CI's `bench-smoke` job uploads
+//! and gates against `benches/baseline.json`. Used by the `benches/*.rs`
+//! targets (declared `harness = false`).
 //!
 //! Environment knobs (see [`Bench::from_env`]): `BENCH_QUICK=1` switches to
 //! the CI smoke profile, and `BENCH_WARMUP` / `BENCH_MIN_ITERS` /
@@ -27,6 +28,10 @@ pub struct Measurement {
     pub mean: Duration,
     pub stddev: Duration,
     pub min: Duration,
+    /// Extra named scalars attached after the run via [`Bench::annotate`]
+    /// (e.g. `req_per_s` / `p99_ns` for the serving benches). Emitted as
+    /// additional fields of the JSON record, next to mean/stddev.
+    pub extras: Vec<(String, f64)>,
 }
 
 impl Measurement {
@@ -41,16 +46,21 @@ impl Measurement {
         )
     }
 
-    /// JSON record for the perf pipeline (nanosecond units).
+    /// JSON record for the perf pipeline (nanosecond units). Any attached
+    /// extras ride along as additional numeric fields.
     pub fn to_value(&self, git_sha: &str) -> Value {
-        obj(vec![
+        let mut fields = vec![
             ("name", Value::Str(self.name.clone())),
             ("iters", Value::Num(self.iters as f64)),
             ("mean_ns", Value::Num(self.mean.as_nanos() as f64)),
             ("stddev_ns", Value::Num(self.stddev.as_nanos() as f64)),
             ("min_ns", Value::Num(self.min.as_nanos() as f64)),
             ("git_sha", Value::Str(git_sha.to_string())),
-        ])
+        ];
+        for (k, v) in &self.extras {
+            fields.push((k.as_str(), Value::Num(*v)));
+        }
+        obj(fields)
     }
 }
 
@@ -170,6 +180,7 @@ impl Bench {
             mean: Duration::from_secs_f64(mean_s),
             stddev: Duration::from_secs_f64(var.sqrt()),
             min: *times.iter().min().unwrap(),
+            extras: Vec::new(),
         };
         println!("{}", m.report());
         self.results.borrow_mut().push(m.clone());
@@ -179,6 +190,17 @@ impl Bench {
     /// Everything recorded by [`Bench::run`] so far.
     pub fn measurements(&self) -> Vec<Measurement> {
         self.results.borrow().clone()
+    }
+
+    /// Attach extra named scalars to the most recent recorded measurement
+    /// called `name`; they are emitted alongside mean/stddev in its JSON
+    /// record (e.g. req/s and p99 latency for the serving benches). A name
+    /// never recorded is a no-op.
+    pub fn annotate(&self, name: &str, extras: &[(&str, f64)]) {
+        let mut results = self.results.borrow_mut();
+        if let Some(m) = results.iter_mut().rev().find(|m| m.name == name) {
+            m.extras.extend(extras.iter().map(|(k, v)| (k.to_string(), *v)));
+        }
     }
 
     /// Write every recorded measurement to `BENCH_<name>.json` under `dir`.
@@ -265,6 +287,28 @@ mod tests {
         });
         assert_eq!(b.min_iters, 1);
         assert_eq!(b.max_iters, 1);
+    }
+
+    #[test]
+    fn annotate_attaches_extras_to_the_json_record() {
+        let b = Bench {
+            warmup: 0,
+            min_iters: 1,
+            max_iters: 1,
+            budget: Duration::ZERO,
+            ..Bench::default()
+        };
+        b.run("serve", || std::hint::black_box(1 + 1));
+        b.annotate("serve", &[("req_per_s", 1234.5), ("p99_ns", 6.7e6)]);
+        b.annotate("never-recorded", &[("ignored", 1.0)]); // no-op, no panic
+        let m = &b.measurements()[0];
+        assert_eq!(m.extras.len(), 2);
+        let v = m.to_value("sha");
+        assert_eq!(v.get("req_per_s").unwrap().num().unwrap(), 1234.5);
+        assert_eq!(v.get("p99_ns").unwrap().num().unwrap(), 6.7e6);
+        // base schema fields stay intact next to the extras
+        assert_eq!(v.get("iters").unwrap().num().unwrap(), 1.0);
+        assert!(Value::parse(&v.to_json()).is_ok());
     }
 
     #[test]

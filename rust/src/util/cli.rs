@@ -66,6 +66,11 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// [`Args::get`], but required: a missing flag is an error naming it.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow::anyhow!("--{key} is required"))
+    }
+
     pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
         match self.get(key) {
             None => Ok(None),
@@ -100,6 +105,14 @@ mod tests {
         assert_eq!(a.get("eval-batches"), Some("3"));
         assert!(a.has("origin"));
         assert_eq!(a.get_f64("cr").unwrap(), Some(0.74));
+    }
+
+    #[test]
+    fn require_names_the_missing_flag() {
+        let a = Args::parse(&v(&["bench-client", "--conns", "4"]), &[]).unwrap();
+        assert_eq!(a.require("conns").unwrap(), "4");
+        let err = a.require("addr").unwrap_err().to_string();
+        assert!(err.contains("--addr"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Loopback integration tests for the `serve` front-end, fully hermetic:
+//! in-memory fixture models on the native `SimXbar` backend, a real TCP
+//! server on an ephemeral loopback port, and the real protocol client.
+//!
+//! Everything here carries the `sim_` prefix so CI's hermetic gate counts
+//! it: these tests must *run* (never skip) on a machine with no AOT
+//! artifacts.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use reram_mpq::backend::SimXbarConfig;
+use reram_mpq::coordinator::{
+    CompressionPlan, EngineConfig, Executor, ModelState, ThresholdMode,
+};
+use reram_mpq::fixture::{self, Fixture};
+use reram_mpq::serve::{
+    bench_client, BatchPolicy, ClientReply, ServeClient, ServeConfig, Server,
+};
+use reram_mpq::RunConfig;
+
+const ELEMS: usize = 32 * 32 * 3;
+
+fn sim_plan(fx: Fixture, scfg: SimXbarConfig, cfg: RunConfig) -> CompressionPlan<'static> {
+    CompressionPlan::from_state(
+        ModelState {
+            exec: Executor::Sim(scfg),
+            model: fx.model,
+            theta: fx.theta,
+            test: fx.test,
+            calib: fx.calib,
+        },
+        cfg,
+    )
+}
+
+fn test_images(plan: &CompressionPlan<'_>, n: usize) -> Vec<Vec<f32>> {
+    let test = plan.test();
+    (0..n)
+        .map(|j| test.x.data()[j * ELEMS..(j + 1) * ELEMS].to_vec())
+        .collect()
+}
+
+fn start_server(
+    handle: &reram_mpq::coordinator::EngineHandle,
+    cfg: ServeConfig,
+) -> (Server, String) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let server = Server::start(listener, handle.clone(), cfg).unwrap();
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+#[test]
+fn sim_serve_loopback_is_bit_identical_to_direct_classify() {
+    // N concurrent client connections must observe argmax AND logits
+    // bit-identical to direct EngineHandle::classify: the simulator is
+    // per-sample deterministic and the protocol ships raw f32 bits.
+    let plan = sim_plan(fixture::tiny(61), SimXbarConfig::default(), RunConfig::default())
+        .threshold(ThresholdMode::FixedCr(0.5));
+    let handle = plan.deploy(EngineConfig::default()).unwrap();
+    let n = 8usize;
+    let images = test_images(&plan, n);
+    let want: Vec<(usize, Vec<f32>)> = images
+        .iter()
+        .map(|img| {
+            let r = handle.classify(img.clone()).unwrap();
+            (r.class, r.logits)
+        })
+        .collect();
+
+    let (_server, addr) = start_server(&handle, ServeConfig::default());
+    let conns = 4usize;
+    std::thread::scope(|s| {
+        for c in 0..conns {
+            let addr = &addr;
+            let images = &images;
+            let want = &want;
+            s.spawn(move || {
+                let mut client = ServeClient::connect(addr).unwrap();
+                for j in (c..n).step_by(conns) {
+                    match client.classify(images[j].clone()).unwrap() {
+                        ClientReply::Ok { class, logits, .. } => {
+                            assert_eq!(class, want[j].0, "sample {j}: argmax over the wire");
+                            assert_eq!(logits, want[j].1, "sample {j}: logits not bit-exact");
+                        }
+                        other => panic!("sample {j}: unexpected reply {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    let snap = handle.metrics.snapshot();
+    assert_eq!(snap.failed_requests, 0);
+    assert_eq!(snap.requests, 2 * n as u64, "direct + served requests");
+}
+
+#[test]
+fn sim_serve_micro_batching_coalesces_concurrent_requests() {
+    // Concurrent connections within one flush window must coalesce into
+    // shared engine batches: mean batch fill strictly above 1.0. The long
+    // flush window makes this deterministic — the first request of a group
+    // waits 50ms, by which time every other connection has submitted.
+    let plan = sim_plan(fixture::tiny(63), SimXbarConfig::default(), RunConfig::default());
+    let handle = plan.deploy_fp32(EngineConfig::default()).unwrap();
+    let cfg = ServeConfig {
+        policy: BatchPolicy {
+            max_batch: 8,
+            flush_after: Duration::from_millis(50),
+            queue: 64,
+        },
+        ..ServeConfig::default()
+    };
+    let (_server, addr) = start_server(&handle, cfg);
+    let conns = 8usize;
+    let per = 2usize;
+    let images = test_images(&plan, conns);
+    std::thread::scope(|s| {
+        for c in 0..conns {
+            let addr = &addr;
+            let images = &images;
+            s.spawn(move || {
+                let mut client = ServeClient::connect(addr).unwrap();
+                for _ in 0..per {
+                    match client.classify(images[c].clone()).unwrap() {
+                        ClientReply::Ok { .. } => {}
+                        other => panic!("unexpected reply {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    let snap = handle.metrics.snapshot();
+    assert_eq!(snap.requests, (conns * per) as u64);
+    assert_eq!(snap.failed_requests, 0);
+    assert!(
+        snap.mean_batch_fill > 1.0,
+        "micro-batching never coalesced: {} batches for {} requests (fill {:.2})",
+        snap.batches,
+        snap.requests,
+        snap.mean_batch_fill
+    );
+}
+
+#[test]
+fn sim_serve_overload_returns_rejected_not_deadlock() {
+    // Queue capacity 1 at the admission door AND in the engine, serial
+    // batches of 1, and the (slow in debug) simulator behind them: a
+    // concurrent burst must shed load with typed Rejected frames while the
+    // accepted requests still complete. No reply may be dropped and no
+    // connection may hang — this is the acceptance test for admission
+    // control.
+    let plan = sim_plan(fixture::tiny(67), SimXbarConfig::default(), RunConfig::default());
+    let handle = plan
+        .deploy_fp32(EngineConfig {
+            max_wait: Duration::from_millis(1),
+            queue: 1,
+            workers: 1,
+        })
+        .unwrap();
+    let cfg = ServeConfig {
+        policy: BatchPolicy { max_batch: 1, flush_after: Duration::ZERO, queue: 1 },
+        wait_timeout: Duration::from_secs(120),
+    };
+    let (_server, addr) = start_server(&handle, cfg);
+    let conns = 8usize;
+    let per = 2usize;
+    let images = test_images(&plan, conns);
+    let (ok, rejected) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                let addr = &addr;
+                let images = &images;
+                s.spawn(move || {
+                    let mut client = ServeClient::connect(addr).unwrap();
+                    let (mut ok, mut rejected) = (0usize, 0usize);
+                    for _ in 0..per {
+                        match client.classify(images[c].clone()).unwrap() {
+                            ClientReply::Ok { .. } => ok += 1,
+                            ClientReply::Rejected { .. } => rejected += 1,
+                            ClientReply::Error { message, .. } => {
+                                panic!("unexpected error frame: {message}")
+                            }
+                        }
+                    }
+                    (ok, rejected)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .fold((0, 0), |acc, r| (acc.0 + r.0, acc.1 + r.1))
+    });
+    assert_eq!(ok + rejected, conns * per, "every request got a typed answer");
+    assert!(ok >= 1, "nothing was served at all");
+    assert!(
+        rejected >= 1,
+        "an overloaded capacity-1 pipeline never rejected (ok={ok})"
+    );
+    // The engine never saw the shed requests; nothing failed inside it.
+    let snap = handle.metrics.snapshot();
+    assert_eq!(snap.failed_requests, 0);
+}
+
+#[test]
+fn sim_serve_stats_frame_and_bench_client_account_for_every_frame() {
+    let plan = sim_plan(fixture::tiny(71), SimXbarConfig::default(), RunConfig::default());
+    let handle = plan.deploy_fp32(EngineConfig::default()).unwrap();
+    let (_server, addr) = start_server(&handle, ServeConfig::default());
+    let images = test_images(&plan, 4);
+    let requests = 12usize;
+    let report = bench_client(&addr, 3, requests, &images).unwrap();
+    assert_eq!(report.requests, requests);
+    assert_eq!(
+        report.ok + report.rejected + report.failed,
+        requests,
+        "every request accounted for: {report:?}"
+    );
+    assert_eq!(report.failed, 0, "{report:?}");
+    // Default queue (256) cannot overflow on 12 requests.
+    assert_eq!(report.rejected, 0, "{report:?}");
+    assert!(report.p99_us >= report.p50_us, "{report:?}");
+    assert!(report.req_per_s() > 0.0);
+
+    // The plain-text stats frame reflects the traffic just driven and the
+    // engine's histogram percentiles.
+    let mut client = ServeClient::connect(&addr).unwrap();
+    let text = client.stats().unwrap();
+    assert!(text.contains("ok=12"), "stats:\n{text}");
+    assert!(text.contains("rejected=0"), "stats:\n{text}");
+    assert!(text.contains("p99="), "stats:\n{text}");
+    assert!(text.contains("mean_fill="), "stats:\n{text}");
+    let snap = handle.metrics.snapshot();
+    assert_eq!(snap.observed_requests, requests as u64);
+    assert!(snap.p99_latency_us >= snap.p50_latency_us);
+}
+
+#[test]
+fn sim_serve_bad_image_size_answers_error_frame_and_connection_survives() {
+    // An undersized image must be refused at the door with a typed Error
+    // frame — never enter a batch (where it would fail the whole batch) —
+    // and the connection must stay usable for the next request.
+    let plan = sim_plan(fixture::tiny(73), SimXbarConfig::default(), RunConfig::default());
+    let handle = plan.deploy_fp32(EngineConfig::default()).unwrap();
+    let (_server, addr) = start_server(&handle, ServeConfig::default());
+    let mut client = ServeClient::connect(&addr).unwrap();
+    match client.classify(vec![0.0; 7]).unwrap() {
+        ClientReply::Error { message, .. } => {
+            assert!(message.contains("bad image size"), "{message}")
+        }
+        other => panic!("unexpected reply {other:?}"),
+    }
+    let images = test_images(&plan, 1);
+    match client.classify(images[0].clone()).unwrap() {
+        ClientReply::Ok { logits, .. } => assert_eq!(logits.len(), fixture::NUM_CLASSES),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    // The malformed request never reached the engine.
+    let snap = handle.metrics.snapshot();
+    assert_eq!(snap.failed_requests, 0);
+    assert_eq!(snap.requests, 1);
+}
