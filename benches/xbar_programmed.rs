@@ -1,0 +1,119 @@
+//! Bench: program-once crossbars — the programmed tile walk vs. the
+//! re-quantize-and-repack-per-call reference path, plus the one-time
+//! programming cost itself. Fully hermetic (in-memory fixture, no AOT
+//! artifacts):
+//!
+//!     cargo bench --bench xbar_programmed
+//!
+//! Emits `BENCH_xbar_programmed.json`; the program-once row carries a
+//! `planes_bytes` annotation (bytes of programmed weight-side storage) and
+//! a `live_strips` count, so the perf pipeline sees the artifact size next
+//! to the speedup. CI's `bench-smoke` runs this in quick mode and gates it
+//! against `benches/baseline.json`.
+
+use reram_mpq::backend::{ProgrammedModel, SimXbar, SimXbarConfig, StripPrecision};
+use reram_mpq::quant::{self, BitMap};
+use reram_mpq::util::bench::Bench;
+use reram_mpq::util::rng::Rng;
+use reram_mpq::{fixture, RunConfig};
+
+fn main() {
+    let b = Bench::from_env();
+    let fx = fixture::tiny(1);
+    let model = &fx.model;
+    let mut cfg = RunConfig::default();
+    cfg.quant.device_sigma = 0.0;
+    let bits: Vec<u8> = (0..model.num_strips())
+        .map(|i| if i % 2 == 0 { 8 } else { 4 })
+        .collect();
+    let qm = quant::apply(model, &fx.theta, &BitMap { bits }, &cfg.quant);
+    let sp = StripPrecision::from_quantized(&qm);
+
+    // 1. the one-time programming cost (all conv layers) + artifact size
+    let scfg = SimXbarConfig::default().with_threads(1);
+    let mut planes_bytes = 0.0f64;
+    let mut live_strips = 0.0f64;
+    b.run("xbar program-once (tiny, all layers)", || {
+        let p = ProgrammedModel::program(model, &qm.theta, &sp, &scfg).expect("program");
+        planes_bytes = p.planes_bytes as f64;
+        live_strips = p.live_strips as f64;
+        p
+    });
+    b.annotate(
+        "xbar program-once (tiny, all layers)",
+        &[("planes_bytes", planes_bytes), ("live_strips", live_strips)],
+    );
+
+    // The widest conv layer (largest K²·D), synthetic patches.
+    let layer = model
+        .conv_layers()
+        .iter()
+        .max_by_key(|l| l.k * l.k * l.d)
+        .expect("fixture has conv layers")
+        .clone();
+    let mut rng = Rng::seed_from_u64(7);
+    let t = 16usize;
+    let patches: Vec<f32> =
+        (0..t * layer.k * layer.k * layer.d).map(|_| rng.normal()).collect();
+
+    // 2. ideal-ADC (exact integer) mode: programmed walk vs re-pack-per-call
+    let ideal = SimXbar::new(scfg);
+    // warm once so the cached artifact exists before the timer
+    let _ = ideal
+        .conv_bitserial(model, &layer, &qm.theta, &patches, t, &sp)
+        .expect("conv");
+    b.run("xbar programmed conv, ideal ADC (tiny widest layer)", || {
+        ideal
+            .conv_bitserial(model, &layer, &qm.theta, &patches, t, &sp)
+            .expect("conv")
+    });
+    b.run("xbar re-pack-per-call conv, ideal ADC (tiny widest layer)", || {
+        ideal
+            .conv_bitserial_reference(model, &layer, &qm.theta, &patches, t, &sp)
+            .expect("conv")
+    });
+
+    // 3. faithful 4-bit-ADC packed phase loop: same comparison
+    let adc = SimXbar::new(scfg.with_adc(4));
+    let _ = adc
+        .conv_bitserial(model, &layer, &qm.theta, &patches, t, &sp)
+        .expect("conv");
+    b.run("xbar programmed conv, 4b ADC packed (tiny widest layer)", || {
+        adc.conv_bitserial(model, &layer, &qm.theta, &patches, t, &sp)
+            .expect("conv")
+    });
+    b.run("xbar re-pack-per-call conv, 4b ADC packed (tiny widest layer)", || {
+        adc.conv_bitserial_reference(model, &layer, &qm.theta, &patches, t, &sp)
+            .expect("conv")
+    });
+
+    // Speedup summary for the console (the JSON carries the raw means).
+    let ms = b.measurements();
+    let mean = |name: &str| {
+        ms.iter()
+            .find(|m| m.name == name)
+            .map(|m| m.mean.as_secs_f64())
+    };
+    if let (Some(p), Some(r)) = (
+        mean("xbar programmed conv, ideal ADC (tiny widest layer)"),
+        mean("xbar re-pack-per-call conv, ideal ADC (tiny widest layer)"),
+    ) {
+        if p > 0.0 {
+            println!("  ideal-ADC programmed speedup: {:.2}x", r / p);
+        }
+    }
+    if let (Some(p), Some(r)) = (
+        mean("xbar programmed conv, 4b ADC packed (tiny widest layer)"),
+        mean("xbar re-pack-per-call conv, 4b ADC packed (tiny widest layer)"),
+    ) {
+        if p > 0.0 {
+            println!("  4b-ADC packed programmed speedup: {:.2}x", r / p);
+        }
+    }
+    println!(
+        "  artifact: {:.0} bytes programmed weight-side storage, {:.0} live strips",
+        planes_bytes, live_strips
+    );
+
+    b.emit_json("xbar_programmed").expect("bench json");
+}

@@ -20,6 +20,25 @@
 //! actually computes (the PJRT graphs fake-quantize weights but still do
 //! ideal f32 MACs); the PJRT backend is the faster, training-parity path.
 //!
+//! ## Program-once crossbars
+//!
+//! Real ReRAM arrays are programmed once at deploy time and then only
+//! driven. The simulator mirrors that lifecycle: all weight-side work —
+//! per-strip quantization to integer codes, `u64` bit-plane packing, analog
+//! conductance programming with the seeded per-strip noise draw — happens a
+//! single time in a [`ProgrammedModel`] artifact (see
+//! [`programmed`]), cached per `(model, theta, strips)` fingerprint on the
+//! backend instance (the config is fixed per instance). The conv hot path
+//! is then a **read-only walk** over programmed tiles through a compact
+//! index that drops pruned and zero-scale strips entirely. Engine workers
+//! program inside [`ExecBackend::ready_check`], so programming cost lands
+//! before readiness is signalled — never on a request — and is observable
+//! through [`ExecBackend::program_ns`] (surfaced per worker in the serving
+//! stats). A per-worker [`scratch::Scratch`] arena supplies every reusable
+//! buffer (im2col patches, DAC codes, packed activation planes, per-shard
+//! accumulators), so the steady-state forward pass performs zero heap
+//! allocation beyond the returned logits tensor.
+//!
 //! ## Bit-plane packing and the tile-sharding invariants
 //!
 //! The simulator's hot path is engineered for throughput without giving up
@@ -34,7 +53,7 @@
 //! (row-segment × column-strip) MVM loop shards across scoped worker
 //! threads (`SimXbarConfig::threads`; 0 = one per core).
 //!
-//! Two invariants make this safe to enable everywhere:
+//! Three invariants make this safe to enable everywhere:
 //!
 //! 1. **Order preservation** — each shard owns a contiguous output-channel
 //!    range with a private accumulator, and per-(sample, channel) partial
@@ -43,14 +62,23 @@
 //! 2. **Shard-stable noise** — the conductance-noise stream is seeded per
 //!    (seed, layer, strip), never from evaluation order, so a given strip
 //!    programs the same array state under any shard count.
+//! 3. **Program-time equals call-time** — the programmed artifact stores
+//!    exactly the values the re-quantize-per-call reference path derives
+//!    (same rounding, same packing, same noise stream), so the tile walk is
+//!    bit-identical to it for every config corner.
 //!
 //! Together they guarantee results are **bit-identical** for every
-//! `threads` value and for the packed vs. scalar (`scalar_lanes`) path —
-//! property-tested in `tests/properties.rs`.
+//! `threads` value, for the packed vs. scalar (`scalar_lanes`) path, and
+//! for the programmed vs. re-pack-per-call path — property-tested in
+//! `tests/properties.rs`.
 
 pub mod nn;
+pub mod programmed;
+pub mod scratch;
 pub mod simxbar;
 
+pub use programmed::{ExecMode, ProgrammedLayer, ProgrammedModel, ProgrammedStrip, StripStore};
+pub use scratch::{ConvScratch, NnScratch, Scratch};
 pub use simxbar::{SimXbar, SimXbarConfig, StripPrecision};
 
 use crate::model::ModelInfo;
@@ -82,9 +110,19 @@ pub trait ExecBackend {
 
     /// Cheap validation run by the serving engine's readiness handshake
     /// before it starts accepting requests, so a misconfigured deployment
-    /// fails loudly at startup instead of on the first batch.
+    /// fails loudly at startup instead of on the first batch. Backends with
+    /// deploy-time state (the simulator's programmed crossbars) build it
+    /// here, so the cost never lands on a request.
     fn ready_check(&self, _model: &ModelInfo, _theta: &Tensor) -> Result<()> {
         Ok(())
+    }
+
+    /// Nanoseconds spent on deploy-time programming (crossbar tile
+    /// construction) by this backend instance; 0 when nothing was
+    /// programmed. The engine records this per worker after the readiness
+    /// check, so `serve` stats expose the deploy-time cost.
+    fn program_ns(&self) -> u64 {
+        0
     }
 }
 

@@ -8,9 +8,19 @@
 //! through [`ConvExec`] so the bit-serial crossbar simulator can take over
 //! exactly the layers the paper quantizes while everything else stays in
 //! exact f32.
+//!
+//! ## Zero-alloc steady state
+//!
+//! [`forward`] threads a per-worker [`Scratch`] arena through every layer:
+//! im2col patches, conv outputs, the one activation copy an identity
+//! shortcut requires, DAC codes and packed activation planes all live in
+//! reusable buffers. After the first pass of a given shape the hot loop
+//! performs no heap allocation; the returned logits tensor is the only
+//! allocation left per request.
 
 use std::collections::HashMap;
 
+use crate::backend::scratch::{ConvScratch, Scratch};
 use crate::model::{ConvLayer, LayerEntry, ModelInfo};
 use crate::tensor::Tensor;
 use crate::Result;
@@ -146,7 +156,11 @@ impl NetSpec {
 /// Pluggable conv execution over im2col patches.
 pub trait ConvExec {
     /// `patches` is `[t, K²·D]` (column order `(kh·K + kw)·D + d`, matching
-    /// the HWIO theta layout); returns `[t, N]`.
+    /// the HWIO theta layout); writes `[t, N]` into `out` (cleared and
+    /// resized by the implementation). `scratch` carries the backend's
+    /// reusable internal buffers so the steady-state call allocates
+    /// nothing.
+    #[allow(clippy::too_many_arguments)]
     fn conv(
         &self,
         model: &ModelInfo,
@@ -154,7 +168,9 @@ pub trait ConvExec {
         theta: &[f32],
         patches: &[f32],
         t: usize,
-    ) -> Result<Vec<f32>>;
+        scratch: &mut ConvScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
 }
 
 /// Ideal f32 conv (the reference the simulator is property-tested against).
@@ -168,11 +184,14 @@ impl ConvExec for ExactConv {
         theta: &[f32],
         patches: &[f32],
         t: usize,
-    ) -> Result<Vec<f32>> {
+        _scratch: &mut ConvScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let cols = layer.k * layer.k * layer.d;
         let n = layer.n;
         let w = &theta[layer.theta_offset..layer.theta_offset + cols * n];
-        let mut out = vec![0.0f32; t * n];
+        out.clear();
+        out.resize(t * n, 0.0);
         for ti in 0..t {
             let row = &patches[ti * cols..(ti + 1) * cols];
             let o = &mut out[ti * n..(ti + 1) * n];
@@ -185,13 +204,15 @@ impl ConvExec for ExactConv {
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 
-/// im2col with SAME padding: `x` is `[b, h, w, c]` row-major; returns
-/// (`patches [b·oh·ow, k²·c]`, oh, ow). Out-of-bounds taps stay zero.
-pub fn im2col(
+/// im2col with SAME padding into a reusable buffer: `x` is `[b, h, w, c]`
+/// row-major; fills `out` with `[b·oh·ow, k²·c]` (out-of-bounds taps stay
+/// zero) and returns (oh, ow).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_into(
     x: &[f32],
     b: usize,
     h: usize,
@@ -199,14 +220,16 @@ pub fn im2col(
     c: usize,
     k: usize,
     stride: usize,
-) -> (Vec<f32>, usize, usize) {
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
     let oh = (h + stride - 1) / stride;
     let ow = (w + stride - 1) / stride;
     // XLA-style SAME: total = max((o-1)*stride + k - in, 0), low half first.
     let pt = ((oh - 1) * stride + k).saturating_sub(h) / 2;
     let pl = ((ow - 1) * stride + k).saturating_sub(w) / 2;
     let cols = k * k * c;
-    let mut out = vec![0.0f32; b * oh * ow * cols];
+    out.clear();
+    out.resize(b * oh * ow * cols, 0.0);
     for bi in 0..b {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -229,6 +252,21 @@ pub fn im2col(
             }
         }
     }
+    (oh, ow)
+}
+
+/// Allocating [`im2col_into`] wrapper: returns (`patches`, oh, ow).
+pub fn im2col(
+    x: &[f32],
+    b: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+) -> (Vec<f32>, usize, usize) {
+    let mut out = Vec::new();
+    let (oh, ow) = im2col_into(x, b, h, w, c, k, stride, &mut out);
     (out, oh, ow)
 }
 
@@ -274,6 +312,9 @@ fn relu(x: &mut [f32]) {
     }
 }
 
+/// One conv layer over im2col patches, reusing `patches` and `out` and
+/// handing `cs` to the backend. Returns the output spatial shape.
+#[allow(clippy::too_many_arguments)]
 fn conv_layer<C: ConvExec + ?Sized>(
     model: &ModelInfo,
     idx: usize,
@@ -285,7 +326,10 @@ fn conv_layer<C: ConvExec + ?Sized>(
     c: usize,
     stride: usize,
     conv: &C,
-) -> Result<(Vec<f32>, usize, usize)> {
+    patches: &mut Vec<f32>,
+    cs: &mut ConvScratch,
+    out: &mut Vec<f32>,
+) -> Result<(usize, usize)> {
     let layer = model.layer(idx);
     anyhow::ensure!(
         layer.d == c,
@@ -293,19 +337,26 @@ fn conv_layer<C: ConvExec + ?Sized>(
         layer.name,
         layer.d
     );
-    let (patches, oh, ow) = im2col(x, b, h, w, c, layer.k, stride);
-    let out = conv.conv(model, layer, theta, &patches, b * oh * ow)?;
-    Ok((out, oh, ow))
+    let (oh, ow) = im2col_into(x, b, h, w, c, layer.k, stride, patches);
+    conv.conv(model, layer, theta, patches, b * oh * ow, cs, out)?;
+    Ok((oh, ow))
 }
 
 /// Full forward pass: images `[B, H, W, 3]` (or flat `[B, H·W·3]`) → logits
 /// `[B, classes]`. Every conv goes through `conv`; everything else is f32.
+///
+/// All intermediate buffers come from `scratch`, so steady-state calls of a
+/// fixed shape allocate nothing beyond the returned tensor. Residual blocks
+/// copy the activation map at most once: identity blocks copy it to
+/// normalize without losing the shortcut operand, projection blocks
+/// normalize in place (the map is replaced by the projection anyway).
 pub fn forward<C: ConvExec + ?Sized>(
     model: &ModelInfo,
     spec: &NetSpec,
     theta: &[f32],
     x: &Tensor,
     conv: &C,
+    scratch: &mut Scratch,
 ) -> Result<Tensor> {
     anyhow::ensure!(
         theta.len() == model.entry.num_params,
@@ -319,66 +370,171 @@ pub fn forward<C: ConvExec + ?Sized>(
         2 if shape[1] == 32 * 32 * 3 => (shape[0], 32, 32, 3),
         _ => anyhow::bail!("unsupported input shape {shape:?}"),
     };
+    let Scratch { nn: ns, conv: cs } = scratch;
 
     // Stem.
-    let (mut act, oh, ow) = conv_layer(model, spec.stem, theta, x.data(), b, h, w, c, 1, conv)?;
+    let (oh, ow) = conv_layer(
+        model,
+        spec.stem,
+        theta,
+        x.data(),
+        b,
+        h,
+        w,
+        c,
+        1,
+        conv,
+        &mut ns.patches,
+        cs,
+        &mut ns.act,
+    )?;
     h = oh;
     w = ow;
     c = model.layer(spec.stem).n;
 
     // Residual stages.
     for blk in &spec.blocks {
-        let mut y = act.clone();
-        group_norm(&mut y, b, h * w, c, theta, &blk.gn1);
-        relu(&mut y);
-        let pre = y.clone();
-        let (y1, oh, ow) = conv_layer(model, blk.conv1, theta, &y, b, h, w, c, blk.stride, conv)?;
         let c_out = model.layer(blk.conv1).n;
-        let mut y = y1;
-        group_norm(&mut y, b, oh * ow, c_out, theta, &blk.gn2);
-        relu(&mut y);
-        let (y2, oh2, ow2) = conv_layer(model, blk.conv2, theta, &y, b, oh, ow, c_out, 1, conv)?;
-        debug_assert_eq!((oh, ow), (oh2, ow2));
         if let Some(sc) = blk.shortcut {
-            let (sh, _, _) = conv_layer(model, sc, theta, &pre, b, h, w, c, blk.stride, conv)?;
-            act = sh;
+            // The projection replaces `act`, so normalize it in place — the
+            // normalized map feeds conv1 *and* the shortcut conv, no copy.
+            group_norm(&mut ns.act, b, h * w, c, theta, &blk.gn1);
+            relu(&mut ns.act);
+            let (oh, ow) = conv_layer(
+                model,
+                blk.conv1,
+                theta,
+                &ns.act,
+                b,
+                h,
+                w,
+                c,
+                blk.stride,
+                conv,
+                &mut ns.patches,
+                cs,
+                &mut ns.y1,
+            )?;
+            group_norm(&mut ns.y1, b, oh * ow, c_out, theta, &blk.gn2);
+            relu(&mut ns.y1);
+            let (oh2, ow2) = conv_layer(
+                model,
+                blk.conv2,
+                theta,
+                &ns.y1,
+                b,
+                oh,
+                ow,
+                c_out,
+                1,
+                conv,
+                &mut ns.patches,
+                cs,
+                &mut ns.y2,
+            )?;
+            debug_assert_eq!((oh, ow), (oh2, ow2));
+            let _ = conv_layer(
+                model,
+                sc,
+                theta,
+                &ns.act,
+                b,
+                h,
+                w,
+                c,
+                blk.stride,
+                conv,
+                &mut ns.patches,
+                cs,
+                &mut ns.sh,
+            )?;
+            std::mem::swap(&mut ns.act, &mut ns.sh);
+            for (a, v) in ns.act.iter_mut().zip(&ns.y2) {
+                *a += v;
+            }
+            h = oh;
+            w = ow;
+            c = c_out;
         } else {
             anyhow::ensure!(
                 blk.stride == 1 && c == c_out,
                 "identity shortcut requires matching dims"
             );
+            // `act` must survive for the residual add: the one activation
+            // copy this block needs.
+            ns.y.clear();
+            ns.y.extend_from_slice(&ns.act);
+            group_norm(&mut ns.y, b, h * w, c, theta, &blk.gn1);
+            relu(&mut ns.y);
+            let (oh, ow) = conv_layer(
+                model,
+                blk.conv1,
+                theta,
+                &ns.y,
+                b,
+                h,
+                w,
+                c,
+                blk.stride,
+                conv,
+                &mut ns.patches,
+                cs,
+                &mut ns.y1,
+            )?;
+            group_norm(&mut ns.y1, b, oh * ow, c_out, theta, &blk.gn2);
+            relu(&mut ns.y1);
+            let (oh2, ow2) = conv_layer(
+                model,
+                blk.conv2,
+                theta,
+                &ns.y1,
+                b,
+                oh,
+                ow,
+                c_out,
+                1,
+                conv,
+                &mut ns.patches,
+                cs,
+                &mut ns.y2,
+            )?;
+            debug_assert_eq!((oh, ow), (oh2, ow2));
+            for (a, v) in ns.act.iter_mut().zip(&ns.y2) {
+                *a += v;
+            }
+            h = oh;
+            w = ow;
         }
-        for (a, v) in act.iter_mut().zip(&y2) {
-            *a += v;
-        }
-        h = oh;
-        w = ow;
-        c = c_out;
     }
 
     // Head: GN → ReLU → global mean pool → dense.
-    group_norm(&mut act, b, h * w, c, theta, &spec.head_gn);
-    relu(&mut act);
+    group_norm(&mut ns.act, b, h * w, c, theta, &spec.head_gn);
+    relu(&mut ns.act);
     let hw = h * w;
     let k = spec.classes;
     let dw = &theta[spec.dense_w..spec.dense_w + c * k];
     let db = &theta[spec.dense_b..spec.dense_b + k];
     let mut logits = vec![0.0f32; b * k];
+    // The pool accumulator is hoisted out of the per-sample loop: one
+    // buffer, re-zeroed per sample, never reallocated.
+    ns.pooled.clear();
+    ns.pooled.resize(c, 0.0);
     for bi in 0..b {
-        // mean over pixels
-        let mut pooled = vec![0.0f64; c];
+        for pc in ns.pooled.iter_mut() {
+            *pc = 0.0;
+        }
         for p in 0..hw {
             let base = (bi * hw + p) * c;
-            for (pc, &v) in pooled.iter_mut().zip(&act[base..base + c]) {
+            for (pc, &v) in ns.pooled.iter_mut().zip(&ns.act[base..base + c]) {
                 *pc += v as f64;
             }
         }
-        for pc in pooled.iter_mut() {
+        for pc in ns.pooled.iter_mut() {
             *pc /= hw as f64;
         }
         let row = &mut logits[bi * k..(bi + 1) * k];
         row.copy_from_slice(db);
-        for (ci, &p) in pooled.iter().enumerate() {
+        for (ci, &p) in ns.pooled.iter().enumerate() {
             for (rv, &wv) in row.iter_mut().zip(&dw[ci * k..(ci + 1) * k]) {
                 *rv += p as f32 * wv;
             }
@@ -422,6 +578,18 @@ mod tests {
     }
 
     #[test]
+    fn im2col_into_reuses_a_dirty_buffer() {
+        // Stale contents (from a previous, larger conv) must not leak into
+        // the padding zeros of the next call.
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let mut buf = vec![7.0f32; 4096];
+        let (oh, ow) = im2col_into(&x, 1, 3, 3, 1, 3, 1, &mut buf);
+        assert_eq!((oh, ow), (3, 3));
+        let (fresh, _, _) = im2col(&x, 1, 3, 3, 1, 3, 1);
+        assert_eq!(buf, fresh);
+    }
+
+    #[test]
     fn group_norm_normalizes_and_scales() {
         // 1 sample, 2 pixels, 2 channels, groups = min(8,2) = 2 (one channel
         // per group): each channel normalized independently over pixels.
@@ -457,14 +625,39 @@ mod tests {
         let fx = fixture::tiny(5);
         let spec = NetSpec::parse(&fx.model).unwrap();
         let xb = fx.test.x.slice_rows(0, 2);
-        let logits = forward(&fx.model, &spec, &fx.theta, &xb, &ExactConv).unwrap();
+        let mut scratch = Scratch::default();
+        let logits = forward(&fx.model, &spec, &fx.theta, &xb, &ExactConv, &mut scratch).unwrap();
         assert_eq!(logits.shape(), &[2, 10]);
         assert!(logits.data().iter().all(|v| v.is_finite()));
         // per-sample independence: row 0 of a batch equals a solo forward
-        let solo = forward(&fx.model, &spec, &fx.theta, &fx.test.x.slice_rows(0, 1), &ExactConv)
-            .unwrap();
+        let solo = forward(
+            &fx.model,
+            &spec,
+            &fx.theta,
+            &fx.test.x.slice_rows(0, 1),
+            &ExactConv,
+            &mut scratch,
+        )
+        .unwrap();
         for (a, b) in solo.data().iter().zip(logits.data()) {
             assert_eq!(a, b, "batch composition must not change a sample's logits");
         }
+    }
+
+    #[test]
+    fn forward_is_bit_identical_with_a_reused_scratch() {
+        // The scratch arena is the zero-alloc mechanism; reusing it across
+        // calls (dirty buffers, different batch sizes) must never change a
+        // result bit.
+        let fx = fixture::tiny(8);
+        let spec = NetSpec::parse(&fx.model).unwrap();
+        let mut scratch = Scratch::default();
+        let xb2 = fx.test.x.slice_rows(0, 2);
+        let first = forward(&fx.model, &spec, &fx.theta, &xb2, &ExactConv, &mut scratch).unwrap();
+        // interleave a different shape to dirty every buffer
+        let xb1 = fx.test.x.slice_rows(2, 3);
+        let _ = forward(&fx.model, &spec, &fx.theta, &xb1, &ExactConv, &mut scratch).unwrap();
+        let again = forward(&fx.model, &spec, &fx.theta, &xb2, &ExactConv, &mut scratch).unwrap();
+        assert_eq!(first.data(), again.data());
     }
 }

@@ -1,0 +1,386 @@
+//! Program-once crossbar artifact: the deploy-time weight-side state of the
+//! simulated ReRAM arrays.
+//!
+//! In a real CIM deployment the crossbar is *programmed once* and then only
+//! driven. [`ProgrammedModel::program`] performs every weight-side step of
+//! [`crate::backend::SimXbar`]'s bit-serial conv ahead of time, per strip:
+//! integer weight codes (re-derived from the quantized parameters and the
+//! per-strip scale), pre-packed `u64` weight bit-planes (one per cell slice
+//! × cell bit × polarity, in the row-segment word layout), or the analog
+//! differential conductance columns (with the seeded per-strip noise draw
+//! already applied) — whichever the configured [`ExecMode`] reads at
+//! inference time. Pruned (`bits == 0`) and zero-scale strips are dropped
+//! from the index entirely, so the inference walk never branches on dead
+//! strips.
+//!
+//! ## Artifact lifetime and cache key
+//!
+//! The artifact is a pure function of `(ModelInfo, theta, StripPrecision,
+//! SimXbarConfig)`. `SimXbar` memoizes one artifact per instance, keyed by
+//! an FNV-1a fingerprint over the model identity, the parameter vector,
+//! the per-strip bits/scales and the config's fidelity knobs (`threads` is
+//! excluded — sharding is bit-identical and shares the artifact). Engine
+//! workers program eagerly inside the readiness handshake
+//! ([`crate::backend::ExecBackend::ready_check`]); each worker owns its
+//! backend — and therefore its own programmed copy, mirroring per-worker
+//! crossbar hardware — so programming cost lands at deploy time, never on
+//! a request, and scales with the worker count like the arrays themselves
+//! would.
+//!
+//! ## Bit-identity
+//!
+//! Programming performs exactly the computations the re-quantize-per-call
+//! path ([`crate::backend::SimXbar::conv_bitserial_reference`]) performs
+//! per conv call, with the same rounding and the same per-(seed, layer,
+//! strip) noise stream — so the programmed walk is **bit-identical** to the
+//! on-the-fly path for every config corner (property-tested in
+//! `tests/properties.rs`).
+
+use std::time::Instant;
+
+use crate::backend::simxbar::{SimXbarConfig, StripPrecision};
+use crate::model::ModelInfo;
+use crate::quant;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// u64 words covering a `len`-lane row segment.
+#[inline]
+pub(crate) fn words_of(len: usize) -> usize {
+    len.div_ceil(64)
+}
+
+/// Row-segment partition of `d` word lines into ranges of at most `rows`
+/// lanes: (lane start, lane count, u64-word offset) per segment, plus the
+/// total packed word count. Each segment packs into its own words so
+/// popcounts never cross a conversion boundary.
+pub(crate) fn segments(d: usize, rows: usize) -> (Vec<(usize, usize, usize)>, usize) {
+    let mut segs = Vec::new();
+    let mut start = 0usize;
+    let mut woff = 0usize;
+    while start < d {
+        let len = rows.min(d - start);
+        segs.push((start, len, woff));
+        woff += words_of(len);
+        start += len;
+    }
+    (segs, woff)
+}
+
+/// Pack one strip's integer weight codes into u64 cell-bit planes: one
+/// plane per (cell slice × cell bit × polarity), segmented like the row
+/// partition. Layout: `[cell slice × cell bit][polarity][segment words]`.
+pub(crate) fn pack_weight_planes_into(
+    planes: &mut Vec<u64>,
+    codes_w: &[i32],
+    cell_bits: u8,
+    ncells: usize,
+    segs: &[(usize, usize, usize)],
+    total_words: usize,
+) {
+    let cb = cell_bits as usize;
+    let mask = (1i32 << cell_bits) - 1;
+    planes.clear();
+    planes.resize(ncells * cb * 2 * total_words, 0);
+    for &(start, len, woff) in segs {
+        for l in 0..len {
+            let cwv = codes_w[start + l];
+            if cwv == 0 {
+                continue;
+            }
+            let (p, q) = (cwv.max(0), (-cwv).max(0));
+            let bit = 1u64 << (l % 64);
+            let w = woff + l / 64;
+            for j in 0..ncells {
+                let sh = (j as u32) * cell_bits as u32;
+                let pv = (p >> sh) & mask;
+                let qv = (q >> sh) & mask;
+                for b in 0..cb {
+                    let cellbit = 1i32 << b;
+                    let row = (j * cb + b) * 2;
+                    if pv & cellbit != 0 {
+                        planes[row * total_words + w] |= bit;
+                    }
+                    if qv & cellbit != 0 {
+                        planes[(row + 1) * total_words + w] |= bit;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Which execution strategy the artifact was programmed for — the same
+/// decision the per-call path makes from the config, frozen at program
+/// time so the programmed store and the inference walk can never disagree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Ideal converters: integer codes, phase decomposition telescoped to
+    /// the plain integer dot product.
+    Exact,
+    /// Faithful phase loop over packed u64 bit-planes (integral cells).
+    Packed,
+    /// Scalar lane scan over real-valued (possibly noisy) conductances.
+    Analog,
+}
+
+impl ExecMode {
+    /// The mode `cfg` executes.
+    pub fn of(cfg: &SimXbarConfig) -> Self {
+        if cfg.adc_bits == 0 && cfg.noise_sigma == 0.0 && !cfg.force_phase_loop {
+            ExecMode::Exact
+        } else if cfg.noise_sigma == 0.0 && !cfg.scalar_lanes {
+            ExecMode::Packed
+        } else {
+            ExecMode::Analog
+        }
+    }
+}
+
+/// Weight-side state of one programmed strip, in the representation the
+/// configured [`ExecMode`] reads.
+pub enum StripStore {
+    /// Integer weight codes (ideal-converter fast path).
+    Exact { codes: Vec<i32> },
+    /// Packed weight bit-planes, layout
+    /// `[cell slice × cell bit][polarity][segment words]`.
+    Packed { planes: Vec<u64>, ncells: usize },
+    /// Differential conductance columns `[cell slice][lane]`, noise already
+    /// programmed in.
+    Analog { gpos: Vec<f64>, gneg: Vec<f64>, ncells: usize },
+}
+
+/// One live (non-pruned, non-zero-scale) strip of a programmed layer.
+pub struct ProgrammedStrip {
+    /// Kernel tap `g = kh·K + kw` this strip belongs to.
+    pub g: u32,
+    /// Per-strip quantization scale (LSB).
+    pub sw: f32,
+    pub store: StripStore,
+}
+
+/// One conv layer's programmed tiles plus the compact live-strip index.
+pub struct ProgrammedLayer {
+    /// Input depth D (strip length).
+    pub d: usize,
+    /// Output channels N.
+    pub n: usize,
+    /// Kernel taps K².
+    pub kk: usize,
+    /// Live strips, channel-major then kernel-tap-ascending — the same
+    /// per-(sample, channel) accumulation order as the on-the-fly loop.
+    pub strips: Vec<ProgrammedStrip>,
+    /// Per output channel: (start, len) range into `strips`. Channels whose
+    /// strips are all dropped have an empty range.
+    pub chan: Vec<(u32, u32)>,
+    /// Row-segment partition of the layer depth.
+    pub segs: Vec<(usize, usize, usize)>,
+    /// Packed u64 words per (phase/cell-bit × polarity) plane.
+    pub total_words: usize,
+}
+
+/// The programmed-crossbar artifact for one `(model, theta, strips,
+/// config)` tuple: every conv layer's tiles, ready for read-only inference.
+pub struct ProgrammedModel {
+    /// Execution strategy the tiles were programmed for.
+    pub mode: ExecMode,
+    /// Per conv layer, `ModelInfo::conv_layers()` order.
+    pub layers: Vec<ProgrammedLayer>,
+    /// Strips actually programmed (bits > 0 and scale > 0).
+    pub live_strips: usize,
+    /// Pruned or zero-scale strips dropped from the index.
+    pub dropped_strips: usize,
+    /// Bytes of programmed weight-side storage (codes, packed planes or
+    /// analog conductances, whichever the mode stores).
+    pub planes_bytes: usize,
+    /// Wall-clock nanoseconds spent programming (always >= 1).
+    pub program_ns: u64,
+}
+
+impl ProgrammedModel {
+    /// Program every conv layer's crossbar tiles ahead of time. Validates
+    /// the config and the strip metadata up front, so a malformed
+    /// deployment fails at programming time, not on the first request.
+    pub fn program(
+        model: &ModelInfo,
+        theta: &[f32],
+        sp: &StripPrecision,
+        cfg: &SimXbarConfig,
+    ) -> Result<ProgrammedModel> {
+        let t0 = Instant::now();
+        anyhow::ensure!(cfg.rows >= 1, "sim rows must be >= 1");
+        anyhow::ensure!(
+            (1..=8).contains(&cfg.cell_bits),
+            "sim cell_bits {} out of range 1..=8",
+            cfg.cell_bits
+        );
+        anyhow::ensure!(
+            (2..=24).contains(&cfg.input_bits),
+            "sim input_bits {} out of range 2..=24",
+            cfg.input_bits
+        );
+        anyhow::ensure!(cfg.adc_bits <= 16, "sim adc_bits {} out of range 0..=16", cfg.adc_bits);
+        anyhow::ensure!(
+            sp.bits.len() == model.num_strips() && sp.scales.len() == sp.bits.len(),
+            "strip precision covers {} strips, model has {}",
+            sp.bits.len(),
+            model.num_strips()
+        );
+        anyhow::ensure!(
+            theta.len() == model.entry.num_params,
+            "theta length {} does not match model ({} params)",
+            theta.len(),
+            model.entry.num_params
+        );
+
+        let mode = ExecMode::of(cfg);
+        let mask = (1i32 << cfg.cell_bits) - 1;
+        let mut layers = Vec::with_capacity(model.conv_layers().len());
+        let (mut live, mut dropped) = (0usize, 0usize);
+        let mut planes_bytes = 0usize;
+        let mut base = 0usize;
+        let mut codes_w: Vec<i32> = Vec::new();
+        for layer in model.conv_layers() {
+            let d = layer.d;
+            let (segs, total_words) = segments(d, cfg.rows);
+            let kk = layer.k * layer.k;
+            codes_w.clear();
+            codes_w.resize(d, 0);
+            let mut strips = Vec::new();
+            let mut chan = Vec::with_capacity(layer.n);
+            for ch in 0..layer.n {
+                let start = strips.len() as u32;
+                for g in 0..kk {
+                    let idx = base + g * layer.n + ch;
+                    let bits = sp.bits[idx];
+                    if bits == 0 {
+                        dropped += 1;
+                        continue; // pruned strip: no cells programmed
+                    }
+                    anyhow::ensure!(
+                        (1..=16).contains(&bits),
+                        "strip {idx} has unsupported bit width {bits}"
+                    );
+                    let sw = sp.scales[idx];
+                    if sw <= 0.0 {
+                        dropped += 1;
+                        continue;
+                    }
+                    let q_w = quant::qmax(bits);
+                    for (dd, cwv) in codes_w.iter_mut().enumerate() {
+                        let wv = theta[layer.theta_index(g, dd, ch)];
+                        *cwv = (wv / sw).round().clamp(-q_w, q_w) as i32;
+                    }
+                    let ncells = bits.div_ceil(cfg.cell_bits) as usize;
+                    let store = match mode {
+                        ExecMode::Exact => {
+                            planes_bytes += codes_w.len() * std::mem::size_of::<i32>();
+                            StripStore::Exact { codes: codes_w.clone() }
+                        }
+                        ExecMode::Packed => {
+                            let mut planes = Vec::new();
+                            pack_weight_planes_into(
+                                &mut planes,
+                                &codes_w,
+                                cfg.cell_bits,
+                                ncells,
+                                &segs,
+                                total_words,
+                            );
+                            planes_bytes += planes.len() * std::mem::size_of::<u64>();
+                            StripStore::Packed { planes, ncells }
+                        }
+                        ExecMode::Analog => {
+                            // Program the differential, bit-sliced cell
+                            // columns, with the same per-(seed, layer,
+                            // strip) noise stream as the per-call path.
+                            let mut gpos = vec![0.0f64; ncells * d];
+                            let mut gneg = vec![0.0f64; ncells * d];
+                            for (dd, &cwv) in codes_w.iter().enumerate() {
+                                let (p, q) = (cwv.max(0), (-cwv).max(0));
+                                for j in 0..ncells {
+                                    let sh = (j as u32) * cfg.cell_bits as u32;
+                                    gpos[j * d + dd] = ((p >> sh) & mask) as f64;
+                                    gneg[j * d + dd] = ((q >> sh) & mask) as f64;
+                                }
+                            }
+                            if cfg.noise_sigma > 0.0 {
+                                let mut rng = Rng::seed_from_u64(
+                                    cfg.seed
+                                        ^ (layer.index as u64 + 1)
+                                            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                                        ^ (idx as u64 + 1).wrapping_mul(0xbf58_476d_1ce4_e5b9),
+                                );
+                                for v in gpos.iter_mut().chain(gneg.iter_mut()) {
+                                    *v += rng.normal() as f64 * cfg.noise_sigma;
+                                }
+                            }
+                            planes_bytes +=
+                                (gpos.len() + gneg.len()) * std::mem::size_of::<f64>();
+                            StripStore::Analog { gpos, gneg, ncells }
+                        }
+                    };
+                    strips.push(ProgrammedStrip { g: g as u32, sw, store });
+                    live += 1;
+                }
+                chan.push((start, strips.len() as u32 - start));
+            }
+            layers.push(ProgrammedLayer {
+                d,
+                n: layer.n,
+                kk,
+                strips,
+                chan,
+                segs,
+                total_words,
+            });
+            base += layer.num_strips();
+        }
+        Ok(ProgrammedModel {
+            mode,
+            layers,
+            live_strips: live,
+            dropped_strips: dropped,
+            planes_bytes,
+            program_ns: (t0.elapsed().as_nanos() as u64).max(1),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_mode_matches_the_per_call_decision_table() {
+        let base = SimXbarConfig::default();
+        assert_eq!(ExecMode::of(&base), ExecMode::Exact);
+        assert_eq!(ExecMode::of(&base.with_adc(4)), ExecMode::Packed);
+        assert_eq!(
+            ExecMode::of(&SimXbarConfig { force_phase_loop: true, ..base }),
+            ExecMode::Packed
+        );
+        assert_eq!(ExecMode::of(&base.with_noise(0.1, 1)), ExecMode::Analog);
+        assert_eq!(
+            ExecMode::of(&SimXbarConfig { scalar_lanes: true, force_phase_loop: true, ..base }),
+            ExecMode::Analog
+        );
+        // scalar_lanes alone does not disturb the exact fast path
+        assert_eq!(
+            ExecMode::of(&SimXbarConfig { scalar_lanes: true, ..base }),
+            ExecMode::Exact
+        );
+    }
+
+    #[test]
+    fn segments_partition_and_word_offsets() {
+        let (segs, words) = segments(19, 4);
+        assert_eq!(segs.len(), 5);
+        assert_eq!(segs[0], (0, 4, 0));
+        assert_eq!(segs[4], (16, 3, 4));
+        assert_eq!(words, 5);
+        let (segs, words) = segments(128, 128);
+        assert_eq!(segs, vec![(0, 128, 0)]);
+        assert_eq!(words, 2);
+    }
+}

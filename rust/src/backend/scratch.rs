@@ -1,0 +1,78 @@
+//! Reusable per-worker buffers for the zero-alloc inference path.
+//!
+//! Every buffer the forward pass and the simulated-crossbar conv need per
+//! call lives here, owned by the backend instance (one per engine worker)
+//! and threaded through [`crate::backend::nn::forward`] /
+//! [`crate::backend::nn::ConvExec::conv`] as `&mut`. Buffers are grown with
+//! `clear()` + `resize()` (capacity is kept), so after the first forward
+//! pass of a given shape the steady-state hot loop performs **zero heap
+//! allocation** — the only allocation left per request is the returned
+//! logits tensor.
+
+/// Forward-pass-level buffers (activations, im2col patches, pooling).
+#[derive(Default)]
+pub struct NnScratch {
+    /// The running activation map `[b, h, w, c]`.
+    pub act: Vec<f32>,
+    /// Normalized copy of `act` for identity-shortcut blocks (the one
+    /// activation copy per block that is actually required — `act` must
+    /// survive for the residual add).
+    pub y: Vec<f32>,
+    /// conv1 output of the current block.
+    pub y1: Vec<f32>,
+    /// conv2 output of the current block.
+    pub y2: Vec<f32>,
+    /// Projection-shortcut conv output (swapped into `act`).
+    pub sh: Vec<f32>,
+    /// im2col patch matrix `[t, K²·D]` of the current conv.
+    pub patches: Vec<f32>,
+    /// Per-sample mean-pool accumulator of the head (hoisted out of the
+    /// per-sample loop).
+    pub pooled: Vec<f64>,
+}
+
+/// Conv-backend-internal buffers (DAC codes, packed activation planes,
+/// per-shard accumulators).
+#[derive(Default)]
+pub struct ConvScratch {
+    /// DAC activation codes `[t, K²·D]`.
+    pub codes_a: Vec<i32>,
+    /// Per-conversion-window activation scales `[t]`.
+    pub sa: Vec<f32>,
+    /// Packed activation bit-planes, flattened
+    /// `[tap][ti][phase][polarity][segment words]`.
+    pub a_planes: Vec<u64>,
+    /// Per-shard `[t, channel-range]` accumulators of the tile-sharded MVM
+    /// loop (one per worker thread, reused across calls).
+    pub parts: Vec<Vec<f32>>,
+}
+
+/// The full per-worker scratch arena: the forward-pass buffers plus the
+/// conv-backend buffers, split so the two layers can borrow their halves
+/// independently.
+#[derive(Default)]
+pub struct Scratch {
+    pub nn: NnScratch,
+    pub conv: ConvScratch,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scratch_buffers_keep_capacity_across_reuse() {
+        let mut s = Scratch::default();
+        s.nn.act.resize(1024, 0.0);
+        s.conv.codes_a.resize(2048, 0);
+        let cap_act = s.nn.act.capacity();
+        let cap_codes = s.conv.codes_a.capacity();
+        // the reuse discipline: clear + resize never shrinks capacity
+        s.nn.act.clear();
+        s.nn.act.resize(512, 0.0);
+        s.conv.codes_a.clear();
+        s.conv.codes_a.resize(100, 0);
+        assert!(s.nn.act.capacity() >= cap_act);
+        assert!(s.conv.codes_a.capacity() >= cap_codes);
+    }
+}

@@ -12,7 +12,10 @@
 //! `Send` — and [`ShardedEngine::start`] blocks on a per-worker readiness
 //! handshake, aggregating failures into a typed [`StartupError`] so a
 //! backend that cannot come up surfaces to the caller instead of a log
-//! line and a silently dead queue. Formed batches are handed to the first
+//! line and a silently dead queue. Sim workers **program their crossbars**
+//! (the program-once tile artifact) inside that handshake, so deploy-time
+//! programming cost never lands on a request; each worker's cost is
+//! recorded in [`Metrics`] before it reports ready. Formed batches are handed to the first
 //! worker with a free queue slot (falling back to a blocking round-robin
 //! send when all are busy), and shutdown drains every accepted request —
 //! replies are always delivered, as a [`Response`] or a typed
@@ -393,6 +396,12 @@ impl ShardedEngine {
                 // The backend is created inside this thread (PJRT is !Send).
                 let worker = match seed.build() {
                     Ok(wk) => {
+                        // Deploy-time crossbar programming happened inside
+                        // the readiness check; record its cost *before*
+                        // signalling ready, so `start()` returning implies
+                        // every worker's programming is finished and
+                        // observable — no request ever pays it.
+                        metrics.observe_program(wk.backend.program_ns());
                         let _ = ready.send((w, Ok(())));
                         drop(ready);
                         wk
@@ -591,6 +600,45 @@ impl Worker {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sim_engine_programs_crossbars_before_accepting_requests() {
+        use crate::fixture;
+        use crate::quant::{self, BitMap};
+
+        let fx = fixture::tiny(9);
+        let bits: Vec<u8> = (0..fx.model.num_strips())
+            .map(|i| if i % 2 == 0 { 8 } else { 4 })
+            .collect();
+        let qcfg = crate::config::QuantConfig {
+            device_sigma: 0.0,
+            ..crate::config::QuantConfig::default()
+        };
+        let qm = quant::apply(&fx.model, &fx.theta, &BitMap { bits }, &qcfg);
+        let spec = BackendSpec::Sim {
+            cfg: SimXbarConfig::default().with_threads(1),
+            strips: Some(StripPrecision::from_quantized(&qm)),
+        };
+        let engine = ShardedEngine::new(
+            spec,
+            &fx.model,
+            qm.theta.clone(),
+            EngineConfig::default().with_workers(2),
+        )
+        .unwrap();
+        let handle = engine.start().unwrap();
+        // The readiness handshake records each worker's programming cost
+        // before the worker reports ready, so by the time start() returns —
+        // i.e. before the first request can be accepted — every worker has
+        // programmed its crossbars and the cost is observable.
+        let snap = handle.metrics.snapshot();
+        assert_eq!(snap.programmed_workers, 2, "both workers programmed before readiness");
+        assert!(snap.program_ns_max > 0, "quantized deployment must program tiles");
+        assert!(snap.program_ns_mean > 0.0);
+        // And the programmed engine still answers requests.
+        let r = handle.classify(vec![0.1; 32 * 32 * 3]).unwrap();
+        assert_eq!(r.logits.len(), 10);
+    }
 
     #[test]
     fn pending_wait_timeout_distinguishes_timeout_drop_and_failure() {

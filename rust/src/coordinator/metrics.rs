@@ -63,6 +63,13 @@ pub struct Metrics {
     latency_us_max: AtomicU64,
     /// Per-request latency histogram (log2 buckets, microseconds).
     hist: [AtomicU64; HIST_BUCKETS],
+    /// Sum of per-worker deploy-time crossbar-programming nanoseconds.
+    program_ns_total: AtomicU64,
+    /// Slowest worker's programming time (the startup critical path).
+    program_ns_max: AtomicU64,
+    /// Workers that completed their deploy-time programming phase (the
+    /// engine records one observation per worker, before readiness).
+    programmed_workers: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -76,6 +83,9 @@ impl Default for Metrics {
             latency_us_sum: AtomicU64::new(0),
             latency_us_max: AtomicU64::new(0),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            program_ns_total: AtomicU64::new(0),
+            program_ns_max: AtomicU64::new(0),
+            programmed_workers: AtomicU64::new(0),
         }
     }
 }
@@ -98,6 +108,16 @@ pub struct Snapshot {
     pub p50_latency_us: u64,
     pub p95_latency_us: u64,
     pub p99_latency_us: u64,
+    /// Workers whose deploy-time programming phase completed (recorded
+    /// before the engine's readiness handshake concludes). Counts every
+    /// worker, including backends with nothing to program — those report
+    /// 0 ns, so `program_ns_max > 0` is the "tiles were actually
+    /// programmed" signal.
+    pub programmed_workers: u64,
+    /// Mean per-worker programming nanoseconds (0 when nothing programmed).
+    pub program_ns_mean: f64,
+    /// Slowest worker's programming nanoseconds.
+    pub program_ns_max: u64,
 }
 
 impl Metrics {
@@ -122,8 +142,19 @@ impl Metrics {
         self.failed_requests.fetch_add(items as u64, Ordering::Relaxed);
     }
 
+    /// One worker's deploy-time crossbar-programming cost. The engine calls
+    /// this once per worker, after its backend's readiness check and before
+    /// the worker reports ready — so by the time `start()` returns, every
+    /// worker's programming is both finished and recorded here.
+    pub fn observe_program(&self, ns: u64) {
+        self.program_ns_total.fetch_add(ns, Ordering::Relaxed);
+        self.program_ns_max.fetch_max(ns, Ordering::Relaxed);
+        self.programmed_workers.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let batches = self.batches.load(Ordering::Relaxed);
+        let workers = self.programmed_workers.load(Ordering::Relaxed);
         let mut counts = [0u64; HIST_BUCKETS];
         let mut observed = 0u64;
         for (dst, src) in counts.iter_mut().zip(self.hist.iter()) {
@@ -150,6 +181,13 @@ impl Metrics {
             p50_latency_us: quantile_from(&counts, 0.50, observed),
             p95_latency_us: quantile_from(&counts, 0.95, observed),
             p99_latency_us: quantile_from(&counts, 0.99, observed),
+            programmed_workers: workers,
+            program_ns_mean: if workers == 0 {
+                0.0
+            } else {
+                self.program_ns_total.load(Ordering::Relaxed) as f64 / workers as f64
+            },
+            program_ns_max: self.program_ns_max.load(Ordering::Relaxed),
         }
     }
 }
@@ -231,6 +269,21 @@ mod tests {
         // p95 rank = ceil(4.75) = 5 -> the outlier's bucket edge.
         assert_eq!(s.p95_latency_us, 127);
         assert_eq!(s.p99_latency_us, 127);
+    }
+
+    #[test]
+    fn programming_cost_aggregates_per_worker() {
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert_eq!(s.programmed_workers, 0);
+        assert_eq!(s.program_ns_mean, 0.0);
+        assert_eq!(s.program_ns_max, 0);
+        m.observe_program(100);
+        m.observe_program(300);
+        let s = m.snapshot();
+        assert_eq!(s.programmed_workers, 2);
+        assert!((s.program_ns_mean - 200.0).abs() < 1e-12);
+        assert_eq!(s.program_ns_max, 300);
     }
 
     #[test]

@@ -773,11 +773,16 @@ impl<'a> CompressionPlan<'a> {
 
     /// Deploy on an explicit backend. Sim deployments carry the quantized
     /// per-strip precision into every engine worker so serving executes on
-    /// the simulated crossbars; `cfg.workers` shards the engine across N
-    /// backend workers (responses stay bit-identical — both backends are
-    /// per-sample deterministic), and startup failures surface as a typed
-    /// [`crate::coordinator::StartupError`] through the per-worker
-    /// readiness handshake.
+    /// the simulated crossbars; each worker **programs its crossbar tiles
+    /// once at startup** (quantized weight codes, packed bit-planes, analog
+    /// conductances — the program-once artifact of
+    /// [`crate::backend::programmed`]) inside the readiness handshake, so
+    /// requests only ever pay the read-only tile walk. `cfg.workers` shards
+    /// the engine across N backend workers (responses stay bit-identical —
+    /// both backends are per-sample deterministic), and startup failures
+    /// surface as a typed [`crate::coordinator::StartupError`] through the
+    /// per-worker readiness handshake; per-worker programming cost is
+    /// observable via the handle's metrics (`program_ns_mean`/`_max`).
     pub fn deploy_on(&self, exec: Executor<'_>, cfg: EngineConfig) -> Result<EngineHandle> {
         let qm = self.quantized()?;
         let st = &self.state;

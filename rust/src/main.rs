@@ -297,11 +297,18 @@ fn run_server(handle: EngineHandle, addr: &str, args: &Args) -> Result<()> {
         cfg.wait_timeout = Duration::from_secs_f64(s);
     }
     let listener = std::net::TcpListener::bind(addr)?;
+    // Deploy-time crossbar programming already happened inside the engine's
+    // readiness handshake (the handle exists, so every worker is ready).
+    let m = handle.metrics.snapshot();
     let server = Server::start(listener, handle, cfg)?;
     println!("serving on {}", server.local_addr());
     println!(
         "policy: max_batch={} flush_after={:?} admit_queue={} wait_timeout={:?}",
         cfg.policy.max_batch, cfg.policy.flush_after, cfg.policy.queue, cfg.wait_timeout
+    );
+    println!(
+        "programmed: {} worker(s), program_ns mean={:.0} max={}",
+        m.programmed_workers, m.program_ns_mean, m.program_ns_max
     );
     use std::io::Write as _;
     std::io::stdout().flush().ok();

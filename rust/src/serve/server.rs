@@ -16,7 +16,9 @@
 //!
 //! A `StatsReq` frame answers a plain-text snapshot merging the server's
 //! own counters, the batcher's admission/coalescing stats, and the engine
-//! metrics (including the p50/p95/p99 latency percentiles).
+//! metrics — including the per-worker deploy-time crossbar-programming cost
+//! (`program_ns_mean`/`program_ns_max`) and the p50/p95/p99 latency
+//! percentiles.
 
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -229,7 +231,8 @@ fn serve_conn(
 }
 
 /// The plain-text stats payload: server frames, batcher admission, engine
-/// execution, latency percentiles — one `key=value` line per layer.
+/// execution, deploy-time programming cost, latency percentiles — one
+/// `key=value` line per layer.
 fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> String {
     let m = engine.metrics.snapshot();
     let b = &batcher.stats;
@@ -237,6 +240,7 @@ fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> 
         "server: connections={} frames_in={} ok={} rejected={} errors={} queue_depth={}\n\
          batcher: accepted={} rejected={} batches={} mean_fill={:.2}\n\
          engine: requests={} batches={} mean_batch_fill={:.2} failed_requests={}\n\
+         program: workers={} program_ns_mean={:.0} program_ns_max={}\n\
          latency_us: mean_batch={:.1} max={} p50={} p95={} p99={}\n",
         stats.connections.load(Ordering::Relaxed),
         stats.frames_in.load(Ordering::Relaxed),
@@ -252,6 +256,9 @@ fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> 
         m.batches,
         m.mean_batch_fill,
         m.failed_requests,
+        m.programmed_workers,
+        m.program_ns_mean,
+        m.program_ns_max,
         m.mean_latency_us,
         m.max_latency_us,
         m.p50_latency_us,

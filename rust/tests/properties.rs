@@ -4,7 +4,7 @@
 
 use std::collections::HashMap;
 
-use reram_mpq::backend::{SimXbar, SimXbarConfig, StripPrecision};
+use reram_mpq::backend::{ProgrammedModel, SimXbar, SimXbarConfig, StripPrecision};
 use reram_mpq::clustering::{align_to_capacity, cluster, cluster_at_cr};
 use reram_mpq::config::QuantConfig;
 use reram_mpq::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry, ModelInfo};
@@ -396,6 +396,100 @@ fn prop_sim_tile_sharding_is_bit_identical_for_every_thread_count() {
                 single, sharded,
                 "case {case}: {threads}-thread conv must be bit-identical"
             );
+        }
+    }
+}
+
+#[test]
+fn prop_sim_programmed_path_is_bit_identical_to_repack_per_call() {
+    // The program-once tile walk must reproduce the re-quantize-and-repack-
+    // per-call reference path bit for bit, across every execution mode the
+    // config can select — the exact integer fast path, the packed-ADC phase
+    // loop, the noisy scalar lane scan, the forced scalar scan — and every
+    // tile-shard count.
+    let mut rng = Rng::seed_from_u64(67);
+    for case in 0..6 {
+        let m = rand_model(&mut rng);
+        let layer = m.layer(0).clone();
+        let (theta, sp, patches, t) = rand_sim_case(&mut rng, &m, true);
+        let corners = [
+            // exact: ideal converters, integer fast path
+            SimXbarConfig::default(),
+            // packed: faithful phase loop over u64 bit-planes, 4b ADC,
+            // multi-segment rows
+            SimXbarConfig { rows: 16, ..SimXbarConfig::default() }.with_adc(4),
+            // analog: seeded conductance noise forces the scalar lane scan
+            SimXbarConfig::default().with_adc(4).with_noise(0.05, 7),
+            // analog, integral cells: scalar_lanes knob without noise
+            SimXbarConfig {
+                scalar_lanes: true,
+                force_phase_loop: true,
+                ..SimXbarConfig::default()
+            },
+        ];
+        for base in corners {
+            for threads in [1usize, 2, 4] {
+                let cfg = SimXbarConfig { threads, ..base };
+                let sim = SimXbar::new(cfg);
+                let programmed = sim
+                    .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+                    .unwrap();
+                let reference = sim
+                    .conv_bitserial_reference(&m, &layer, &theta, &patches, t, &sp)
+                    .unwrap();
+                assert_eq!(
+                    programmed, reference,
+                    "case {case}: programmed walk must be bit-identical \
+                     (adc={} noise={} scalar={} threads={threads})",
+                    base.adc_bits, base.noise_sigma, base.scalar_lanes
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sim_programmed_index_drops_pruned_and_zero_scale_strips() {
+    // The compact index must contain exactly the live strips — pruned
+    // (bits == 0) and zero-scale strips are absent, per-channel ranges
+    // tile the strip table, and taps stay in ascending order (the
+    // accumulation-order invariant).
+    let mut rng = Rng::seed_from_u64(71);
+    for case in 0..CASES {
+        let m = rand_model(&mut rng);
+        let n = m.num_strips();
+        let theta: Vec<f32> = (0..m.entry.num_params).map(|_| rng.normal()).collect();
+        let bits: Vec<u8> = (0..n).map(|_| [0u8, 4, 8][rng.below(3)]).collect();
+        let mut scales: Vec<f32> = (0..n).map(|_| 0.1 + rng.uniform() as f32).collect();
+        for i in 0..n {
+            if bits[i] != 0 && rng.below(5) == 0 {
+                scales[i] = 0.0; // a dead scale on an otherwise live strip
+            }
+        }
+        let sp = StripPrecision { bits: bits.clone(), scales: scales.clone() };
+        let prog =
+            ProgrammedModel::program(&m, &theta, &sp, &SimXbarConfig::default()).unwrap();
+        let live = (0..n).filter(|&i| bits[i] != 0 && scales[i] > 0.0).count();
+        assert_eq!(prog.live_strips, live, "case {case}: live count");
+        assert_eq!(prog.live_strips + prog.dropped_strips, n, "case {case}: partition");
+        let stored: usize = prog.layers.iter().map(|l| l.strips.len()).sum();
+        assert_eq!(stored, live, "case {case}: index stores exactly the live strips");
+        for l in &prog.layers {
+            let mut covered = 0usize;
+            for &(s0, slen) in &l.chan {
+                let range = &l.strips[s0 as usize..s0 as usize + slen as usize];
+                covered += range.len();
+                for s in range {
+                    assert!(s.sw > 0.0, "case {case}: zero-scale strip in the index");
+                }
+                for pair in range.windows(2) {
+                    assert!(
+                        pair[0].g < pair[1].g,
+                        "case {case}: per-channel taps must ascend"
+                    );
+                }
+            }
+            assert_eq!(covered, l.strips.len(), "case {case}: channel ranges tile the table");
         }
     }
 }

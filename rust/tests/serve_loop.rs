@@ -231,6 +231,10 @@ fn sim_serve_stats_frame_and_bench_client_account_for_every_frame() {
     assert!(text.contains("rejected=0"), "stats:\n{text}");
     assert!(text.contains("p99="), "stats:\n{text}");
     assert!(text.contains("mean_fill="), "stats:\n{text}");
+    // Deploy-time programming cost is part of the stats contract (fp32
+    // deployments program nothing, but the per-worker field is present).
+    assert!(text.contains("program_ns_mean="), "stats:\n{text}");
+    assert!(text.contains("program_ns_max="), "stats:\n{text}");
     let snap = handle.metrics.snapshot();
     assert_eq!(snap.observed_requests, requests as u64);
     assert!(snap.p99_latency_us >= snap.p50_latency_us);
