@@ -83,6 +83,7 @@ fn main() {
         let spec = BackendSpec::Sim {
             cfg: SimXbarConfig::default().with_threads(1),
             strips: Some(StripPrecision::from_quantized(&qm)),
+            scenario: None,
         };
         let engine = Engine::new(
             spec,

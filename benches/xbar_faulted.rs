@@ -1,0 +1,89 @@
+//! Bench: the device-variability scenario engine — what fault injection and
+//! sensitivity-aware placement add to crossbar programming time, and proof
+//! that the *request-path* tile walk stays as fast as the healthy one (the
+//! scenario is a post-programming transform; the walk never re-checks it).
+//! Fully hermetic (in-memory fixture, no AOT artifacts):
+//!
+//!     cargo bench --bench xbar_faulted
+//!
+//! Emits `BENCH_xbar_faulted.json`; CI's `bench-smoke` runs this in quick
+//! mode and gates it against `benches/baseline.json`.
+
+use reram_mpq::backend::{ProgrammedModel, SimXbar, SimXbarConfig, StripPrecision};
+use reram_mpq::faults::{Placement, Scenario, ScenarioSpec};
+use reram_mpq::quant::{self, BitMap};
+use reram_mpq::sensitivity;
+use reram_mpq::util::bench::Bench;
+use reram_mpq::util::rng::Rng;
+use reram_mpq::{fixture, RunConfig};
+use std::sync::Arc;
+
+fn main() {
+    let b = Bench::from_env();
+    let fx = fixture::tiny(1);
+    let model = &fx.model;
+    let mut cfg = RunConfig::default();
+    cfg.quant.device_sigma = 0.0;
+    let bits: Vec<u8> = (0..model.num_strips())
+        .map(|i| if i % 2 == 0 { 8 } else { 4 })
+        .collect();
+    let qm = quant::apply(model, &fx.theta, &BitMap { bits }, &cfg.quant);
+    let sp = StripPrecision::from_quantized(&qm);
+    let scfg = SimXbarConfig::default().with_threads(1);
+
+    let spec = ScenarioSpec::default()
+        .with_stuck(0.05, 101)
+        .with_ir_drop(0.2, 202)
+        .with_drift(1.0, 0.01, 303);
+    let scores = Arc::new(sensitivity::magnitude_proxy(model, &fx.theta).scores);
+    let aware = Scenario::new(spec)
+        .with_placement(Placement::SensitivityAware)
+        .with_scores(scores);
+
+    // 1. programming cost: healthy vs faulted + sensitivity-aware placement
+    b.run("xbar program-once healthy (tiny, all layers)", || {
+        ProgrammedModel::program(model, &qm.theta, &sp, &scfg).expect("program")
+    });
+    b.run("xbar program-once faulted+placed (tiny, all layers)", || {
+        ProgrammedModel::program_with(model, &qm.theta, &sp, &scfg, Some(&aware)).expect("program")
+    });
+
+    // 2. the request path: the faulted programmed walk on the widest layer
+    // (must match the healthy walk — faults live in the tiles, not the walk)
+    let layer = model
+        .conv_layers()
+        .iter()
+        .max_by_key(|l| l.k * l.k * l.d)
+        .expect("fixture has conv layers")
+        .clone();
+    let mut rng = Rng::seed_from_u64(7);
+    let t = 16usize;
+    let patches: Vec<f32> =
+        (0..t * layer.k * layer.k * layer.d).map(|_| rng.normal()).collect();
+    let sim = SimXbar::new(scfg).with_scenario(aware.clone());
+    let _ = sim
+        .conv_bitserial(model, &layer, &qm.theta, &patches, t, &sp)
+        .expect("conv");
+    b.run("xbar faulted programmed conv, ideal ADC (tiny widest layer)", || {
+        sim.conv_bitserial(model, &layer, &qm.theta, &patches, t, &sp)
+            .expect("conv")
+    });
+
+    // Overhead summary for the console (the JSON carries the raw means).
+    let ms = b.measurements();
+    let mean = |name: &str| {
+        ms.iter()
+            .find(|m| m.name == name)
+            .map(|m| m.mean.as_secs_f64())
+    };
+    if let (Some(h), Some(f)) = (
+        mean("xbar program-once healthy (tiny, all layers)"),
+        mean("xbar program-once faulted+placed (tiny, all layers)"),
+    ) {
+        if h > 0.0 {
+            println!("  fault injection + placement programming overhead: {:.2}x", f / h);
+        }
+    }
+
+    b.emit_json("xbar_faulted").expect("bench json");
+}

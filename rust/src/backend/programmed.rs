@@ -35,13 +35,28 @@
 //! strip) noise stream — so the programmed walk is **bit-identical** to the
 //! on-the-fly path for every config corner (property-tested in
 //! `tests/properties.rs`).
+//!
+//! ## Fault scenarios
+//!
+//! [`ProgrammedModel::program_with`] additionally accepts a
+//! [`crate::faults::Scenario`]: a composable device-variability spec
+//! (conductance drift, stuck-at cells, per-column IR drop, read noise)
+//! injected as a post-programming transform on the integer weight codes and
+//! the strip scale — *before* the per-mode store encoding — so all three
+//! [`ExecMode`]s see identical faults and the read-only inference walk is
+//! untouched. Fault draws are keyed by each strip's *physical slot*
+//! ([`ProgrammedStrip::slot`]); sensitivity-aware placement permutes the
+//! strip→slot assignment per layer so high-sensitivity strips land on
+//! healthy slots. An inactive scenario injects nothing and assigns the
+//! identity placement, keeping the artifact bit-identical to
+//! [`ProgrammedModel::program`].
 
 use std::time::Instant;
 
 use crate::backend::simxbar::{SimXbarConfig, StripPrecision};
+use crate::faults::{self, Scenario};
 use crate::model::ModelInfo;
 use crate::quant;
-use crate::util::rng::Rng;
 use crate::Result;
 
 /// u64 words covering a `len`-lane row segment.
@@ -154,8 +169,12 @@ pub enum StripStore {
 pub struct ProgrammedStrip {
     /// Kernel tap `g = kh·K + kw` this strip belongs to.
     pub g: u32,
-    /// Per-strip quantization scale (LSB).
+    /// Per-strip quantization scale (LSB), including any injected IR drop.
     pub sw: f32,
+    /// Physical column slot this strip was programmed to (layer-local;
+    /// fault draws are keyed by it). Equals the strip's own local index
+    /// `g·N + ch` unless sensitivity-aware placement permuted it.
+    pub slot: u32,
     pub store: StripStore,
 }
 
@@ -195,6 +214,9 @@ pub struct ProgrammedModel {
     pub planes_bytes: usize,
     /// Wall-clock nanoseconds spent programming (always >= 1).
     pub program_ns: u64,
+    /// The fault spec injected at programming time (`None` when the
+    /// artifact is fault-free).
+    pub scenario: Option<faults::ScenarioSpec>,
 }
 
 impl ProgrammedModel {
@@ -206,6 +228,19 @@ impl ProgrammedModel {
         theta: &[f32],
         sp: &StripPrecision,
         cfg: &SimXbarConfig,
+    ) -> Result<ProgrammedModel> {
+        Self::program_with(model, theta, sp, cfg, None)
+    }
+
+    /// [`ProgrammedModel::program`], with an optional device-variability
+    /// [`Scenario`] injected post-programming (see the module docs). An
+    /// absent or inactive scenario is bit-identical to `program`.
+    pub fn program_with(
+        model: &ModelInfo,
+        theta: &[f32],
+        sp: &StripPrecision,
+        cfg: &SimXbarConfig,
+        scenario: Option<&Scenario>,
     ) -> Result<ProgrammedModel> {
         let t0 = Instant::now();
         anyhow::ensure!(cfg.rows >= 1, "sim rows must be >= 1");
@@ -233,6 +268,18 @@ impl ProgrammedModel {
             model.entry.num_params
         );
 
+        let scn = scenario.filter(|s| s.is_active());
+        if let Some(sc) = scn {
+            if let Some(s) = &sc.scores {
+                anyhow::ensure!(
+                    s.len() == model.num_strips(),
+                    "scenario scores cover {} strips, model has {}",
+                    s.len(),
+                    model.num_strips()
+                );
+            }
+        }
+
         let mode = ExecMode::of(cfg);
         let mask = (1i32 << cfg.cell_bits) - 1;
         let mut layers = Vec::with_capacity(model.conv_layers().len());
@@ -246,6 +293,52 @@ impl ProgrammedModel {
             let kk = layer.k * layer.k;
             codes_w.clear();
             codes_w.resize(d, 0);
+
+            // Fault draws are keyed by *physical slot*. With an active
+            // scenario, decide each live strip's slot up front: rank the
+            // layer's slots by the damage the scenario deals them (exactly
+            // the draws injection will consume) and, under sensitivity-
+            // aware placement, put the highest-scoring strips on the
+            // healthiest slots. Identity otherwise.
+            let nslots = kk * layer.n;
+            let slot_of: Option<Vec<u32>> = scn.map(|sc| {
+                let mut live_slots = Vec::new();
+                let mut max_bits = 0u8;
+                for local in 0..nslots {
+                    let idx = base + local;
+                    if sp.bits[idx] > 0 && sp.scales[idx] > 0.0 {
+                        live_slots.push(local);
+                        max_bits = max_bits.max(sp.bits[idx]);
+                    }
+                }
+                let canon_ncells = max_bits.max(1).div_ceil(cfg.cell_bits) as usize;
+                let scores: Option<Vec<f64>> = sc
+                    .scores
+                    .as_ref()
+                    .map(|s| live_slots.iter().map(|&l| s[base + l]).collect());
+                let damage: Vec<f64> = live_slots
+                    .iter()
+                    .map(|&l| {
+                        faults::slot_damage(
+                            &sc.spec,
+                            layer.index,
+                            l,
+                            nslots,
+                            cfg.cell_bits,
+                            canon_ncells,
+                            d,
+                        )
+                    })
+                    .collect();
+                let assigned =
+                    faults::assign_slots(sc.placement, scores.as_deref(), &damage, &live_slots);
+                let mut map = vec![u32::MAX; nslots];
+                for (i, &l) in live_slots.iter().enumerate() {
+                    map[l] = assigned[i] as u32;
+                }
+                map
+            });
+
             let mut strips = Vec::new();
             let mut chan = Vec::with_capacity(layer.n);
             for ch in 0..layer.n {
@@ -261,7 +354,7 @@ impl ProgrammedModel {
                         (1..=16).contains(&bits),
                         "strip {idx} has unsupported bit width {bits}"
                     );
-                    let sw = sp.scales[idx];
+                    let mut sw = sp.scales[idx];
                     if sw <= 0.0 {
                         dropped += 1;
                         continue;
@@ -272,6 +365,20 @@ impl ProgrammedModel {
                         *cwv = (wv / sw).round().clamp(-q_w, q_w) as i32;
                     }
                     let ncells = bits.div_ceil(cfg.cell_bits) as usize;
+                    let local = g * layer.n + ch;
+                    let slot = slot_of.as_ref().map_or(local as u32, |m| m[local]);
+                    if let Some(sc) = scn {
+                        faults::apply_to_strip(
+                            &sc.spec,
+                            layer.index,
+                            slot as usize,
+                            nslots,
+                            cfg.cell_bits,
+                            ncells,
+                            &mut codes_w,
+                            &mut sw,
+                        );
+                    }
                     let store = match mode {
                         ExecMode::Exact => {
                             planes_bytes += codes_w.len() * std::mem::size_of::<i32>();
@@ -305,12 +412,12 @@ impl ProgrammedModel {
                                 }
                             }
                             if cfg.noise_sigma > 0.0 {
-                                let mut rng = Rng::seed_from_u64(
-                                    cfg.seed
-                                        ^ (layer.index as u64 + 1)
-                                            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
-                                        ^ (idx as u64 + 1).wrapping_mul(0xbf58_476d_1ce4_e5b9),
-                                );
+                                // Keyed by the *logical* strip index, not
+                                // the placement slot, to stay bit-identical
+                                // with the re-quantize-per-call reference
+                                // path.
+                                let mut rng =
+                                    faults::NoiseStream::for_strip(cfg.seed, layer.index, idx);
                                 for v in gpos.iter_mut().chain(gneg.iter_mut()) {
                                     *v += rng.normal() as f64 * cfg.noise_sigma;
                                 }
@@ -320,7 +427,7 @@ impl ProgrammedModel {
                             StripStore::Analog { gpos, gneg, ncells }
                         }
                     };
-                    strips.push(ProgrammedStrip { g: g as u32, sw, store });
+                    strips.push(ProgrammedStrip { g: g as u32, sw, slot, store });
                     live += 1;
                 }
                 chan.push((start, strips.len() as u32 - start));
@@ -343,6 +450,7 @@ impl ProgrammedModel {
             dropped_strips: dropped,
             planes_bytes,
             program_ns: (t0.elapsed().as_nanos() as u64).max(1),
+            scenario: scn.map(|s| s.spec),
         })
     }
 }

@@ -73,10 +73,10 @@ use crate::backend::programmed::{
 };
 use crate::backend::scratch::{ConvScratch, Scratch};
 use crate::backend::{ExecBackend, FwdKind};
+use crate::faults::{NoiseStream, Scenario};
 use crate::model::{ConvLayer, ModelInfo};
 use crate::quant::{self, QuantizedModel};
 use crate::tensor::Tensor;
-use crate::util::rng::Rng;
 use crate::xbar::XbarConfig;
 use crate::Result;
 
@@ -306,6 +306,10 @@ struct ConvCtx<'a> {
 pub struct SimXbar {
     pub cfg: SimXbarConfig,
     strips: Option<StripPrecision>,
+    /// Device-variability scenario injected at programming time (faults +
+    /// placement; see [`crate::faults`]). `None` or inactive = today's
+    /// fault-free artifact, bit for bit.
+    scenario: Option<Scenario>,
     /// Parsed network graph of the last model seen, so the eval loop and the
     /// serving hot path don't re-parse the manifest layout on every batch.
     spec: Mutex<Option<(String, usize, NetSpec)>>,
@@ -322,14 +326,29 @@ pub struct SimXbar {
 /// bits, per-strip bits and scale bits, and the fidelity knobs of the
 /// config (`cfg` is a public field, so a caller mutating it between
 /// forwards must invalidate the artifact; `threads` is deliberately
-/// excluded — sharding is bit-identical and shares the artifact).
-fn prog_key(model: &ModelInfo, theta: &[f32], sp: &StripPrecision, cfg: &SimXbarConfig) -> u64 {
+/// excluded — sharding is bit-identical and shares the artifact). The fault
+/// scenario's fingerprint (spec + placement + scores) is mixed in so
+/// faulted and fault-free artifacts never alias.
+fn prog_key(
+    model: &ModelInfo,
+    theta: &[f32],
+    sp: &StripPrecision,
+    cfg: &SimXbarConfig,
+    scenario: Option<&Scenario>,
+) -> u64 {
     #[inline]
     fn mix(h: &mut u64, v: u64) {
         *h ^= v;
         *h = h.wrapping_mul(0x100000001b3);
     }
     let mut h = 0xcbf29ce484222325u64;
+    match scenario {
+        Some(sc) => {
+            mix(&mut h, 1);
+            mix(&mut h, sc.fingerprint());
+        }
+        None => mix(&mut h, 0),
+    }
     mix(&mut h, cfg.rows as u64);
     mix(&mut h, cfg.cell_bits as u64);
     mix(&mut h, cfg.input_bits as u64);
@@ -361,6 +380,7 @@ impl SimXbar {
         Self {
             cfg,
             strips: None,
+            scenario: None,
             spec: Mutex::new(None),
             programmed: Mutex::new(None),
             scratch: Mutex::new(Scratch::default()),
@@ -389,6 +409,18 @@ impl SimXbar {
         Self::new(cfg).with_strips(StripPrecision::from_quantized(qm))
     }
 
+    /// Inject a device-variability scenario at programming time (faults +
+    /// placement). An inactive scenario leaves the artifact bit-identical.
+    pub fn with_scenario(mut self, scenario: Scenario) -> Self {
+        self.scenario = Some(scenario);
+        self
+    }
+
+    /// The active scenario's stats description ("none" when absent).
+    pub fn scenario_desc(&self) -> String {
+        self.scenario.as_ref().map_or_else(|| "none".to_string(), |s| s.describe())
+    }
+
     /// The program-once crossbar artifact for `(model, theta, sp)` on this
     /// instance's config: programmed on first use, then reused as long as
     /// the fingerprint matches (steady-state serving hits the cache on
@@ -402,7 +434,7 @@ impl SimXbar {
         theta: &[f32],
         sp: &StripPrecision,
     ) -> Result<Arc<ProgrammedModel>> {
-        let key = prog_key(model, theta, sp, &self.cfg);
+        let key = prog_key(model, theta, sp, &self.cfg, self.scenario.as_ref());
         {
             let guard = self.programmed.lock().unwrap();
             if let Some((k, p)) = guard.as_ref() {
@@ -413,7 +445,13 @@ impl SimXbar {
         }
         // Program outside the lock (it can take a while); if two threads
         // race, both computed the same artifact for the same key.
-        let p = Arc::new(ProgrammedModel::program(model, theta, sp, &self.cfg)?);
+        let p = Arc::new(ProgrammedModel::program_with(
+            model,
+            theta,
+            sp,
+            &self.cfg,
+            self.scenario.as_ref(),
+        )?);
         *self.programmed.lock().unwrap() = Some((key, p.clone()));
         Ok(p)
     }
@@ -803,12 +841,9 @@ impl SimXbar {
                 if cfg.noise_sigma > 0.0 {
                     // Per-strip stream: a given (seed, layer, strip) always
                     // programs the same array state, independent of which
-                    // shard evaluates it or in what order.
-                    let mut rng = Rng::seed_from_u64(
-                        cfg.seed
-                            ^ (layer.index as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
-                            ^ (idx as u64 + 1).wrapping_mul(0xbf58_476d_1ce4_e5b9),
-                    );
+                    // shard evaluates it or in what order — the same
+                    // [`NoiseStream`] the programmed artifact draws from.
+                    let mut rng = NoiseStream::for_strip(cfg.seed, layer.index, idx);
                     for v in gpos.iter_mut().chain(gneg.iter_mut()) {
                         *v += rng.normal() as f64 * cfg.noise_sigma;
                     }
@@ -1074,6 +1109,7 @@ impl ExecBackend for SimXbar {
 mod tests {
     use super::*;
     use crate::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry};
+    use crate::util::rng::Rng;
     use std::collections::HashMap;
 
     fn layer_model(k: usize, d: usize, n: usize) -> ModelInfo {
@@ -1226,6 +1262,32 @@ mod tests {
         theta2[0] += 1.0;
         let c = sim.programmed_for(&m, &theta2, &sp).unwrap();
         assert!(!Arc::ptr_eq(&a, &c), "changed theta must invalidate the artifact");
+    }
+
+    #[test]
+    fn sim_zero_scenario_is_bit_identical_and_faults_change_the_artifact() {
+        use crate::faults::{Scenario, ScenarioSpec};
+        let m = layer_model(3, 8, 4);
+        let layer = m.layer(0).clone();
+        let (theta, sp) = quantized_layer(&m, 21, 8);
+        let mut rng = Rng::seed_from_u64(5);
+        let t = 2;
+        let patches: Vec<f32> =
+            (0..t * layer.k * layer.k * layer.d).map(|_| rng.normal()).collect();
+        let cfg = SimXbarConfig::default();
+        let clean = SimXbar::new(cfg)
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        let zero = SimXbar::new(cfg)
+            .with_scenario(Scenario::default())
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        assert_eq!(clean, zero, "inactive scenario must not perturb the artifact");
+        let faulted = SimXbar::new(cfg)
+            .with_scenario(Scenario::new(ScenarioSpec::default().with_stuck(0.5, 7)))
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        assert_ne!(clean, faulted, "stuck-at cells must change conv outputs");
     }
 
     #[test]

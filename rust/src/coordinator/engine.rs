@@ -29,6 +29,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::backend::{ExecBackend, FwdKind, SimXbar, SimXbarConfig, StripPrecision};
+use crate::faults::Scenario;
 use crate::model::ModelInfo;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -43,8 +44,10 @@ pub enum BackendSpec {
     /// PJRT over the AOT artifacts directory.
     Pjrt { artifacts: PathBuf },
     /// Native bit-serial crossbar simulator; `strips` carries the deployed
-    /// quantization (None = exact-f32 fp32 deployment).
-    Sim { cfg: SimXbarConfig, strips: Option<StripPrecision> },
+    /// quantization (None = exact-f32 fp32 deployment) and `scenario` an
+    /// optional device-variability fault scenario applied when the worker
+    /// programs its crossbars (None = healthy device).
+    Sim { cfg: SimXbarConfig, strips: Option<StripPrecision>, scenario: Option<Scenario> },
 }
 
 impl BackendSpec {
@@ -285,10 +288,13 @@ impl WorkerSeed {
         );
         let backend: Box<dyn ExecBackend> = match &self.spec {
             BackendSpec::Pjrt { artifacts } => Box::new(Runtime::new(artifacts.clone())?),
-            BackendSpec::Sim { cfg, strips } => {
+            BackendSpec::Sim { cfg, strips, scenario } => {
                 let mut sim = SimXbar::new(*cfg);
                 if let Some(sp) = strips {
                     sim = sim.with_strips(sp.clone());
+                }
+                if let Some(sc) = scenario {
+                    sim = sim.with_scenario(sc.clone());
                 }
                 Box::new(sim)
             }
@@ -352,6 +358,14 @@ impl ShardedEngine {
         let backend_name = self.spec.name();
         let cfg = self.cfg;
         let batch_size = self.batch;
+
+        // Record the active fault scenario (or "none") before readiness so
+        // the `scenario:` stats line is meaningful from the first snapshot.
+        if let BackendSpec::Sim { scenario, .. } = &self.spec {
+            metrics.set_scenario(
+                scenario.as_ref().map_or_else(|| "none".into(), |sc| sc.describe()),
+            );
+        }
 
         // With several workers, split the machine between them: an
         // auto-threaded simulator (threads == 0) would otherwise spawn one
@@ -618,6 +632,7 @@ mod tests {
         let spec = BackendSpec::Sim {
             cfg: SimXbarConfig::default().with_threads(1),
             strips: Some(StripPrecision::from_quantized(&qm)),
+            scenario: None,
         };
         let engine = ShardedEngine::new(
             spec,
@@ -636,6 +651,30 @@ mod tests {
         assert!(snap.program_ns_max > 0, "quantized deployment must program tiles");
         assert!(snap.program_ns_mean > 0.0);
         // And the programmed engine still answers requests.
+        let r = handle.classify(vec![0.1; 32 * 32 * 3]).unwrap();
+        assert_eq!(r.logits.len(), 10);
+    }
+
+    #[test]
+    fn sim_engine_records_fault_scenario_in_metrics() {
+        use crate::faults::{Placement, Scenario, ScenarioSpec};
+        use crate::fixture;
+
+        let fx = fixture::tiny(11);
+        let scenario = Scenario::new(ScenarioSpec::default().with_stuck(0.02, 3))
+            .with_placement(Placement::SensitivityAware);
+        let spec = BackendSpec::Sim {
+            cfg: SimXbarConfig::default().with_threads(1),
+            strips: None,
+            scenario: Some(scenario.clone()),
+        };
+        let ecfg = EngineConfig::default();
+        let engine = ShardedEngine::new(spec, &fx.model, fx.theta.clone(), ecfg).unwrap();
+        let handle = engine.start().unwrap();
+        assert_eq!(handle.metrics.scenario_desc(), scenario.describe());
+        assert!(handle.metrics.scenario_desc().contains("stuck"));
+        // A scenario-carrying fp32 deployment still serves (faults only
+        // apply to quantized programming, so this is the healthy path).
         let r = handle.classify(vec![0.1; 32 * 32 * 3]).unwrap();
         assert_eq!(r.logits.len(), 10);
     }

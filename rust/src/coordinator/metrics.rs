@@ -9,6 +9,7 @@
 //! never interpolate between observations that were not taken.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Number of log2 latency buckets. 64 covers the entire `u64` microsecond
 /// range (bucket 63 is `[2^63, u64::MAX]`), so no observation saturates.
@@ -70,6 +71,10 @@ pub struct Metrics {
     /// Workers that completed their deploy-time programming phase (the
     /// engine records one observation per worker, before readiness).
     programmed_workers: AtomicU64,
+    /// Description of the deployed fault scenario + placement mode (set
+    /// once by the engine at startup; `None` = fault-free). Kept out of
+    /// [`Snapshot`] so the snapshot stays `Copy`.
+    scenario: Mutex<Option<String>>,
 }
 
 impl Default for Metrics {
@@ -86,6 +91,7 @@ impl Default for Metrics {
             program_ns_total: AtomicU64::new(0),
             program_ns_max: AtomicU64::new(0),
             programmed_workers: AtomicU64::new(0),
+            scenario: Mutex::new(None),
         }
     }
 }
@@ -150,6 +156,18 @@ impl Metrics {
         self.program_ns_total.fetch_add(ns, Ordering::Relaxed);
         self.program_ns_max.fetch_max(ns, Ordering::Relaxed);
         self.programmed_workers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record the deployed fault scenario description (the engine sets it
+    /// once at startup, before readiness).
+    pub fn set_scenario(&self, desc: String) {
+        *self.scenario.lock().unwrap() = Some(desc);
+    }
+
+    /// The deployed fault scenario + placement mode; "none" when the
+    /// deployment is fault-free (or nothing was recorded).
+    pub fn scenario_desc(&self) -> String {
+        self.scenario.lock().unwrap().clone().unwrap_or_else(|| "none".to_string())
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -284,6 +302,14 @@ mod tests {
         assert_eq!(s.programmed_workers, 2);
         assert!((s.program_ns_mean - 200.0).abs() < 1e-12);
         assert_eq!(s.program_ns_max, 300);
+    }
+
+    #[test]
+    fn scenario_description_defaults_to_none_and_records_once_set() {
+        let m = Metrics::default();
+        assert_eq!(m.scenario_desc(), "none");
+        m.set_scenario("stuck(rate=0.05) placement=sensitivity".to_string());
+        assert_eq!(m.scenario_desc(), "stuck(rate=0.05) placement=sensitivity");
     }
 
     #[test]

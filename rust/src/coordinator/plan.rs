@@ -43,6 +43,7 @@ use crate::coordinator::engine::{BackendSpec, Engine, EngineConfig, EngineHandle
 use crate::coordinator::eval;
 use crate::coordinator::pipeline::{PipelineReport, ThresholdMode};
 use crate::dataset::{CalibSet, TestSet};
+use crate::faults::{Placement, Scenario, ScenarioSpec};
 use crate::fim::ThresholdSearch;
 use crate::model::{Manifest, ModelInfo};
 use crate::quant::{self, BitMap, QuantizedModel};
@@ -250,6 +251,7 @@ pub struct CompressionPlan<'a> {
     strategy: MappingStrategy,
     explicit: Option<ExplicitBitmap>,
     nominal: Option<ThresholdMode>,
+    scenario: Option<(ScenarioSpec, Placement)>,
 }
 
 impl<'a> CompressionPlan<'a> {
@@ -305,6 +307,7 @@ impl<'a> CompressionPlan<'a> {
             strategy: MappingStrategy::Packed,
             explicit: None,
             nominal: None,
+            scenario: None,
         }
     }
 
@@ -383,6 +386,16 @@ impl<'a> CompressionPlan<'a> {
     /// compression ratio of an explicit baseline bitmap).
     pub fn nominal(mut self, mode: ThresholdMode) -> Self {
         self.nominal = Some(mode);
+        self
+    }
+
+    /// Attach a device-variability fault scenario (and its strip-placement
+    /// policy) to the simulator terminals. Inactive (all-zero) specs are
+    /// dropped. Faults apply when a worker programs its crossbars, so only
+    /// `Executor::Sim` evaluations/deployments see them; the PJRT backend
+    /// has no programmed device to fault and ignores the scenario.
+    pub fn with_scenario(mut self, spec: ScenarioSpec, placement: Placement) -> Self {
+        self.scenario = if spec.is_active() { Some((spec, placement)) } else { None };
         self
     }
 
@@ -672,6 +685,32 @@ impl<'a> CompressionPlan<'a> {
         Ok(v)
     }
 
+    /// Resolve the plan's fault scenario into the form the simulator
+    /// consumes: sensitivity-aware placement needs the per-strip scores, so
+    /// the sensitivity stage (cached) is pulled in exactly when the policy
+    /// asks for it.
+    fn fault_scenario(&self) -> Result<Option<Scenario>> {
+        let Some((spec, placement)) = self.scenario else {
+            return Ok(None);
+        };
+        let mut sc = Scenario::new(spec).with_placement(placement);
+        if placement == Placement::SensitivityAware {
+            let sens = self.sensitivity_scores()?;
+            sc = sc.with_scores(Arc::new(sens.scores.clone()));
+        }
+        Ok(Some(sc))
+    }
+
+    /// Cache-key fragment for the active scenario ("none" when absent).
+    fn scenario_part(&self) -> String {
+        match self.scenario {
+            None => "scn:none".into(),
+            Some((spec, placement)) => {
+                format!("scn:{:016x}:{}", spec.fingerprint(), placement.name())
+            }
+        }
+    }
+
     // ---- terminal operations ------------------------------------------------
 
     /// Offline terminal: quantize, map, cost and evaluate accuracy — the
@@ -688,12 +727,13 @@ impl<'a> CompressionPlan<'a> {
     /// `fwd_eval` graph.
     pub fn evaluate_on(&self, exec: Executor<'_>, opts: EvalOpts) -> Result<PipelineReport> {
         let key = format!(
-            "{}|{}|eval{}:{}|nom{:?}|x{:016x}",
+            "{}|{}|eval{}:{}|nom{:?}|{}|x{:016x}",
             self.quant_key(),
             self.map_key(),
             exec.cache_tag(),
             opts.eval_batches,
             self.nominal,
+            self.scenario_part(),
             fnv64(self.cfg.xbar.to_value().to_json().bytes())
         );
         let (r, fresh) = memo(&self.cache.reports, &key, || {
@@ -711,7 +751,10 @@ impl<'a> CompressionPlan<'a> {
                     opts.eval_batches,
                 )?,
                 Executor::Sim(scfg) => {
-                    let sim = SimXbar::from_quantized(scfg, &qm);
+                    let mut sim = SimXbar::from_quantized(scfg, &qm);
+                    if let Some(sc) = self.fault_scenario()? {
+                        sim = sim.with_scenario(sc);
+                    }
                     eval::evaluate_batches(
                         &sim,
                         &st.model,
@@ -794,6 +837,7 @@ impl<'a> CompressionPlan<'a> {
             Executor::Sim(scfg) => BackendSpec::Sim {
                 cfg: scfg,
                 strips: Some(StripPrecision::from_quantized(&qm)),
+                scenario: self.fault_scenario()?,
             },
         };
         let engine = Engine::new(spec, &st.model, qm.theta.clone(), cfg)?;
@@ -806,7 +850,7 @@ impl<'a> CompressionPlan<'a> {
         let st = &self.state;
         let spec = match st.exec {
             Executor::Pjrt(rt) => BackendSpec::Pjrt { artifacts: rt.artifacts().to_path_buf() },
-            Executor::Sim(scfg) => BackendSpec::Sim { cfg: scfg, strips: None },
+            Executor::Sim(scfg) => BackendSpec::Sim { cfg: scfg, strips: None, scenario: None },
         };
         let engine = Engine::new(spec, &st.model, st.theta.clone(), cfg)?;
         Ok(engine.start()?)

@@ -9,10 +9,12 @@
 use std::cell::RefCell;
 use std::collections::HashMap;
 
+use crate::backend::SimXbarConfig;
 use crate::baselines;
 use crate::coordinator::{
     CompressionPlan, EngineConfig, EvalOpts, Executor, PipelineReport, ThresholdMode,
 };
+use crate::faults::{Placement, ScenarioSpec};
 use crate::model::Manifest;
 use crate::report;
 use crate::runtime::Runtime;
@@ -295,6 +297,113 @@ pub fn fig8_value(rows: &[(String, f64, PipelineReport)]) -> Value {
                     ("model", Value::Str(label.clone())),
                     ("cr", Value::Num(*cr)),
                     ("report", r.to_value()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// One row of the fault-sweep table: the same compressed plan evaluated
+/// under the same fault scenario with naive vs sensitivity-aware placement.
+pub struct FaultSweepRow {
+    pub rate: f64,
+    pub naive: PipelineReport,
+    pub aware: PipelineReport,
+}
+
+/// Fault rates swept by the paper-style device-variability table.
+pub const FAULT_RATES: &[f64] = &[0.0, 0.01, 0.02, 0.05, 0.1];
+
+/// The sweep's composite scenario at fault rate `r`: stuck-at cells at rate
+/// `r`, a per-column IR-drop gradient scaled with `r` (the lever the
+/// placement policy exploits — healthy low-drop columns go to sensitive
+/// strips), and a small conductance drift. `r = 0` is the healthy device
+/// (bit-identical to the unfaulted programmed path).
+pub fn fault_scenario(rate: f64) -> ScenarioSpec {
+    if rate <= 0.0 {
+        return ScenarioSpec::default();
+    }
+    ScenarioSpec::default()
+        .with_stuck(rate, 101)
+        .with_ir_drop((4.0 * rate).min(0.8), 202)
+        .with_drift(1.0, 0.1 * rate, 303)
+}
+
+/// Accuracy vs fault rate on an explicit plan + simulator config — the
+/// manifest-free core (the hermetic CLI `faults --fixture` path calls this
+/// directly on a fixture-rooted plan).
+pub fn fault_sweep(
+    plan: &CompressionPlan,
+    scfg: SimXbarConfig,
+    opts: ExpOpts,
+    rates: &[f64],
+) -> Result<Vec<FaultSweepRow>> {
+    let base = plan
+        .clone()
+        .threshold(ThresholdMode::FixedCr(0.5))
+        .cluster()
+        .align_to_capacity()
+        .map(MappingStrategy::Packed);
+    let mut rows = Vec::new();
+    for &rate in rates {
+        let spec = fault_scenario(rate);
+        let naive = base
+            .clone()
+            .with_scenario(spec, Placement::Naive)
+            .evaluate_on(Executor::Sim(scfg), opts)?;
+        let aware = base
+            .clone()
+            .with_scenario(spec, Placement::SensitivityAware)
+            .evaluate_on(Executor::Sim(scfg), opts)?;
+        rows.push(FaultSweepRow { rate, naive, aware });
+    }
+    Ok(rows)
+}
+
+/// Fault-sweep table over a lab (manifest models). Faults only exist on a
+/// programmed device, so evaluation always runs on the simulator — a
+/// PJRT-rooted lab still contributes its Hutchinson sensitivity scores to
+/// the placement stage but executes the faulted forward passes on the
+/// default simulator geometry.
+pub fn table_faults(lab: &Lab, opts: ExpOpts, rates: &[f64]) -> Result<Vec<FaultSweepRow>> {
+    let scfg = match lab.exec {
+        Executor::Sim(c) => c,
+        Executor::Pjrt(_) => SimXbarConfig::default(),
+    };
+    fault_sweep(&lab.plan("resnet8")?, scfg, opts, rates)
+}
+
+pub fn render_fault_sweep(rows: &[FaultSweepRow]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Fault sweep: accuracy vs device fault rate, naive vs sensitivity-aware placement\n",
+    );
+    out.push_str(&format!(
+        "{:<7} {:<52} {:>8} {:>8} {:>8}\n",
+        "rate", "scenario", "naive%", "aware%", "delta"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<7.3} {:<52} {:>8.2} {:>8.2} {:>+8.2}\n",
+            r.rate,
+            fault_scenario(r.rate).describe(),
+            r.naive.accuracy.top1 * 100.0,
+            r.aware.accuracy.top1 * 100.0,
+            (r.aware.accuracy.top1 - r.naive.accuracy.top1) * 100.0,
+        ));
+    }
+    out
+}
+
+pub fn fault_sweep_value(rows: &[FaultSweepRow]) -> Value {
+    Value::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("rate", Value::Num(r.rate)),
+                    ("scenario", Value::Str(fault_scenario(r.rate).describe())),
+                    ("naive", r.naive.to_value()),
+                    ("aware", r.aware.to_value()),
                 ])
             })
             .collect(),

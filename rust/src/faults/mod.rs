@@ -1,0 +1,618 @@
+//! Device-variability fault scenarios for the crossbar simulator.
+//!
+//! Real ReRAM arrays do not stay where you programmed them: conductances
+//! drift over time, individual cells get stuck at G_on/G_off, long bit-lines
+//! lose drive to IR drop, and every read adds noise. The simulator's only
+//! non-ideality so far was program-time Gaussian noise
+//! (`SimXbarConfig::noise_sigma`); this module adds the composable failure
+//! modes the RRAM open-issues literature enumerates, so the paper's central
+//! claim — Hutchinson sensitivity scores predict which strips tolerate
+//! device non-idealities — becomes testable end to end.
+//!
+//! ## Scenario composition
+//!
+//! A [`ScenarioSpec`] bundles four independently seeded components, each
+//! inactive at its zero value and freely combinable:
+//!
+//! * **drift** — every programmed cell decays multiplicatively over a
+//!   virtual time axis, `v ← round(v · exp(−time · rate · u))` with a
+//!   per-cell jitter `u ∈ [0.5, 1.5)`;
+//! * **stuck** — each cell is independently stuck, with probability
+//!   `rate`, at G_on (full-scale) or G_off (zero), coin-flipped per cell;
+//! * **ir_drop** — a per-column multiplicative loss on the strip scale,
+//!   growing linearly with the column's physical slot position (`strength ·
+//!   slot/(nslots−1) · u`), the classic far-end-of-the-bit-line gradient;
+//! * **read_noise** — additive Gaussian noise on each read-out lane,
+//!   rounded into code space.
+//!
+//! Faults are injected by [`crate::backend::ProgrammedModel::program_with`]
+//! as a **post-programming transform on integer weight codes and strip
+//! scales** — before the per-mode store encoding — so the
+//! `ExecMode::{Exact, Packed, Analog}` paths all see the *same* injected
+//! faults by construction, and the zero-alloc `walk_channels` hot path
+//! stays a read-only walk over (faulted) tiles. Every random draw is keyed
+//! by `(component seed, layer, physical slot, cell, polarity)` through
+//! fresh [`Rng`] streams, never by evaluation order, so injection is
+//! bit-deterministic per `(spec, seed)` under any shard count.
+//!
+//! ## Sensitivity-aware placement
+//!
+//! Because fault severity is a property of the *physical slot* (its column
+//! position, its stuck-cell draws) while importance is a property of the
+//! *strip*, the mapping between them is a free parameter. With
+//! [`Placement::SensitivityAware`], [`assign_slots`] permutes the
+//! strip→slot assignment so the highest-sensitivity strips land on the
+//! healthiest slots ([`slot_damage`] ranks slots by replaying exactly the
+//! per-slot fault draws injection will use). The permutation is a bijection
+//! over the live strips of each layer, is recorded per strip in the
+//! programmed index (`ProgrammedStrip::slot`), and only remaps *fault*
+//! draws — walk order, channel ranges and accumulation order are untouched,
+//! so a zero-fault scenario is bit-identical to the unfaulted path no
+//! matter the placement mode.
+
+use std::sync::Arc;
+
+use crate::util::rng::Rng;
+
+/// The per-(seed, layer, strip) conductance-noise stream shared — by
+/// construction, and now by code — between the programmed artifact
+/// ([`crate::backend::ProgrammedModel::program`]) and the
+/// re-quantize-per-call reference path (`conv_bitserial_reference`). A given
+/// strip programs the same array state regardless of which path derives it,
+/// which shard evaluates it, or in what order — the invariant behind the
+/// programmed-vs-reference bit-identity property tests.
+pub struct NoiseStream;
+
+impl NoiseStream {
+    /// Fresh stream for one strip's analog programming noise.
+    pub fn for_strip(seed: u64, layer_index: usize, strip: usize) -> Rng {
+        Rng::seed_from_u64(
+            seed ^ (layer_index as u64 + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                ^ (strip as u64 + 1).wrapping_mul(0xbf58_476d_1ce4_e5b9),
+        )
+    }
+}
+
+const DRIFT_SALT: u64 = 0xd21f_7a11_5eed_0001;
+const STUCK_SALT: u64 = 0xd21f_7a11_5eed_0002;
+const IR_SALT: u64 = 0xd21f_7a11_5eed_0003;
+const READ_SALT: u64 = 0xd21f_7a11_5eed_0004;
+
+fn fnv(vals: &[u64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &v in vals {
+        h = (h ^ v).wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Fresh stream for one fault site. Keyed per (component, spec seed, layer,
+/// physical slot, site), where `site` encodes whatever sub-structure the
+/// component faults over (cell slice × polarity for drift/stuck, 0 for the
+/// per-slot ir-drop/read-noise streams). Site-keyed seeding — rather than
+/// one long per-slot stream — is what lets [`slot_damage`] replay a slot's
+/// draws exactly even before it knows the cell count of the strip that
+/// placement will put there.
+fn site_rng(salt: u64, seed: u64, layer_index: usize, slot: usize, site: u64) -> Rng {
+    Rng::seed_from_u64(fnv(&[salt, seed, layer_index as u64, slot as u64, site]))
+}
+
+/// Conductance drift over a virtual time axis.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DriftSpec {
+    /// Virtual elapsed time since programming (arbitrary units).
+    pub time: f64,
+    /// Mean decay rate per unit time.
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl DriftSpec {
+    pub fn is_active(&self) -> bool {
+        self.time > 0.0 && self.rate > 0.0
+    }
+}
+
+/// Stuck-at-G_on / stuck-at-G_off cells at a given rate.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StuckSpec {
+    /// Per-cell probability of being stuck (G_on or G_off, coin-flipped).
+    pub rate: f64,
+    pub seed: u64,
+}
+
+impl StuckSpec {
+    pub fn is_active(&self) -> bool {
+        self.rate > 0.0
+    }
+}
+
+/// Per-column IR drop: a multiplicative loss on the strip scale growing
+/// with the column's physical slot position.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct IrDropSpec {
+    /// Loss at the far end of the bit-line (slot `nslots-1`), before the
+    /// per-column jitter; clamped so a strip never loses its full scale.
+    pub strength: f64,
+    pub seed: u64,
+}
+
+impl IrDropSpec {
+    pub fn is_active(&self) -> bool {
+        self.strength > 0.0
+    }
+}
+
+/// Additive Gaussian read noise per output lane, rounded into code space.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReadNoiseSpec {
+    /// Standard deviation in integer-code units.
+    pub sigma: f64,
+    pub seed: u64,
+}
+
+impl ReadNoiseSpec {
+    pub fn is_active(&self) -> bool {
+        self.sigma > 0.0
+    }
+}
+
+/// A composable device-variability scenario. `Default` is the inactive
+/// (zero-fault) scenario, which is bit-identical to not injecting at all.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ScenarioSpec {
+    pub drift: DriftSpec,
+    pub stuck: StuckSpec,
+    pub ir_drop: IrDropSpec,
+    pub read_noise: ReadNoiseSpec,
+}
+
+impl ScenarioSpec {
+    pub fn with_drift(mut self, time: f64, rate: f64, seed: u64) -> Self {
+        self.drift = DriftSpec { time, rate, seed };
+        self
+    }
+
+    pub fn with_stuck(mut self, rate: f64, seed: u64) -> Self {
+        self.stuck = StuckSpec { rate, seed };
+        self
+    }
+
+    pub fn with_ir_drop(mut self, strength: f64, seed: u64) -> Self {
+        self.ir_drop = IrDropSpec { strength, seed };
+        self
+    }
+
+    pub fn with_read_noise(mut self, sigma: f64, seed: u64) -> Self {
+        self.read_noise = ReadNoiseSpec { sigma, seed };
+        self
+    }
+
+    /// True when any component would perturb a programmed strip.
+    pub fn is_active(&self) -> bool {
+        self.drift.is_active()
+            || self.stuck.is_active()
+            || self.ir_drop.is_active()
+            || self.read_noise.is_active()
+    }
+
+    /// Stable content hash, mixed into programming-artifact and eval-memo
+    /// cache keys so faulted and unfaulted artifacts never alias.
+    pub fn fingerprint(&self) -> u64 {
+        fnv(&[
+            self.drift.time.to_bits(),
+            self.drift.rate.to_bits(),
+            self.drift.seed,
+            self.stuck.rate.to_bits(),
+            self.stuck.seed,
+            self.ir_drop.strength.to_bits(),
+            self.ir_drop.seed,
+            self.read_noise.sigma.to_bits(),
+            self.read_noise.seed,
+        ])
+    }
+
+    /// Human-readable one-liner of the active components ("none" when
+    /// inactive) — the payload of the serving stats `scenario:` line.
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        if self.drift.is_active() {
+            parts.push(format!("drift(t={},rate={})", self.drift.time, self.drift.rate));
+        }
+        if self.stuck.is_active() {
+            parts.push(format!("stuck(rate={})", self.stuck.rate));
+        }
+        if self.ir_drop.is_active() {
+            parts.push(format!("ir_drop(strength={})", self.ir_drop.strength));
+        }
+        if self.read_noise.is_active() {
+            parts.push(format!("read_noise(sigma={})", self.read_noise.sigma));
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+/// How live strips are assigned to physical column slots.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Placement {
+    /// Identity: strip `i` lives on slot `i` (today's behavior).
+    #[default]
+    Naive,
+    /// Highest-sensitivity strips on the healthiest slots (needs scores).
+    SensitivityAware,
+}
+
+impl Placement {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::Naive => "naive",
+            Placement::SensitivityAware => "sensitivity",
+        }
+    }
+}
+
+/// A scenario bound to a placement policy and (optionally) the sensitivity
+/// scores that drive it — the value carried through `SimXbar`,
+/// `BackendSpec::Sim` and the plan terminals to programming time. Scores
+/// are in [`crate::model::ModelInfo::strips`] order.
+#[derive(Clone, Debug, Default)]
+pub struct Scenario {
+    pub spec: ScenarioSpec,
+    pub placement: Placement,
+    pub scores: Option<Arc<Vec<f64>>>,
+}
+
+impl Scenario {
+    pub fn new(spec: ScenarioSpec) -> Self {
+        Scenario { spec, placement: Placement::Naive, scores: None }
+    }
+
+    pub fn with_placement(mut self, placement: Placement) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    pub fn with_scores(mut self, scores: Arc<Vec<f64>>) -> Self {
+        self.scores = Some(scores);
+        self
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.spec.is_active()
+    }
+
+    /// Content hash over spec, placement and scores (cache-key grade).
+    pub fn fingerprint(&self) -> u64 {
+        let mut vals = vec![
+            self.spec.fingerprint(),
+            match self.placement {
+                Placement::Naive => 1,
+                Placement::SensitivityAware => 2,
+            },
+        ];
+        if let Some(s) = &self.scores {
+            vals.push(s.len() as u64);
+            vals.extend(s.iter().map(|v| v.to_bits()));
+        }
+        fnv(&vals)
+    }
+
+    /// The serving stats `scenario:` line: active spec + placement mode.
+    pub fn describe(&self) -> String {
+        if !self.is_active() {
+            return "none".to_string();
+        }
+        format!("{} placement={}", self.spec.describe(), self.placement.name())
+    }
+}
+
+/// Inject one strip's faults in place: drift and stuck-at on the
+/// sign-magnitude cell decomposition of the integer weight codes, read
+/// noise on the assembled codes, IR drop on the strip scale. `slot` is the
+/// strip's *physical* column slot (the placement-assigned one), `nslots`
+/// the layer's slot count, `ncells` the strip's cell-slice count.
+///
+/// Faults act in code space: a stuck cell collapses into the signed lane
+/// value, so all three `ExecMode` stores encode identical faulted weights.
+/// Inactive components draw nothing, so the zero scenario is a no-op.
+#[allow(clippy::too_many_arguments)]
+pub fn apply_to_strip(
+    spec: &ScenarioSpec,
+    layer_index: usize,
+    slot: usize,
+    nslots: usize,
+    cell_bits: u8,
+    ncells: usize,
+    codes_w: &mut [i32],
+    sw: &mut f32,
+) {
+    let cb = cell_bits as u32;
+    let mask = (1u32 << cb) - 1;
+    let d = codes_w.len();
+
+    if spec.drift.is_active() || spec.stuck.is_active() {
+        let mut tot = vec![0i64; d];
+        for pol in 0..2u64 {
+            for j in 0..ncells {
+                let site = (pol << 8) | j as u64;
+                let mut drift_rng = spec
+                    .drift
+                    .is_active()
+                    .then(|| site_rng(DRIFT_SALT, spec.drift.seed, layer_index, slot, site));
+                let mut stuck_rng = spec
+                    .stuck
+                    .is_active()
+                    .then(|| site_rng(STUCK_SALT, spec.stuck.seed, layer_index, slot, site));
+                for (dd, t) in tot.iter_mut().enumerate() {
+                    let c = codes_w[dd];
+                    let mag = if pol == 0 { c.max(0) } else { (-c).max(0) } as u32;
+                    let mut v = (mag >> (j as u32 * cb)) & mask;
+                    if let Some(rng) = drift_rng.as_mut() {
+                        let u = rng.range(0.5, 1.5);
+                        let decay = (-spec.drift.time * spec.drift.rate * u).exp();
+                        v = (v as f64 * decay).round() as u32;
+                    }
+                    if let Some(rng) = stuck_rng.as_mut() {
+                        if rng.uniform() < spec.stuck.rate {
+                            v = if rng.bool() { mask } else { 0 };
+                        }
+                    }
+                    let sv = (v as i64) << (j as u32 * cb);
+                    *t += if pol == 0 { sv } else { -sv };
+                }
+            }
+        }
+        for (c, t) in codes_w.iter_mut().zip(&tot) {
+            *c = *t as i32;
+        }
+    }
+
+    if spec.read_noise.is_active() {
+        let cap = (1i64 << (ncells as u32 * cb)) - 1;
+        let mut rng = site_rng(READ_SALT, spec.read_noise.seed, layer_index, slot, 0);
+        for c in codes_w.iter_mut() {
+            let delta = (rng.normal() as f64 * spec.read_noise.sigma).round() as i64;
+            *c = (*c as i64 + delta).clamp(-cap, cap) as i32;
+        }
+    }
+
+    if spec.ir_drop.is_active() {
+        *sw *= (1.0 - ir_drop_of(spec, layer_index, slot, nslots)) as f32;
+    }
+}
+
+/// The deterministic per-slot IR-drop fraction (0 when inactive).
+fn ir_drop_of(spec: &ScenarioSpec, layer_index: usize, slot: usize, nslots: usize) -> f64 {
+    if !spec.ir_drop.is_active() {
+        return 0.0;
+    }
+    let col_frac = if nslots > 1 { slot as f64 / (nslots - 1) as f64 } else { 0.0 };
+    let mut rng = site_rng(IR_SALT, spec.ir_drop.seed, layer_index, slot, 0);
+    (spec.ir_drop.strength * col_frac * rng.range(0.5, 1.5)).clamp(0.0, 0.95)
+}
+
+/// Expected damage a strip of `ncells` cell slices and `d` lanes would
+/// suffer on physical slot `slot`, in (approximate) integer-code units.
+/// Replays exactly the per-slot draws [`apply_to_strip`] will consume —
+/// same site streams — so a slot whose stuck-cell draws happen to hit
+/// high-significance cells ranks as damaged *before* anything is placed on
+/// it. Placement sorts slots by this value.
+pub fn slot_damage(
+    spec: &ScenarioSpec,
+    layer_index: usize,
+    slot: usize,
+    nslots: usize,
+    cell_bits: u8,
+    ncells: usize,
+    d: usize,
+) -> f64 {
+    let cb = cell_bits as u32;
+    let mask = (1u32 << cb) - 1;
+    let mid = mask as f64 * 0.5;
+    let mut damage = 0.0;
+
+    if spec.drift.is_active() || spec.stuck.is_active() {
+        for pol in 0..2u64 {
+            for j in 0..ncells {
+                let site = (pol << 8) | j as u64;
+                let w = (1u64 << (j as u32 * cb)) as f64;
+                let mut drift_rng = spec
+                    .drift
+                    .is_active()
+                    .then(|| site_rng(DRIFT_SALT, spec.drift.seed, layer_index, slot, site));
+                let mut stuck_rng = spec
+                    .stuck
+                    .is_active()
+                    .then(|| site_rng(STUCK_SALT, spec.stuck.seed, layer_index, slot, site));
+                for _ in 0..d {
+                    if let Some(rng) = drift_rng.as_mut() {
+                        let u = rng.range(0.5, 1.5);
+                        let decay = (-spec.drift.time * spec.drift.rate * u).exp();
+                        damage += (1.0 - decay) * mid * w;
+                    }
+                    if let Some(rng) = stuck_rng.as_mut() {
+                        if rng.uniform() < spec.stuck.rate {
+                            let target = if rng.bool() { mask as f64 } else { 0.0 };
+                            damage += (target - mid).abs() * w;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    if spec.read_noise.is_active() {
+        let mut rng = site_rng(READ_SALT, spec.read_noise.seed, layer_index, slot, 0);
+        for _ in 0..d {
+            damage += (rng.normal() as f64 * spec.read_noise.sigma).abs();
+        }
+    }
+
+    // IR drop scales the whole strip: weight it by the strip's full-scale
+    // magnitude so a strong column gradient dominates per-cell effects.
+    let drop = ir_drop_of(spec, layer_index, slot, nslots);
+    if drop > 0.0 {
+        let full = ((1u64 << (ncells as u32 * cb)) - 1) as f64 / mask as f64;
+        damage += drop * 2.0 * d as f64 * mid * full;
+    }
+
+    damage
+}
+
+/// Assign each live strip a physical slot. `live` lists the layer's live
+/// local slot indices in ascending order; `scores` (per live strip, same
+/// order) and `damage` (per entry of `live`, the damage of that physical
+/// slot) drive the sensitivity-aware mode. Returns the assigned slot per
+/// live strip — always a bijection onto `live`, and the identity for
+/// [`Placement::Naive`] or when scores are absent.
+pub fn assign_slots(
+    placement: Placement,
+    scores: Option<&[f64]>,
+    damage: &[f64],
+    live: &[usize],
+) -> Vec<usize> {
+    debug_assert_eq!(damage.len(), live.len());
+    let scores = match (placement, scores) {
+        (Placement::SensitivityAware, Some(s)) if s.len() == live.len() => s,
+        _ => return live.to_vec(),
+    };
+    let strip_order = crate::sensitivity::rank_desc(scores);
+    let healthiest_first = {
+        let neg: Vec<f64> = damage.iter().map(|v| -v).collect();
+        crate::sensitivity::rank_desc(&neg)
+    };
+    let mut out = vec![0usize; live.len()];
+    for (rank, &strip) in strip_order.iter().enumerate() {
+        out[strip] = live[healthiest_first[rank]];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy_spec() -> ScenarioSpec {
+        ScenarioSpec::default()
+            .with_drift(5.0, 0.05, 11)
+            .with_stuck(0.3, 22)
+            .with_ir_drop(0.4, 33)
+            .with_read_noise(1.5, 44)
+    }
+
+    #[test]
+    fn zero_spec_is_inactive_and_a_noop() {
+        let spec = ScenarioSpec::default();
+        assert!(!spec.is_active());
+        assert_eq!(spec.describe(), "none");
+        let mut codes = vec![3, -7, 0, 120];
+        let orig = codes.clone();
+        let mut sw = 0.25f32;
+        apply_to_strip(&spec, 2, 5, 9, 2, 4, &mut codes, &mut sw);
+        assert_eq!(codes, orig);
+        assert_eq!(sw, 0.25);
+    }
+
+    #[test]
+    fn injection_is_deterministic_per_spec_and_seed() {
+        let spec = busy_spec();
+        let mut a = vec![3i32, -7, 0, 120, -128, 64];
+        let mut b = a.clone();
+        let (mut swa, mut swb) = (0.5f32, 0.5f32);
+        apply_to_strip(&spec, 1, 3, 8, 2, 4, &mut a, &mut swa);
+        apply_to_strip(&spec, 1, 3, 8, 2, 4, &mut b, &mut swb);
+        assert_eq!(a, b);
+        assert_eq!(swa, swb);
+
+        // A different component seed reroutes every draw.
+        let other = ScenarioSpec { stuck: StuckSpec { rate: 0.3, seed: 99 }, ..spec };
+        let mut c = vec![3i32, -7, 0, 120, -128, 64];
+        let mut swc = 0.5f32;
+        apply_to_strip(&other, 1, 3, 8, 2, 4, &mut c, &mut swc);
+        assert_ne!(a, c);
+        assert_ne!(spec.fingerprint(), other.fingerprint());
+    }
+
+    #[test]
+    fn faulted_codes_stay_within_cell_capacity() {
+        let spec = busy_spec();
+        let (cell_bits, ncells) = (2u8, 4usize);
+        let cap = (1i32 << (ncells as u32 * cell_bits as u32)) - 1;
+        for slot in 0..32 {
+            let mut codes = vec![cap, -cap, 0, 1, -1, cap / 2];
+            let mut sw = 1.0f32;
+            apply_to_strip(&spec, 0, slot, 32, cell_bits, ncells, &mut codes, &mut sw);
+            for &c in &codes {
+                assert!(c.abs() <= cap, "slot {slot}: code {c} exceeds cap {cap}");
+            }
+            assert!(sw > 0.0 && sw <= 1.0);
+        }
+    }
+
+    #[test]
+    fn slot_damage_matches_injection_streams() {
+        // A slot whose damage estimate is far above another's must also
+        // perturb an actual strip more (same draws, so stuck cells land on
+        // the same sites). Compare total |delta| on a mid-scale strip.
+        let spec = ScenarioSpec::default().with_stuck(0.25, 7);
+        let (cb, nc, d, nslots) = (2u8, 3usize, 16usize, 24usize);
+        let mut by_damage: Vec<(f64, f64)> = (0..nslots)
+            .map(|slot| {
+                let est = slot_damage(&spec, 0, slot, nslots, cb, nc, d);
+                let mut codes = vec![21i32; d];
+                let mut sw = 1.0f32;
+                apply_to_strip(&spec, 0, slot, nslots, cb, nc, &mut codes, &mut sw);
+                let actual: f64 = codes.iter().map(|&c| (c - 21).abs() as f64).sum();
+                (est, actual)
+            })
+            .collect();
+        by_damage.sort_by(|a, b| a.0.total_cmp(&b.0));
+        // Rank correlation, loosely: the healthiest quartile must have less
+        // actual damage than the most-damaged quartile.
+        let q = nslots / 4;
+        let low: f64 = by_damage[..q].iter().map(|x| x.1).sum();
+        let high: f64 = by_damage[nslots - q..].iter().map(|x| x.1).sum();
+        assert!(low < high, "low={low} high={high}");
+    }
+
+    #[test]
+    fn assign_slots_is_identity_for_naive_and_bijective_for_aware() {
+        let live = vec![0usize, 2, 3, 7, 8];
+        let scores = vec![0.1, 5.0, 0.3, 2.0, 0.2];
+        let damage = vec![3.0, 0.5, 4.0, 0.0, 1.0];
+        assert_eq!(assign_slots(Placement::Naive, Some(&scores), &damage, &live), live);
+        assert_eq!(assign_slots(Placement::SensitivityAware, None, &damage, &live), live);
+
+        let out = assign_slots(Placement::SensitivityAware, Some(&scores), &damage, &live);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, live, "assignment must be a bijection onto live slots");
+        // Top-score strip (index 1) on the healthiest slot (damage 0.0 →
+        // slot 7); runner-up (index 3, score 2.0) on slot 2 (damage 0.5).
+        assert_eq!(out[1], 7);
+        assert_eq!(out[3], 2);
+    }
+
+    #[test]
+    fn describe_lists_active_components_and_placement() {
+        let sc = Scenario::new(ScenarioSpec::default().with_stuck(0.05, 1))
+            .with_placement(Placement::SensitivityAware);
+        let d = sc.describe();
+        assert!(d.contains("stuck(rate=0.05)"), "{d}");
+        assert!(d.contains("placement=sensitivity"), "{d}");
+        assert_eq!(Scenario::default().describe(), "none");
+    }
+
+    #[test]
+    fn scenario_fingerprint_tracks_placement_and_scores() {
+        let base = Scenario::new(ScenarioSpec::default().with_stuck(0.05, 1));
+        let aware = base.clone().with_placement(Placement::SensitivityAware);
+        assert_ne!(base.fingerprint(), aware.fingerprint());
+        let scored = aware.clone().with_scores(Arc::new(vec![1.0, 2.0]));
+        assert_ne!(aware.fingerprint(), scored.fingerprint());
+    }
+}

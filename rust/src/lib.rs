@@ -87,6 +87,9 @@
 //!   model, packing (paper §4.1/§4.3).
 //! * [`sensitivity`] — Hutchinson Hessian-diagonal driver → per-strip
 //!   sensitivity scores (paper §4.1).
+//! * [`faults`] — device-variability scenario engine: composable drift /
+//!   stuck-at / IR-drop / read-noise fault injection on programmed
+//!   crossbars, plus sensitivity-aware strip placement.
 //! * [`fim`] — empirical Fisher diagonal + Algorithm 1 threshold search
 //!   (paper §4.2).
 //! * [`clustering`] — sensitivity clustering and the dynamic crossbar-
@@ -111,6 +114,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dataset;
 pub mod experiments;
+pub mod faults;
 pub mod fim;
 pub mod fixture;
 pub mod model;

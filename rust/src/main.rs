@@ -12,6 +12,7 @@ use reram_mpq::coordinator::{
     EngineConfig, EngineHandle, EvalOpts, Executor, ModelState, ThresholdMode,
 };
 use reram_mpq::experiments::{self, ExpOpts, Lab};
+use reram_mpq::faults::{Placement, ScenarioSpec};
 use reram_mpq::serve::{bench_client, BatchPolicy, ServeConfig, Server};
 use reram_mpq::util::cli::Args;
 use reram_mpq::xbar::MappingStrategy;
@@ -39,9 +40,20 @@ COMMANDS:
   table3   [--eval-batches N] [--json]   regenerate Table 3 (CR sweep + energy)
   table4   [--json]                      regenerate Table 4 (crossbar utilization)
   fig8     [--eval-batches N] [--json]   regenerate Figure 8 (accuracy vs CR)
+  faults   [--rates R1,R2,..] [--eval-batches N] [--json] [--fixture]
+                                 accuracy vs device fault rate (drift,
+                                 stuck-at, IR drop, read noise), naive vs
+                                 sensitivity-aware strip placement; always
+                                 evaluates on the crossbar simulator. With
+                                 --backend sim and no artifacts (or
+                                 --fixture), sweeps the hermetic in-memory
+                                 fixture model.
   serve    [--model M] [--requests N] [--cr R] [--workers N]
            [--listen ADDR] [--max-batch N] [--flush-ms MS]
            [--admit-queue N] [--wait-timeout-s S] [--fixture]
+           [--stuck R] [--drift-time T] [--drift-rate R] [--ir-drop S]
+           [--read-sigma S] [--fault-seed N]
+           [--placement naive|sensitivity]
                                  without --listen: push test images through
                                  the engine in-process and report latency
                                  percentiles; with --listen: run the TCP
@@ -92,6 +104,15 @@ fn main() -> Result<()> {
         && (args.has("fixture") || !dir.join("manifest.json").exists())
     {
         return serve_fixture(&args, &cfg);
+    }
+
+    // Same hermetic escape hatch for the fault sweep: the scenario engine
+    // only needs the simulator, so a bare runner sweeps the fixture model.
+    if args.subcommand.as_deref() == Some("faults")
+        && args.get_or("backend", "pjrt") == "sim"
+        && (args.has("fixture") || !dir.join("manifest.json").exists())
+    {
+        return faults_fixture(&args, &cfg);
     }
 
     let manifest = Manifest::load(&dir)?;
@@ -203,6 +224,11 @@ fn main() -> Result<()> {
                 println!("{}", experiments::render_fig8(&rows));
             }
         }
+        "faults" => {
+            let rates = parse_rates(&args)?;
+            let rows = experiments::table_faults(&lab, opts(&args)?, &rates)?;
+            print_fault_rows(&args, &rows);
+        }
         "serve" => {
             let model = args.get_or("model", "resnet8");
             let plan = lab.plan(&model)?;
@@ -246,16 +272,106 @@ fn serve_fixture(args: &Args, cfg: &RunConfig) -> Result<()> {
     deploy_and_serve(&plan, ecfg, args)
 }
 
+/// `faults` on the sim backend with no AOT artifacts: sweep the hermetic
+/// in-memory fixture model — the CI fault-sweep gate drives this path.
+fn faults_fixture(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let fx = fixture::tiny(seed);
+    println!(
+        "no AOT artifacts: fault sweep on hermetic fixture model {} ({} params)",
+        fx.model.name(),
+        fx.model.entry.num_params
+    );
+    let scfg = SimXbarConfig::from_xbar(&cfg.xbar);
+    let plan = CompressionPlan::from_state(
+        ModelState {
+            exec: Executor::Sim(scfg),
+            model: fx.model,
+            theta: fx.theta,
+            test: fx.test,
+            calib: fx.calib,
+        },
+        cfg.clone(),
+    );
+    let eb = args.get_usize("eval-batches")?.unwrap_or(usize::MAX);
+    let rows = experiments::fault_sweep(&plan, scfg, EvalOpts::batches(eb), &parse_rates(args)?)?;
+    print_fault_rows(args, &rows);
+    Ok(())
+}
+
+/// `--rates 0,0.02,0.1` → fault rates; defaults to the paper-style sweep.
+fn parse_rates(args: &Args) -> Result<Vec<f64>> {
+    let Some(s) = args.get("rates") else {
+        return Ok(experiments::FAULT_RATES.to_vec());
+    };
+    let mut rates = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let r: f64 = tok
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --rates entry '{tok}': {e}"))?;
+        anyhow::ensure!((0.0..=1.0).contains(&r), "--rates entries must be in [0,1], got {r}");
+        rates.push(r);
+    }
+    anyhow::ensure!(!rates.is_empty(), "--rates parsed to an empty list");
+    Ok(rates)
+}
+
+fn print_fault_rows(args: &Args, rows: &[experiments::FaultSweepRow]) {
+    if args.has("json") {
+        println!("{}", experiments::fault_sweep_value(rows).to_json());
+    } else {
+        print!("{}", experiments::render_fault_sweep(rows));
+    }
+}
+
+/// Fault-scenario flags shared by the `serve` paths: compose a
+/// [`ScenarioSpec`] from the individual component flags (absent flags leave
+/// the component inactive) plus the placement policy.
+fn scenario_from_args(args: &Args) -> Result<Option<(ScenarioSpec, Placement)>> {
+    let seed = args.get_usize("fault-seed")?.unwrap_or(7) as u64;
+    let mut spec = ScenarioSpec::default();
+    if let Some(r) = args.get_f64("stuck")? {
+        spec = spec.with_stuck(r, seed);
+    }
+    let (dt, dr) = (args.get_f64("drift-time")?, args.get_f64("drift-rate")?);
+    if dt.is_some() || dr.is_some() {
+        spec = spec.with_drift(dt.unwrap_or(1.0), dr.unwrap_or(0.05), seed ^ 1);
+    }
+    if let Some(s) = args.get_f64("ir-drop")? {
+        spec = spec.with_ir_drop(s, seed ^ 2);
+    }
+    if let Some(s) = args.get_f64("read-sigma")? {
+        spec = spec.with_read_noise(s, seed ^ 3);
+    }
+    let placement = match args.get_or("placement", "naive").as_str() {
+        "naive" => Placement::Naive,
+        "sensitivity" => Placement::SensitivityAware,
+        other => anyhow::bail!("unknown --placement '{other}' (expected naive|sensitivity)"),
+    };
+    Ok(if spec.is_active() { Some((spec, placement)) } else { None })
+}
+
 /// Shared tail of both `serve` paths (artifact-backed and fixture):
 /// quantize at the requested CR (or serve fp32), deploy, then either run
 /// the TCP front-end (`--listen`) or the in-process loop.
 fn deploy_and_serve(plan: &CompressionPlan<'_>, ecfg: EngineConfig, args: &Args) -> Result<()> {
+    let scenario = scenario_from_args(args)?;
     let handle = match args.get_f64("cr")? {
-        Some(c) => plan
-            .clone()
-            .threshold(ThresholdMode::FixedCr(c))
-            .deploy(ecfg)?,
-        None => plan.deploy_fp32(ecfg)?,
+        Some(c) => {
+            let mut p = plan.clone().threshold(ThresholdMode::FixedCr(c));
+            if let Some((spec, placement)) = scenario {
+                p = p.with_scenario(spec, placement);
+            }
+            p.deploy(ecfg)?
+        }
+        None => {
+            anyhow::ensure!(
+                scenario.is_none(),
+                "fault scenario flags need a quantized deployment: add --cr R \
+                 (faults are injected when the crossbars are programmed)"
+            );
+            plan.deploy_fp32(ecfg)?
+        }
     };
     match args.get("listen") {
         Some(addr) => run_server(handle, addr, args),

@@ -123,6 +123,16 @@ pub fn magnitude_proxy(model: &ModelInfo, theta: &[f32]) -> Sensitivity {
     Sensitivity { scores, traces, probes: 0 }
 }
 
+/// Indices of `scores` sorted by descending score, ties broken by index —
+/// a fully deterministic ranking. The fault-placement stage
+/// ([`crate::faults::assign_slots`]) uses it to put the most sensitive
+/// strips on the healthiest crossbar slots.
+pub fn rank_desc(scores: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+    idx
+}
+
 /// Pure scoring helper (exposed for tests and the HAP baseline): combines
 /// externally-computed traces with weight norms.
 pub fn score_strips(model: &ModelInfo, theta: &[f32], traces: &[f64]) -> Vec<f64> {
@@ -183,6 +193,13 @@ mod tests {
         let s = score_strips(&m, &theta, &[-5.0, 1.0, 1.0]);
         assert_eq!(s[0], 0.0);
         assert!(s[1] > 0.0);
+    }
+
+    #[test]
+    fn rank_desc_is_deterministic_with_stable_ties() {
+        assert_eq!(rank_desc(&[0.5, 2.0, 0.5, 3.0]), vec![3, 1, 0, 2]);
+        assert_eq!(rank_desc(&[]), Vec::<usize>::new());
+        assert_eq!(rank_desc(&[1.0, 1.0, 1.0]), vec![0, 1, 2]);
     }
 
     #[test]

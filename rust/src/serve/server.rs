@@ -241,6 +241,7 @@ fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> 
          batcher: accepted={} rejected={} batches={} mean_fill={:.2}\n\
          engine: requests={} batches={} mean_batch_fill={:.2} failed_requests={}\n\
          program: workers={} program_ns_mean={:.0} program_ns_max={}\n\
+         scenario: {}\n\
          latency_us: mean_batch={:.1} max={} p50={} p95={} p99={}\n",
         stats.connections.load(Ordering::Relaxed),
         stats.frames_in.load(Ordering::Relaxed),
@@ -259,6 +260,7 @@ fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> 
         m.programmed_workers,
         m.program_ns_mean,
         m.program_ns_max,
+        engine.metrics.scenario_desc(),
         m.mean_latency_us,
         m.max_latency_us,
         m.p50_latency_us,

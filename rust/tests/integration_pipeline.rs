@@ -569,7 +569,7 @@ fn sim_deploy_serves_predictions_matching_evaluate() {
 #[test]
 fn sim_engine_reports_batch_failures_and_recovers() {
     let fx = fixture::tiny(19);
-    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None };
+    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None, scenario: None };
     let engine = Engine::new(spec, &fx.model, fx.theta.clone(), EngineConfig::default()).unwrap();
     let handle = engine.start().unwrap();
     let err = handle.classify(vec![0.0; 7]).unwrap_err();
@@ -588,7 +588,7 @@ fn sim_engine_startup_failure_is_typed() {
     // handshake with a typed error naming the backend and the reason — not
     // a log line and a dead queue.
     let fx = fixture::tiny(23);
-    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None };
+    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None, scenario: None };
     let engine = Engine::new(spec, &fx.model, vec![0.0; 3], EngineConfig::default()).unwrap();
     let err = engine.start().unwrap_err();
     assert_eq!(err.backend, "sim");
@@ -737,7 +737,7 @@ fn sim_sharded_engine_startup_failure_is_typed_not_hung() {
     // surface the first failure as a typed StartupError — never hang the
     // aggregated handshake waiting for workers that already died.
     let fx = fixture::tiny(43);
-    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None };
+    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None, scenario: None };
     let engine = Engine::new(
         spec,
         &fx.model,
@@ -759,7 +759,7 @@ fn sim_sharded_engine_drains_pending_ok_replies_on_shutdown() {
     // them: each pending reply arrives as a normal Response, never a
     // dropped channel ("engine dropped request").
     let fx = fixture::tiny(47);
-    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None };
+    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None, scenario: None };
     let engine = Engine::new(
         spec,
         &fx.model,
@@ -789,7 +789,7 @@ fn sim_sharded_engine_drains_failures_with_batch_errors_on_shutdown() {
     // request must be answered with a typed BatchError reply (the batch
     // failure is also counted), not a dropped channel.
     let fx = fixture::tiny(53);
-    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None };
+    let spec = BackendSpec::Sim { cfg: SimXbarConfig::default(), strips: None, scenario: None };
     let engine = Engine::new(
         spec,
         &fx.model,

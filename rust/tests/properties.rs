@@ -7,6 +7,7 @@ use std::collections::HashMap;
 use reram_mpq::backend::{ProgrammedModel, SimXbar, SimXbarConfig, StripPrecision};
 use reram_mpq::clustering::{align_to_capacity, cluster, cluster_at_cr};
 use reram_mpq::config::QuantConfig;
+use reram_mpq::faults::{self, Placement, Scenario, ScenarioSpec};
 use reram_mpq::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry, ModelInfo};
 use reram_mpq::quant::{self, BitMap};
 use reram_mpq::util::json::Value;
@@ -490,6 +491,115 @@ fn prop_sim_programmed_index_drops_pruned_and_zero_scale_strips() {
                 }
             }
             assert_eq!(covered, l.strips.len(), "case {case}: channel ranges tile the table");
+        }
+    }
+}
+
+// ---- faults/ device-variability scenario invariants ------------------------
+
+#[test]
+fn prop_faults_injection_is_deterministic_per_spec_and_seed() {
+    // End to end: the same (spec, seed) must program the same faulted
+    // crossbars and therefore produce bit-identical conv outputs, on any
+    // random workload.
+    let mut rng = Rng::seed_from_u64(73);
+    for case in 0..8 {
+        let m = rand_model(&mut rng);
+        let layer = m.layer(0).clone();
+        let (theta, sp, patches, t) = rand_sim_case(&mut rng, &m, true);
+        let spec = ScenarioSpec::default()
+            .with_stuck(0.3, 100 + case as u64)
+            .with_ir_drop(0.4, 7)
+            .with_drift(2.0, 0.05, 3);
+        let run = || {
+            SimXbar::new(SimXbarConfig::default())
+                .with_scenario(Scenario::new(spec))
+                .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+                .unwrap()
+        };
+        assert_eq!(run(), run(), "case {case}: same (spec, seed) must replay bit-identically");
+    }
+
+    // Seed sensitivity, at code level on a strip wide enough that an
+    // identical redraw is statistically impossible.
+    let spec = ScenarioSpec::default().with_stuck(0.5, 1);
+    let respun = ScenarioSpec::default().with_stuck(0.5, 2);
+    let mut a = vec![33i32; 256];
+    let mut b = vec![33i32; 256];
+    let (mut swa, mut swb) = (1.0f32, 1.0f32);
+    faults::apply_to_strip(&spec, 0, 0, 4, 2, 3, &mut a, &mut swa);
+    faults::apply_to_strip(&respun, 0, 0, 4, 2, 3, &mut b, &mut swb);
+    assert_ne!(a, b, "a different stuck seed must redraw the fault pattern");
+}
+
+#[test]
+fn prop_faults_zero_scenario_is_bit_identical_across_modes_and_threads() {
+    // A scenario whose every component sits at its zero value must be
+    // indistinguishable from no scenario at all — across the exact, packed
+    // and analog execution modes and every tile-shard count, with either
+    // placement policy.
+    let mut rng = Rng::seed_from_u64(79);
+    for case in 0..6 {
+        let m = rand_model(&mut rng);
+        let layer = m.layer(0).clone();
+        let (theta, sp, patches, t) = rand_sim_case(&mut rng, &m, true);
+        let zero = Scenario::new(
+            ScenarioSpec::default()
+                .with_stuck(0.0, 5)
+                .with_drift(3.0, 0.0, 9)
+                .with_ir_drop(0.0, 11)
+                .with_read_noise(0.0, 13),
+        )
+        .with_placement(Placement::SensitivityAware);
+        assert!(!zero.is_active(), "zero-magnitude components must be inactive");
+        let corners = [
+            // exact: ideal converters, integer fast path
+            SimXbarConfig::default(),
+            // packed: ADC phase loop over u64 bit-planes, multi-segment rows
+            SimXbarConfig { rows: 16, ..SimXbarConfig::default() }.with_adc(4),
+            // analog: seeded conductance noise forces the scalar lane scan
+            SimXbarConfig::default().with_adc(4).with_noise(0.05, 7),
+        ];
+        for base in corners {
+            for threads in [1usize, 2, 4] {
+                let cfg = SimXbarConfig { threads, ..base };
+                let clean = SimXbar::new(cfg)
+                    .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+                    .unwrap();
+                let faulted = SimXbar::new(cfg)
+                    .with_scenario(zero.clone())
+                    .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+                    .unwrap();
+                assert_eq!(
+                    clean, faulted,
+                    "case {case}: zero scenario must be bit-identical \
+                     (adc={} noise={} threads={threads})",
+                    base.adc_bits, base.noise_sigma
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_faults_placement_is_a_bijection_over_live_slots() {
+    let mut rng = Rng::seed_from_u64(83);
+    for case in 0..CASES {
+        let nslots = 1 + rng.below(64);
+        let live: Vec<usize> = (0..nslots).filter(|_| rng.below(3) != 0).collect();
+        let scores: Vec<f64> = (0..live.len()).map(|_| rng.uniform() * 10.0).collect();
+        let damage: Vec<f64> = (0..live.len()).map(|_| rng.uniform() * 5.0).collect();
+        for placement in [Placement::Naive, Placement::SensitivityAware] {
+            let out = faults::assign_slots(placement, Some(&scores), &damage, &live);
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            assert_eq!(
+                sorted, live,
+                "case {case}: {placement:?} assignment must be a bijection onto live slots"
+            );
+            if placement == Placement::Naive {
+                assert_eq!(out, live, "case {case}: naive placement is the identity");
+            }
         }
     }
 }

@@ -235,6 +235,9 @@ fn sim_serve_stats_frame_and_bench_client_account_for_every_frame() {
     // deployments program nothing, but the per-worker field is present).
     assert!(text.contains("program_ns_mean="), "stats:\n{text}");
     assert!(text.contains("program_ns_max="), "stats:\n{text}");
+    // The active fault scenario is part of the stats contract; a healthy
+    // (scenario-free) deployment reports "none".
+    assert!(text.contains("scenario: none"), "stats:\n{text}");
     let snap = handle.metrics.snapshot();
     assert_eq!(snap.observed_requests, requests as u64);
     assert!(snap.p99_latency_us >= snap.p50_latency_us);
