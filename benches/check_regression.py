@@ -12,18 +12,29 @@ is noticed) without gating its timing yet. An entry may also carry a
 `max_regress` field overriding the global tolerance for that entry alone —
 used to hold throughput-critical benches (e.g. serve_throughput after the
 program-once refactor) to "improves or holds, within noise" instead of the
-default 30%. Refresh bootstrap entries from a trusted run:
+default 30%.
+
+A bootstrap (or missing) row contributes **nothing** to the gate — a
+baseline that is all-null makes the whole perf gate a silent no-op even
+though CI prints "perf gate: ... 0 regression(s)". The summary therefore
+always reports `ungated rows: N/M` (bootstrap + missing out of all baseline
+rows), and `--strict` turns N > 0 into a failure: use it wherever the
+baseline is known to carry real means for every row, e.g. against a
+baseline the CI runner itself just refreshed:
 
     BENCH_QUICK=1 cargo bench --bench xbar_hotpath
     BENCH_QUICK=1 cargo bench --bench sim_backend
     python3 benches/check_regression.py --update BENCH_*.json
+    # ... re-run the benches, then gate for real:
+    python3 benches/check_regression.py --require-all --strict BENCH_*.json
 
 Usage:
     python3 benches/check_regression.py [--baseline benches/baseline.json]
-        [--tolerance 0.30] [--update] BENCH_*.json
+        [--tolerance 0.30] [--update] [--require-all] [--strict]
+        BENCH_*.json
 
-Exit status: 0 when no gated measurement regresses, 1 otherwise.
-Stdlib only — runs on a bare CI runner.
+Exit status: 0 when no gated measurement regresses (and, under --strict,
+no row went ungated), 1 otherwise. Stdlib only — runs on a bare CI runner.
 """
 
 import argparse
@@ -63,6 +74,13 @@ def main():
         "(use where every baseline bench is known to run, e.g. CI's "
         "hermetic runner) — so a renamed/dropped bench breaks the gate "
         "instead of silently shrinking it",
+    )
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="fail when any baseline row is ungated (null-mean bootstrap or "
+        "not measured) — guards against an all-null baseline turning the "
+        "whole perf gate into a silent no-op",
     )
     ap.add_argument("bench_json", nargs="+", help="BENCH_*.json files to check")
     args = ap.parse_args()
@@ -123,12 +141,23 @@ def main():
     for name in sorted(set(current) - set(base)):
         print(f"note: new measurement '{name}' not in baseline (add via --update)")
 
+    ungated = len(bootstraps) + len(missing)
     print(
         f"perf gate: {gated} gated, {len(bootstraps)} bootstrap, "
         f"{len(missing)} missing, {len(regressions)} regression(s), "
         f"tolerance {tolerance:.0%}"
     )
+    print(f"ungated rows: {ungated}/{len(base)}")
     failed = False
+    if args.strict and ungated > 0:
+        print(
+            f"::error::--strict: {ungated} of {len(base)} baseline rows are "
+            "ungated (null-mean bootstrap or unmeasured) — the perf gate is "
+            "not actually gating them; refresh the baseline with --update "
+            "from a trusted run",
+            file=sys.stderr,
+        )
+        failed = True
     if args.require_all and missing:
         for name in missing:
             print(

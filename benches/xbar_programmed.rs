@@ -1,6 +1,9 @@
 //! Bench: program-once crossbars — the programmed tile walk vs. the
 //! re-quantize-and-repack-per-call reference path, plus the one-time
-//! programming cost itself. Fully hermetic (in-memory fixture, no AOT
+//! programming cost itself. The 4b-ADC programmed walk is measured twice:
+//! once pinned to the scalar packed-u64 kernel (`SimdMode::Off`) and once
+//! with runtime-detected SIMD (`SimdMode::Auto`), so the SIMD speedup is
+//! its own gated row. Fully hermetic (in-memory fixture, no AOT
 //! artifacts):
 //!
 //!     cargo bench --bench xbar_programmed
@@ -11,7 +14,7 @@
 //! to the speedup. CI's `bench-smoke` runs this in quick mode and gates it
 //! against `benches/baseline.json`.
 
-use reram_mpq::backend::{ProgrammedModel, SimXbar, SimXbarConfig, StripPrecision};
+use reram_mpq::backend::{ProgrammedModel, SimXbar, SimXbarConfig, SimdMode, StripPrecision};
 use reram_mpq::quant::{self, BitMap};
 use reram_mpq::util::bench::Bench;
 use reram_mpq::util::rng::Rng;
@@ -73,8 +76,11 @@ fn main() {
             .expect("conv")
     });
 
-    // 3. faithful 4-bit-ADC packed phase loop: same comparison
-    let adc = SimXbar::new(scfg.with_adc(4));
+    // 3. faithful 4-bit-ADC packed phase loop: same comparison. The
+    //    programmed row is pinned to SimdMode::Off so it stays the scalar
+    //    packed-u64 walk — the reference point the SIMD row below is
+    //    measured against.
+    let adc = SimXbar::new(scfg.with_adc(4).with_simd(SimdMode::Off));
     let _ = adc
         .conv_bitserial(model, &layer, &qm.theta, &patches, t, &sp)
         .expect("conv");
@@ -84,6 +90,18 @@ fn main() {
     });
     b.run("xbar re-pack-per-call conv, 4b ADC packed (tiny widest layer)", || {
         adc.conv_bitserial_reference(model, &layer, &qm.theta, &patches, t, &sp)
+            .expect("conv")
+    });
+
+    // 4. the SIMD-widened walk (runtime-detected AVX2/NEON, scalar where
+    //    neither exists) over the same programmed artifact.
+    let adc_simd = SimXbar::new(scfg.with_adc(4).with_simd(SimdMode::Auto));
+    let _ = adc_simd
+        .conv_bitserial(model, &layer, &qm.theta, &patches, t, &sp)
+        .expect("conv");
+    b.run("xbar programmed conv, 4b ADC SIMD (tiny widest layer)", || {
+        adc_simd
+            .conv_bitserial(model, &layer, &qm.theta, &patches, t, &sp)
             .expect("conv")
     });
 
@@ -108,6 +126,18 @@ fn main() {
     ) {
         if p > 0.0 {
             println!("  4b-ADC packed programmed speedup: {:.2}x", r / p);
+        }
+    }
+    if let (Some(s), Some(p)) = (
+        mean("xbar programmed conv, 4b ADC SIMD (tiny widest layer)"),
+        mean("xbar programmed conv, 4b ADC packed (tiny widest layer)"),
+    ) {
+        if s > 0.0 {
+            println!(
+                "  4b-ADC SIMD walk ({}): {:.2}x over scalar packed",
+                adc_simd.simd_kernel_name(),
+                p / s
+            );
         }
     }
     println!(

@@ -49,11 +49,20 @@
 //! accumulation over 64 lanes at a time instead of a branchy per-lane scan.
 //! Because a column current is a sum of small non-negative integers, the
 //! popcount total equals the scalar sum *exactly*, and the SAR-ADC transfer
-//! function sees identical inputs either way. On top of that, the per-tile
-//! (row-segment × column-strip) MVM loop shards across scoped worker
-//! threads (`SimXbarConfig::threads`; 0 = one per core).
+//! function sees identical inputs either way. The programmed walk widens
+//! this further: weight planes are stored word-major/row-minor
+//! ([`programmed::pack_weight_rows_into`]) so one `std::arch` vector load
+//! (AVX2 on x86_64, runtime-detected; NEON on aarch64) covers 4 packed
+//! rows per step, with the scalar u64 loop as the portable fallback
+//! ([`SimXbarConfig::simd`]; the `RERAM_MPQ_SIMD=off` environment variable
+//! kills vector dispatch). The walk is cache-blocked along the sample axis
+//! and double-buffered — the next strip's planes are staged while the
+//! current strip accumulates — and activation planes are packed once per
+//! batch in a single fused pass. On top of that, the per-tile (row-segment
+//! × column-strip) MVM loop shards across scoped worker threads
+//! (`SimXbarConfig::threads`; 0 = one per core).
 //!
-//! Three invariants make this safe to enable everywhere:
+//! Four invariants make this safe to enable everywhere:
 //!
 //! 1. **Order preservation** — each shard owns a contiguous output-channel
 //!    range with a private accumulator, and per-(sample, channel) partial
@@ -66,10 +75,16 @@
 //!    exactly the values the re-quantize-per-call reference path derives
 //!    (same rounding, same packing, same noise stream), so the tile walk is
 //!    bit-identical to it for every config corner.
+//! 4. **Integer currents, one merge order** — every kernel (scalar, AVX2,
+//!    NEON) produces exact integer column currents; the ADC transfer and
+//!    the f64 shift-and-add merge run in one shared outer loop in a fixed
+//!    order, so kernel width and sample-axis blocking can never change a
+//!    result bit.
 //!
 //! Together they guarantee results are **bit-identical** for every
-//! `threads` value, for the packed vs. scalar (`scalar_lanes`) path, and
-//! for the programmed vs. re-pack-per-call path — property-tested in
+//! `threads` value, for the packed vs. scalar (`scalar_lanes`) path, for
+//! every [`SimdMode`] under any runtime-detection outcome, and for the
+//! programmed vs. re-pack-per-call path — property-tested in
 //! `tests/properties.rs`.
 
 pub mod nn;
@@ -79,7 +94,7 @@ pub mod simxbar;
 
 pub use programmed::{ExecMode, ProgrammedLayer, ProgrammedModel, ProgrammedStrip, StripStore};
 pub use scratch::{ConvScratch, NnScratch, Scratch};
-pub use simxbar::{SimXbar, SimXbarConfig, StripPrecision};
+pub use simxbar::{SimXbar, SimXbarConfig, SimdMode, StripPrecision};
 
 use crate::model::ModelInfo;
 use crate::tensor::Tensor;

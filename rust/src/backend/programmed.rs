@@ -6,7 +6,9 @@
 //! [`crate::backend::SimXbar`]'s bit-serial conv ahead of time, per strip:
 //! integer weight codes (re-derived from the quantized parameters and the
 //! per-strip scale), pre-packed `u64` weight bit-planes (one per cell slice
-//! × cell bit × polarity, in the row-segment word layout), or the analog
+//! × cell bit × polarity, interleaved word-major so the SIMD walk loads 4
+//! consecutive rows of a segment word at once — see
+//! [`pack_weight_rows_into`]), or the analog
 //! differential conductance columns (with the seeded per-strip noise draw
 //! already applied) — whichever the configured [`ExecMode`] reads at
 //! inference time. Pruned (`bits == 0`) and zero-scale strips are dropped
@@ -82,6 +84,22 @@ pub(crate) fn segments(d: usize, rows: usize) -> (Vec<(usize, usize, usize)>, us
     (segs, woff)
 }
 
+/// Packed rows (column bit-planes) of one strip: one per (cell slice ×
+/// cell bit × polarity), in row order `(j·cell_bits + b)·2 + polarity`.
+#[inline]
+pub(crate) fn packed_rows(ncells: usize, cell_bits: u8) -> usize {
+    ncells * cell_bits as usize * 2
+}
+
+/// Row count of the *interleaved* packed layout, padded so a 4-lane SIMD
+/// load of consecutive rows never reads past the strip's storage and never
+/// splits a 64-bit lane. Both the packer below and the inference walk
+/// derive the pad from this one function, so they can never disagree.
+#[inline]
+pub(crate) fn packed_rows_pad(ncells: usize, cell_bits: u8) -> usize {
+    packed_rows(ncells, cell_bits).next_multiple_of(4)
+}
+
 /// Pack one strip's integer weight codes into u64 cell-bit planes: one
 /// plane per (cell slice × cell bit × polarity), segmented like the row
 /// partition. Layout: `[cell slice × cell bit][polarity][segment words]`.
@@ -125,6 +143,60 @@ pub(crate) fn pack_weight_planes_into(
     }
 }
 
+/// Pack one strip's integer weight codes into the *interleaved* word-major
+/// layout the SIMD-widened walk consumes: the word index is the **major**
+/// axis and the packed row the **minor** one, `planes[w·rows_pad + row]`
+/// with `row = (j·cell_bits + b)·2 + polarity`, rows padded to
+/// [`packed_rows_pad`]. One unaligned vector load then covers 4 consecutive
+/// rows of the *same* segment word — the whole differential pair (and, at
+/// `cell_bits >= 2`, a full cell slice) in a single instruction — and the
+/// pad rows stay all-zero so lanes past `packed_rows` contribute nothing.
+/// Bit contents per row are identical to [`pack_weight_planes_into`]; only
+/// the axis order differs.
+pub(crate) fn pack_weight_rows_into(
+    planes: &mut Vec<u64>,
+    codes_w: &[i32],
+    cell_bits: u8,
+    ncells: usize,
+    segs: &[(usize, usize, usize)],
+    total_words: usize,
+) {
+    let cb = cell_bits as usize;
+    let mask = (1i32 << cell_bits) - 1;
+    let rp = packed_rows_pad(ncells, cell_bits);
+    planes.clear();
+    planes.resize(total_words * rp, 0);
+    for &(start, len, woff) in segs {
+        for l in 0..len {
+            let cwv = codes_w[start + l];
+            if cwv == 0 {
+                continue;
+            }
+            let (p, q) = (cwv.max(0), (-cwv).max(0));
+            let bit = 1u64 << (l % 64);
+            let wb = (woff + l / 64) * rp;
+            for j in 0..ncells {
+                let sh = (j as u32) * cell_bits as u32;
+                let pv = (p >> sh) & mask;
+                let qv = (q >> sh) & mask;
+                if pv == 0 && qv == 0 {
+                    continue;
+                }
+                for b in 0..cb {
+                    let cellbit = 1i32 << b;
+                    let row = (j * cb + b) * 2;
+                    if pv & cellbit != 0 {
+                        planes[wb + row] |= bit;
+                    }
+                    if qv & cellbit != 0 {
+                        planes[wb + row + 1] |= bit;
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Which execution strategy the artifact was programmed for — the same
 /// decision the per-call path makes from the config, frozen at program
 /// time so the programmed store and the inference walk can never disagree.
@@ -157,8 +229,10 @@ impl ExecMode {
 pub enum StripStore {
     /// Integer weight codes (ideal-converter fast path).
     Exact { codes: Vec<i32> },
-    /// Packed weight bit-planes, layout
-    /// `[cell slice × cell bit][polarity][segment words]`.
+    /// Packed weight bit-planes in the SIMD-friendly interleaved layout
+    /// `[segment word][packed row]` (row = (cell slice × cell bit) × 2 +
+    /// polarity, padded to [`packed_rows_pad`]; see
+    /// [`pack_weight_rows_into`]).
     Packed { planes: Vec<u64>, ncells: usize },
     /// Differential conductance columns `[cell slice][lane]`, noise already
     /// programmed in.
@@ -385,8 +459,12 @@ impl ProgrammedModel {
                             StripStore::Exact { codes: codes_w.clone() }
                         }
                         ExecMode::Packed => {
+                            // Interleaved word-major layout: one SIMD load
+                            // covers 4 consecutive packed rows of a word
+                            // (pad rows included in the byte count — they
+                            // are real programmed-storage overhead).
                             let mut planes = Vec::new();
-                            pack_weight_planes_into(
+                            pack_weight_rows_into(
                                 &mut planes,
                                 &codes_w,
                                 cfg.cell_bits,
@@ -478,6 +556,31 @@ mod tests {
             ExecMode::of(&SimXbarConfig { scalar_lanes: true, ..base }),
             ExecMode::Exact
         );
+    }
+
+    #[test]
+    fn interleaved_weight_rows_match_the_reference_plane_layout() {
+        // Same bits, transposed axes: interleaved[w·rows_pad + r] must equal
+        // the reference layout's planes[r·total_words + w], with every pad
+        // row all-zero. 19 lanes over 4-row segments exercises a remainder
+        // segment; codes span negative/zero/positive.
+        let codes: Vec<i32> = (0..19).map(|i| ((i * 7) % 11) as i32 - 5).collect();
+        let (segs, total_words) = segments(19, 4);
+        let (cell_bits, ncells) = (2u8, 3usize);
+        let mut flat = Vec::new();
+        pack_weight_planes_into(&mut flat, &codes, cell_bits, ncells, &segs, total_words);
+        let mut inter = Vec::new();
+        pack_weight_rows_into(&mut inter, &codes, cell_bits, ncells, &segs, total_words);
+        let nrows = packed_rows(ncells, cell_bits);
+        let rp = packed_rows_pad(ncells, cell_bits);
+        assert_eq!(inter.len(), total_words * rp);
+        assert!(rp >= nrows && rp % 4 == 0);
+        for w in 0..total_words {
+            for r in 0..rp {
+                let want = if r < nrows { flat[r * total_words + w] } else { 0 };
+                assert_eq!(inter[w * rp + r], want, "word {w} row {r}");
+            }
+        }
     }
 
     #[test]

@@ -40,7 +40,11 @@ pub struct ConvScratch {
     /// Per-conversion-window activation scales `[t]`.
     pub sa: Vec<f32>,
     /// Packed activation bit-planes, flattened
-    /// `[tap][ti][phase][polarity][segment words]`.
+    /// `[tap][ti][phase][polarity][segment words]` — built **once per
+    /// batch** by the fused single-pass packer (never per sample or per
+    /// tap) and consumed read-only by every channel shard of the
+    /// SIMD-widened blocked walk. Grown in place like every other arena
+    /// buffer, so the steady state stays allocation-free.
     pub a_planes: Vec<u64>,
     /// Per-shard `[t, channel-range]` accumulators of the tile-sharded MVM
     /// loop (one per worker thread, reused across calls).

@@ -56,6 +56,16 @@
 //!   (`noise_sigma == 0`); conductance noise makes them real-valued, which
 //!   falls back to the scalar lane scan (`scalar_lanes` forces the fallback
 //!   for benchmarking).
+//! * **SIMD-widened cache-blocked walk.** The programmed packed walk
+//!   consumes 4 interleaved weight rows per step through `std::arch`
+//!   intrinsics — AVX2 on x86_64 (runtime-detected), NEON on aarch64 —
+//!   with the scalar u64 loop as the portable fallback
+//!   ([`SimXbarConfig::simd`] forces either path; `RERAM_MPQ_SIMD=off`
+//!   kills vector dispatch from the environment). The walk is tiled along
+//!   the sample axis and double-buffered (the next strip's planes are
+//!   staged while the current strip accumulates), and activation planes
+//!   are packed **once per batch** in a single fused pass. Kernels produce
+//!   exact integer currents, so every path is bit-identical.
 //! * **Tile sharding.** The per-tile (row-segment × column-strip) MVM loop
 //!   is sharded over `threads` scoped worker threads
 //!   (`std::thread::scope`), each owning a contiguous output-channel range
@@ -68,8 +78,8 @@ use std::sync::{Arc, Mutex};
 
 use crate::backend::nn::{self, ConvExec, ExactConv, NetSpec};
 use crate::backend::programmed::{
-    pack_weight_planes_into, segments, words_of, ExecMode, ProgrammedLayer, ProgrammedModel,
-    StripStore,
+    pack_weight_planes_into, packed_rows_pad, segments, words_of, ExecMode, ProgrammedLayer,
+    ProgrammedModel, ProgrammedStrip, StripStore,
 };
 use crate::backend::scratch::{ConvScratch, Scratch};
 use crate::backend::{ExecBackend, FwdKind};
@@ -79,6 +89,27 @@ use crate::quant::{self, QuantizedModel};
 use crate::tensor::Tensor;
 use crate::xbar::XbarConfig;
 use crate::Result;
+
+/// SIMD widening policy for the programmed packed bit-plane walk.
+///
+/// Orthogonal to [`SimXbarConfig::scalar_lanes`]: `scalar_lanes` opts out
+/// of u64 bit-plane *packing* altogether (Analog lane scan), while this
+/// knob selects how many packed weight rows a walk step consumes — 4 per
+/// vector (AVX2/NEON) or 1 per scalar word. Every setting is bit-identical:
+/// the kernels produce exact integer column currents either way.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Runtime-detect the widest supported kernel (AVX2 on x86_64, NEON on
+    /// aarch64, scalar elsewhere). Honours the `RERAM_MPQ_SIMD=off`
+    /// environment kill switch, so CI can exercise the portable fallback
+    /// on hardware that would auto-select a vector kernel.
+    Auto,
+    /// Force the portable scalar u64 kernel.
+    Off,
+    /// Use the widest kernel the host supports, ignoring the environment
+    /// kill switch; still falls back to scalar when the host has none.
+    Force,
+}
 
 /// Crossbar fidelity knobs for the simulator.
 #[derive(Clone, Copy, Debug)]
@@ -111,6 +142,10 @@ pub struct SimXbarConfig {
     /// inside the phase loop and use the scalar per-lane scan instead
     /// (numerically identical; this only trades speed).
     pub scalar_lanes: bool,
+    /// SIMD widening policy for the programmed packed walk (bit-identical
+    /// for every value; excluded from the artifact cache key like
+    /// `threads`). See [`SimdMode`].
+    pub simd: SimdMode,
 }
 
 impl Default for SimXbarConfig {
@@ -125,6 +160,7 @@ impl Default for SimXbarConfig {
             force_phase_loop: false,
             threads: 0,
             scalar_lanes: false,
+            simd: SimdMode::Auto,
         }
     }
 }
@@ -161,6 +197,12 @@ impl SimXbarConfig {
     /// Pin the tile-sharding worker count (0 = auto, 1 = sequential).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Pin the SIMD widening policy of the programmed packed walk.
+    pub fn with_simd(mut self, simd: SimdMode) -> Self {
+        self.simd = simd;
         self
     }
 }
@@ -269,6 +311,382 @@ fn pack_activation_planes_into(
     }
 }
 
+/// Pack **every** kernel tap's DAC codes into u64 activation bit-planes in
+/// a single pass over the code matrix — once per batch (a conv call covers
+/// the whole batch), never per sample or per tap. The planes are then
+/// shared read-only by every channel shard and re-read by every strip of
+/// the blocked walk. Flat layout `[tap][ti][phase][polarity][segment
+/// words]`, identical per-tap contents to [`pack_activation_planes_into`].
+#[allow(clippy::too_many_arguments)]
+fn pack_activation_planes_batch_into(
+    out: &mut Vec<u64>,
+    codes_a: &[i32],
+    cols: usize,
+    d: usize,
+    kk: usize,
+    segs: &[(usize, usize, usize)],
+    total_words: usize,
+    phases: usize,
+    t: usize,
+) {
+    let stride_ti = phases * 2 * total_words;
+    let tap_stride = t * stride_ti;
+    out.clear();
+    out.resize(kk * tap_stride, 0);
+    for ti in 0..t {
+        let row = &codes_a[ti * cols..(ti + 1) * cols];
+        for (g, arow) in row.chunks_exact(d).enumerate() {
+            let tb = g * tap_stride + ti * stride_ti;
+            for &(start, len, woff) in segs {
+                for l in 0..len {
+                    let a = arow[start + l];
+                    if a == 0 {
+                        continue;
+                    }
+                    let pol = usize::from(a < 0);
+                    let bit = 1u64 << (l % 64);
+                    let w = woff + l / 64;
+                    let mut m = a.unsigned_abs();
+                    let mut p = 0usize;
+                    while m != 0 {
+                        if m & 1 != 0 {
+                            out[tb + (p * 2 + pol) * total_words + w] |= bit;
+                        }
+                        m >>= 1;
+                        p += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD-widened packed-walk kernels
+//
+// Each kernel computes the four exact integer column currents (input
+// polarity × differential column) of every cell slice for one (row segment,
+// input-bit phase), reading the strip's interleaved weight planes
+// (`[word][packed row]`, see `programmed::pack_weight_rows_into`). All
+// arithmetic up to the ADC is integral, so every kernel — scalar, AVX2,
+// NEON — produces the same `u64` currents and the shared outer loop applies
+// the ADC transfer and the f64 shift-and-add in one fixed order:
+// bit-identity across kernels holds by construction, not by tolerance.
+// ---------------------------------------------------------------------------
+
+/// Upper bound on a strip's current-accumulator slots: `ncells ≤ 16`
+/// (bits ≤ 16, cell_bits ≥ 1) × 4 currents each.
+const MAX_STRIP_CURRENTS: usize = 64;
+
+/// Packed-row decode: `row = (j·cell_bits + b)·2 + pol` → (cell slice j,
+/// cell bit b, polarity).
+#[inline]
+fn decode_row(r: usize, cell_bits: usize) -> (usize, usize, usize) {
+    let pair = r / 2;
+    (pair / cell_bits, pair % cell_bits, r & 1)
+}
+
+/// The kernel the packed walk dispatches to, resolved once per conv call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SimdKernel {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// Widest kernel this host supports (runtime-detected on x86_64; NEON is
+/// architecturally mandatory on aarch64, so no detection is needed there).
+fn host_kernel() -> SimdKernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            SimdKernel::Avx2
+        } else {
+            SimdKernel::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        SimdKernel::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        SimdKernel::Scalar
+    }
+}
+
+/// The `RERAM_MPQ_SIMD=off|0|scalar` environment kill switch (read once;
+/// lets CI pin the portable fallback on hosts whose runtime detection
+/// would pick a vector kernel).
+fn env_simd_off() -> bool {
+    static OFF: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *OFF.get_or_init(|| {
+        std::env::var("RERAM_MPQ_SIMD")
+            .map(|v| {
+                let v = v.to_ascii_lowercase();
+                v == "off" || v == "0" || v == "scalar"
+            })
+            .unwrap_or(false)
+    })
+}
+
+/// Resolve the configured [`SimdMode`] to a concrete kernel for this host.
+fn simd_kernel(cfg: &SimXbarConfig) -> SimdKernel {
+    match cfg.simd {
+        SimdMode::Off => SimdKernel::Scalar,
+        SimdMode::Force => host_kernel(),
+        SimdMode::Auto => {
+            if env_simd_off() {
+                SimdKernel::Scalar
+            } else {
+                host_kernel()
+            }
+        }
+    }
+}
+
+/// Portable scalar kernel: one packed u64 word per step, differential pair
+/// by differential pair — the exact per-word popcount/shift accumulation of
+/// the pre-SIMD walk, re-read from the interleaved layout.
+fn currents_scalar(
+    planes: &[u64],
+    rows_pad: usize,
+    nrows: usize,
+    cell_bits: usize,
+    app: &[u64],
+    apn: &[u64],
+    cur: &mut [u64],
+) {
+    for (w, (&ap_w, &an_w)) in app.iter().zip(apn.iter()).enumerate() {
+        let base = w * rows_pad;
+        let mut r = 0usize;
+        while r < nrows {
+            let gp = planes[base + r];
+            let gm = planes[base + r + 1];
+            let (j, b, _) = decode_row(r, cell_bits);
+            let c = j * 4;
+            cur[c] += ((ap_w & gp).count_ones() as u64) << b;
+            cur[c + 1] += ((ap_w & gm).count_ones() as u64) << b;
+            cur[c + 2] += ((an_w & gp).count_ones() as u64) << b;
+            cur[c + 3] += ((an_w & gm).count_ones() as u64) << b;
+            r += 2;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Per-64-bit-lane popcount (Mula's nibble-LUT method widened to AVX2:
+    /// two table lookups per byte, SAD against zero to sum each lane —
+    /// AVX2 has no native 64-lane popcount, that arrived with AVX-512).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcnt_epi64(v: __m256i) -> __m256i {
+        let low = _mm256_set1_epi8(0x0f);
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, 0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3,
+            2, 3, 3, 4,
+        );
+        let lo = _mm256_and_si256(v, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(v), low);
+        let cnt = _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi));
+        _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+    }
+
+    /// AVX2 kernel: 4 consecutive packed weight rows per unaligned 256-bit
+    /// load (the interleaved layout's row pad guarantees the load is always
+    /// in bounds), chunk-outer / word-inner so the two per-chunk vector
+    /// accumulators live in registers across the whole word loop. Words
+    /// with no driven lanes in either polarity are skipped — they add an
+    /// exact integer zero either way.
+    ///
+    /// # Safety
+    /// Caller must ensure the host supports AVX2 and that `planes` holds
+    /// `app.len() · rows_pad` words with `rows_pad % 4 == 0`, `nrows <=
+    /// rows_pad`, and `cur` at least `4 · ceil(nrows / (2·cell_bits))`
+    /// slots (see `packed_currents`).
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn currents(
+        planes: &[u64],
+        rows_pad: usize,
+        nrows: usize,
+        cell_bits: usize,
+        app: &[u64],
+        apn: &[u64],
+        cur: &mut [u64],
+    ) {
+        let mut r = 0usize;
+        while r < nrows {
+            let mut accp = _mm256_setzero_si256();
+            let mut accn = _mm256_setzero_si256();
+            for (w, (&ap_w, &an_w)) in app.iter().zip(apn.iter()).enumerate() {
+                if (ap_w | an_w) == 0 {
+                    continue;
+                }
+                let v = _mm256_loadu_si256(planes.as_ptr().add(w * rows_pad + r).cast());
+                if ap_w != 0 {
+                    let m = _mm256_and_si256(v, _mm256_set1_epi64x(ap_w as i64));
+                    accp = _mm256_add_epi64(accp, popcnt_epi64(m));
+                }
+                if an_w != 0 {
+                    let m = _mm256_and_si256(v, _mm256_set1_epi64x(an_w as i64));
+                    accn = _mm256_add_epi64(accn, popcnt_epi64(m));
+                }
+            }
+            let mut lp = [0u64; 4];
+            let mut ln = [0u64; 4];
+            _mm256_storeu_si256(lp.as_mut_ptr().cast(), accp);
+            _mm256_storeu_si256(ln.as_mut_ptr().cast(), accn);
+            let end = (r + 4).min(nrows);
+            for rr in r..end {
+                let (j, b, pol) = super::decode_row(rr, cell_bits);
+                let c = j * 4 + pol;
+                cur[c] += lp[rr - r] << b;
+                cur[c + 2] += ln[rr - r] << b;
+            }
+            r += 4;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Per-64-bit-lane popcount: byte counts (`vcnt`) pairwise-widened up
+    /// to one sum per 64-bit lane.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn popcnt_u64x2(v: uint64x2_t) -> uint64x2_t {
+        vpaddlq_u32(vpaddlq_u16(vpaddlq_u8(vcntq_u8(vreinterpretq_u8_u64(v)))))
+    }
+
+    /// NEON kernel: 4 consecutive packed weight rows per step as two
+    /// 128-bit loads (row pad keeps them in bounds), chunk-outer /
+    /// word-inner like the AVX2 twin. Undriven words are skipped — an
+    /// exact integer no-op.
+    ///
+    /// # Safety
+    /// Same contract as the AVX2 kernel (`planes` sized `app.len() ·
+    /// rows_pad`, `rows_pad % 4 == 0`, `nrows <= rows_pad`, `cur` large
+    /// enough); NEON itself is always available on aarch64.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn currents(
+        planes: &[u64],
+        rows_pad: usize,
+        nrows: usize,
+        cell_bits: usize,
+        app: &[u64],
+        apn: &[u64],
+        cur: &mut [u64],
+    ) {
+        let mut r = 0usize;
+        while r < nrows {
+            let mut accp0 = vdupq_n_u64(0);
+            let mut accp1 = vdupq_n_u64(0);
+            let mut accn0 = vdupq_n_u64(0);
+            let mut accn1 = vdupq_n_u64(0);
+            for (w, (&ap_w, &an_w)) in app.iter().zip(apn.iter()).enumerate() {
+                if (ap_w | an_w) == 0 {
+                    continue;
+                }
+                let p0 = vld1q_u64(planes.as_ptr().add(w * rows_pad + r));
+                let p1 = vld1q_u64(planes.as_ptr().add(w * rows_pad + r + 2));
+                if ap_w != 0 {
+                    let va = vdupq_n_u64(ap_w);
+                    accp0 = vaddq_u64(accp0, popcnt_u64x2(vandq_u64(p0, va)));
+                    accp1 = vaddq_u64(accp1, popcnt_u64x2(vandq_u64(p1, va)));
+                }
+                if an_w != 0 {
+                    let vn = vdupq_n_u64(an_w);
+                    accn0 = vaddq_u64(accn0, popcnt_u64x2(vandq_u64(p0, vn)));
+                    accn1 = vaddq_u64(accn1, popcnt_u64x2(vandq_u64(p1, vn)));
+                }
+            }
+            let mut lp = [0u64; 4];
+            let mut ln = [0u64; 4];
+            vst1q_u64(lp.as_mut_ptr(), accp0);
+            vst1q_u64(lp.as_mut_ptr().add(2), accp1);
+            vst1q_u64(ln.as_mut_ptr(), accn0);
+            vst1q_u64(ln.as_mut_ptr().add(2), accn1);
+            let end = (r + 4).min(nrows);
+            for rr in r..end {
+                let (j, b, pol) = super::decode_row(rr, cell_bits);
+                let c = j * 4 + pol;
+                cur[c] += lp[rr - r] << b;
+                cur[c + 2] += ln[rr - r] << b;
+            }
+            r += 4;
+        }
+    }
+}
+
+/// Dispatch one (segment, phase) current computation to the resolved
+/// kernel. `cur[j·4 ..][..4]` receives cell slice `j`'s four currents in
+/// the order (G⁺ driven by +phase, G⁻ by +phase, G⁺ by −phase, G⁻ by
+/// −phase); slots beyond `ncells·4` are left untouched.
+#[allow(clippy::too_many_arguments)]
+fn packed_currents(
+    kern: SimdKernel,
+    planes: &[u64],
+    rows_pad: usize,
+    nrows: usize,
+    cell_bits: usize,
+    ncells: usize,
+    app: &[u64],
+    apn: &[u64],
+    cur: &mut [u64],
+) {
+    cur[..ncells * 4].fill(0);
+    match kern {
+        SimdKernel::Scalar => {
+            currents_scalar(planes, rows_pad, nrows, cell_bits, app, apn, cur)
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdKernel::Avx2 => unsafe {
+            // Safe: the variant is only ever constructed after
+            // `is_x86_feature_detected!("avx2")` succeeded, and the caller
+            // slices `planes` to exactly `app.len() · rows_pad` words.
+            avx2::currents(planes, rows_pad, nrows, cell_bits, app, apn, cur)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdKernel::Neon => unsafe {
+            // Safe: NEON is architecturally mandatory on aarch64.
+            neon::currents(planes, rows_pad, nrows, cell_bits, app, apn, cur)
+        },
+    }
+}
+
+/// Double-buffer staging: touch one byte per cache line of the *next*
+/// strip's programmed words so they stream toward L1 while the current
+/// strip's popcounts retire. Portable (plain volatile reads — no consumer,
+/// so the loads only warm the cache); bounded, so a huge strip never turns
+/// staging into a second full pass.
+fn stage_strip(s: &ProgrammedStrip) {
+    fn touch<T>(ptr: *const T, len: usize, step: usize) {
+        let mut acc = 0u8;
+        let mut i = 0usize;
+        // one byte per 64-byte line, at most 64 lines (4 KiB) ahead
+        while i < len && i < step * 64 {
+            // in bounds: i < len elements of a live slice
+            acc |= unsafe { std::ptr::read_volatile(ptr.add(i).cast::<u8>()) };
+            i += step;
+        }
+        std::hint::black_box(acc);
+    }
+    match &s.store {
+        StripStore::Exact { codes } => touch(codes.as_ptr(), codes.len(), 16),
+        StripStore::Packed { planes, .. } => touch(planes.as_ptr(), planes.len(), 8),
+        StripStore::Analog { gpos, .. } => touch(gpos.as_ptr(), gpos.len(), 8),
+    }
+}
+
 /// Immutable per-call state of one *reference-path* bit-serial conv, shared
 /// by every channel shard (everything here is read-only during the sharded
 /// MVM loop).
@@ -325,8 +743,10 @@ pub struct SimXbar {
 /// FNV-1a over the programmed artifact's inputs: model identity, parameter
 /// bits, per-strip bits and scale bits, and the fidelity knobs of the
 /// config (`cfg` is a public field, so a caller mutating it between
-/// forwards must invalidate the artifact; `threads` is deliberately
-/// excluded — sharding is bit-identical and shares the artifact). The fault
+/// forwards must invalidate the artifact; `threads` and `simd` are
+/// deliberately excluded — sharding and kernel width are bit-identical and
+/// the interleaved plane layout is the same either way, so they share the
+/// artifact). The fault
 /// scenario's fingerprint (spec + placement + scores) is mixed in so
 /// faulted and fault-free artifacts never alias.
 fn prog_key(
@@ -419,6 +839,18 @@ impl SimXbar {
     /// The active scenario's stats description ("none" when absent).
     pub fn scenario_desc(&self) -> String {
         self.scenario.as_ref().map_or_else(|| "none".to_string(), |s| s.describe())
+    }
+
+    /// The kernel the programmed packed walk will dispatch to on this host
+    /// under the configured [`SimdMode`]: `"avx2"`, `"neon"` or `"scalar"`.
+    pub fn simd_kernel_name(&self) -> &'static str {
+        match simd_kernel(&self.cfg) {
+            SimdKernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            SimdKernel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            SimdKernel::Neon => "neon",
+        }
     }
 
     /// The program-once crossbar artifact for `(model, theta, sp)` on this
@@ -514,33 +946,33 @@ impl SimXbar {
         dac_quantize(cfg, patches, t, cols, &mut cs.codes_a, &mut cs.sa);
 
         let phases = (cfg.input_bits - 1) as usize;
-        let stride_ti = phases * 2 * pl.total_words;
-        let tap_stride = t * stride_ti;
         if prog.mode == ExecMode::Packed {
-            cs.a_planes.clear();
-            cs.a_planes.resize(kk * tap_stride, 0);
-            for g in 0..kk {
-                pack_activation_planes_into(
-                    &mut cs.a_planes[g * tap_stride..(g + 1) * tap_stride],
-                    &cs.codes_a,
-                    cols,
-                    d,
-                    g,
-                    &pl.segs,
-                    pl.total_words,
-                    phases,
-                    t,
-                );
-            }
+            // One fused pass over the whole batch's DAC codes — per-sample
+            // or per-tap re-packing never happens; the walk (and every
+            // shard of it) only re-reads these shared planes.
+            pack_activation_planes_batch_into(
+                &mut cs.a_planes,
+                &cs.codes_a,
+                cols,
+                d,
+                kk,
+                &pl.segs,
+                pl.total_words,
+                phases,
+                t,
+            );
         } else {
             cs.a_planes.clear();
         }
 
+        // Resolve the SIMD kernel once per conv call (runtime detection is
+        // cached); every shard dispatches to the same kernel.
+        let kern = simd_kernel(cfg);
         out.clear();
         out.resize(t * n, 0.0);
         let threads = self.effective_threads(n);
         if threads <= 1 {
-            walk_channels(cfg, pl, &cs.codes_a, &cs.sa, &cs.a_planes, t, 0, n, out);
+            walk_channels(cfg, kern, pl, &cs.codes_a, &cs.sa, &cs.a_planes, t, 0, n, out);
             return Ok(());
         }
         // Shard the column-strip loop: each worker owns a contiguous
@@ -564,7 +996,7 @@ impl SimXbar {
                 scope.spawn(move || {
                     part.clear();
                     part.resize(t * (c1 - c0), 0.0);
-                    walk_channels(cfg, pl, codes_a, sa, a_planes, t, c0, c1, part);
+                    walk_channels(cfg, kern, pl, codes_a, sa, a_planes, t, c0, c1, part);
                 });
             }
         });
@@ -892,14 +1324,30 @@ impl SimXbar {
     }
 }
 
+/// Cache-block size of the conversion-window (sample) axis of the walk:
+/// strips consume the shared activation planes block by block, so a
+/// block's planes stay cache-resident while *every* strip of the channel
+/// range reads them, and one strip's packed weight planes stay hot across
+/// all samples of a block. 32 windows × a typical per-window plane
+/// footprint of a few hundred bytes keeps a block comfortably inside L1/L2
+/// next to one strip's weight planes.
+const TI_BLOCK: usize = 32;
+
 /// The programmed-tile walk over channels `[c0, c1)`: every live strip of
 /// every channel in the range, per-strip state read straight from its
-/// [`StripStore`]. Per-(sample, channel) contributions are added in the
-/// same kernel-tap order as the re-pack-per-call loop, so the result is
-/// bit-identical to it.
+/// [`StripStore`]. The walk is **cache-blocked and double-buffered**: the
+/// sample axis is tiled by [`TI_BLOCK`], the next strip's programmed words
+/// are staged toward cache while the current strip accumulates, and the
+/// packed branch dispatches to the resolved SIMD kernel (`kern`). For any
+/// fixed (sample, channel) output cell, contributions still arrive in the
+/// exact per-strip order of the re-pack-per-call loop and every kernel
+/// feeds the ADC identical integer currents, so the result is
+/// bit-identical to the reference path for every blocking, kernel, and
+/// thread count.
 #[allow(clippy::too_many_arguments)]
 fn walk_channels(
     cfg: &SimXbarConfig,
+    kern: SimdKernel,
     pl: &ProgrammedLayer,
     codes_a: &[i32],
     sa: &[f32],
@@ -918,114 +1366,116 @@ fn walk_channels(
     let stride_ti = phases * 2 * total_words;
     let tap_stride = t * stride_ti;
     let segs = &pl.segs;
+    let mut cur = [0u64; MAX_STRIP_CURRENTS];
 
-    for ch in c0..c1 {
-        let (s0, slen) = pl.chan[ch];
-        for s in &pl.strips[s0 as usize..s0 as usize + slen as usize] {
-            let g = s.g as usize;
-            let sw = s.sw;
-            match &s.store {
-                StripStore::Exact { codes } => {
-                    for ti in 0..t {
-                        let arow = &codes_a[ti * cols + g * d..ti * cols + (g + 1) * d];
-                        let mut acc = 0i64;
-                        for (&a, &cwv) in arow.iter().zip(codes.iter()) {
-                            acc += a as i64 * cwv as i64;
-                        }
-                        out[ti * cw + (ch - c0)] +=
-                            (acc as f64 * sa[ti] as f64 * sw as f64) as f32;
-                    }
+    let mut t0 = 0usize;
+    while t0 < t {
+        let t1 = (t0 + TI_BLOCK).min(t);
+        for ch in c0..c1 {
+            let (s0, slen) = pl.chan[ch];
+            let strips = &pl.strips[s0 as usize..s0 as usize + slen as usize];
+            for (si, s) in strips.iter().enumerate() {
+                // Double-buffer staging: queue the next strip's programmed
+                // words into cache while this strip's accumulation retires.
+                if let Some(next) = strips.get(si + 1) {
+                    stage_strip(next);
                 }
-                StripStore::Packed { planes: w_planes, ncells } => {
-                    let ncells = *ncells;
-                    let ap = &a_planes[g * tap_stride..(g + 1) * tap_stride];
-                    for ti in 0..t {
-                        let tb = ti * stride_ti;
-                        let mut total = 0.0f64;
-                        for &(_, len, woff) in segs {
-                            let nw = words_of(len);
-                            for p in 0..phases {
-                                let app = &ap[tb + (p * 2) * total_words + woff..][..nw];
-                                let apn = &ap[tb + (p * 2 + 1) * total_words + woff..][..nw];
-                                for j in 0..ncells {
-                                    // four currents: input polarity × column
-                                    let (mut ipp, mut ipn) = (0u64, 0u64);
-                                    let (mut inp, mut inn) = (0u64, 0u64);
-                                    for b in 0..cell_bits {
-                                        let row = (j * cell_bits + b) * 2;
-                                        let gp = &w_planes[row * total_words + woff..][..nw];
-                                        let gm = &w_planes[(row + 1) * total_words + woff..][..nw];
-                                        let (mut cpp, mut cpn) = (0u32, 0u32);
-                                        let (mut cnp, mut cnn) = (0u32, 0u32);
-                                        for w in 0..nw {
-                                            cpp += (app[w] & gp[w]).count_ones();
-                                            cpn += (app[w] & gm[w]).count_ones();
-                                            cnp += (apn[w] & gp[w]).count_ones();
-                                            cnn += (apn[w] & gm[w]).count_ones();
-                                        }
-                                        ipp += (cpp as u64) << b;
-                                        ipn += (cpn as u64) << b;
-                                        inp += (cnp as u64) << b;
-                                        inn += (cnn as u64) << b;
+                let g = s.g as usize;
+                let sw = s.sw;
+                match &s.store {
+                    StripStore::Exact { codes } => {
+                        for ti in t0..t1 {
+                            let arow = &codes_a[ti * cols + g * d..ti * cols + (g + 1) * d];
+                            let mut acc = 0i64;
+                            for (&a, &cwv) in arow.iter().zip(codes.iter()) {
+                                acc += a as i64 * cwv as i64;
+                            }
+                            out[ti * cw + (ch - c0)] +=
+                                (acc as f64 * sa[ti] as f64 * sw as f64) as f32;
+                        }
+                    }
+                    StripStore::Packed { planes: w_planes, ncells } => {
+                        let ncells = *ncells;
+                        let nrows = ncells * cell_bits * 2;
+                        let rp = packed_rows_pad(ncells, cfg.cell_bits);
+                        let ap = &a_planes[g * tap_stride..(g + 1) * tap_stride];
+                        for ti in t0..t1 {
+                            let tb = ti * stride_ti;
+                            let mut total = 0.0f64;
+                            for &(_, len, woff) in segs {
+                                let nw = words_of(len);
+                                // this segment's interleaved weight words
+                                let seg_planes = &w_planes[woff * rp..(woff + nw) * rp];
+                                for p in 0..phases {
+                                    let app = &ap[tb + (p * 2) * total_words + woff..][..nw];
+                                    let apn =
+                                        &ap[tb + (p * 2 + 1) * total_words + woff..][..nw];
+                                    packed_currents(
+                                        kern, seg_planes, rp, nrows, cell_bits, ncells, app,
+                                        apn, &mut cur,
+                                    );
+                                    for (j, c4) in cur[..ncells * 4].chunks_exact(4).enumerate()
+                                    {
+                                        let w2 = 2.0f64
+                                            .powi(p as i32 + (j as i32) * cfg.cell_bits as i32);
+                                        total += w2
+                                            * ((adc_transfer(cfg, c4[0] as f64, len)
+                                                + adc_transfer(cfg, c4[3] as f64, len))
+                                                - (adc_transfer(cfg, c4[1] as f64, len)
+                                                    + adc_transfer(cfg, c4[2] as f64, len)));
                                     }
-                                    let w2 =
-                                        2.0f64.powi(p as i32 + (j as i32) * cfg.cell_bits as i32);
-                                    total += w2
-                                        * ((adc_transfer(cfg, ipp as f64, len)
-                                            + adc_transfer(cfg, inn as f64, len))
-                                            - (adc_transfer(cfg, ipn as f64, len)
-                                                + adc_transfer(cfg, inp as f64, len)));
                                 }
                             }
+                            out[ti * cw + (ch - c0)] +=
+                                (total * sa[ti] as f64 * sw as f64) as f32;
                         }
-                        out[ti * cw + (ch - c0)] +=
-                            (total * sa[ti] as f64 * sw as f64) as f32;
                     }
-                }
-                StripStore::Analog { gpos, gneg, ncells } => {
-                    let ncells = *ncells;
-                    for ti in 0..t {
-                        let arow = &codes_a[ti * cols + g * d..ti * cols + (g + 1) * d];
-                        let mut total = 0.0f64;
-                        for &(seg_start, len, _) in segs {
-                            let seg_end = seg_start + len;
-                            for p in 0..phases as u32 {
-                                let pbit = 1i32 << p;
-                                for j in 0..ncells {
-                                    // four currents: input polarity × column
-                                    let (mut ipp, mut ipn) = (0.0f64, 0.0f64);
-                                    let (mut inp, mut inn) = (0.0f64, 0.0f64);
-                                    for dd in seg_start..seg_end {
-                                        let a = arow[dd];
-                                        if a == 0 || (a.abs() & pbit) == 0 {
-                                            continue;
+                    StripStore::Analog { gpos, gneg, ncells } => {
+                        let ncells = *ncells;
+                        for ti in t0..t1 {
+                            let arow = &codes_a[ti * cols + g * d..ti * cols + (g + 1) * d];
+                            let mut total = 0.0f64;
+                            for &(seg_start, len, _) in segs {
+                                let seg_end = seg_start + len;
+                                for p in 0..phases as u32 {
+                                    let pbit = 1i32 << p;
+                                    for j in 0..ncells {
+                                        // four currents: input polarity × column
+                                        let (mut ipp, mut ipn) = (0.0f64, 0.0f64);
+                                        let (mut inp, mut inn) = (0.0f64, 0.0f64);
+                                        for dd in seg_start..seg_end {
+                                            let a = arow[dd];
+                                            if a == 0 || (a.abs() & pbit) == 0 {
+                                                continue;
+                                            }
+                                            let gp = gpos[j * d + dd];
+                                            let gm = gneg[j * d + dd];
+                                            if a > 0 {
+                                                ipp += gp;
+                                                ipn += gm;
+                                            } else {
+                                                inp += gp;
+                                                inn += gm;
+                                            }
                                         }
-                                        let gp = gpos[j * d + dd];
-                                        let gm = gneg[j * d + dd];
-                                        if a > 0 {
-                                            ipp += gp;
-                                            ipn += gm;
-                                        } else {
-                                            inp += gp;
-                                            inn += gm;
-                                        }
+                                        let w2 = 2.0f64
+                                            .powi(p as i32 + (j as i32) * cfg.cell_bits as i32);
+                                        total += w2
+                                            * ((adc_transfer(cfg, ipp, len)
+                                                + adc_transfer(cfg, inn, len))
+                                                - (adc_transfer(cfg, ipn, len)
+                                                    + adc_transfer(cfg, inp, len)));
                                     }
-                                    let w2 = 2.0f64
-                                        .powi(p as i32 + (j as i32) * cfg.cell_bits as i32);
-                                    total += w2
-                                        * ((adc_transfer(cfg, ipp, len)
-                                            + adc_transfer(cfg, inn, len))
-                                            - (adc_transfer(cfg, ipn, len)
-                                                + adc_transfer(cfg, inp, len)));
                                 }
                             }
+                            out[ti * cw + (ch - c0)] +=
+                                (total * sa[ti] as f64 * sw as f64) as f32;
                         }
-                        out[ti * cw + (ch - c0)] +=
-                            (total * sa[ti] as f64 * sw as f64) as f32;
                     }
                 }
             }
         }
+        t0 = t1;
     }
 }
 
@@ -1220,6 +1670,38 @@ mod tests {
             .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
             .unwrap();
         assert_eq!(packed, scalar);
+    }
+
+    #[test]
+    fn sim_simd_walk_matches_forced_scalar_kernel_exactly() {
+        // Whatever kernel this host resolves (AVX2 / NEON / scalar), the
+        // widened walk must feed the ADC the same integer currents as the
+        // forced-scalar kernel and the scalar lane scan; d=19 over rows=4
+        // exercises a remainder segment. The exhaustive grid lives in
+        // tests/properties.rs.
+        let m = layer_model(3, 19, 5);
+        let layer = m.layer(0).clone();
+        let (theta, sp) = quantized_layer(&m, 31, 8);
+        let mut rng = Rng::seed_from_u64(41);
+        let t = 3;
+        let patches: Vec<f32> =
+            (0..t * layer.k * layer.k * layer.d).map(|_| rng.normal()).collect();
+        let base = SimXbarConfig { rows: 4, ..SimXbarConfig::default() }.with_adc(4);
+        let auto = SimXbar::new(base.with_simd(SimdMode::Force));
+        let widened = auto.conv_bitserial(&m, &layer, &theta, &patches, t, &sp).unwrap();
+        let portable = SimXbar::new(base.with_simd(SimdMode::Off))
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        let lanes = SimXbar::new(SimXbarConfig { scalar_lanes: true, ..base })
+            .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+            .unwrap();
+        assert_eq!(widened, portable, "kernel {} diverged", auto.simd_kernel_name());
+        assert_eq!(widened, lanes);
+        assert!(["avx2", "neon", "scalar"].contains(&auto.simd_kernel_name()));
+        assert_eq!(
+            SimXbar::new(base.with_simd(SimdMode::Off)).simd_kernel_name(),
+            "scalar"
+        );
     }
 
     #[test]

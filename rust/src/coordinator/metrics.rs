@@ -7,13 +7,32 @@
 //! Percentile queries return the *upper edge* of the bucket holding the
 //! requested rank, so they over- rather than under-report tail latency and
 //! never interpolate between observations that were not taken.
+//!
+//! Two edges need care. The top bucket (63) has no finite power-of-two
+//! upper edge; a percentile landing there is **clamped** to
+//! [`LATENCY_SATURATION_US`] (2⁶³) instead of reporting `u64::MAX` µs as
+//! if it were a measurement, and [`Snapshot::latency_saturated`] flags the
+//! clamp so the stats line can label the value `>=` rather than present a
+//! five-century latency as observed. At the bottom, bucket 0 conflates 0
+//! and 1 µs — sub-µs observations surface as 1 µs, which
+//! [`fmt_latency_us`] renders as `<=1` (an upper bound, like every other
+//! bucket edge, not a claim the request took a full microsecond).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Number of log2 latency buckets. 64 covers the entire `u64` microsecond
-/// range (bucket 63 is `[2^63, u64::MAX]`), so no observation saturates.
+/// range (bucket 63 is `[2^63, u64::MAX]`), so every observation is
+/// recorded — but a percentile landing in bucket 63 has no finite bucket
+/// edge to report and is clamped to [`LATENCY_SATURATION_US`].
 const HIST_BUCKETS: usize = 64;
+
+/// Clamp value reported for percentiles that land in the open-ended top
+/// bucket (`[2^63, u64::MAX]` µs). A reported latency equal to this value
+/// means "at least 2⁶³ µs" — a saturated measurement, not an observation;
+/// [`Snapshot::latency_saturated`] is set whenever the histogram holds any
+/// such sample, and [`fmt_latency_us`] labels the value `>=2^63`.
+pub const LATENCY_SATURATION_US: u64 = 1u64 << 63;
 
 /// Bucket index of a latency: `floor(log2(us))`, with 0 mapping onto
 /// bucket 0 alongside 1.
@@ -25,12 +44,31 @@ fn bucket(latency_us: u64) -> usize {
     }
 }
 
-/// Largest latency a bucket can hold (the value a percentile query reports).
+/// The value a percentile query reports for a bucket: its largest member,
+/// except the open-ended top bucket, which clamps to
+/// [`LATENCY_SATURATION_US`] so a saturated tail reads "at least 2⁶³" and
+/// never `u64::MAX` µs masquerading as a measurement.
 fn bucket_upper_edge(k: usize) -> u64 {
     if k >= 63 {
-        u64::MAX
+        LATENCY_SATURATION_US
     } else {
         (1u64 << (k + 1)) - 1
+    }
+}
+
+/// Render a histogram-derived latency for the stats line. Bucket edges are
+/// upper bounds, and two of them need labels to read honestly: bucket 0's
+/// edge conflates sub-µs requests with 1 µs ones (`<=1`), and the top
+/// bucket's clamped edge is a floor, not a measurement (`>=2^63`).
+pub fn fmt_latency_us(us: u64) -> String {
+    if us >= LATENCY_SATURATION_US {
+        ">=2^63".to_string()
+    } else if us == 1 {
+        // Bucket 0's upper edge: the request took at most 1 µs, possibly 0.
+        "<=1".to_string()
+    } else {
+        // 0 only appears when nothing was observed; report it bare.
+        us.to_string()
     }
 }
 
@@ -114,6 +152,11 @@ pub struct Snapshot {
     pub p50_latency_us: u64,
     pub p95_latency_us: u64,
     pub p99_latency_us: u64,
+    /// True when the histogram holds at least one observation in the
+    /// open-ended top bucket (`>= 2^63` µs). Any percentile equal to
+    /// [`LATENCY_SATURATION_US`] is then a clamped floor, not a
+    /// measurement.
+    pub latency_saturated: bool,
     /// Workers whose deploy-time programming phase completed (recorded
     /// before the engine's readiness handshake concludes). Counts every
     /// worker, including backends with nothing to program — those report
@@ -199,6 +242,7 @@ impl Metrics {
             p50_latency_us: quantile_from(&counts, 0.50, observed),
             p95_latency_us: quantile_from(&counts, 0.95, observed),
             p99_latency_us: quantile_from(&counts, 0.99, observed),
+            latency_saturated: counts[HIST_BUCKETS - 1] > 0,
             programmed_workers: workers,
             program_ns_mean: if workers == 0 {
                 0.0
@@ -259,13 +303,21 @@ mod tests {
         assert_eq!(bucket(8), 3);
         assert_eq!(bucket(1023), 9);
         assert_eq!(bucket(1024), 10);
+        // the 62/63 boundary: bucket 62 covers [2^62, 2^63), 63 the rest
+        assert_eq!(bucket(1u64 << 62), 62);
+        assert_eq!(bucket((1u64 << 63) - 1), 62);
+        assert_eq!(bucket(1u64 << 63), 63);
         assert_eq!(bucket(u64::MAX), 63);
-        // upper edges are the largest member of each bucket
+        // upper edges are the largest member of each bucket — except the
+        // open-ended top bucket, which clamps to the saturation floor
+        // instead of reporting u64::MAX as if it were observed.
         assert_eq!(bucket_upper_edge(0), 1);
         assert_eq!(bucket_upper_edge(1), 3);
         assert_eq!(bucket_upper_edge(9), 1023);
-        assert_eq!(bucket_upper_edge(63), u64::MAX);
-        // every bucket's upper edge maps back into that bucket
+        assert_eq!(bucket_upper_edge(62), (1u64 << 63) - 1);
+        assert_eq!(bucket_upper_edge(63), LATENCY_SATURATION_US);
+        // every bucket's upper edge maps back into that bucket, so a
+        // reported percentile always lands in the bucket it came from
         for k in 0..HIST_BUCKETS {
             assert_eq!(bucket(bucket_upper_edge(k)), k, "edge of bucket {k}");
         }
@@ -319,10 +371,31 @@ mod tests {
         assert_eq!(s.observed_requests, 0);
         assert_eq!(s.p50_latency_us, 0);
         assert_eq!(s.p99_latency_us, 0);
-        // The top bucket accepts the largest representable latency.
+        assert!(!s.latency_saturated);
+        // The top bucket accepts the largest representable latency, but the
+        // reported percentile clamps to the saturation floor (and flags it)
+        // rather than claiming a u64::MAX-µs request was measured.
         m.observe_latency(u64::MAX);
         let s = m.snapshot();
         assert_eq!(s.observed_requests, 1);
-        assert_eq!(s.p50_latency_us, u64::MAX);
+        assert_eq!(s.p50_latency_us, LATENCY_SATURATION_US);
+        assert!(s.latency_saturated);
+        // A single sub-µs request: bucket 0's edge, never a bare 0.
+        let m = Metrics::default();
+        m.observe_latency(0);
+        let s = m.snapshot();
+        assert_eq!(s.p50_latency_us, 1);
+        assert!(!s.latency_saturated);
+    }
+
+    #[test]
+    fn latency_formatting_labels_the_clamped_edges() {
+        assert_eq!(fmt_latency_us(0), "0");
+        assert_eq!(fmt_latency_us(1), "<=1");
+        assert_eq!(fmt_latency_us(2), "2");
+        assert_eq!(fmt_latency_us(127), "127");
+        assert_eq!(fmt_latency_us((1u64 << 63) - 1), &((1u64 << 63) - 1).to_string());
+        assert_eq!(fmt_latency_us(LATENCY_SATURATION_US), ">=2^63");
+        assert_eq!(fmt_latency_us(u64::MAX), ">=2^63");
     }
 }

@@ -14,7 +14,7 @@ pub use engine::{
     ShardedEngine, StartupError, WaitError,
 };
 pub use eval::{evaluate, evaluate_batches, Accuracy};
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{fmt_latency_us, Metrics, Snapshot, LATENCY_SATURATION_US};
 pub use pipeline::{PipelineReport, ThresholdMode};
 pub use plan::{
     CacheStats, ChosenThreshold, CompressionPlan, EvalOpts, Executor, ModelState,

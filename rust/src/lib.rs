@@ -127,7 +127,7 @@ pub mod tensor;
 pub mod util;
 pub mod xbar;
 
-pub use backend::{ExecBackend, SimXbar, SimXbarConfig};
+pub use backend::{ExecBackend, SimXbar, SimXbarConfig, SimdMode};
 pub use config::RunConfig;
 pub use coordinator::{CompressionPlan, EvalOpts, Executor, PipelineReport, ThresholdMode};
 pub use model::{Manifest, ModelInfo};

@@ -501,7 +501,10 @@ fn serve_local(
     );
     println!(
         "request latency: p50={}us p95={}us p99={}us ({} observed)",
-        m.p50_latency_us, m.p95_latency_us, m.p99_latency_us, m.observed_requests
+        reram_mpq::coordinator::fmt_latency_us(m.p50_latency_us),
+        reram_mpq::coordinator::fmt_latency_us(m.p95_latency_us),
+        reram_mpq::coordinator::fmt_latency_us(m.p99_latency_us),
+        m.observed_requests
     );
     Ok(())
 }

@@ -234,6 +234,7 @@ fn serve_conn(
 /// execution, deploy-time programming cost, latency percentiles — one
 /// `key=value` line per layer.
 fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> String {
+    use crate::coordinator::metrics::fmt_latency_us;
     let m = engine.metrics.snapshot();
     let b = &batcher.stats;
     format!(
@@ -263,8 +264,8 @@ fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> 
         engine.metrics.scenario_desc(),
         m.mean_latency_us,
         m.max_latency_us,
-        m.p50_latency_us,
-        m.p95_latency_us,
-        m.p99_latency_us,
+        fmt_latency_us(m.p50_latency_us),
+        fmt_latency_us(m.p95_latency_us),
+        fmt_latency_us(m.p99_latency_us),
     )
 }

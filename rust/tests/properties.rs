@@ -4,7 +4,7 @@
 
 use std::collections::HashMap;
 
-use reram_mpq::backend::{ProgrammedModel, SimXbar, SimXbarConfig, StripPrecision};
+use reram_mpq::backend::{ProgrammedModel, SimXbar, SimXbarConfig, SimdMode, StripPrecision};
 use reram_mpq::clustering::{align_to_capacity, cluster, cluster_at_cr};
 use reram_mpq::config::QuantConfig;
 use reram_mpq::faults::{self, Placement, Scenario, ScenarioSpec};
@@ -444,6 +444,95 @@ fn prop_sim_programmed_path_is_bit_identical_to_repack_per_call() {
                      (adc={} noise={} scalar={} threads={threads})",
                     base.adc_bits, base.noise_sigma, base.scalar_lanes
                 );
+            }
+        }
+    }
+}
+
+/// Single-conv-layer model with an explicit geometry, for cases where the
+/// lane/word/channel counts themselves are the property under test.
+fn sim_geom_model(k: usize, d: usize, n: usize) -> ModelInfo {
+    let size = k * k * d * n;
+    ModelInfo::new(ModelEntry {
+        name: "prop-simd".into(),
+        num_params: size,
+        num_conv_params: size,
+        fp32_test_acc: 1.0,
+        params: BinEntry { file: "x".into(), shape: vec![size], dtype: "f32".into() },
+        layers: vec![LayerEntry {
+            name: "s1.b0.conv1".into(),
+            shape: vec![k, k, d, n],
+            kind: "conv".into(),
+            theta_offset: 0,
+            convflat_offset: Some(0),
+        }],
+        executables: HashMap::new(),
+        batch: BatchSizes { eval: 1, serve: 1, calib: 1 },
+    })
+}
+
+#[test]
+fn prop_sim_simd_walk_is_bit_identical_across_kernels_modes_and_threads() {
+    // The SIMD-widened programmed walk (runtime-detected AVX2/NEON) must
+    // reproduce both the scalar packed-u64 walk (SimdMode::Off) and the
+    // per-lane scalar scan (scalar_lanes) bit for bit — the kernels all
+    // produce exact integer column currents, and the ADC + f64 merge runs
+    // in one shared order. Exercised across geometries with odd channel
+    // counts and non-multiple-of-64 lane counts (remainder words), the
+    // exact / packed-ADC / analog-noise execution modes, an active fault
+    // scenario, every tile-shard count, and with vector dispatch forced
+    // off (the portable fallback a detection miss would select).
+    let mut rng = Rng::seed_from_u64(89);
+    // (k, d, n): lanes = k²·d. 171 and 126 leave partial remainder words,
+    // 67 spans word 0 plus a 3-lane remainder; n = 5, 9, 33 keep the
+    // channel counts odd so shard boundaries land mid-strip-table.
+    let geoms = [(3usize, 19usize, 5usize), (1, 67, 9), (3, 14, 33)];
+    for (case, &(k, d, n)) in geoms.iter().enumerate() {
+        let m = sim_geom_model(k, d, n);
+        let layer = m.layer(0).clone();
+        let (theta, sp, patches, t) = rand_sim_case(&mut rng, &m, true);
+        let scenario = Scenario::new(
+            ScenarioSpec::default().with_stuck(0.2, 17).with_ir_drop(0.3, 23),
+        )
+        .with_placement(Placement::SensitivityAware);
+        assert!(scenario.is_active());
+        let corners = [
+            // exact: ideal converters, integer fast path
+            SimXbarConfig::default(),
+            // packed: ADC phase loop over u64 bit-planes, multi-segment rows
+            SimXbarConfig { rows: 16, ..SimXbarConfig::default() }.with_adc(4),
+            // analog: seeded conductance noise
+            SimXbarConfig::default().with_adc(4).with_noise(0.05, 7),
+        ];
+        for base in corners {
+            for faulted in [false, true] {
+                for threads in [1usize, 2, 4] {
+                    let cfg = SimXbarConfig { threads, ..base };
+                    let run = |c: SimXbarConfig| {
+                        let sim = SimXbar::new(c);
+                        let sim = if faulted {
+                            sim.with_scenario(scenario.clone())
+                        } else {
+                            sim
+                        };
+                        sim.conv_bitserial(&m, &layer, &theta, &patches, t, &sp).unwrap()
+                    };
+                    let forced = run(cfg.with_simd(SimdMode::Force));
+                    let auto = run(cfg.with_simd(SimdMode::Auto));
+                    let off = run(cfg.with_simd(SimdMode::Off));
+                    let lanes = run(SimXbarConfig {
+                        scalar_lanes: true,
+                        ..cfg.with_simd(SimdMode::Off)
+                    });
+                    let ctx = format!(
+                        "case {case} (k={k} d={d} n={n}) adc={} noise={} \
+                         faulted={faulted} threads={threads}",
+                        base.adc_bits, base.noise_sigma
+                    );
+                    assert_eq!(forced, off, "{ctx}: forced SIMD vs scalar packed walk");
+                    assert_eq!(auto, off, "{ctx}: auto-detected vs scalar packed walk");
+                    assert_eq!(off, lanes, "{ctx}: packed walk vs scalar lane scan");
+                }
             }
         }
     }
