@@ -1,0 +1,103 @@
+//! Bench: the auto-tuner substrate — pure Pareto-frontier maintenance, the
+//! degenerate serial CR sweep, and the parallel driver fan-out, all on the
+//! hermetic in-memory fixture (no AOT artifacts):
+//!
+//!     cargo bench --bench tuner_frontier
+//!
+//! Emits `BENCH_tuner_frontier.json`; CI's `bench-smoke` runs this in quick
+//! mode and gates it against `benches/baseline.json`.
+
+use reram_mpq::coordinator::{CompressionPlan, EvalOpts, Executor, ModelState};
+use reram_mpq::tuner::{
+    self, Axes, Frontier, Objectives, SearchState, TuneConfig, TuneShared, TABLE3_CRS,
+};
+use reram_mpq::util::bench::Bench;
+use reram_mpq::util::rng::Rng;
+use reram_mpq::{fixture, RunConfig};
+
+fn main() {
+    let b = Bench::from_env();
+    let cfg = RunConfig::default();
+    let opts = EvalOpts::batches(2);
+
+    // 1. pure frontier maintenance: insert + prune over a seeded synthetic
+    // point cloud (no model evaluation at all).
+    let mut rng = Rng::seed_from_u64(9);
+    let cloud: Vec<(String, Objectives)> = (0..1024)
+        .map(|i| {
+            (
+                format!("p{i}"),
+                Objectives {
+                    top1: rng.uniform(),
+                    compression: rng.uniform(),
+                    storage_bytes: rng.below(1 << 20) as u64,
+                },
+            )
+        })
+        .collect();
+    let mut frontier_size = 0usize;
+    b.run("tuner frontier insert+prune (1024 synthetic points)", || {
+        let mut f = Frontier::default();
+        for (k, o) in &cloud {
+            f.insert(k, *o);
+        }
+        frontier_size = f.len();
+        f
+    });
+    assert!(frontier_size > 0);
+    b.annotate(
+        "tuner frontier insert+prune (1024 synthetic points)",
+        &[("frontier_size", frontier_size as f64)],
+    );
+
+    // 2. the degenerate Table 3 case: serial CR sweep on one shared plan
+    // (after the first iteration every stage is a cache hit — this times
+    // the sweep the `table3` experiment actually runs).
+    let fx = fixture::tiny(21);
+    let plan = CompressionPlan::from_state(
+        ModelState {
+            exec: Executor::Sim(Default::default()),
+            model: fx.model,
+            theta: fx.theta,
+            test: fx.test,
+            calib: fx.calib,
+        },
+        cfg.clone(),
+    );
+    b.run("tuner sweep_cr serial (fixture, Table 3 points)", || {
+        tuner::sweep_cr(&plan, TABLE3_CRS, opts).expect("sweep_cr")
+    });
+
+    // 3. the parallel driver: fresh state per iteration, 2 workers, each
+    // rooting its own plan + stage cache (programs + evaluates every
+    // candidate from scratch — the cold-start cost a real tune pays).
+    let shared = TuneShared::from_fixture(fixture::tiny(21), cfg);
+    let axes = Axes::cr_axis(TABLE3_CRS, 8, 4).expect("axes");
+    let tcfg = TuneConfig { workers: 2, opts, ..TuneConfig::default() };
+    let mut last = None;
+    b.run("tuner parallel run, 2 workers (fixture, cr axis)", || {
+        let mut st = SearchState::new(0, axes.fingerprint(0));
+        let out = tuner::run(&shared, &axes, &tcfg, &mut st).expect("tune");
+        last = Some(out);
+    });
+    let out = last.unwrap();
+    assert_eq!(out.evals, TABLE3_CRS.len());
+    assert!(!out.frontier.is_empty(), "tune must yield a non-empty frontier");
+    for a in out.frontier.points() {
+        for c in out.frontier.points() {
+            assert!(
+                !a.objectives.dominates(&c.objectives),
+                "frontier holds a dominated point"
+            );
+        }
+    }
+    b.annotate(
+        "tuner parallel run, 2 workers (fixture, cr axis)",
+        &[
+            ("frontier_size", out.frontier.len() as f64),
+            ("prefix_hits", out.cache.prefix_hits() as f64),
+        ],
+    );
+
+    b.emit_json("tuner_frontier").expect("bench json");
+}

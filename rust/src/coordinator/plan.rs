@@ -134,16 +134,91 @@ impl ChosenThreshold {
     }
 }
 
-/// How many stage computations actually ran (cache misses) — the memoization
-/// contract is observable, not just an implementation detail.
+/// Per-stage cache counters — the memoization contract is observable, not
+/// just an implementation detail. `*_runs` counts stage computations that
+/// actually ran (cache misses); `*_hits` counts lookups served from the
+/// shared cache. The auto-tuner ([`crate::tuner`]) sums these across its
+/// workers to report how much of the expensive sensitivity prefix was
+/// reused rather than recomputed.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CacheStats {
+    /// Sensitivity-stage computations (Hutchinson / magnitude proxy).
     pub sensitivity_runs: usize,
+    /// Threshold-stage computations (FIM search or fixed-CR constant).
     pub threshold_runs: usize,
+    /// Clustering-stage computations (± capacity alignment).
     pub clustering_runs: usize,
+    /// Quantization-stage computations.
     pub quantize_runs: usize,
+    /// Mapping-stage computations.
     pub mapping_runs: usize,
+    /// Evaluation-terminal computations.
     pub eval_runs: usize,
+    /// Sensitivity-stage cache hits.
+    pub sensitivity_hits: usize,
+    /// Threshold-stage cache hits.
+    pub threshold_hits: usize,
+    /// Clustering-stage cache hits.
+    pub clustering_hits: usize,
+    /// Quantization-stage cache hits.
+    pub quantize_hits: usize,
+    /// Mapping-stage cache hits.
+    pub mapping_hits: usize,
+    /// Evaluation-terminal cache hits.
+    pub eval_hits: usize,
+}
+
+impl CacheStats {
+    /// Hits on the expensive shared prefix (sensitivity + threshold +
+    /// clustering) — the stages the staged-plan design exists to amortize
+    /// across operating points.
+    pub fn prefix_hits(&self) -> usize {
+        self.sensitivity_hits + self.threshold_hits + self.clustering_hits
+    }
+
+    /// Total cache hits across every stage.
+    pub fn total_hits(&self) -> usize {
+        self.prefix_hits() + self.quantize_hits + self.mapping_hits + self.eval_hits
+    }
+
+    /// Total stage computations (cache misses) across every stage.
+    pub fn total_runs(&self) -> usize {
+        self.sensitivity_runs
+            + self.threshold_runs
+            + self.clustering_runs
+            + self.quantize_runs
+            + self.mapping_runs
+            + self.eval_runs
+    }
+
+    /// Fold another counter set into this one (the tuner aggregates the
+    /// per-worker plan caches this way).
+    pub fn absorb(&mut self, other: &CacheStats) {
+        self.sensitivity_runs += other.sensitivity_runs;
+        self.threshold_runs += other.threshold_runs;
+        self.clustering_runs += other.clustering_runs;
+        self.quantize_runs += other.quantize_runs;
+        self.mapping_runs += other.mapping_runs;
+        self.eval_runs += other.eval_runs;
+        self.sensitivity_hits += other.sensitivity_hits;
+        self.threshold_hits += other.threshold_hits;
+        self.clustering_hits += other.clustering_hits;
+        self.quantize_hits += other.quantize_hits;
+        self.mapping_hits += other.mapping_hits;
+        self.eval_hits += other.eval_hits;
+    }
+
+    /// JSON summary (`runs` / `hits` totals plus `prefix_hits` and the
+    /// per-stage sensitivity counters the tune smoke asserts on).
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("runs", Value::Num(self.total_runs() as f64)),
+            ("hits", Value::Num(self.total_hits() as f64)),
+            ("prefix_hits", Value::Num(self.prefix_hits() as f64)),
+            ("sensitivity_runs", Value::Num(self.sensitivity_runs as f64)),
+            ("sensitivity_hits", Value::Num(self.sensitivity_hits as f64)),
+        ])
+    }
 }
 
 /// Memoized stage artifacts, keyed by the exact stage configuration that
@@ -417,8 +492,9 @@ impl<'a> CompressionPlan<'a> {
         &self.cfg
     }
 
-    /// Cache-miss counters for the shared stage cache (memoization is part
-    /// of the API contract — see the builder tests).
+    /// Per-stage run (miss) and hit counters for the shared stage cache
+    /// (memoization is part of the API contract — see the builder tests;
+    /// the tuner reports [`CacheStats::prefix_hits`] across its workers).
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
     }
@@ -539,6 +615,8 @@ impl<'a> CompressionPlan<'a> {
         })?;
         if fresh {
             self.cache.bump(|s| s.sensitivity_runs += 1);
+        } else {
+            self.cache.bump(|s| s.sensitivity_hits += 1);
         }
         Ok(v)
     }
@@ -591,6 +669,8 @@ impl<'a> CompressionPlan<'a> {
         })?;
         if fresh {
             self.cache.bump(|s| s.threshold_runs += 1);
+        } else {
+            self.cache.bump(|s| s.threshold_hits += 1);
         }
         Ok(v)
     }
@@ -629,6 +709,8 @@ impl<'a> CompressionPlan<'a> {
         })?;
         if fresh {
             self.cache.bump(|s| s.clustering_runs += 1);
+        } else {
+            self.cache.bump(|s| s.clustering_hits += 1);
         }
         Ok(v)
     }
@@ -660,6 +742,8 @@ impl<'a> CompressionPlan<'a> {
         })?;
         if fresh {
             self.cache.bump(|s| s.quantize_runs += 1);
+        } else {
+            self.cache.bump(|s| s.quantize_hits += 1);
         }
         Ok(v)
     }
@@ -681,6 +765,8 @@ impl<'a> CompressionPlan<'a> {
         })?;
         if fresh {
             self.cache.bump(|s| s.mapping_runs += 1);
+        } else {
+            self.cache.bump(|s| s.mapping_hits += 1);
         }
         Ok(v)
     }
@@ -803,6 +889,8 @@ impl<'a> CompressionPlan<'a> {
         })?;
         if fresh {
             self.cache.bump(|s| s.eval_runs += 1);
+        } else {
+            self.cache.bump(|s| s.eval_hits += 1);
         }
         Ok((*r).clone())
     }
@@ -906,6 +994,30 @@ mod tests {
         assert_eq!(s.sensitivity_runs, 2);
         assert_eq!(s.eval_runs, 1);
         assert_eq!(s.mapping_runs, 0);
+    }
+
+    #[test]
+    fn cache_stats_hits_totals_and_absorb() {
+        let mut a = CacheStats {
+            sensitivity_runs: 1,
+            sensitivity_hits: 3,
+            threshold_hits: 2,
+            clustering_hits: 1,
+            quantize_hits: 5,
+            eval_runs: 4,
+            ..Default::default()
+        };
+        assert_eq!(a.prefix_hits(), 6);
+        assert_eq!(a.total_hits(), 11);
+        assert_eq!(a.total_runs(), 5);
+        let b = CacheStats { sensitivity_hits: 1, mapping_runs: 2, ..Default::default() };
+        a.absorb(&b);
+        assert_eq!(a.sensitivity_hits, 4);
+        assert_eq!(a.mapping_runs, 2);
+        assert_eq!(a.prefix_hits(), 7);
+        let v = a.to_value();
+        assert_eq!(v.get("prefix_hits").unwrap().num().unwrap(), 7.0);
+        assert_eq!(v.get("runs").unwrap().num().unwrap(), 7.0);
     }
 
     #[test]

@@ -5,7 +5,9 @@ use crate::model::Manifest;
 use crate::tensor::Tensor;
 use crate::Result;
 
-/// Test split: images `[N,32,32,3]` + integer labels.
+/// Test split: images `[N,32,32,3]` + integer labels. `Clone` so the
+/// tuner's worker threads can each root a plan on their own copy.
+#[derive(Clone)]
 pub struct TestSet {
     pub x: Tensor,
     pub y: Vec<usize>,
@@ -44,7 +46,9 @@ impl TestSet {
 }
 
 /// Calibration split: images + one-hot labels, sliced into fixed-size
-/// batches matching the HVP/GSQ graph batch dimension.
+/// batches matching the HVP/GSQ graph batch dimension. `Clone` so the
+/// tuner's worker threads can each root a plan on their own copy.
+#[derive(Clone)]
 pub struct CalibSet {
     pub x: Tensor,
     pub y1h: Tensor,

@@ -5,6 +5,11 @@
 //! so every table/figure drawing on the same model shares the computed
 //! stage prefix (sensitivity, thresholds, clusterings) through the plan's
 //! stage cache instead of recomputing it per table.
+//!
+//! The CR sweeps (Table 3, Figure 8) are thin wrappers over the auto-tuner's
+//! degenerate single-axis case ([`crate::tuner::sweep_cr`]); the sweep
+//! points themselves ([`TABLE3_CRS`]) are defined once in [`crate::tuner`]
+//! and shared with the `table3_cr_sweep` bench and the `tune` CLI.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -18,6 +23,7 @@ use crate::faults::{Placement, ScenarioSpec};
 use crate::model::Manifest;
 use crate::report;
 use crate::runtime::Runtime;
+use crate::tuner;
 use crate::util::json::{obj, Value};
 use crate::xbar::{MappingStrategy, XbarConfig};
 use crate::{Result, RunConfig};
@@ -30,8 +36,11 @@ pub type ExpOpts = EvalOpts;
 /// Tables and figures over the same model reuse its loaded state and stage
 /// cache.
 pub struct Lab<'a> {
+    /// Execution backend every plan in this lab roots on.
     pub exec: Executor<'a>,
+    /// Artifact manifest models/datasets are loaded from.
     pub manifest: &'a Manifest,
+    /// Stage configuration shared by every plan in this lab.
     pub cfg: RunConfig,
     engine: EngineConfig,
     plans: RefCell<HashMap<String, CompressionPlan<'a>>>,
@@ -89,10 +98,15 @@ impl<'a> Lab<'a> {
 
 /// Table 2: HAP vs OURS on the ResNet20 backbone at 74% CR.
 pub struct Table2 {
+    /// The HAP structured-pruning baseline row.
     pub hap: PipelineReport,
+    /// The paper's mixed-precision method at the same CR.
     pub ours: PipelineReport,
 }
 
+/// Regenerate Table 2: both methods at 74% CR over the same sensitivity
+/// scores (HAP enters as an explicit bitmap, OURS through the threshold /
+/// clustering stages).
 pub fn table2(lab: &Lab, opts: ExpOpts) -> Result<Table2> {
     let cr = 0.74;
     let base = lab.plan("resnet20")?;
@@ -118,6 +132,7 @@ pub fn table2(lab: &Lab, opts: ExpOpts) -> Result<Table2> {
     Ok(Table2 { hap, ours })
 }
 
+/// Render Table 2 as the paper-style fixed-width text table.
 pub fn render_table2(t: &Table2) -> String {
     let mut out = String::new();
     out.push_str("Table 2: Comparison of ResNet20 between HAP and our method\n");
@@ -131,29 +146,24 @@ pub fn render_table2(t: &Table2) -> String {
     out
 }
 
+/// Table 2 as a JSON value (`--json` output shape).
 pub fn table2_value(t: &Table2) -> Value {
     obj(vec![("hap", t.hap.to_value()), ("ours", t.ours.to_value())])
 }
 
 /// Table 3: CR sweep on the ResNet18 stand-in with energy breakdown.
+///
+/// A thin wrapper over the tuner's degenerate single-axis case
+/// ([`tuner::sweep_cr`]): each CR runs the full threshold → cluster →
+/// align → packed-map → evaluate chain against the lab's shared stage
+/// cache, exactly as a `cr`-only `tune` run would.
 pub fn table3(lab: &Lab, opts: ExpOpts, crs: &[f64]) -> Result<Vec<PipelineReport>> {
-    let base = lab.plan("resnet8")?;
-    let mut rows = Vec::new();
-    for &cr in crs {
-        let r = base
-            .clone()
-            .threshold(ThresholdMode::FixedCr(cr))
-            .cluster()
-            .align_to_capacity()
-            .map(MappingStrategy::Packed)
-            .evaluate(opts)?;
-        rows.push(r);
-    }
-    Ok(rows)
+    tuner::sweep_cr(&lab.plan("resnet8")?, crs, opts)
 }
 
-pub const TABLE3_CRS: &[f64] = &[0.0, 0.1, 0.5, 0.7, 0.9, 1.0];
+pub use crate::tuner::TABLE3_CRS;
 
+/// Render Table 3 as the paper-style fixed-width text table.
 pub fn render_table3(rows: &[PipelineReport]) -> String {
     let mut out = String::new();
     out.push_str("Table 3: Impact of Compression Ratio on Accuracy and Energy (resnet8 = ResNet18 stand-in)\n");
@@ -166,18 +176,25 @@ pub fn render_table3(rows: &[PipelineReport]) -> String {
     out
 }
 
+/// Table 3 as a JSON array (`--json` output shape).
 pub fn table3_value(rows: &[PipelineReport]) -> Value {
     Value::Arr(rows.iter().map(PipelineReport::to_value).collect())
 }
 
 /// Table 4: bit utilization, ORIGIN vs OUR mapper, two array sizes.
 pub struct Table4Row {
+    /// Mapping method label (`ORIGIN` or `OUR`).
     pub method: &'static str,
+    /// Crossbar array geometry (rows, cols).
     pub size: (usize, usize),
+    /// Fraction of array bit-cells holding weight bits.
     pub utilization: f64,
+    /// Utilization gain over the ORIGIN row at the same geometry.
     pub improvement: Option<f64>,
 }
 
+/// Regenerate Table 4: map the ResNet50 stand-in at 80% CR with both
+/// mappers at two array geometries and compare bit utilization.
 pub fn table4(lab: &Lab) -> Result<Vec<Table4Row>> {
     let cr = 0.8;
     let base = lab.plan("resnet14")?;
@@ -218,6 +235,7 @@ pub fn table4(lab: &Lab) -> Result<Vec<Table4Row>> {
     Ok(rows)
 }
 
+/// Render Table 4 as the paper-style fixed-width text table.
 pub fn render_table4(rows: &[Table4Row]) -> String {
     let mut out = String::new();
     out.push_str("Table 4: Bit Utilization on ResNet50 stand-in (80% CR, 8-bit arrays)\n");
@@ -237,6 +255,7 @@ pub fn render_table4(rows: &[Table4Row]) -> String {
     out
 }
 
+/// Table 4 as a JSON array (`--json` output shape).
 pub fn table4_value(rows: &[Table4Row]) -> Value {
     Value::Arr(
         rows.iter()
@@ -256,27 +275,24 @@ pub fn table4_value(rows: &[Table4Row]) -> Value {
     )
 }
 
-/// Figure 8: accuracy vs CR for the shallow vs deep backbone.
+/// Figure 8: accuracy vs CR for the shallow vs deep backbone — the Table 3
+/// sweep ([`tuner::sweep_cr`]) run per model, labelled with the paper's
+/// backbone names.
 pub fn fig8(lab: &Lab, opts: ExpOpts, crs: &[f64]) -> Result<Vec<(String, f64, PipelineReport)>> {
     let mut out = Vec::new();
     for (name, label) in [("resnet8", "ResNet18*"), ("resnet14", "ResNet50*")] {
-        let base = lab.plan(name)?;
-        for &cr in crs {
-            let r = base
-                .clone()
-                .threshold(ThresholdMode::FixedCr(cr))
-                .cluster()
-                .align_to_capacity()
-                .map(MappingStrategy::Packed)
-                .evaluate(opts)?;
+        let rows = tuner::sweep_cr(&lab.plan(name)?, crs, opts)?;
+        for (&cr, r) in crs.iter().zip(rows) {
             out.push((label.to_string(), cr, r));
         }
     }
     Ok(out)
 }
 
+/// CR points swept by Figure 8 (denser than Table 3 around the knee).
 pub const FIG8_CRS: &[f64] = &[0.0, 0.2, 0.4, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95, 1.0];
 
+/// Render Figure 8 as a fixed-width text table of (model, CR, top-1) rows.
 pub fn render_fig8(rows: &[(String, f64, PipelineReport)]) -> String {
     let mut out = String::new();
     out.push_str("Figure 8: Accuracy degradation under increasing compression ratio\n");
@@ -289,6 +305,7 @@ pub fn render_fig8(rows: &[(String, f64, PipelineReport)]) -> String {
     out
 }
 
+/// Figure 8 as a JSON array (`--json` output shape).
 pub fn fig8_value(rows: &[(String, f64, PipelineReport)]) -> Value {
     Value::Arr(
         rows.iter()
@@ -306,8 +323,11 @@ pub fn fig8_value(rows: &[(String, f64, PipelineReport)]) -> Value {
 /// One row of the fault-sweep table: the same compressed plan evaluated
 /// under the same fault scenario with naive vs sensitivity-aware placement.
 pub struct FaultSweepRow {
+    /// Scenario fault rate (drives [`fault_scenario`]).
     pub rate: f64,
+    /// Evaluation with strips placed in natural order.
     pub naive: PipelineReport,
+    /// Evaluation with sensitivity-aware strip placement.
     pub aware: PipelineReport,
 }
 
@@ -373,6 +393,7 @@ pub fn table_faults(lab: &Lab, opts: ExpOpts, rates: &[f64]) -> Result<Vec<Fault
     fault_sweep(&lab.plan("resnet8")?, scfg, opts, rates)
 }
 
+/// Render the fault sweep as a fixed-width text table.
 pub fn render_fault_sweep(rows: &[FaultSweepRow]) -> String {
     let mut out = String::new();
     out.push_str(
@@ -395,6 +416,7 @@ pub fn render_fault_sweep(rows: &[FaultSweepRow]) -> String {
     out
 }
 
+/// Fault sweep as a JSON array (`--json` output shape).
 pub fn fault_sweep_value(rows: &[FaultSweepRow]) -> Value {
     Value::Arr(
         rows.iter()

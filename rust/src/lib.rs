@@ -103,9 +103,17 @@
 //!   wire protocol, TCP server with per-connection threads, dynamic
 //!   micro-batching with bounded-queue admission control, a plain-text
 //!   stats frame, and the load-generating client behind `bench-client`.
+//! * [`tuner`] — parallel Pareto auto-tuner over the stage cache: fans
+//!   candidate operating points across worker threads, maintains a
+//!   3-objective accuracy/compression/storage frontier, and writes
+//!   resumable JSON search state (`reram-mpq tune`).
 //! * [`baselines`] — HAP structured pruning and uniform-precision
 //!   comparators used by the paper's tables.
 //! * [`report`] — emitters that regenerate the paper's tables/figures.
+//!
+//! A narrative layer map — staged plan → backends/programmed artifacts →
+//! sharded engine → serve front-end → faults → tuner, with the data-flow
+//! of one request and one tuning run — lives in `docs/ARCHITECTURE.md`.
 
 pub mod backend;
 pub mod baselines;
@@ -124,6 +132,7 @@ pub mod runtime;
 pub mod sensitivity;
 pub mod serve;
 pub mod tensor;
+pub mod tuner;
 pub mod util;
 pub mod xbar;
 

@@ -11,9 +11,11 @@ use reram_mpq::backend::SimXbarConfig;
 use reram_mpq::coordinator::{
     EngineConfig, EngineHandle, EvalOpts, Executor, ModelState, ThresholdMode,
 };
+use reram_mpq::dataset::{CalibSet, TestSet};
 use reram_mpq::experiments::{self, ExpOpts, Lab};
 use reram_mpq::faults::{Placement, ScenarioSpec};
 use reram_mpq::serve::{bench_client, BatchPolicy, ServeConfig, Server};
+use reram_mpq::tuner;
 use reram_mpq::util::cli::Args;
 use reram_mpq::xbar::MappingStrategy;
 use reram_mpq::{artifacts_dir, fixture, CompressionPlan, Manifest, Result, RunConfig, Runtime};
@@ -48,6 +50,23 @@ COMMANDS:
                                  --backend sim and no artifacts (or
                                  --fixture), sweeps the hermetic in-memory
                                  fixture model.
+  tune     [--model M] [--axes cr,bits,align] [--crs R1,R2,..] [--seed N]
+           [--workers N] [--budget-evals N] [--budget-ms MS]
+           [--eval-batches N] [--state FILE] [--resume] [--json] [--fixture]
+                                 parallel Pareto auto-tuner over the staged
+                                 plan's cache: fan candidate operating
+                                 points across worker threads and report
+                                 the accuracy / compression / storage
+                                 Pareto frontier plus the stage-cache hit
+                                 counters. --axes picks the knobs (cr is
+                                 the spine; default CR points are the
+                                 Table 3 sweep). With --state FILE the
+                                 search is resumable; --resume continues
+                                 an existing file bit-identically. Always
+                                 evaluates on the crossbar simulator. With
+                                 --backend sim and no artifacts (or
+                                 --fixture), tunes the hermetic in-memory
+                                 fixture model.
   serve    [--model M] [--requests N] [--cr R] [--workers N]
            [--listen ADDR] [--max-batch N] [--flush-ms MS]
            [--admit-queue N] [--wait-timeout-s S] [--fixture]
@@ -76,7 +95,7 @@ fn opts(args: &Args) -> Result<ExpOpts> {
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&argv, &["no-align", "origin", "json", "help", "fixture"])?;
+    let args = Args::parse(&argv, &["no-align", "origin", "json", "help", "fixture", "resume"])?;
     if args.has("help") || args.subcommand.is_none() {
         print!("{USAGE}");
         return Ok(());
@@ -115,7 +134,24 @@ fn main() -> Result<()> {
         return faults_fixture(&args, &cfg);
     }
 
+    // And for the auto-tuner, which always evaluates on the simulator: a
+    // bare runner tunes the fixture model (the CI tune smoke drives this).
+    if args.subcommand.as_deref() == Some("tune")
+        && args.get_or("backend", "pjrt") == "sim"
+        && (args.has("fixture") || !dir.join("manifest.json").exists())
+    {
+        return tune_fixture(&args, &cfg);
+    }
+
     let manifest = Manifest::load(&dir)?;
+
+    // The tuner needs owned model state for its worker threads (and no PJRT
+    // runtime — candidates are always evaluated on the simulator), so it
+    // branches off before the Lab is built.
+    if args.subcommand.as_deref() == Some("tune") {
+        return tune_manifest(&manifest, &cfg, &args);
+    }
+
     // The PJRT client only exists for the pjrt backend; the simulator needs
     // no runtime (and no compiled HLO) at all.
     let runtime = match args.get_or("backend", "pjrt").as_str() {
@@ -296,6 +332,132 @@ fn faults_fixture(args: &Args, cfg: &RunConfig) -> Result<()> {
     let eb = args.get_usize("eval-batches")?.unwrap_or(usize::MAX);
     let rows = experiments::fault_sweep(&plan, scfg, EvalOpts::batches(eb), &parse_rates(args)?)?;
     print_fault_rows(args, &rows);
+    Ok(())
+}
+
+/// `tune` on the sim backend with no AOT artifacts: search the hermetic
+/// in-memory fixture model — the CI tune smoke drives this path. The
+/// banner goes to stderr so `--json` stdout stays machine-parseable.
+fn tune_fixture(args: &Args, cfg: &RunConfig) -> Result<()> {
+    let fx = fixture::tiny(42);
+    eprintln!(
+        "no AOT artifacts: tuning hermetic fixture model {} ({} params)",
+        fx.model.name(),
+        fx.model.entry.num_params
+    );
+    tune_run(tuner::TuneShared::from_fixture(fx, cfg.clone()), args)
+}
+
+/// `tune` over a manifest model: load the owned state the tuner's worker
+/// threads fan out from (candidates always evaluate on the simulator, so
+/// no PJRT runtime is constructed).
+fn tune_manifest(manifest: &Manifest, cfg: &RunConfig, args: &Args) -> Result<()> {
+    let name = args.get_or("model", "resnet8");
+    let model = manifest.model(&name)?;
+    let theta = model.load_params(manifest)?;
+    let test = TestSet::load(manifest)?;
+    let calib = CalibSet::load(manifest, model.entry.batch.calib)?;
+    tune_run(tuner::TuneShared { model, theta, test, calib, cfg: cfg.clone() }, args)
+}
+
+/// `--crs 0,0.5,1` → threshold-axis CR points; defaults to the paper's
+/// Table 3 sweep.
+fn parse_crs(args: &Args) -> Result<Vec<f64>> {
+    let Some(s) = args.get("crs") else {
+        return Ok(tuner::TABLE3_CRS.to_vec());
+    };
+    let mut crs = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let r: f64 = tok
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad --crs entry '{tok}': {e}"))?;
+        crs.push(r);
+    }
+    anyhow::ensure!(!crs.is_empty(), "--crs parsed to an empty list");
+    Ok(crs)
+}
+
+/// Shared tail of both `tune` paths: build the axes + budgets, create or
+/// resume the search state, run the driver, persist, and print.
+fn tune_run(shared: tuner::TuneShared, args: &Args) -> Result<()> {
+    let seed = args.get_usize("seed")?.unwrap_or(0) as u64;
+    let crs = parse_crs(args)?;
+    let default_bits = (shared.cfg.quant.hi.bits, shared.cfg.quant.lo.bits);
+    let axes = tuner::Axes::parse(&args.get_or("axes", "cr"), &crs, default_bits)?;
+
+    let state_path = args.get("state").map(std::path::PathBuf::from);
+    anyhow::ensure!(
+        !args.has("resume") || state_path.is_some(),
+        "--resume needs --state FILE"
+    );
+    let mut state = match &state_path {
+        Some(p) if p.exists() => {
+            anyhow::ensure!(
+                args.has("resume"),
+                "state file {} already exists; pass --resume to continue it",
+                p.display()
+            );
+            let st = tuner::SearchState::load(p)?;
+            anyhow::ensure!(
+                st.seed == seed,
+                "state file was produced with --seed {} (got --seed {seed})",
+                st.seed
+            );
+            st
+        }
+        _ => tuner::SearchState::new(seed, axes.fingerprint(seed)),
+    };
+
+    let mut tcfg = tuner::TuneConfig {
+        sim: SimXbarConfig::from_xbar(&shared.cfg.xbar),
+        ..Default::default()
+    };
+    if let Some(w) = args.get_usize("workers")? {
+        anyhow::ensure!(w >= 1, "--workers must be >= 1");
+        tcfg.workers = w;
+    }
+    if let Some(n) = args.get_usize("budget-evals")? {
+        tcfg.max_evals = n;
+    }
+    if let Some(ms) = args.get_usize("budget-ms")? {
+        tcfg.budget_ms = ms as u64;
+    }
+    tcfg.opts = EvalOpts::batches(args.get_usize("eval-batches")?.unwrap_or(usize::MAX));
+
+    let outcome = tuner::run(&shared, &axes, &tcfg, &mut state)?;
+    if let Some(p) = &state_path {
+        state.save(p)?;
+    }
+
+    if args.has("json") {
+        println!("{}", outcome.to_value(&state).to_json());
+        return Ok(());
+    }
+    println!(
+        "tune: {} new eval(s) ({} / {} candidates explored) in {} ms (total {} ms)",
+        outcome.evals,
+        outcome.explored,
+        axes.len(),
+        outcome.elapsed_ms,
+        state.elapsed_ms
+    );
+    println!(
+        "stage cache: prefix hits {} (sensitivity {}), {} hit(s) / {} run(s) overall",
+        outcome.cache.prefix_hits(),
+        outcome.cache.sensitivity_hits,
+        outcome.cache.total_hits(),
+        outcome.cache.total_runs()
+    );
+    println!("Pareto frontier ({} point(s)):", outcome.frontier.len());
+    for p in outcome.frontier.points() {
+        println!(
+            "  {:<24} top1={:6.2}%  cr={:5.1}%  storage={} B",
+            p.key,
+            p.objectives.top1 * 100.0,
+            p.objectives.compression * 100.0,
+            p.objectives.storage_bytes
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,325 @@
+//! The search driver: fan candidates across worker threads, evaluate each
+//! through the stage-cached plan tail, and fold results into the frontier.
+//!
+//! ## Parallelism model
+//!
+//! [`CompressionPlan`] is deliberately single-threaded (`Rc`-shared state +
+//! stage cache), so the driver mirrors the sharded engine's worker idiom
+//! instead of sharing one plan: each worker thread clones the loaded model
+//! state out of [`TuneShared`], roots its *own* plan (and thus its own
+//! stage cache) on the simulator backend, and pulls candidates from a
+//! shared atomic cursor. The expensive sensitivity prefix is computed once
+//! per worker and memoized; every subsequent candidate on that worker hits
+//! the cached prefix and only re-runs the cheap tail stages. Per-worker
+//! [`CacheStats`] are summed into the outcome so prefix reuse is
+//! observable, not assumed.
+//!
+//! ## Determinism and resume
+//!
+//! The candidate order is fixed by [`Axes::schedule`]; the atomic cursor
+//! hands out schedule indices in order, and a claimed candidate is always
+//! fully evaluated and recorded, so any interruption (eval budget,
+//! wall-clock budget) leaves the explored set a *prefix* of the pending
+//! schedule. Simulator evaluation is seeded and bit-deterministic, and the
+//! frontier is insertion-order independent — together that makes
+//! `interrupted run + resume` bit-identical to an uninterrupted run, which
+//! `rust/tests/tuner_resume.rs` and the CI tune smoke assert.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::backend::{ProgrammedModel, SimXbarConfig, StripPrecision};
+use crate::config::RunConfig;
+use crate::coordinator::{
+    CacheStats, CompressionPlan, EvalOpts, Executor, ModelState, PipelineReport, ThresholdMode,
+};
+use crate::dataset::{CalibSet, TestSet};
+use crate::fixture::Fixture;
+use crate::model::ModelInfo;
+use crate::tuner::frontier::{Frontier, Objectives};
+use crate::tuner::space::{Axes, Candidate};
+use crate::tuner::state::{ExploredPoint, SearchState};
+use crate::util::json::{obj, Value};
+use crate::xbar::MappingStrategy;
+use crate::Result;
+
+/// Budgets and evaluation fidelity of one tune run.
+#[derive(Clone, Copy, Debug)]
+pub struct TuneConfig {
+    /// Worker threads candidates fan out across (clamped to the pending
+    /// candidate count; each worker roots its own plan + stage cache).
+    pub workers: usize,
+    /// Maximum *new* evaluations this run (resume picks up the rest).
+    pub max_evals: usize,
+    /// Wall-clock budget in milliseconds, counted across resumes via
+    /// [`SearchState::elapsed_ms`]. `u64::MAX` = unbounded.
+    pub budget_ms: u64,
+    /// Accuracy-evaluation options (test batches per candidate).
+    pub opts: EvalOpts,
+    /// Simulator config candidates are evaluated on (accuracy fidelity) and
+    /// that seeds the storage objective's programming pass.
+    pub sim: SimXbarConfig,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        Self {
+            workers: 1,
+            max_evals: usize::MAX,
+            budget_ms: u64::MAX,
+            opts: EvalOpts::default(),
+            sim: SimXbarConfig::default(),
+        }
+    }
+}
+
+/// The loaded, thread-shareable model state a tune run fans out from.
+/// Workers clone these owned buffers to root their per-thread plans —
+/// unlike [`CompressionPlan`] itself, this struct is `Send + Sync`.
+pub struct TuneShared {
+    /// Model layout (conv layers + strip table).
+    pub model: ModelInfo,
+    /// fp32 checkpoint parameters.
+    pub theta: Vec<f32>,
+    /// Test split candidates are scored on.
+    pub test: TestSet,
+    /// Calibration split (sensitivity stage input).
+    pub calib: CalibSet,
+    /// Stage configuration the per-worker plans are rooted with (the
+    /// candidate's bit pair overrides `cfg.quant` per evaluation).
+    pub cfg: RunConfig,
+}
+
+impl TuneShared {
+    /// Tune over the hermetic in-memory fixture workload.
+    pub fn from_fixture(fx: Fixture, cfg: RunConfig) -> Self {
+        Self { model: fx.model, theta: fx.theta, test: fx.test, calib: fx.calib, cfg }
+    }
+}
+
+/// What one [`run`] call did: new evaluations, the frontier of the whole
+/// explored set, and the summed per-worker cache counters.
+pub struct TuneOutcome {
+    /// Candidates newly evaluated by this run.
+    pub evals: usize,
+    /// Total explored points (including prior runs of a resumed state).
+    pub explored: usize,
+    /// Pareto frontier over the full explored set.
+    pub frontier: Frontier,
+    /// Stage-cache counters summed across this run's workers; the
+    /// memoized-sensitivity contract shows up as `prefix_hits() > 0`
+    /// whenever any worker evaluated more than one candidate.
+    pub cache: CacheStats,
+    /// Wall-clock milliseconds this run spent.
+    pub elapsed_ms: u64,
+}
+
+impl TuneOutcome {
+    /// JSON summary: counters, cache stats, the frontier, and every
+    /// explored point (the CLI `--json` payload).
+    pub fn to_value(&self, state: &SearchState) -> Value {
+        obj(vec![
+            ("evals", Value::Num(self.evals as f64)),
+            ("explored", Value::Num(self.explored as f64)),
+            ("elapsed_ms", Value::Num(self.elapsed_ms as f64)),
+            ("total_elapsed_ms", Value::Num(state.elapsed_ms as f64)),
+            ("cache", self.cache.to_value()),
+            ("frontier", self.frontier.to_value()),
+            (
+                "points",
+                Value::Arr(state.explored.values().map(ExploredPoint::to_value).collect()),
+            ),
+        ])
+    }
+}
+
+enum Msg {
+    Point(ExploredPoint),
+    Done(CacheStats),
+    Fail(anyhow::Error),
+}
+
+/// Build the candidate's plan tail on `plan`'s shared stage cache: fixed-CR
+/// threshold → clustering (± capacity alignment) → the candidate's bit pair
+/// → packed mapping. With the candidate pinned to the plan's own quant
+/// config and `align = true` this is byte-for-byte the chain
+/// `experiments::table3` always ran.
+fn chain<'a>(plan: &CompressionPlan<'a>, cand: &Candidate) -> CompressionPlan<'a> {
+    let mut q = plan.config().quant;
+    q.hi.bits = cand.hi_bits;
+    q.lo.bits = cand.lo_bits;
+    let mut p = plan
+        .clone()
+        .threshold(ThresholdMode::FixedCr(cand.cr))
+        .cluster()
+        .quantize(q)
+        .map(MappingStrategy::Packed);
+    if cand.align {
+        p = p.align_to_capacity();
+    }
+    p
+}
+
+/// The deployed-storage objective: program the candidate's quantized strips
+/// once and count the packed weight bit-plane bytes. Always measured in the
+/// deterministic `Packed` exec mode (noise off, ADC on) regardless of the
+/// evaluation config's fidelity knobs — the `Exact` debug mode stores i32
+/// codes whose byte count would not respond to the bit axis at all.
+fn storage_bytes(plan: &CompressionPlan<'_>, sim: &SimXbarConfig) -> Result<u64> {
+    let qm = plan.quantized()?;
+    let sp = StripPrecision::from_quantized(&qm);
+    let mut scfg = *sim;
+    scfg.noise_sigma = 0.0;
+    scfg.scalar_lanes = false;
+    scfg.force_phase_loop = false;
+    if scfg.adc_bits == 0 {
+        scfg.adc_bits = 8;
+    }
+    let pm = ProgrammedModel::program(plan.model(), &qm.theta, &sp, &scfg)?;
+    Ok(pm.planes_bytes as u64)
+}
+
+fn eval_candidate(
+    plan: &CompressionPlan<'_>,
+    cand: &Candidate,
+    tcfg: &TuneConfig,
+) -> Result<ExploredPoint> {
+    let p = chain(plan, cand);
+    let report = p.evaluate(tcfg.opts)?;
+    let bytes = storage_bytes(&p, &tcfg.sim)?;
+    Ok(ExploredPoint {
+        candidate: cand.clone(),
+        objectives: Objectives {
+            top1: report.accuracy.top1,
+            compression: report.compression_ratio,
+            storage_bytes: bytes,
+        },
+    })
+}
+
+/// Run (or continue) a tune: evaluate every not-yet-explored candidate of
+/// `axes` within the config's budgets, folding results into `state`. The
+/// caller persists `state` (e.g. [`SearchState::save`]) to make the run
+/// resumable; re-invoking with the same arguments continues where the
+/// budget cut it off and converges to the same explored set and frontier
+/// an uninterrupted run produces.
+pub fn run(
+    shared: &TuneShared,
+    axes: &Axes,
+    tcfg: &TuneConfig,
+    state: &mut SearchState,
+) -> Result<TuneOutcome> {
+    anyhow::ensure!(
+        state.fingerprint == axes.fingerprint(state.seed),
+        "search state fingerprint does not match this space/seed \
+         (it was produced by a different tune invocation)"
+    );
+    let t0 = Instant::now();
+    let pending: Vec<Candidate> = axes
+        .schedule(state.seed)
+        .into_iter()
+        .filter(|c| !state.explored.contains_key(&c.key()))
+        .collect();
+    let cap = pending.len().min(tcfg.max_evals);
+    let todo = &pending[..cap];
+    let remaining_ms = tcfg.budget_ms.saturating_sub(state.elapsed_ms);
+    let workers = tcfg.workers.max(1).min(cap.max(1));
+
+    let mut cache = CacheStats::default();
+    let mut evals = 0usize;
+    let mut first_err: Option<anyhow::Error> = None;
+
+    if cap > 0 && remaining_ms > 0 {
+        let next = AtomicUsize::new(0);
+        let stop = AtomicBool::new(false);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let (next, stop) = (&next, &stop);
+                s.spawn(move || {
+                    let plan = CompressionPlan::from_state(
+                        ModelState {
+                            exec: Executor::Sim(tcfg.sim),
+                            model: shared.model.clone(),
+                            theta: shared.theta.clone(),
+                            test: shared.test.clone(),
+                            calib: shared.calib.clone(),
+                        },
+                        shared.cfg.clone(),
+                    );
+                    loop {
+                        if stop.load(Ordering::Relaxed)
+                            || t0.elapsed().as_millis() as u64 >= remaining_ms
+                        {
+                            break;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= todo.len() {
+                            break;
+                        }
+                        match eval_candidate(&plan, &todo[i], tcfg) {
+                            Ok(point) => {
+                                let _ = tx.send(Msg::Point(point));
+                            }
+                            Err(e) => {
+                                stop.store(true, Ordering::Relaxed);
+                                let _ = tx.send(Msg::Fail(e));
+                                break;
+                            }
+                        }
+                    }
+                    let _ = tx.send(Msg::Done(plan.cache_stats()));
+                });
+            }
+            drop(tx);
+            for msg in rx {
+                match msg {
+                    Msg::Point(p) => {
+                        state.explored.insert(p.candidate.key(), p);
+                        evals += 1;
+                    }
+                    Msg::Done(stats) => cache.absorb(&stats),
+                    Msg::Fail(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
+            }
+        });
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+
+    let elapsed_ms = t0.elapsed().as_millis() as u64;
+    state.elapsed_ms += elapsed_ms;
+    Ok(TuneOutcome {
+        evals,
+        explored: state.explored.len(),
+        frontier: state.frontier(),
+        cache,
+        elapsed_ms,
+    })
+}
+
+/// The degenerate single-axis case of the driver: sweep `crs` serially on
+/// an *existing* plan (keeping its stage cache and root backend), pinning
+/// the bit pair to the plan's quant config and alignment on — exactly the
+/// paper's Table 3 / Figure 8 sweeps. `experiments::table3` and
+/// `experiments::fig8` are thin wrappers over this.
+pub fn sweep_cr(
+    plan: &CompressionPlan<'_>,
+    crs: &[f64],
+    opts: EvalOpts,
+) -> Result<Vec<PipelineReport>> {
+    let q = plan.config().quant;
+    crs.iter()
+        .map(|&cr| {
+            let cand = Candidate { cr, hi_bits: q.hi.bits, lo_bits: q.lo.bits, align: true };
+            chain(plan, &cand).evaluate(opts)
+        })
+        .collect()
+}

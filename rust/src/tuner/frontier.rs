@@ -1,0 +1,228 @@
+//! 3-objective Pareto frontier with dominated-point pruning.
+//!
+//! The tuner scores every candidate operating point on three axes at once —
+//! top-1 accuracy (maximize), compression ratio (maximize) and deployed
+//! storage bytes (minimize; the packed weight bit-planes a device would
+//! actually hold, per [`crate::backend::ProgrammedModel::planes_bytes`]).
+//! A point *dominates* another when it is at least as good on every axis
+//! and strictly better on one; the frontier is the set of non-dominated
+//! points.
+//!
+//! [`Frontier::insert`] is order-independent: domination is a strict
+//! partial order, so incremental insertion with pruning converges to the
+//! unique maximal set of whatever points were offered, regardless of the
+//! order worker threads report them in. That property is what makes an
+//! interrupted-and-resumed search bit-identical to an uninterrupted one
+//! (see [`crate::tuner::state`]), and it is property-tested below.
+
+use crate::util::json::{obj, Value};
+use crate::Result;
+
+/// The three tuning objectives of one evaluated operating point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Objectives {
+    /// Top-1 accuracy on the evaluated test batches (maximize).
+    pub top1: f64,
+    /// Achieved compression ratio — fraction of strips in the low tier
+    /// (maximize).
+    pub compression: f64,
+    /// Deployed storage: packed weight bit-plane bytes of the programmed
+    /// artifact (minimize).
+    pub storage_bytes: u64,
+}
+
+impl Objectives {
+    /// Strict Pareto domination: at least as good on all three axes and
+    /// strictly better on at least one. Irreflexive and transitive, so the
+    /// non-dominated set of a point collection is unique.
+    pub fn dominates(&self, other: &Objectives) -> bool {
+        let ge = self.top1 >= other.top1
+            && self.compression >= other.compression
+            && self.storage_bytes <= other.storage_bytes;
+        let gt = self.top1 > other.top1
+            || self.compression > other.compression
+            || self.storage_bytes < other.storage_bytes;
+        ge && gt
+    }
+
+    /// JSON form (`top1` / `compression` / `storage_bytes`).
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("top1", Value::Num(self.top1)),
+            ("compression", Value::Num(self.compression)),
+            ("storage_bytes", Value::Num(self.storage_bytes as f64)),
+        ])
+    }
+
+    /// Parse the [`Objectives::to_value`] form back.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        Ok(Self {
+            top1: v.get("top1")?.num()?,
+            compression: v.get("compression")?.num()?,
+            storage_bytes: v.get("storage_bytes")?.usize()? as u64,
+        })
+    }
+}
+
+/// One frontier entry: the candidate's stable key plus its objectives.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontierPoint {
+    /// The candidate key ([`crate::tuner::Candidate::key`]) this point was
+    /// evaluated from.
+    pub key: String,
+    /// Its measured objectives.
+    pub objectives: Objectives,
+}
+
+/// A live Pareto frontier. Points are kept sorted by key so serialization
+/// and comparison are deterministic regardless of insertion order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Frontier {
+    points: Vec<FrontierPoint>,
+}
+
+impl Frontier {
+    /// Offer a point. Returns `true` when it joined the frontier (pruning
+    /// every point it dominates), `false` when an existing point dominates
+    /// it. Points with identical objectives coexist: neither dominates.
+    pub fn insert(&mut self, key: &str, o: Objectives) -> bool {
+        if self.points.iter().any(|p| p.objectives.dominates(&o)) {
+            return false;
+        }
+        self.points.retain(|p| !o.dominates(&p.objectives));
+        let at = self.points.partition_point(|p| p.key.as_str() < key);
+        self.points
+            .insert(at, FrontierPoint { key: key.to_string(), objectives: o });
+        true
+    }
+
+    /// The current non-dominated set, sorted by key.
+    pub fn points(&self) -> &[FrontierPoint] {
+        &self.points
+    }
+
+    /// Number of points on the frontier.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when nothing was inserted yet (or everything was pruned —
+    /// impossible: the last survivor of any insert sequence stays).
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Whether `key` is currently on the frontier.
+    pub fn contains(&self, key: &str) -> bool {
+        self.points.iter().any(|p| p.key == key)
+    }
+
+    /// JSON array of frontier points (key + objectives), in key order.
+    pub fn to_value(&self) -> Value {
+        Value::Arr(
+            self.points
+                .iter()
+                .map(|p| {
+                    obj(vec![
+                        ("key", Value::Str(p.key.clone())),
+                        ("objectives", p.objectives.to_value()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn o(top1: f64, cr: f64, bytes: u64) -> Objectives {
+        Objectives { top1, compression: cr, storage_bytes: bytes }
+    }
+
+    #[test]
+    fn domination_is_strict_and_directional() {
+        let better = o(0.9, 0.7, 100);
+        let worse = o(0.8, 0.7, 120);
+        assert!(better.dominates(&worse));
+        assert!(!worse.dominates(&better));
+        // equal objectives: neither dominates
+        assert!(!better.dominates(&better));
+        // trade-off (higher accuracy, more bytes): incomparable
+        let tradeoff = o(0.95, 0.7, 200);
+        assert!(!better.dominates(&tradeoff));
+        assert!(!tradeoff.dominates(&better));
+    }
+
+    #[test]
+    fn insert_prunes_dominated_and_rejects_dominated() {
+        let mut f = Frontier::default();
+        assert!(f.insert("a", o(0.8, 0.5, 100)));
+        assert!(f.insert("b", o(0.9, 0.5, 100))); // dominates a -> a pruned
+        assert_eq!(f.len(), 1);
+        assert!(f.contains("b"));
+        assert!(!f.insert("c", o(0.85, 0.5, 100))); // dominated by b
+        assert!(f.insert("d", o(0.7, 0.9, 50))); // incomparable trade-off
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn equal_objective_points_coexist() {
+        let mut f = Frontier::default();
+        assert!(f.insert("a", o(0.8, 0.5, 100)));
+        assert!(f.insert("b", o(0.8, 0.5, 100)));
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn frontier_is_insertion_order_independent() {
+        // Seeded pseudo-random point cloud inserted in several different
+        // orders must converge to the identical frontier (the resume
+        // bit-stability guarantee rests on this).
+        let mut rng = Rng::seed_from_u64(7);
+        let points: Vec<(String, Objectives)> = (0..64)
+            .map(|i| {
+                (
+                    format!("p{i}"),
+                    o(
+                        (rng.below(10) as f64) / 10.0,
+                        (rng.below(10) as f64) / 10.0,
+                        rng.below(1000) as u64,
+                    ),
+                )
+            })
+            .collect();
+        let build = |order: &[usize]| {
+            let mut f = Frontier::default();
+            for &i in order {
+                let (k, ov) = &points[i];
+                f.insert(k, *ov);
+            }
+            f
+        };
+        let forward: Vec<usize> = (0..points.len()).collect();
+        let reverse: Vec<usize> = (0..points.len()).rev().collect();
+        let mut shuffled = forward.clone();
+        for i in (1..shuffled.len()).rev() {
+            shuffled.swap(i, rng.below(i + 1));
+        }
+        let a = build(&forward);
+        assert_eq!(a, build(&reverse));
+        assert_eq!(a, build(&shuffled));
+        // and nothing on the frontier is dominated by any offered point
+        for p in a.points() {
+            for (_, ov) in &points {
+                assert!(!ov.dominates(&p.objectives));
+            }
+        }
+    }
+
+    #[test]
+    fn objectives_roundtrip_json() {
+        let ov = o(0.8125, 0.7, 12345);
+        let back = Objectives::from_value(&Value::parse(&ov.to_value().to_json()).unwrap()).unwrap();
+        assert_eq!(ov, back);
+    }
+}

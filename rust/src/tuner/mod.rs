@@ -1,0 +1,37 @@
+//! Parallel Pareto auto-tuner over the stage cache.
+//!
+//! The paper reports one hand-picked operating point (86.33% accuracy at
+//! 70% compression); this module searches the whole (threshold, bits,
+//! alignment) space the staged [`crate::coordinator::CompressionPlan`]
+//! makes cheap. The expensive sensitivity prefix is memoized per worker,
+//! so each additional candidate pays only the tail stages — the tuner
+//! reports the observed prefix reuse via the plan's per-stage cache hit
+//! counters ([`crate::coordinator::CacheStats`]).
+//!
+//! The moving parts, one per submodule:
+//!
+//! * [`space`] — [`Candidate`] operating points, the [`Axes`] cross
+//!   product, and its deterministic (optionally seed-shuffled) schedule.
+//! * [`frontier`] — the live 3-objective Pareto frontier (accuracy ↑,
+//!   compression ↑, deployed storage bytes ↓) with dominated-point
+//!   pruning; insertion-order independent.
+//! * [`state`] — resumable JSON search state: explored points, seed,
+//!   fingerprint, elapsed budget. An interrupted run continues where it
+//!   left off and converges bit-identically to an uninterrupted one.
+//! * [`driver`] — the worker fan-out ([`run`]) and the degenerate
+//!   single-axis CR sweep ([`sweep_cr`]) that reproduces the paper's
+//!   Table 3 (`experiments::table3` is a thin wrapper over it).
+//!
+//! The CLI front-end is `reram-mpq tune` (budget / axes / resume flags,
+//! `--json` output); see `docs/ARCHITECTURE.md` for the data-flow of one
+//! tuning run.
+
+pub mod driver;
+pub mod frontier;
+pub mod space;
+pub mod state;
+
+pub use driver::{run, sweep_cr, TuneConfig, TuneOutcome, TuneShared};
+pub use frontier::{Frontier, FrontierPoint, Objectives};
+pub use space::{Axes, Candidate, DEFAULT_BITS, TABLE3_CRS};
+pub use state::{ExploredPoint, SearchState, STATE_VERSION};

@@ -1,0 +1,243 @@
+//! The tuner's search space: candidate operating points and their
+//! deterministic schedule.
+//!
+//! A [`Candidate`] pins the three stage knobs the staged
+//! [`crate::coordinator::CompressionPlan`] exposes cheaply once the
+//! sensitivity prefix is cached: the fixed compression ratio fed to the
+//! threshold stage, the (hi, lo) quantizer bit pair, and whether the
+//! capacity-alignment stage runs. [`Axes`] is the cross product of per-knob
+//! value lists; [`Axes::schedule`] linearizes it deterministically (CR-major,
+//! optionally Fisher–Yates-shuffled by a seed) so a resumed search walks the
+//! exact same candidate order as an uninterrupted one.
+
+use crate::util::json::{obj, Value};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// The paper's Table 3 compression-ratio sweep points — the single shared
+/// definition consumed by `experiments::table3`, the `table3_cr_sweep`
+/// bench and the tuner's degenerate single-axis case.
+pub const TABLE3_CRS: &[f64] = &[0.0, 0.1, 0.5, 0.7, 0.9, 1.0];
+
+/// Default (hi, lo) bit pairs for the `bits` axis: the paper's 8/4 point
+/// plus cheaper tails the storage objective can trade against.
+pub const DEFAULT_BITS: &[(u8, u8)] = &[(8, 4), (8, 2), (4, 2)];
+
+/// One candidate operating point: the knobs of a single plan-tail
+/// evaluation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Candidate {
+    /// Fixed compression ratio handed to the threshold stage
+    /// (`ThresholdMode::FixedCr`).
+    pub cr: f64,
+    /// High-tier quantizer bits.
+    pub hi_bits: u8,
+    /// Low-tier quantizer bits.
+    pub lo_bits: u8,
+    /// Whether the crossbar capacity-alignment stage runs (paper §4.2).
+    pub align: bool,
+}
+
+impl Candidate {
+    /// Stable identity key — the explored-set index of the resumable search
+    /// state. `f64` `Display` is shortest-roundtrip, so distinct ratios
+    /// never collide.
+    pub fn key(&self) -> String {
+        format!(
+            "cr{}:hi{}:lo{}:al{}",
+            self.cr, self.hi_bits, self.lo_bits, self.align as u8
+        )
+    }
+
+    /// JSON form (`cr` / `hi_bits` / `lo_bits` / `align`).
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("cr", Value::Num(self.cr)),
+            ("hi_bits", Value::Num(self.hi_bits as f64)),
+            ("lo_bits", Value::Num(self.lo_bits as f64)),
+            ("align", Value::Bool(self.align)),
+        ])
+    }
+
+    /// Parse the [`Candidate::to_value`] form back.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let align = match v.get("align")? {
+            Value::Bool(b) => *b,
+            other => anyhow::bail!("candidate align is not a bool: {other:?}"),
+        };
+        Ok(Self {
+            cr: v.get("cr")?.num()?,
+            hi_bits: v.get("hi_bits")?.usize()? as u8,
+            lo_bits: v.get("lo_bits")?.usize()? as u8,
+            align,
+        })
+    }
+}
+
+/// The search space: per-knob value lists whose cross product is the
+/// candidate set.
+#[derive(Clone, Debug)]
+pub struct Axes {
+    /// Compression-ratio axis (always present).
+    pub crs: Vec<f64>,
+    /// (hi, lo) quantizer bit pairs.
+    pub bits: Vec<(u8, u8)>,
+    /// Capacity-alignment on/off.
+    pub aligns: Vec<bool>,
+}
+
+impl Axes {
+    /// The degenerate single-axis space: sweep `crs` with the bit pair and
+    /// alignment pinned — exactly the paper's Table 3 shape.
+    pub fn cr_axis(crs: &[f64], hi_bits: u8, lo_bits: u8) -> Result<Self> {
+        Self::new(crs.to_vec(), vec![(hi_bits, lo_bits)], vec![true])
+    }
+
+    /// A validated space from explicit per-knob lists.
+    pub fn new(crs: Vec<f64>, bits: Vec<(u8, u8)>, aligns: Vec<bool>) -> Result<Self> {
+        anyhow::ensure!(!crs.is_empty(), "the cr axis must have at least one point");
+        anyhow::ensure!(!bits.is_empty() && !aligns.is_empty(), "empty search axis");
+        for &cr in &crs {
+            anyhow::ensure!((0.0..=1.0).contains(&cr), "cr {cr} outside [0,1]");
+        }
+        for &(hi, lo) in &bits {
+            anyhow::ensure!(
+                (1..=8u8).contains(&lo) && (1..=8u8).contains(&hi) && hi >= lo,
+                "bad bit pair {hi}/{lo} (need 1 <= lo <= hi <= 8)"
+            );
+        }
+        Ok(Self { crs, bits, aligns })
+    }
+
+    /// Parse a CLI axes spec: a comma-separated subset of
+    /// `cr`, `bits`, `align` (`cr` is mandatory — it is the spine every
+    /// other axis multiplies). Omitted axes are pinned to `default_bits` /
+    /// alignment-on.
+    pub fn parse(spec: &str, crs: &[f64], default_bits: (u8, u8)) -> Result<Self> {
+        let mut with_bits = false;
+        let mut with_align = false;
+        let mut saw_cr = false;
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            match tok {
+                "cr" => saw_cr = true,
+                "bits" => with_bits = true,
+                "align" => with_align = true,
+                other => anyhow::bail!("unknown axis '{other}' (expected cr|bits|align)"),
+            }
+        }
+        anyhow::ensure!(saw_cr, "the axes spec must include 'cr'");
+        let bits = if with_bits {
+            DEFAULT_BITS.to_vec()
+        } else {
+            vec![default_bits]
+        };
+        let aligns = if with_align { vec![true, false] } else { vec![true] };
+        Self::new(crs.to_vec(), bits, aligns)
+    }
+
+    /// Total number of candidates (cross-product size).
+    pub fn len(&self) -> usize {
+        self.crs.len() * self.bits.len() * self.aligns.len()
+    }
+
+    /// True when the space is empty (never, post-validation).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The deterministic candidate order: CR-major cross product, then an
+    /// optional Fisher–Yates shuffle keyed by `seed` (`0` keeps sweep
+    /// order, which is what the degenerate Table 3 case relies on). The
+    /// same `(axes, seed)` always yields the same schedule — resumability
+    /// depends on it.
+    pub fn schedule(&self, seed: u64) -> Vec<Candidate> {
+        let mut out = Vec::with_capacity(self.len());
+        for &cr in &self.crs {
+            for &(hi_bits, lo_bits) in &self.bits {
+                for &align in &self.aligns {
+                    out.push(Candidate { cr, hi_bits, lo_bits, align });
+                }
+            }
+        }
+        if seed != 0 {
+            let mut rng = Rng::seed_from_u64(seed);
+            for i in (1..out.len()).rev() {
+                out.swap(i, rng.below(i + 1));
+            }
+        }
+        out
+    }
+
+    /// FNV fingerprint of the `(schedule, seed)` pair. Stored in the search
+    /// state so a resume against a different space or seed is rejected
+    /// instead of silently mixing incompatible explored sets.
+    pub fn fingerprint(&self, seed: u64) -> u64 {
+        let mut text = format!("seed{seed}");
+        for c in self.schedule(seed) {
+            text.push('|');
+            text.push_str(&c.key());
+        }
+        let mut h = 0xcbf29ce484222325u64;
+        for b in text.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cr_axis_schedules_in_sweep_order() {
+        let axes = Axes::cr_axis(TABLE3_CRS, 8, 4).unwrap();
+        let sched = axes.schedule(0);
+        assert_eq!(sched.len(), TABLE3_CRS.len());
+        for (c, &cr) in sched.iter().zip(TABLE3_CRS) {
+            assert_eq!(c.cr, cr);
+            assert_eq!((c.hi_bits, c.lo_bits, c.align), (8, 4, true));
+        }
+    }
+
+    #[test]
+    fn shuffled_schedule_is_deterministic_and_a_permutation() {
+        let axes = Axes::parse("cr,bits,align", TABLE3_CRS, (8, 4)).unwrap();
+        assert_eq!(axes.len(), TABLE3_CRS.len() * DEFAULT_BITS.len() * 2);
+        let a = axes.schedule(9);
+        let b = axes.schedule(9);
+        assert_eq!(a, b);
+        assert_ne!(a, axes.schedule(0), "seeded schedule should differ from sweep order");
+        let mut keys: Vec<String> = a.iter().map(Candidate::key).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), axes.len(), "shuffle must stay a permutation");
+    }
+
+    #[test]
+    fn fingerprint_separates_spaces_and_seeds() {
+        let a = Axes::cr_axis(TABLE3_CRS, 8, 4).unwrap();
+        let b = Axes::cr_axis(TABLE3_CRS, 8, 2).unwrap();
+        assert_ne!(a.fingerprint(0), b.fingerprint(0));
+        assert_ne!(a.fingerprint(0), a.fingerprint(1));
+        assert_eq!(a.fingerprint(0), a.fingerprint(0));
+    }
+
+    #[test]
+    fn parse_rejects_unknown_axes_and_missing_cr() {
+        assert!(Axes::parse("cr,perf", TABLE3_CRS, (8, 4)).is_err());
+        assert!(Axes::parse("bits", TABLE3_CRS, (8, 4)).is_err());
+        assert!(Axes::new(vec![1.5], vec![(8, 4)], vec![true]).is_err());
+        assert!(Axes::new(vec![0.5], vec![(4, 8)], vec![true]).is_err());
+    }
+
+    #[test]
+    fn candidate_roundtrips_json_and_keys_are_distinct() {
+        let c = Candidate { cr: 0.7, hi_bits: 8, lo_bits: 4, align: true };
+        let back = Candidate::from_value(&Value::parse(&c.to_value().to_json()).unwrap()).unwrap();
+        assert_eq!(c, back);
+        let d = Candidate { align: false, ..back };
+        assert_ne!(c.key(), d.key());
+    }
+}

@@ -1,0 +1,219 @@
+//! Resumable search state: everything an interrupted tune run needs to
+//! continue exactly where it stopped.
+//!
+//! The state is deliberately minimal — the RNG seed, the space fingerprint,
+//! the accumulated wall-clock budget, and the explored map (candidate key →
+//! candidate + measured objectives). The frontier is *derived*, never
+//! trusted from disk: [`SearchState::frontier`] rebuilds it from the
+//! explored set on every call, so a resumed run's frontier is the frontier
+//! of its explored points by construction (see the order-independence
+//! property on [`Frontier`]).
+//!
+//! Serialization uses the crate's own JSON substrate. Keys are sorted
+//! (`BTreeMap`) and `f64` values print shortest-roundtrip, so the same
+//! explored set always serializes to the same bytes —
+//! [`SearchState::canonical_value`] (which drops the elapsed-budget field)
+//! is the bit-stability contract CI asserts under resume.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::tuner::frontier::{Frontier, Objectives};
+use crate::tuner::space::Candidate;
+use crate::util::json::{obj, Value};
+use crate::Result;
+
+/// Schema version of the on-disk state file.
+pub const STATE_VERSION: usize = 1;
+
+/// One evaluated candidate: the knobs plus the measured objectives.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExploredPoint {
+    /// The operating point that was evaluated.
+    pub candidate: Candidate,
+    /// Its measured accuracy / compression / storage objectives.
+    pub objectives: Objectives,
+}
+
+impl ExploredPoint {
+    /// JSON form (`key` / `candidate` / `objectives`).
+    pub fn to_value(&self) -> Value {
+        obj(vec![
+            ("key", Value::Str(self.candidate.key())),
+            ("candidate", self.candidate.to_value()),
+            ("objectives", self.objectives.to_value()),
+        ])
+    }
+
+    /// Parse the [`ExploredPoint::to_value`] form back.
+    pub fn from_value(v: &Value) -> Result<Self> {
+        Ok(Self {
+            candidate: Candidate::from_value(v.get("candidate")?)?,
+            objectives: Objectives::from_value(v.get("objectives")?)?,
+        })
+    }
+}
+
+/// The resumable search state of one tuning run.
+#[derive(Clone, Debug, Default)]
+pub struct SearchState {
+    /// Schedule-shuffle seed the run was started with.
+    pub seed: u64,
+    /// [`crate::tuner::Axes::fingerprint`] of the space + seed; a resume
+    /// against a different space is rejected.
+    pub fingerprint: u64,
+    /// Wall-clock milliseconds spent across all runs so far (counted
+    /// against `TuneConfig::budget_ms`).
+    pub elapsed_ms: u64,
+    /// Every evaluated candidate, keyed by [`Candidate::key`].
+    pub explored: BTreeMap<String, ExploredPoint>,
+}
+
+impl SearchState {
+    /// Fresh state for a `(seed, fingerprint)` pair.
+    pub fn new(seed: u64, fingerprint: u64) -> Self {
+        Self { seed, fingerprint, elapsed_ms: 0, explored: BTreeMap::new() }
+    }
+
+    /// The Pareto frontier of the explored set, rebuilt from scratch
+    /// (deterministic: the explored map iterates in key order and the
+    /// frontier is insertion-order independent anyway).
+    pub fn frontier(&self) -> Frontier {
+        let mut f = Frontier::default();
+        for (key, p) in &self.explored {
+            f.insert(key, p.objectives);
+        }
+        f
+    }
+
+    /// Full JSON form, including the derived frontier (for inspection —
+    /// [`SearchState::from_value`] ignores it and re-derives).
+    pub fn to_value(&self) -> Value {
+        let mut fields = vec![("version", Value::Num(STATE_VERSION as f64))];
+        fields.extend(self.identity_fields());
+        fields.push(("elapsed_ms", Value::Num(self.elapsed_ms as f64)));
+        fields.push(("frontier", self.frontier().to_value()));
+        obj(fields)
+    }
+
+    /// JSON form *without* the elapsed-budget counter — the part of the
+    /// state that must be bit-identical between an interrupted-and-resumed
+    /// run and an uninterrupted one.
+    pub fn canonical_value(&self) -> Value {
+        let mut fields = self.identity_fields();
+        fields.push(("frontier", self.frontier().to_value()));
+        obj(fields)
+    }
+
+    fn identity_fields(&self) -> Vec<(&'static str, Value)> {
+        vec![
+            ("seed", Value::Num(self.seed as f64)),
+            ("fingerprint", Value::Str(format!("{:016x}", self.fingerprint))),
+            (
+                "explored",
+                Value::Arr(self.explored.values().map(ExploredPoint::to_value).collect()),
+            ),
+        ]
+    }
+
+    /// Parse a state file's JSON back (frontier and version fields are
+    /// informational; the explored set is authoritative).
+    pub fn from_value(v: &Value) -> Result<Self> {
+        let version = v.get("version")?.usize()?;
+        anyhow::ensure!(
+            version == STATE_VERSION,
+            "unsupported tuner state version {version} (expected {STATE_VERSION})"
+        );
+        let fingerprint = u64::from_str_radix(v.get("fingerprint")?.str()?, 16)?;
+        let mut explored = BTreeMap::new();
+        for pv in v.get("explored")?.arr()? {
+            let p = ExploredPoint::from_value(pv)?;
+            explored.insert(p.candidate.key(), p);
+        }
+        Ok(Self {
+            seed: v.get("seed")?.usize()? as u64,
+            fingerprint,
+            elapsed_ms: v.get("elapsed_ms")?.usize()? as u64,
+            explored,
+        })
+    }
+
+    /// Write the state to `path` (atomic enough for a single writer: the
+    /// file is replaced wholesale).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_value().to_json())?;
+        Ok(())
+    }
+
+    /// Load a state file written by [`SearchState::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading tuner state {}: {e}", path.display()))?;
+        Self::from_value(&Value::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(cr: f64, top1: f64) -> ExploredPoint {
+        ExploredPoint {
+            candidate: Candidate { cr, hi_bits: 8, lo_bits: 4, align: true },
+            objectives: Objectives { top1, compression: cr, storage_bytes: 1000 - (cr * 100.0) as u64 },
+        }
+    }
+
+    fn sample() -> SearchState {
+        let mut st = SearchState::new(3, 0xdeadbeefcafef00d);
+        st.elapsed_ms = 17;
+        for p in [point(0.0, 0.5), point(0.5, 0.4), point(1.0, 0.4)] {
+            st.explored.insert(p.candidate.key(), p);
+        }
+        st
+    }
+
+    #[test]
+    fn state_roundtrips_byte_identically() {
+        let st = sample();
+        let text = st.to_value().to_json();
+        let back = SearchState::from_value(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_value().to_json(), text);
+        assert_eq!(back.seed, 3);
+        assert_eq!(back.fingerprint, 0xdeadbeefcafef00d);
+        assert_eq!(back.elapsed_ms, 17);
+        assert_eq!(back.explored.len(), 3);
+    }
+
+    #[test]
+    fn canonical_value_drops_elapsed_only() {
+        let mut a = sample();
+        let mut b = sample();
+        a.elapsed_ms = 1;
+        b.elapsed_ms = 99_999;
+        assert_eq!(a.canonical_value().to_json(), b.canonical_value().to_json());
+        b.explored.remove(&point(0.5, 0.4).candidate.key());
+        assert_ne!(a.canonical_value().to_json(), b.canonical_value().to_json());
+    }
+
+    #[test]
+    fn frontier_is_derived_from_explored() {
+        let st = sample();
+        let f = st.frontier();
+        // cr=1.0 dominates cr=0.5 (same accuracy, more compression, fewer
+        // bytes); cr=0.0 survives on accuracy.
+        assert_eq!(f.len(), 2);
+        assert!(f.contains(&point(0.0, 0.5).candidate.key()));
+        assert!(f.contains(&point(1.0, 0.4).candidate.key()));
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let st = sample();
+        let path = std::env::temp_dir().join(format!("tuner-state-{}.json", std::process::id()));
+        st.save(&path).unwrap();
+        let back = SearchState::load(&path).unwrap();
+        assert_eq!(back.canonical_value().to_json(), st.canonical_value().to_json());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -23,10 +23,15 @@ use crate::util::json::{obj, Value};
 /// One benchmark measurement.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Benchmark name (the JSON record key the perf gate matches on).
     pub name: String,
+    /// Timed iterations taken (after warmup).
     pub iters: usize,
+    /// Mean wall-clock time per iteration.
     pub mean: Duration,
+    /// Sample standard deviation across iterations (0 for a single one).
     pub stddev: Duration,
+    /// Fastest observed iteration.
     pub min: Duration,
     /// Extra named scalars attached after the run via [`Bench::annotate`]
     /// (e.g. `req_per_s` / `p99_ns` for the serving benches). Emitted as
@@ -35,6 +40,7 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// Human-readable one-line summary (what [`Bench::run`] prints).
     pub fn report(&self) -> String {
         format!(
             "bench {:<42} {:>10.3} ms/iter  (±{:>7.3} ms, min {:>9.3} ms, n={})",
@@ -89,9 +95,13 @@ pub fn git_sha() -> String {
 /// Benchmark runner with a time budget per benchmark. Records every
 /// measurement it takes so the run can be emitted as JSON afterwards.
 pub struct Bench {
+    /// Untimed warmup iterations before measurement starts.
     pub warmup: usize,
+    /// Minimum timed iterations, taken even past the budget.
     pub min_iters: usize,
+    /// Hard cap on timed iterations.
     pub max_iters: usize,
+    /// Wall-clock budget per benchmark once `min_iters` is satisfied.
     pub budget: Duration,
     results: RefCell<Vec<Measurement>>,
 }

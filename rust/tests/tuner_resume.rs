@@ -1,0 +1,180 @@
+//! Tuner integration tests on the hermetic fixture (sim backend): resume
+//! bit-stability, stage-cache prefix reuse, frontier soundness, and the
+//! degenerate Table 3 sweep equivalence. All `sim_`-prefixed — they run on
+//! a bare machine with no artifacts and are counted by the CI hermetic
+//! test gate.
+
+use std::collections::BTreeSet;
+
+use reram_mpq::coordinator::{
+    CompressionPlan, EvalOpts, Executor, ModelState, ThresholdMode,
+};
+use reram_mpq::tuner::{
+    self, Axes, SearchState, TuneConfig, TuneShared, TABLE3_CRS,
+};
+use reram_mpq::xbar::MappingStrategy;
+use reram_mpq::{fixture, RunConfig};
+
+const CRS: &[f64] = &[0.0, 0.5, 1.0];
+
+fn shared(seed: u64) -> TuneShared {
+    TuneShared::from_fixture(fixture::tiny(seed), RunConfig::default())
+}
+
+fn tcfg(workers: usize) -> TuneConfig {
+    TuneConfig {
+        workers,
+        opts: EvalOpts::batches(2),
+        ..TuneConfig::default()
+    }
+}
+
+#[test]
+fn sim_tuner_resume_matches_uninterrupted() {
+    let sh = shared(11);
+    let axes = Axes::cr_axis(TABLE3_CRS, 8, 4).unwrap();
+
+    // Uninterrupted reference, two workers.
+    let mut full = SearchState::new(0, axes.fingerprint(0));
+    let out_full = tuner::run(&sh, &axes, &tcfg(2), &mut full).unwrap();
+    assert_eq!(out_full.evals, TABLE3_CRS.len());
+    assert!(!out_full.frontier.is_empty());
+
+    // Kill after 3 evals, then resume with a different worker count.
+    let mut part = SearchState::new(0, axes.fingerprint(0));
+    let cut = TuneConfig { max_evals: 3, ..tcfg(1) };
+    let out_cut = tuner::run(&sh, &axes, &cut, &mut part).unwrap();
+    assert_eq!(out_cut.evals, 3);
+    let out_resumed = tuner::run(&sh, &axes, &tcfg(2), &mut part).unwrap();
+    assert_eq!(out_resumed.evals, TABLE3_CRS.len() - 3);
+
+    // Point-for-point bit-identical (canonical form excludes elapsed_ms).
+    assert_eq!(
+        part.canonical_value().to_json(),
+        full.canonical_value().to_json()
+    );
+}
+
+#[test]
+fn sim_tuner_resume_from_disk_roundtrip() {
+    let sh = shared(12);
+    let axes = Axes::cr_axis(CRS, 8, 4).unwrap();
+
+    let mut full = SearchState::new(0, axes.fingerprint(0));
+    tuner::run(&sh, &axes, &tcfg(1), &mut full).unwrap();
+
+    // Interrupt, persist, reload from disk, resume.
+    let mut part = SearchState::new(0, axes.fingerprint(0));
+    let cut = TuneConfig { max_evals: 1, ..tcfg(1) };
+    tuner::run(&sh, &axes, &cut, &mut part).unwrap();
+    let path = std::env::temp_dir().join(format!("tuner-resume-{}.json", std::process::id()));
+    part.save(&path).unwrap();
+    let mut reloaded = SearchState::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    tuner::run(&sh, &axes, &tcfg(1), &mut reloaded).unwrap();
+
+    assert_eq!(
+        reloaded.canonical_value().to_json(),
+        full.canonical_value().to_json()
+    );
+}
+
+#[test]
+fn sim_tuner_rejects_mismatched_state() {
+    let sh = shared(13);
+    let axes = Axes::cr_axis(CRS, 8, 4).unwrap();
+    // State fingerprinted for a different space must be refused.
+    let other = Axes::cr_axis(CRS, 8, 2).unwrap();
+    let mut st = SearchState::new(0, other.fingerprint(0));
+    assert!(tuner::run(&sh, &axes, &tcfg(1), &mut st).is_err());
+}
+
+#[test]
+fn sim_tuner_reports_prefix_cache_hits() {
+    let sh = shared(14);
+    // Two knob axes over one worker: every candidate after the first reuses
+    // the worker's memoized sensitivity prefix.
+    let axes = Axes::parse("cr,bits", CRS, (8, 4)).unwrap();
+    let mut st = SearchState::new(0, axes.fingerprint(0));
+    let out = tuner::run(&sh, &axes, &tcfg(1), &mut st).unwrap();
+    assert_eq!(out.evals, axes.len());
+    assert!(
+        out.cache.sensitivity_hits > 0,
+        "expected memoized sensitivity reuse, got {:?} hits",
+        out.cache.sensitivity_hits
+    );
+    assert!(out.cache.prefix_hits() > 0);
+    // One worker computed the sensitivity scores exactly once.
+    assert_eq!(out.cache.sensitivity_runs, 1);
+}
+
+#[test]
+fn sim_tuner_frontier_is_sound_over_explored_set() {
+    let sh = shared(15);
+    let axes = Axes::parse("cr,bits", CRS, (8, 4)).unwrap();
+    let mut st = SearchState::new(1, axes.fingerprint(1)); // shuffled schedule
+    let out = tuner::run(&sh, &axes, &tcfg(2), &mut st).unwrap();
+    assert!(!out.frontier.is_empty());
+
+    let keys: BTreeSet<&str> = st.explored.keys().map(String::as_str).collect();
+    for p in out.frontier.points() {
+        // Frontier points come from the explored set...
+        assert!(keys.contains(p.key.as_str()));
+        // ...and none is dominated by anything explored.
+        for e in st.explored.values() {
+            assert!(
+                !e.objectives.dominates(&p.objectives),
+                "{} dominates frontier point {}",
+                e.candidate.key(),
+                p.key
+            );
+        }
+    }
+}
+
+#[test]
+fn sim_tuner_zero_budget_noop_then_resume_completes() {
+    let sh = shared(16);
+    let axes = Axes::cr_axis(CRS, 8, 4).unwrap();
+    let mut st = SearchState::new(0, axes.fingerprint(0));
+    let spent = TuneConfig { budget_ms: 0, ..tcfg(1) };
+    let out = tuner::run(&sh, &axes, &spent, &mut st).unwrap();
+    assert_eq!(out.evals, 0);
+    assert!(out.frontier.is_empty());
+    let out = tuner::run(&sh, &axes, &tcfg(1), &mut st).unwrap();
+    assert_eq!(out.evals, CRS.len());
+    assert_eq!(out.explored, CRS.len());
+}
+
+#[test]
+fn sim_tuner_degenerate_cr_sweep_matches_plan_chain() {
+    // sweep_cr on an existing plan must be byte-for-byte the chain the
+    // Table 3 experiment always ran.
+    let fx = fixture::tiny(17);
+    let cfg = RunConfig::default();
+    let plan = CompressionPlan::from_state(
+        ModelState {
+            exec: Executor::Sim(Default::default()),
+            model: fx.model,
+            theta: fx.theta,
+            test: fx.test,
+            calib: fx.calib,
+        },
+        cfg,
+    );
+    let opts = EvalOpts::batches(2);
+    let swept = tuner::sweep_cr(&plan, CRS, opts).unwrap();
+    for (&cr, got) in CRS.iter().zip(&swept) {
+        let want = plan
+            .clone()
+            .threshold(ThresholdMode::FixedCr(cr))
+            .cluster()
+            .align_to_capacity()
+            .map(MappingStrategy::Packed)
+            .evaluate(opts)
+            .unwrap();
+        assert_eq!(got.accuracy.top1, want.accuracy.top1);
+        assert_eq!(got.compression_ratio, want.compression_ratio);
+        assert_eq!(got.q_hi, want.q_hi);
+    }
+}
