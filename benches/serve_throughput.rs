@@ -7,8 +7,10 @@
 //!
 //! Emits `BENCH_serve_throughput.json`; each record carries `req_per_s`,
 //! `p50_ns`, and `p99_ns` extras next to the standard mean/stddev fields,
-//! so the perf pipeline sees request-rate and tail latency, not just
-//! wall-clock per iteration.
+//! plus the per-connection tail spread (`conn_p99_min_ns` /
+//! `conn_p99_max_ns`) and the deepest admission queue the server reported
+//! (`max_queue_depth`), so the perf pipeline sees request-rate, tail
+//! latency, and fairness/backpressure, not just wall-clock per iteration.
 
 use std::net::TcpListener;
 use std::time::Duration;
@@ -64,6 +66,11 @@ fn main() -> reram_mpq::Result<()> {
             last = Some(report);
         });
         if let Some(report) = last {
+            // Per-connection tail spread + deepest queue the server ever
+            // reported back: a fairness/backpressure signal next to the
+            // aggregate percentiles.
+            let conn_p99_min = report.per_conn.iter().map(|c| c.p99_us).min().unwrap_or(0);
+            let conn_p99_max = report.per_conn.iter().map(|c| c.p99_us).max().unwrap_or(0);
             b.annotate(
                 &name,
                 &[
@@ -71,14 +78,20 @@ fn main() -> reram_mpq::Result<()> {
                     ("p50_ns", report.p50_us as f64 * 1e3),
                     ("p99_ns", report.p99_us as f64 * 1e3),
                     ("rejected", report.rejected as f64),
+                    ("conn_p99_min_ns", conn_p99_min as f64 * 1e3),
+                    ("conn_p99_max_ns", conn_p99_max as f64 * 1e3),
+                    ("max_queue_depth", report.max_queue_depth as f64),
                 ],
             );
             println!(
-                "  {conns} conns: {:.1} req/s, p50 {} us, p99 {} us, rejected {}",
+                "  {conns} conns: {:.1} req/s, p50 {} us, p99 {} us (per-conn p99 {}..{} us), rejected {}, max queue depth {}",
                 report.req_per_s(),
                 report.p50_us,
                 report.p99_us,
-                report.rejected
+                conn_p99_min,
+                conn_p99_max,
+                report.rejected,
+                report.max_queue_depth
             );
         }
     }

@@ -1,0 +1,137 @@
+//! Bench: tracing overhead — the programmed crossbar walk and a serve
+//! round-trip, each measured with the span recorder off (the default) and
+//! on. The trace-off rows are the gated ones: tracing is compiled in
+//! everywhere, so its disabled guards sit on the hot path of every build,
+//! and the `baseline.json` entry for the walk carries `max_regress 0.02`
+//! (the default-off path may cost at most 2%). Fully hermetic:
+//!
+//!     cargo bench --bench trace_overhead
+//!
+//! Emits `BENCH_trace_overhead.json`; each trace-on record carries an
+//! `overhead_frac` annotation ((on − off) / off mean) so the perf pipeline
+//! sees the enabled cost as a ratio, not just absolute nanoseconds.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use reram_mpq::backend::{SimXbar, SimXbarConfig, StripPrecision};
+use reram_mpq::coordinator::{CompressionPlan, EngineConfig, Executor, ModelState};
+use reram_mpq::quant::{self, BitMap};
+use reram_mpq::serve::{BatchPolicy, ServeClient, ServeConfig, Server};
+use reram_mpq::util::bench::Bench;
+use reram_mpq::util::rng::Rng;
+use reram_mpq::{fixture, trace, RunConfig};
+
+const WALK_OFF: &str = "xbar programmed walk, trace off (tiny widest layer)";
+const WALK_ON: &str = "xbar programmed walk, trace on (tiny widest layer)";
+const SERVE_OFF: &str = "serve round-trip, trace off (tcp loopback)";
+const SERVE_ON: &str = "serve round-trip, trace on (tcp loopback)";
+
+fn main() -> reram_mpq::Result<()> {
+    let b = Bench::from_env();
+
+    // --- programmed 4b-ADC packed walk (same workload as xbar_programmed)
+    let fx = fixture::tiny(1);
+    let model = &fx.model;
+    let mut cfg = RunConfig::default();
+    cfg.quant.device_sigma = 0.0;
+    let bits: Vec<u8> = (0..model.num_strips())
+        .map(|i| if i % 2 == 0 { 8 } else { 4 })
+        .collect();
+    let qm = quant::apply(model, &fx.theta, &BitMap { bits }, &cfg.quant);
+    let sp = StripPrecision::from_quantized(&qm);
+    let layer = model
+        .conv_layers()
+        .iter()
+        .max_by_key(|l| l.k * l.k * l.d)
+        .expect("fixture has conv layers")
+        .clone();
+    let mut rng = Rng::seed_from_u64(7);
+    let t = 16usize;
+    let patches: Vec<f32> =
+        (0..t * layer.k * layer.k * layer.d).map(|_| rng.normal()).collect();
+
+    let sim = SimXbar::new(SimXbarConfig::default().with_threads(1).with_adc(4));
+    let _ = sim
+        .conv_bitserial(model, &layer, &qm.theta, &patches, t, &sp)
+        .expect("conv");
+
+    // Trace-off rows run FIRST: `trace::enable()` is process-global and the
+    // off rows must measure the never-enabled fast path (one relaxed load).
+    b.run(WALK_OFF, || {
+        sim.conv_bitserial(model, &layer, &qm.theta, &patches, t, &sp)
+            .expect("conv")
+    });
+
+    trace::enable();
+    b.run(WALK_ON, || {
+        let out = sim
+            .conv_bitserial(model, &layer, &qm.theta, &patches, t, &sp)
+            .expect("conv");
+        // Keep the recorder's buffers bounded so the row measures span
+        // capture, not an ever-growing drain backlog.
+        trace::flush_thread();
+        let _ = trace::drain();
+        out
+    });
+    trace::disable();
+    let _ = trace::drain();
+
+    // --- serve round-trip over TCP loopback (1 connection, small batch)
+    let fx = fixture::tiny(5);
+    let elems = 32 * 32 * 3;
+    let image = fx.test.x.data()[..elems].to_vec();
+    let plan = CompressionPlan::from_state(
+        ModelState {
+            exec: Executor::Sim(SimXbarConfig::default()),
+            model: fx.model,
+            theta: fx.theta,
+            test: fx.test,
+            calib: fx.calib,
+        },
+        RunConfig::default(),
+    );
+    let handle = plan.deploy_fp32(EngineConfig::default().with_workers(2))?;
+    let server = Server::start(
+        TcpListener::bind("127.0.0.1:0")?,
+        handle,
+        ServeConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                flush_after: Duration::from_millis(1),
+                queue: 512,
+            },
+            ..ServeConfig::default()
+        },
+    )?;
+    let addr = server.local_addr().to_string();
+    let mut client = ServeClient::connect(&addr)?;
+    let _ = client.classify(image.clone())?; // warm the connection + engine
+
+    b.run(SERVE_OFF, || client.classify(image.clone()).expect("classify"));
+
+    trace::enable();
+    b.run(SERVE_ON, || {
+        let r = client.classify(image.clone()).expect("classify");
+        let _ = trace::drain();
+        r
+    });
+    trace::disable();
+    let _ = trace::drain();
+
+    // Overhead ratios for the JSON + console.
+    let ms = b.measurements();
+    let mean = |name: &str| ms.iter().find(|m| m.name == name).map(|m| m.mean.as_secs_f64());
+    for (off, on) in [(WALK_OFF, WALK_ON), (SERVE_OFF, SERVE_ON)] {
+        if let (Some(off_s), Some(on_s)) = (mean(off), mean(on)) {
+            if off_s > 0.0 {
+                let frac = (on_s - off_s) / off_s;
+                b.annotate(on, &[("overhead_frac", frac)]);
+                println!("  {on}: {:+.2}% vs trace off", frac * 100.0);
+            }
+        }
+    }
+
+    b.emit_json("trace_overhead")?;
+    Ok(())
+}

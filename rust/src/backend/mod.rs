@@ -88,10 +88,12 @@
 //! `tests/properties.rs`.
 
 pub mod nn;
+pub mod profile;
 pub mod programmed;
 pub mod scratch;
 pub mod simxbar;
 
+pub use profile::{WalkProfile, WalkProfileAtomic};
 pub use programmed::{ExecMode, ProgrammedLayer, ProgrammedModel, ProgrammedStrip, StripStore};
 pub use scratch::{ConvScratch, NnScratch, Scratch};
 pub use simxbar::{SimXbar, SimXbarConfig, SimdMode, StripPrecision};
@@ -138,6 +140,14 @@ pub trait ExecBackend {
     /// check, so `serve` stats expose the deploy-time cost.
     fn program_ns(&self) -> u64 {
         0
+    }
+
+    /// Cumulative crossbar-walk profiling counters for this backend
+    /// instance ([`WalkProfile`]), or `None` for backends without a
+    /// programmed walk (pjrt). Engine workers snapshot this after every
+    /// batch and fold the delta into the shared metrics.
+    fn walk_profile(&self) -> Option<WalkProfile> {
+        None
     }
 }
 

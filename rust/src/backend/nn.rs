@@ -337,6 +337,7 @@ fn conv_layer<C: ConvExec + ?Sized>(
         layer.name,
         layer.d
     );
+    let _span = crate::trace::span_with(|| format!("layer:{}", layer.name));
     let (oh, ow) = im2col_into(x, b, h, w, c, layer.k, stride, patches);
     conv.conv(model, layer, theta, patches, b * oh * ow, cs, out)?;
     Ok((oh, ow))

@@ -1,0 +1,207 @@
+//! Always-on profiling counters for the programmed crossbar walk.
+//!
+//! Unlike [`crate::trace`] spans (default-off, per-request), these counters
+//! are **always live**: they are accumulated arithmetically once per conv
+//! call — a handful of relaxed `fetch_add`s derived from the programmed
+//! layer's geometry — never inside the per-sample/per-word inner loops, so
+//! they cost nothing measurable and cannot perturb the bit-identical walk.
+//!
+//! The simulator backend owns a [`WalkProfileAtomic`] twin; engine workers
+//! snapshot it after every batch and push the delta into
+//! [`crate::coordinator::Metrics`], where the aggregate surfaces in the
+//! `serve` stats (text and `StatsJson`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Aggregated counters describing what the programmed walk actually did:
+/// which strip stores ran, how many DAC phase steps and SIMD-kernel
+/// dispatches they cost, how often the next-strip prefetch fired, and the
+/// scratch-arena high-water mark.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WalkProfile {
+    /// Programmed conv calls (one per conv layer per batch).
+    pub conv_calls: u64,
+    /// Programmed strips visited across all calls.
+    pub strips_walked: u64,
+    /// Strips served from the `Exact` (f32 codes) store.
+    pub exact_strips: u64,
+    /// Strips served from the `Packed` (u64 bit-plane) store.
+    pub packed_strips: u64,
+    /// Strips served from the `Analog` (noisy conductance) store.
+    pub analog_strips: u64,
+    /// DAC input-bit phase steps executed (per sample × segment × phase).
+    pub phase_steps: u64,
+    /// Packed-current evaluations dispatched to a vector kernel
+    /// (AVX2/NEON).
+    pub kernel_simd: u64,
+    /// Packed-current evaluations dispatched to the scalar u64 kernel.
+    pub kernel_scalar: u64,
+    /// Next-strip prefetch stages issued by the blocked walk.
+    pub prefetch_staged: u64,
+    /// High-water mark of the per-worker scratch arena, in bytes.
+    pub scratch_high_water_bytes: u64,
+}
+
+impl WalkProfile {
+    /// Counter-wise difference `self - earlier` (saturating), with the
+    /// high-water mark carried over as a maximum rather than subtracted.
+    /// Workers use this to push per-batch deltas into shared metrics.
+    pub fn delta(&self, earlier: &WalkProfile) -> WalkProfile {
+        WalkProfile {
+            conv_calls: self.conv_calls.saturating_sub(earlier.conv_calls),
+            strips_walked: self.strips_walked.saturating_sub(earlier.strips_walked),
+            exact_strips: self.exact_strips.saturating_sub(earlier.exact_strips),
+            packed_strips: self.packed_strips.saturating_sub(earlier.packed_strips),
+            analog_strips: self.analog_strips.saturating_sub(earlier.analog_strips),
+            phase_steps: self.phase_steps.saturating_sub(earlier.phase_steps),
+            kernel_simd: self.kernel_simd.saturating_sub(earlier.kernel_simd),
+            kernel_scalar: self.kernel_scalar.saturating_sub(earlier.kernel_scalar),
+            prefetch_staged: self.prefetch_staged.saturating_sub(earlier.prefetch_staged),
+            scratch_high_water_bytes: self.scratch_high_water_bytes,
+        }
+    }
+
+    /// Counter-wise sum (high-water mark merged as a maximum).
+    pub fn absorb(&mut self, other: &WalkProfile) {
+        self.conv_calls += other.conv_calls;
+        self.strips_walked += other.strips_walked;
+        self.exact_strips += other.exact_strips;
+        self.packed_strips += other.packed_strips;
+        self.analog_strips += other.analog_strips;
+        self.phase_steps += other.phase_steps;
+        self.kernel_simd += other.kernel_simd;
+        self.kernel_scalar += other.kernel_scalar;
+        self.prefetch_staged += other.prefetch_staged;
+        self.scratch_high_water_bytes =
+            self.scratch_high_water_bytes.max(other.scratch_high_water_bytes);
+    }
+
+    /// The profile as a JSON object (for `StatsJson` and `--json` outputs).
+    pub fn to_value(&self) -> crate::util::json::Value {
+        use crate::util::json::{obj, Value};
+        let n = |v: u64| Value::Num(v as f64);
+        obj(vec![
+            ("conv_calls", n(self.conv_calls)),
+            ("strips_walked", n(self.strips_walked)),
+            ("exact_strips", n(self.exact_strips)),
+            ("packed_strips", n(self.packed_strips)),
+            ("analog_strips", n(self.analog_strips)),
+            ("phase_steps", n(self.phase_steps)),
+            ("kernel_simd", n(self.kernel_simd)),
+            ("kernel_scalar", n(self.kernel_scalar)),
+            ("prefetch_staged", n(self.prefetch_staged)),
+            ("scratch_high_water_bytes", n(self.scratch_high_water_bytes)),
+        ])
+    }
+}
+
+/// Shared-state twin of [`WalkProfile`]: relaxed atomics bumped once per
+/// conv call by the backend, snapshot by whoever reports.
+#[derive(Debug, Default)]
+pub struct WalkProfileAtomic {
+    conv_calls: AtomicU64,
+    strips_walked: AtomicU64,
+    exact_strips: AtomicU64,
+    packed_strips: AtomicU64,
+    analog_strips: AtomicU64,
+    phase_steps: AtomicU64,
+    kernel_simd: AtomicU64,
+    kernel_scalar: AtomicU64,
+    prefetch_staged: AtomicU64,
+    scratch_high_water_bytes: AtomicU64,
+}
+
+impl WalkProfileAtomic {
+    /// Add a per-call (or per-batch) delta. The high-water field is merged
+    /// with `fetch_max`, everything else with `fetch_add`.
+    pub fn add(&self, d: &WalkProfile) {
+        let r = Ordering::Relaxed;
+        self.conv_calls.fetch_add(d.conv_calls, r);
+        self.strips_walked.fetch_add(d.strips_walked, r);
+        self.exact_strips.fetch_add(d.exact_strips, r);
+        self.packed_strips.fetch_add(d.packed_strips, r);
+        self.analog_strips.fetch_add(d.analog_strips, r);
+        self.phase_steps.fetch_add(d.phase_steps, r);
+        self.kernel_simd.fetch_add(d.kernel_simd, r);
+        self.kernel_scalar.fetch_add(d.kernel_scalar, r);
+        self.prefetch_staged.fetch_add(d.prefetch_staged, r);
+        self.scratch_high_water_bytes.fetch_max(d.scratch_high_water_bytes, r);
+    }
+
+    /// Record a new scratch-arena size observation.
+    pub fn observe_scratch_bytes(&self, bytes: u64) {
+        self.scratch_high_water_bytes.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    /// Copy the current counters out.
+    pub fn snapshot(&self) -> WalkProfile {
+        let r = Ordering::Relaxed;
+        WalkProfile {
+            conv_calls: self.conv_calls.load(r),
+            strips_walked: self.strips_walked.load(r),
+            exact_strips: self.exact_strips.load(r),
+            packed_strips: self.packed_strips.load(r),
+            analog_strips: self.analog_strips.load(r),
+            phase_steps: self.phase_steps.load(r),
+            kernel_simd: self.kernel_simd.load(r),
+            kernel_scalar: self.kernel_scalar.load(r),
+            prefetch_staged: self.prefetch_staged.load(r),
+            scratch_high_water_bytes: self.scratch_high_water_bytes.load(r),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(base: u64) -> WalkProfile {
+        WalkProfile {
+            conv_calls: base,
+            strips_walked: base * 2,
+            exact_strips: base,
+            packed_strips: base,
+            analog_strips: 0,
+            phase_steps: base * 8,
+            kernel_simd: base * 4,
+            kernel_scalar: base * 4,
+            prefetch_staged: base,
+            scratch_high_water_bytes: base * 100,
+        }
+    }
+
+    #[test]
+    fn delta_subtracts_counters_and_keeps_high_water() {
+        let early = sample(2);
+        let late = sample(5);
+        let d = late.delta(&early);
+        assert_eq!(d.conv_calls, 3);
+        assert_eq!(d.strips_walked, 6);
+        assert_eq!(d.phase_steps, 24);
+        assert_eq!(d.scratch_high_water_bytes, 500);
+    }
+
+    #[test]
+    fn atomic_twin_accumulates_and_maxes_high_water() {
+        let a = WalkProfileAtomic::default();
+        a.add(&sample(1));
+        a.add(&sample(3));
+        a.observe_scratch_bytes(50);
+        let s = a.snapshot();
+        assert_eq!(s.conv_calls, 4);
+        assert_eq!(s.kernel_simd, 16);
+        // max(100, 300, 50), not a sum
+        assert_eq!(s.scratch_high_water_bytes, 300);
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_maxes_high_water() {
+        let mut a = sample(1);
+        a.absorb(&sample(2));
+        assert_eq!(a.conv_calls, 3);
+        assert_eq!(a.prefetch_staged, 3);
+        assert_eq!(a.scratch_high_water_bytes, 200);
+        let v = a.to_value();
+        assert_eq!(v.get("conv_calls").unwrap().num().unwrap(), 3.0);
+    }
+}

@@ -60,6 +60,28 @@ pub struct Scratch {
     pub conv: ConvScratch,
 }
 
+impl Scratch {
+    /// Total bytes currently reserved by the arena (capacities, not
+    /// lengths). This is the walk profile's high-water observable, and —
+    /// because capacities only grow — a steady value across repeated
+    /// forward passes is exactly the zero-alloc invariant the tests pin.
+    pub fn bytes(&self) -> u64 {
+        let f32s = self.nn.act.capacity()
+            + self.nn.y.capacity()
+            + self.nn.y1.capacity()
+            + self.nn.y2.capacity()
+            + self.nn.sh.capacity()
+            + self.nn.patches.capacity()
+            + self.conv.sa.capacity()
+            + self.conv.parts.iter().map(|p| p.capacity()).sum::<usize>();
+        let bytes = f32s * std::mem::size_of::<f32>()
+            + self.nn.pooled.capacity() * std::mem::size_of::<f64>()
+            + self.conv.codes_a.capacity() * std::mem::size_of::<i32>()
+            + self.conv.a_planes.capacity() * std::mem::size_of::<u64>();
+        bytes as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,5 +100,20 @@ mod tests {
         s.conv.codes_a.resize(100, 0);
         assert!(s.nn.act.capacity() >= cap_act);
         assert!(s.conv.codes_a.capacity() >= cap_codes);
+    }
+
+    #[test]
+    fn bytes_counts_capacity_and_never_shrinks_on_reuse() {
+        let mut s = Scratch::default();
+        assert_eq!(s.bytes(), 0);
+        s.nn.act.resize(1024, 0.0);
+        s.conv.a_planes.resize(64, 0);
+        s.conv.parts.push(vec![0.0f32; 128]);
+        let high = s.bytes();
+        assert!(high >= (1024 * 4 + 64 * 8 + 128 * 4) as u64);
+        // the reuse discipline keeps the arena at its high-water mark
+        s.nn.act.clear();
+        s.nn.act.resize(10, 0.0);
+        assert_eq!(s.bytes(), high);
     }
 }

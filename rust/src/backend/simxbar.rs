@@ -81,6 +81,7 @@ use crate::backend::programmed::{
     pack_weight_planes_into, packed_rows_pad, segments, words_of, ExecMode, ProgrammedLayer,
     ProgrammedModel, ProgrammedStrip, StripStore,
 };
+use crate::backend::profile::{WalkProfile, WalkProfileAtomic};
 use crate::backend::scratch::{ConvScratch, Scratch};
 use crate::backend::{ExecBackend, FwdKind};
 use crate::faults::{NoiseStream, Scenario};
@@ -738,6 +739,10 @@ pub struct SimXbar {
     /// Per-instance scratch arena for the zero-alloc inference path (one
     /// backend instance per engine worker, so the lock is uncontended).
     scratch: Mutex<Scratch>,
+    /// Always-on walk profiling counters, bumped arithmetically once per
+    /// conv call (never in the per-sample loops) and surfaced through
+    /// [`ExecBackend::walk_profile`].
+    walk: WalkProfileAtomic,
 }
 
 /// FNV-1a over the programmed artifact's inputs: model identity, parameter
@@ -804,6 +809,7 @@ impl SimXbar {
             spec: Mutex::new(None),
             programmed: Mutex::new(None),
             scratch: Mutex::new(Scratch::default()),
+            walk: WalkProfileAtomic::default(),
         }
     }
 
@@ -888,6 +894,52 @@ impl SimXbar {
         Ok(p)
     }
 
+    /// Accumulate the always-on walk-profile counters for one programmed
+    /// conv call. Everything is derived arithmetically from the layer's
+    /// live-strip index — O(live strips) per call, nothing in the
+    /// per-sample/per-word inner loops — so the counters cannot perturb
+    /// the bit-identical walk and cost nothing measurable.
+    fn profile_walk(&self, pl: &ProgrammedLayer, t: usize, phases: usize, kern: SimdKernel) {
+        let (mut exact, mut packed, mut analog) = (0u64, 0u64, 0u64);
+        let mut staged_per_block = 0u64;
+        let mut phase_steps = 0u64;
+        let mut kern_calls = 0u64;
+        // per packed/analog strip, the walk runs t × segs × phases steps
+        let steps = t as u64 * pl.segs.len() as u64 * phases as u64;
+        for &(s0, slen) in &pl.chan {
+            let strips = &pl.strips[s0 as usize..s0 as usize + slen as usize];
+            staged_per_block += (slen as u64).saturating_sub(1);
+            for s in strips {
+                match &s.store {
+                    StripStore::Exact { .. } => exact += 1,
+                    StripStore::Packed { .. } => {
+                        packed += 1;
+                        phase_steps += steps;
+                        kern_calls += steps;
+                    }
+                    StripStore::Analog { .. } => {
+                        analog += 1;
+                        phase_steps += steps;
+                    }
+                }
+            }
+        }
+        let simd = !matches!(kern, SimdKernel::Scalar);
+        self.walk.add(&WalkProfile {
+            conv_calls: 1,
+            strips_walked: exact + packed + analog,
+            exact_strips: exact,
+            packed_strips: packed,
+            analog_strips: analog,
+            phase_steps,
+            kernel_simd: if simd { kern_calls } else { 0 },
+            kernel_scalar: if simd { 0 } else { kern_calls },
+            // staging fires once per strip-with-successor per TI block
+            prefetch_staged: staged_per_block * t.div_ceil(TI_BLOCK) as u64,
+            scratch_high_water_bytes: 0,
+        });
+    }
+
     /// Effective shard count for a layer with `n` output channels.
     fn effective_threads(&self, n: usize) -> usize {
         let req = if self.cfg.threads == 0 {
@@ -931,6 +983,7 @@ impl SimXbar {
         cs: &mut ConvScratch,
         out: &mut Vec<f32>,
     ) -> Result<()> {
+        let _span = crate::trace::span("xbar.conv");
         let pl = prog
             .layers
             .get(layer.index)
@@ -968,6 +1021,7 @@ impl SimXbar {
         // Resolve the SIMD kernel once per conv call (runtime detection is
         // cached); every shard dispatches to the same kernel.
         let kern = simd_kernel(cfg);
+        self.profile_walk(pl, t, phases, kern);
         out.clear();
         out.resize(t * n, 0.0);
         let threads = self.effective_threads(n);
@@ -1520,13 +1574,15 @@ impl ExecBackend for SimXbar {
             None => None,
         };
         let mut scratch = self.scratch.lock().unwrap();
-        match prog.as_deref() {
+        let out = match prog.as_deref() {
             Some(p) => {
                 let exec = ProgrammedConv { sim: self, prog: p };
                 nn::forward(model, &spec, theta.data(), x, &exec, &mut scratch)
             }
             None => nn::forward(model, &spec, theta.data(), x, &ExactConv, &mut scratch),
-        }
+        };
+        self.walk.observe_scratch_bytes(scratch.bytes());
+        out
     }
 
     fn ready_check(&self, model: &ModelInfo, theta: &Tensor) -> Result<()> {
@@ -1552,6 +1608,10 @@ impl ExecBackend for SimXbar {
             .as_ref()
             .map(|(_, p)| p.program_ns)
             .unwrap_or(0)
+    }
+
+    fn walk_profile(&self) -> Option<WalkProfile> {
+        Some(self.walk.snapshot())
     }
 }
 

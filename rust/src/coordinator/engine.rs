@@ -436,7 +436,11 @@ impl ShardedEngine {
                 // Batches arrive until the dispatcher drops this queue; each
                 // is answered in full — successes per request, failures with
                 // typed BatchError replies (no silently dropped channels).
+                let mut last_walk = crate::backend::WalkProfile::default();
                 while let Ok(mut batch) = brx.recv() {
+                    let mut span = crate::trace::span("worker.batch");
+                    span.tag("worker", || w.to_string());
+                    span.tag("size", || batch.len().to_string());
                     if let Err(e) = worker.run_batch(&mut batch, &metrics) {
                         crate::error!("batch failed on worker {w}: {e}");
                         metrics.observe_batch_failure(batch.len());
@@ -445,6 +449,15 @@ impl ShardedEngine {
                             let _ = req.reply.send(Err(err.clone()));
                         }
                     }
+                    drop(span);
+                    // Fold this batch's crossbar-walk counters into the
+                    // shared metrics (the backend keeps a cumulative
+                    // profile; the worker pushes deltas).
+                    if let Some(now) = worker.backend.walk_profile() {
+                        metrics.add_walk(&now.delta(&last_walk));
+                        last_walk = now;
+                    }
+                    crate::trace::flush_thread();
                 }
             });
         }
@@ -504,7 +517,12 @@ impl ShardedEngine {
                     }
                 }
                 let batch = std::mem::replace(&mut pending, Vec::with_capacity(batch_size));
-                dispatch(&batch_txs, &mut rr, batch, &metrics);
+                {
+                    let mut span = crate::trace::span("engine.dispatch");
+                    span.tag("size", || batch.len().to_string());
+                    dispatch(&batch_txs, &mut rr, batch, &metrics);
+                }
+                crate::trace::flush_thread();
             }
             // Dropping the worker queues ends the worker loops once they
             // finish what was dispatched; every accepted request has been
@@ -578,7 +596,10 @@ impl Worker {
             x[i * self.image_elems..(i + 1) * self.image_elems].copy_from_slice(&req.image);
         }
         let xt = Tensor::new(vec![self.batch, 32, 32, 3], x);
-        let logits = self.backend.forward(&self.model, FwdKind::Serve, &self.theta, &xt)?;
+        let logits = {
+            let _span = crate::trace::span("backend.forward");
+            self.backend.forward(&self.model, FwdKind::Serve, &self.theta, &xt)?
+        };
         let k = logits.shape()[1];
 
         let now = Instant::now();
@@ -653,6 +674,21 @@ mod tests {
         // And the programmed engine still answers requests.
         let r = handle.classify(vec![0.1; 32 * 32 * 3]).unwrap();
         assert_eq!(r.logits.len(), 10);
+        // The worker folds its crossbar walk profile into the metrics
+        // right after the batch (replies land first — poll briefly).
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let walk = loop {
+            let walk = handle.metrics.snapshot().walk;
+            if walk.conv_calls > 0 || Instant::now() >= deadline {
+                break walk;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        assert!(walk.conv_calls > 0, "programmed conv calls profiled");
+        assert!(walk.strips_walked > 0);
+        assert!(walk.packed_strips > 0, "quantized deployment walks packed strips");
+        assert!(walk.kernel_simd + walk.kernel_scalar > 0);
+        assert!(walk.scratch_high_water_bytes > 0);
     }
 
     #[test]

@@ -21,11 +21,14 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::backend::{WalkProfile, WalkProfileAtomic};
+use crate::util::json::{obj, Value};
+
 /// Number of log2 latency buckets. 64 covers the entire `u64` microsecond
 /// range (bucket 63 is `[2^63, u64::MAX]`), so every observation is
 /// recorded — but a percentile landing in bucket 63 has no finite bucket
 /// edge to report and is clamped to [`LATENCY_SATURATION_US`].
-const HIST_BUCKETS: usize = 64;
+pub const HIST_BUCKETS: usize = 64;
 
 /// Clamp value reported for percentiles that land in the open-ended top
 /// bucket (`[2^63, u64::MAX]` µs). A reported latency equal to this value
@@ -109,6 +112,16 @@ pub struct Metrics {
     /// Workers that completed their deploy-time programming phase (the
     /// engine records one observation per worker, before readiness).
     programmed_workers: AtomicU64,
+    /// Requests refused because the admission queue was full.
+    rejected_queue_full: AtomicU64,
+    /// Requests refused because the frame failed to decode (protocol
+    /// error, wrong image size).
+    rejected_decode: AtomicU64,
+    /// Requests refused because the batcher was already shut down.
+    rejected_shutdown: AtomicU64,
+    /// Aggregated crossbar walk-profile counters (engine workers push
+    /// per-batch deltas from their backend's [`WalkProfile`]).
+    walk: WalkProfileAtomic,
     /// Description of the deployed fault scenario + placement mode (set
     /// once by the engine at startup; `None` = fault-free). Kept out of
     /// [`Snapshot`] so the snapshot stays `Copy`.
@@ -129,6 +142,10 @@ impl Default for Metrics {
             program_ns_total: AtomicU64::new(0),
             program_ns_max: AtomicU64::new(0),
             programmed_workers: AtomicU64::new(0),
+            rejected_queue_full: AtomicU64::new(0),
+            rejected_decode: AtomicU64::new(0),
+            rejected_shutdown: AtomicU64::new(0),
+            walk: WalkProfileAtomic::default(),
             scenario: Mutex::new(None),
         }
     }
@@ -167,6 +184,21 @@ pub struct Snapshot {
     pub program_ns_mean: f64,
     /// Slowest worker's programming nanoseconds.
     pub program_ns_max: u64,
+    /// Requests refused because the admission queue was full.
+    pub rejected_queue_full: u64,
+    /// Requests refused because the frame failed to decode.
+    pub rejected_decode: u64,
+    /// Requests refused because the batcher was already shut down.
+    pub rejected_shutdown: u64,
+    /// Aggregated crossbar walk-profile counters.
+    pub walk: WalkProfile,
+}
+
+impl Snapshot {
+    /// All rejections, whatever the reason (the pre-split single counter).
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected_queue_full + self.rejected_decode + self.rejected_shutdown
+    }
 }
 
 impl Metrics {
@@ -199,6 +231,28 @@ impl Metrics {
         self.program_ns_total.fetch_add(ns, Ordering::Relaxed);
         self.program_ns_max.fetch_max(ns, Ordering::Relaxed);
         self.programmed_workers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request refused because the admission queue was full.
+    pub fn observe_rejected_queue_full(&self) {
+        self.rejected_queue_full.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request refused because its frame failed to decode (protocol
+    /// error or wrong image size).
+    pub fn observe_rejected_decode(&self) {
+        self.rejected_decode.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request refused because the batcher was already shut down.
+    pub fn observe_rejected_shutdown(&self) {
+        self.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold a crossbar walk-profile delta in (engine workers call this
+    /// once per batch with the change since their last snapshot).
+    pub fn add_walk(&self, delta: &WalkProfile) {
+        self.walk.add(delta);
     }
 
     /// Record the deployed fault scenario description (the engine sets it
@@ -250,7 +304,105 @@ impl Metrics {
                 self.program_ns_total.load(Ordering::Relaxed) as f64 / workers as f64
             },
             program_ns_max: self.program_ns_max.load(Ordering::Relaxed),
+            rejected_queue_full: self.rejected_queue_full.load(Ordering::Relaxed),
+            rejected_decode: self.rejected_decode.load(Ordering::Relaxed),
+            rejected_shutdown: self.rejected_shutdown.load(Ordering::Relaxed),
+            walk: self.walk.snapshot(),
         }
+    }
+
+    /// The raw log2 latency histogram counts (bucket `k` covers
+    /// `[2^k, 2^(k+1))` µs; see the module docs for the edge buckets).
+    pub fn hist_counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|k| self.hist[k].load(Ordering::Relaxed))
+    }
+
+    /// Merge another metrics instance into this one: counters and the
+    /// histogram add bucket-wise, maxima merge as maxima, and the walk
+    /// profile absorbs. The scenario description is kept unless unset here.
+    /// This is how per-shard or per-process serve stats fold into one view,
+    /// and the merge the histogram tests pin down: merged percentiles stay
+    /// monotone and every bucket is the exact sum of its inputs.
+    pub fn absorb(&self, other: &Metrics) {
+        let r = Ordering::Relaxed;
+        self.requests.fetch_add(other.requests.load(r), r);
+        self.batches.fetch_add(other.batches.load(r), r);
+        self.batched_items.fetch_add(other.batched_items.load(r), r);
+        self.failed_batches.fetch_add(other.failed_batches.load(r), r);
+        self.failed_requests.fetch_add(other.failed_requests.load(r), r);
+        self.latency_us_sum.fetch_add(other.latency_us_sum.load(r), r);
+        self.latency_us_max.fetch_max(other.latency_us_max.load(r), r);
+        for (dst, src) in self.hist.iter().zip(other.hist.iter()) {
+            dst.fetch_add(src.load(r), r);
+        }
+        self.program_ns_total.fetch_add(other.program_ns_total.load(r), r);
+        self.program_ns_max.fetch_max(other.program_ns_max.load(r), r);
+        self.programmed_workers.fetch_add(other.programmed_workers.load(r), r);
+        self.rejected_queue_full.fetch_add(other.rejected_queue_full.load(r), r);
+        self.rejected_decode.fetch_add(other.rejected_decode.load(r), r);
+        self.rejected_shutdown.fetch_add(other.rejected_shutdown.load(r), r);
+        self.walk.add(&other.walk.snapshot());
+        let mut mine = self.scenario.lock().unwrap();
+        if mine.is_none() {
+            mine.clone_from(&other.scenario.lock().unwrap());
+        }
+    }
+
+    /// The complete machine-readable snapshot as a JSON value: engine
+    /// counters, latency percentiles, raw histogram buckets, program cost,
+    /// rejected-by-reason breakdown, scenario, and the walk profile. The
+    /// server wraps this with its connection/batcher objects to answer
+    /// `StatsJsonReq`.
+    pub fn stats_value(&self) -> Value {
+        let s = self.snapshot();
+        let n = |v: u64| Value::Num(v as f64);
+        obj(vec![
+            (
+                "engine",
+                obj(vec![
+                    ("requests", n(s.requests)),
+                    ("batches", n(s.batches)),
+                    ("failed_batches", n(s.failed_batches)),
+                    ("failed_requests", n(s.failed_requests)),
+                    ("mean_batch_fill", Value::Num(s.mean_batch_fill)),
+                    (
+                        "latency",
+                        obj(vec![
+                            ("mean_batch_us", Value::Num(s.mean_latency_us)),
+                            ("max_us", n(s.max_latency_us)),
+                            ("observed_requests", n(s.observed_requests)),
+                            ("p50_us", n(s.p50_latency_us)),
+                            ("p95_us", n(s.p95_latency_us)),
+                            ("p99_us", n(s.p99_latency_us)),
+                            ("saturated", Value::Bool(s.latency_saturated)),
+                        ]),
+                    ),
+                ]),
+            ),
+            (
+                "rejected",
+                obj(vec![
+                    ("queue_full", n(s.rejected_queue_full)),
+                    ("decode", n(s.rejected_decode)),
+                    ("shutdown", n(s.rejected_shutdown)),
+                    ("total", n(s.rejected_total())),
+                ]),
+            ),
+            (
+                "program",
+                obj(vec![
+                    ("workers", n(s.programmed_workers)),
+                    ("ns_mean", Value::Num(s.program_ns_mean)),
+                    ("ns_max", n(s.program_ns_max)),
+                ]),
+            ),
+            ("scenario", Value::Str(self.scenario_desc())),
+            ("walk_profile", s.walk.to_value()),
+            (
+                "hist",
+                Value::Arr(self.hist_counts().iter().map(|&c| Value::Num(c as f64)).collect()),
+            ),
+        ])
     }
 }
 
@@ -386,6 +538,103 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.p50_latency_us, 1);
         assert!(!s.latency_saturated);
+    }
+
+    #[test]
+    fn absorb_merges_histograms_bucket_wise() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        // a: fast requests (buckets 0 and 3); b: slow ones (buckets 6, 10)
+        for _ in 0..4 {
+            a.observe_latency(1);
+        }
+        a.observe_latency(9);
+        b.observe_latency(100);
+        b.observe_latency(100);
+        b.observe_latency(1500);
+        let ha = a.hist_counts();
+        let hb = b.hist_counts();
+        a.absorb(&b);
+        let merged = a.hist_counts();
+        // every bucket is the exact element-wise sum of its inputs
+        for k in 0..HIST_BUCKETS {
+            assert_eq!(merged[k], ha[k] + hb[k], "bucket {k}");
+        }
+        let s = a.snapshot();
+        assert_eq!(s.observed_requests, 8);
+        // merged percentiles are bucket edges of the combined population
+        assert_eq!(s.p50_latency_us, 1); // rank 4 of 8 -> bucket 0 edge
+        assert_eq!(s.p95_latency_us, 2047); // rank 8 -> bucket 10 edge
+        assert_eq!(s.p99_latency_us, 2047);
+    }
+
+    #[test]
+    fn absorb_keeps_percentiles_monotone_and_sums_counters() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        let mut seed = 0x9e3779b97f4a7c15u64;
+        for i in 0..200u64 {
+            // cheap xorshift spread over ~5 orders of magnitude
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            let us = seed % 100_000;
+            if i % 2 == 0 {
+                a.observe_latency(us);
+            } else {
+                b.observe_latency(us);
+            }
+        }
+        a.observe_request();
+        b.observe_request();
+        a.observe_batch(3, 120);
+        b.observe_batch(5, 80);
+        a.observe_rejected_queue_full();
+        b.observe_rejected_decode();
+        b.observe_rejected_shutdown();
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        a.absorb(&b);
+        let s = a.snapshot();
+        // percentile monotonicity on the merged histogram
+        assert!(s.p50_latency_us <= s.p95_latency_us);
+        assert!(s.p95_latency_us <= s.p99_latency_us);
+        // merged percentiles are bracketed by the per-instance ones
+        assert!(s.p50_latency_us >= sa.p50_latency_us.min(sb.p50_latency_us));
+        assert!(s.p50_latency_us <= sa.p50_latency_us.max(sb.p50_latency_us));
+        assert!(s.p99_latency_us >= sa.p99_latency_us.min(sb.p99_latency_us));
+        assert!(s.p99_latency_us <= sa.p99_latency_us.max(sb.p99_latency_us));
+        // counters sum, maxima max, rejected reasons merge per reason
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.observed_requests, 200);
+        assert_eq!(s.max_latency_us, sa.max_latency_us.max(sb.max_latency_us));
+        assert_eq!(s.rejected_queue_full, 1);
+        assert_eq!(s.rejected_decode, 1);
+        assert_eq!(s.rejected_shutdown, 1);
+        assert_eq!(s.rejected_total(), 3);
+    }
+
+    #[test]
+    fn stats_value_exposes_the_full_snapshot_as_json() {
+        let m = Metrics::default();
+        m.observe_request();
+        m.observe_batch(2, 100);
+        m.observe_latency(100);
+        m.observe_rejected_queue_full();
+        m.add_walk(&crate::backend::WalkProfile { conv_calls: 7, ..Default::default() });
+        let text = m.stats_value().to_json();
+        let v = Value::parse(&text).unwrap();
+        assert_eq!(v.get("engine").unwrap().get("requests").unwrap().num().unwrap(), 1.0);
+        assert_eq!(v.get("rejected").unwrap().get("queue_full").unwrap().num().unwrap(), 1.0);
+        assert_eq!(v.get("rejected").unwrap().get("total").unwrap().num().unwrap(), 1.0);
+        assert_eq!(
+            v.get("walk_profile").unwrap().get("conv_calls").unwrap().num().unwrap(),
+            7.0
+        );
+        let hist = v.get("hist").unwrap().arr().unwrap();
+        assert_eq!(hist.len(), HIST_BUCKETS);
+        assert_eq!(hist.iter().map(|b| b.num().unwrap() as u64).sum::<u64>(), 1);
+        assert_eq!(v.get("scenario").unwrap().str().unwrap(), "none");
     }
 
     #[test]

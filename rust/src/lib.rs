@@ -101,12 +101,17 @@
 //!   stepwise mixed-precision accumulation (paper §4.3).
 //! * [`serve`] — the network serving front-end: length-prefixed binary
 //!   wire protocol, TCP server with per-connection threads, dynamic
-//!   micro-batching with bounded-queue admission control, a plain-text
-//!   stats frame, and the load-generating client behind `bench-client`.
+//!   micro-batching with bounded-queue admission control, plain-text and
+//!   machine-readable JSON stats frames, and the load-generating client
+//!   behind `bench-client`.
 //! * [`tuner`] — parallel Pareto auto-tuner over the stage cache: fans
 //!   candidate operating points across worker threads, maintains a
 //!   3-objective accuracy/compression/storage frontier, and writes
 //!   resumable JSON search state (`reram-mpq tune`).
+//! * [`trace`] — request-lifecycle tracing: a std-only, default-off span
+//!   recorder (thread-local buffers + mpsc drain, one shared monotonic
+//!   epoch) exporting Chrome-trace JSON (Perfetto-loadable) and a per-span
+//!   summary table (`--trace-out`, `RERAM_MPQ_TRACE`).
 //! * [`baselines`] — HAP structured pruning and uniform-precision
 //!   comparators used by the paper's tables.
 //! * [`report`] — emitters that regenerate the paper's tables/figures.
@@ -132,11 +137,12 @@ pub mod runtime;
 pub mod sensitivity;
 pub mod serve;
 pub mod tensor;
+pub mod trace;
 pub mod tuner;
 pub mod util;
 pub mod xbar;
 
-pub use backend::{ExecBackend, SimXbar, SimXbarConfig, SimdMode};
+pub use backend::{ExecBackend, SimXbar, SimXbarConfig, SimdMode, WalkProfile};
 pub use config::RunConfig;
 pub use coordinator::{CompressionPlan, EvalOpts, Executor, PipelineReport, ThresholdMode};
 pub use model::{Manifest, ModelInfo};

@@ -53,6 +53,7 @@ COMMANDS:
   tune     [--model M] [--axes cr,bits,align] [--crs R1,R2,..] [--seed N]
            [--workers N] [--budget-evals N] [--budget-ms MS]
            [--eval-batches N] [--state FILE] [--resume] [--json] [--fixture]
+           [--trace-out FILE]
                                  parallel Pareto auto-tuner over the staged
                                  plan's cache: fan candidate operating
                                  points across worker threads and report
@@ -72,7 +73,7 @@ COMMANDS:
            [--admit-queue N] [--wait-timeout-s S] [--fixture]
            [--stuck R] [--drift-time T] [--drift-rate R] [--ir-drop S]
            [--read-sigma S] [--fault-seed N]
-           [--placement naive|sensitivity]
+           [--placement naive|sensitivity] [--trace-out FILE]
                                  without --listen: push test images through
                                  the engine in-process and report latency
                                  percentiles; with --listen: run the TCP
@@ -85,6 +86,13 @@ COMMANDS:
                                  drive load at a running server and report
                                  req/s + latency percentiles (exits
                                  non-zero on any failed frame)
+
+TRACING:
+  --trace-out FILE (serve --listen, tune) enables request-lifecycle tracing
+  and writes a Chrome-trace JSON (load it at https://ui.perfetto.dev or
+  chrome://tracing). RERAM_MPQ_TRACE=1 enables the recorder without a dump
+  file. Tracing is compiled in but off by default and costs nothing when
+  off.
 ";
 
 fn opts(args: &Args) -> Result<ExpOpts> {
@@ -100,6 +108,14 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     }
+
+    // Tracing is compiled in, default-off: turned on by RERAM_MPQ_TRACE=1
+    // or by asking for a dump file.
+    let mut tc = reram_mpq::trace::TraceConfig::from_env();
+    if args.get("trace-out").is_some() {
+        tc.enabled = true;
+    }
+    reram_mpq::trace::init(tc);
 
     // bench-client is a pure network client: no artifacts, no manifest.
     if args.subcommand.as_deref() == Some("bench-client") {
@@ -429,6 +445,17 @@ fn tune_run(shared: tuner::TuneShared, args: &Args) -> Result<()> {
         state.save(p)?;
     }
 
+    // One final drain after the scoped workers exited: every tune.eval span
+    // is flushed, so the dump is complete. The summary goes to stderr to
+    // keep `--json` stdout machine-parseable.
+    if let Some(path) = args.get("trace-out").map(std::path::PathBuf::from) {
+        reram_mpq::trace::flush_thread();
+        let events = reram_mpq::trace::drain();
+        reram_mpq::trace::write_chrome_trace(&path, &events)?;
+        eprintln!("trace: {} event(s) -> {}", events.len(), path.display());
+        eprint!("{}", reram_mpq::trace::summary_table(&events));
+    }
+
     if args.has("json") {
         println!("{}", outcome.to_value(&state).to_json());
         return Ok(());
@@ -579,6 +606,28 @@ fn run_server(handle: EngineHandle, addr: &str, args: &Args) -> Result<()> {
     // readiness handshake (the handle exists, so every worker is ready).
     let m = handle.metrics.snapshot();
     let server = Server::start(listener, handle, cfg)?;
+
+    // Periodic trace dumper: accumulate drained span events and atomically
+    // rewrite the full Chrome-trace file, so the dump is complete and
+    // B/E-balanced whenever the server is killed after a quiet moment.
+    if let Some(path) = args.get("trace-out").map(std::path::PathBuf::from) {
+        reram_mpq::trace::write_chrome_trace(&path, &[])?;
+        println!("tracing to {}", path.display());
+        std::thread::spawn(move || {
+            let mut events: Vec<reram_mpq::trace::Event> = Vec::new();
+            loop {
+                std::thread::sleep(Duration::from_millis(400));
+                let fresh = reram_mpq::trace::drain();
+                if !fresh.is_empty() {
+                    events.extend(fresh);
+                    if let Err(e) = reram_mpq::trace::write_chrome_trace(&path, &events) {
+                        eprintln!("trace dump failed: {e}");
+                    }
+                }
+            }
+        });
+    }
+
     println!("serving on {}", server.local_addr());
     println!(
         "policy: max_batch={} flush_after={:?} admit_queue={} wait_timeout={:?}",

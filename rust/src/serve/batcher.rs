@@ -95,12 +95,23 @@ impl Ticket {
     }
 }
 
+/// Why an admission was refused — surfaced per reason in the engine
+/// metrics ([`crate::coordinator::Metrics`]) so an operator can tell load
+/// shedding from a draining deployment at a glance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded admission queue was full (load shedding).
+    QueueFull,
+    /// The coalescing thread is gone — the deployment is shutting down.
+    Shutdown,
+}
+
 /// Admission verdict: a claim check, or an immediate, typed "no".
 pub enum Admission {
     Accepted(Ticket),
-    /// The admission queue was full; `queue_depth` is how many requests
-    /// were already waiting when this one was turned away.
-    Rejected { queue_depth: usize },
+    /// The request was turned away; `queue_depth` is how many requests
+    /// were already waiting at that moment.
+    Rejected { queue_depth: usize, reason: RejectReason },
 }
 
 struct Item {
@@ -151,10 +162,14 @@ impl Batcher {
                 self.stats.accepted.fetch_add(1, Ordering::Relaxed);
                 Admission::Accepted(Ticket { rx })
             }
-            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+            Err(e) => {
+                let reason = match e {
+                    TrySendError::Full(_) => RejectReason::QueueFull,
+                    TrySendError::Disconnected(_) => RejectReason::Shutdown,
+                };
                 self.depth.fetch_sub(1, Ordering::Relaxed);
                 self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                Admission::Rejected { queue_depth: self.depth.load(Ordering::Relaxed) }
+                Admission::Rejected { queue_depth: self.depth.load(Ordering::Relaxed), reason }
             }
         }
     }
@@ -182,6 +197,7 @@ fn batch_loop(
             Err(_) => break, // every Batcher clone dropped, queue drained
         };
         depth.fetch_sub(1, Ordering::Relaxed);
+        let mut span = crate::trace::span("batch.coalesce");
         let mut items = Vec::with_capacity(max_batch);
         items.push(first);
         let deadline = Instant::now() + flush_after;
@@ -200,6 +216,7 @@ fn batch_loop(
         }
         stats.batches.fetch_add(1, Ordering::Relaxed);
         stats.batched_items.fetch_add(items.len() as u64, Ordering::Relaxed);
+        span.tag("size", || items.len().to_string());
 
         let mut images = Vec::with_capacity(items.len());
         let mut replies = Vec::with_capacity(items.len());
@@ -223,5 +240,7 @@ fn batch_loop(
                 }
             }
         }
+        drop(span);
+        crate::trace::flush_thread();
     }
 }

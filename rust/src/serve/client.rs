@@ -63,6 +63,28 @@ impl ServeClient {
             Err(e) => anyhow::bail!("reading stats: {e}"),
         }
     }
+
+    /// Fetch the server's machine-readable JSON stats snapshot (the
+    /// `StatsJsonReq` frame): engine counters, rejected breakdown, latency
+    /// histogram, crossbar walk profile, server + batcher counters.
+    pub fn stats_json(&mut self) -> Result<String> {
+        Frame::StatsJsonReq.write_to(&mut self.stream)?;
+        match Frame::read_from(&mut self.stream) {
+            Ok(Frame::StatsJson { json }) => Ok(json),
+            Ok(other) => anyhow::bail!("unexpected reply frame: {}", other.kind_name()),
+            Err(e) => anyhow::bail!("reading stats: {e}"),
+        }
+    }
+}
+
+/// Per-connection latency digest — exact percentiles over that one
+/// connection's Ok replies. A wide p99 spread across connections is the
+/// classic head-of-line-blocking signature that an aggregate percentile
+/// hides.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConnLatency {
+    pub p50_us: u64,
+    pub p99_us: u64,
 }
 
 /// Aggregate outcome of a [`bench_client`] run. Latency percentiles are
@@ -79,6 +101,11 @@ pub struct BenchReport {
     pub elapsed: Duration,
     pub p50_us: u64,
     pub p99_us: u64,
+    /// Per-connection latency digests, in connection order.
+    pub per_conn: Vec<ConnLatency>,
+    /// Largest `queue_depth` reported by any `Rejected` frame — how deep
+    /// the admission queue got while this run was shedding.
+    pub max_queue_depth: u32,
 }
 
 impl BenchReport {
@@ -92,9 +119,11 @@ impl BenchReport {
         }
     }
 
-    /// One-line summary (the CLI prints this; CI greps ` failed=0 `).
+    /// Summary (the CLI prints this; CI greps ` failed=0 ` on the first
+    /// line). The second line breaks the latency down per connection and
+    /// reports the deepest admission queue any rejection observed.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} ok={} rejected={} failed={} elapsed={:.3}s req_per_s={:.1} \
              p50_us={} p99_us={}",
             self.requests,
@@ -105,7 +134,18 @@ impl BenchReport {
             self.req_per_s(),
             self.p50_us,
             self.p99_us,
-        )
+        );
+        let join = |f: fn(&ConnLatency) -> u64| {
+            self.per_conn.iter().map(|c| f(c).to_string()).collect::<Vec<_>>().join(",")
+        };
+        s.push_str(&format!(
+            "\nconns={} conn_p50_us=[{}] conn_p99_us=[{}] max_queue_depth={}",
+            self.per_conn.len(),
+            join(|c| c.p50_us),
+            join(|c| c.p99_us),
+            self.max_queue_depth,
+        ));
+        s
     }
 }
 
@@ -139,9 +179,10 @@ pub fn bench_client(
         for c in 0..conns {
             // Split `requests` across connections, remainder to the first.
             let n = requests / conns + usize::from(c < requests % conns);
-            handles.push(s.spawn(move || -> Result<(usize, usize, usize, Vec<u64>)> {
+            handles.push(s.spawn(move || -> Result<(usize, usize, usize, Vec<u64>, u32)> {
                 let mut client = ServeClient::connect(addr)?;
                 let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
+                let mut max_qd = 0u32;
                 let mut lats = Vec::with_capacity(n);
                 for i in 0..n {
                     let image = images[(c + i * conns) % images.len()].clone();
@@ -151,11 +192,14 @@ pub fn bench_client(
                             ok += 1;
                             lats.push(t.elapsed().as_micros() as u64);
                         }
-                        ClientReply::Rejected { .. } => rejected += 1,
+                        ClientReply::Rejected { queue_depth, .. } => {
+                            rejected += 1;
+                            max_qd = max_qd.max(queue_depth);
+                        }
                         ClientReply::Error { .. } => failed += 1,
                     }
                 }
-                Ok((ok, rejected, failed, lats))
+                Ok((ok, rejected, failed, lats, max_qd))
             }));
         }
         handles
@@ -164,10 +208,15 @@ pub fn bench_client(
             .collect::<Vec<_>>()
     });
     for r in results {
-        let (ok, rejected, failed, lats) = r?;
+        let (ok, rejected, failed, mut lats, max_qd) = r?;
         report.ok += ok;
         report.rejected += rejected;
         report.failed += failed;
+        report.max_queue_depth = report.max_queue_depth.max(max_qd);
+        lats.sort_unstable();
+        report
+            .per_conn
+            .push(ConnLatency { p50_us: percentile(&lats, 0.50), p99_us: percentile(&lats, 0.99) });
         latencies.extend(lats);
     }
     report.elapsed = t0.elapsed();
@@ -201,11 +250,20 @@ mod tests {
             elapsed: Duration::from_secs(2),
             p50_us: 5,
             p99_us: 9,
+            per_conn: vec![
+                ConnLatency { p50_us: 4, p99_us: 8 },
+                ConnLatency { p50_us: 6, p99_us: 9 },
+            ],
+            max_queue_depth: 17,
         };
         assert!((r.req_per_s() - 1.0).abs() < 1e-12);
         let s = r.summary();
         assert!(s.contains(" failed=1 "), "{s}");
         assert!(s.contains("p99_us=9"), "{s}");
+        assert!(s.contains("conns=2"), "{s}");
+        assert!(s.contains("conn_p50_us=[4,6]"), "{s}");
+        assert!(s.contains("conn_p99_us=[8,9]"), "{s}");
+        assert!(s.contains("max_queue_depth=17"), "{s}");
         assert_eq!(BenchReport::default().req_per_s(), 0.0);
     }
 }

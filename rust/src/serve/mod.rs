@@ -19,7 +19,11 @@
 //!   reply is bounded by [`server::ServeConfig::wait_timeout`], so a dead
 //!   engine worker degrades into typed `Error` frames, never hung
 //!   connections. A `StatsReq` frame returns a plain-text observability
-//!   snapshot (server/batcher/engine counters + p50/p95/p99 latency).
+//!   snapshot (server/batcher/engine counters + p50/p95/p99 latency); a
+//!   `StatsJsonReq` frame returns the complete snapshot — counters,
+//!   rejected breakdown, raw latency histogram, crossbar walk profile — as
+//!   one machine-readable JSON document. With [`crate::trace`] enabled,
+//!   every request carries lifecycle spans from socket read to reply write.
 //! * [`client`] — the blocking protocol client and the multi-connection
 //!   load generator behind the CLI `bench-client` subcommand, the loopback
 //!   tests, and CI's serve-smoke gate.
@@ -49,7 +53,7 @@ pub mod client;
 pub mod proto;
 pub mod server;
 
-pub use batcher::{Admission, BatchPolicy, Batcher, BatcherStats, Ticket};
-pub use client::{bench_client, BenchReport, ClientReply, ServeClient};
+pub use batcher::{Admission, BatchPolicy, Batcher, BatcherStats, RejectReason, Ticket};
+pub use client::{bench_client, BenchReport, ClientReply, ConnLatency, ServeClient};
 pub use proto::{Frame, ProtoError, IMAGE_ELEMS, MAX_FRAME_LEN, PROTO_VERSION};
 pub use server::{ServeConfig, Server, ServerStats};

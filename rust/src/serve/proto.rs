@@ -14,6 +14,8 @@
 //! | 4    | `Stats`       | s -> c    | `text:str` (plain-text metrics) |
 //! | 5    | `Rejected`    | s -> c    | `id:u64`, `queue_depth:u32` — admission control said no |
 //! | 6    | `Error`       | s -> c    | `id:u64`, `message:str` |
+//! | 7    | `StatsJsonReq`| c -> s    | (empty) |
+//! | 8    | `StatsJson`   | s -> c    | `json:str` — the complete machine-readable snapshot (counters, rejected-by-reason breakdown, latency histogram buckets, program cost, scenario, walk profile) |
 //!
 //! Decoding is strict: an unknown version or kind, a truncated body, or
 //! trailing bytes after the body are all typed [`ProtoError`]s — a server
@@ -44,6 +46,8 @@ pub enum Frame {
     Stats { text: String },
     Rejected { id: u64, queue_depth: u32 },
     Error { id: u64, message: String },
+    StatsJsonReq,
+    StatsJson { json: String },
 }
 
 /// Why a frame could not be read.
@@ -94,6 +98,8 @@ const KIND_STATS_REQ: u8 = 3;
 const KIND_STATS: u8 = 4;
 const KIND_REJECTED: u8 = 5;
 const KIND_ERROR: u8 = 6;
+const KIND_STATS_JSON_REQ: u8 = 7;
+const KIND_STATS_JSON: u8 = 8;
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -178,6 +184,8 @@ impl Frame {
             Frame::Stats { .. } => "Stats",
             Frame::Rejected { .. } => "Rejected",
             Frame::Error { .. } => "Error",
+            Frame::StatsJsonReq => "StatsJsonReq",
+            Frame::StatsJson { .. } => "StatsJson",
         }
     }
 
@@ -214,6 +222,11 @@ impl Frame {
                 p.push(KIND_ERROR);
                 put_u64(&mut p, *id);
                 put_str(&mut p, message);
+            }
+            Frame::StatsJsonReq => p.push(KIND_STATS_JSON_REQ),
+            Frame::StatsJson { json } => {
+                p.push(KIND_STATS_JSON);
+                put_str(&mut p, json);
             }
         }
         let len = (p.len() - 4) as u32;
@@ -271,6 +284,8 @@ impl Frame {
                 let message = cur.str()?;
                 Frame::Error { id, message }
             }
+            KIND_STATS_JSON_REQ => Frame::StatsJsonReq,
+            KIND_STATS_JSON => Frame::StatsJson { json: cur.str()? },
             other => return Err(ProtoError::Kind(other)),
         };
         cur.done()?;
@@ -324,6 +339,8 @@ mod tests {
         roundtrip(Frame::Stats { text: "requests=3\nok=3\n".into() });
         roundtrip(Frame::Rejected { id: 1, queue_depth: 42 });
         roundtrip(Frame::Error { id: 2, message: "bad image size".into() });
+        roundtrip(Frame::StatsJsonReq);
+        roundtrip(Frame::StatsJson { json: "{\"server\":{\"ok\":3}}".into() });
         // empty vectors / strings are legal
         roundtrip(Frame::ClassifyReq { id: 0, image: vec![] });
         roundtrip(Frame::Error { id: 0, message: String::new() });

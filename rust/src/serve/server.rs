@@ -18,14 +18,23 @@
 //! own counters, the batcher's admission/coalescing stats, and the engine
 //! metrics — including the per-worker deploy-time crossbar-programming cost
 //! (`program_ns_mean`/`program_ns_max`) and the p50/p95/p99 latency
-//! percentiles.
+//! percentiles. A `StatsJsonReq` frame answers the same snapshot as one
+//! machine-readable JSON document (engine counters, rejected breakdown,
+//! full latency histogram, crossbar walk profile, server + batcher
+//! counters) for dashboards and scripts.
+//!
+//! When tracing is on ([`crate::trace`]), each request carries a
+//! `server.handle` span with `batcher.submit` / `ticket.wait` /
+//! `server.reply` children, completing the request-lifecycle picture
+//! started by the batcher's `batch.coalesce` and the engine's
+//! `engine.dispatch` → `worker.batch` → `backend.forward` spans.
 
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::batcher::{Admission, BatchPolicy, Batcher};
+use super::batcher::{Admission, BatchPolicy, Batcher, RejectReason};
 use super::proto::{Frame, ProtoError, IMAGE_ELEMS};
 use crate::coordinator::engine::EngineHandle;
 use crate::Result;
@@ -168,6 +177,7 @@ fn serve_conn(
                 // Framing is unrecoverable after a malformed prefix: answer
                 // what we can, then drop the connection.
                 stats.errors.fetch_add(1, Ordering::Relaxed);
+                engine.metrics.observe_rejected_decode();
                 let _ = Frame::Error { id: 0, message: format!("protocol error: {e}") }
                     .write_to(&mut stream);
                 anyhow::bail!("protocol error: {e}");
@@ -176,8 +186,11 @@ fn serve_conn(
         stats.frames_in.fetch_add(1, Ordering::Relaxed);
         match frame {
             Frame::ClassifyReq { id, image } => {
+                let mut span = crate::trace::span("server.handle");
+                span.tag("id", || id.to_string());
                 if image.len() != IMAGE_ELEMS {
                     stats.errors.fetch_add(1, Ordering::Relaxed);
+                    engine.metrics.observe_rejected_decode();
                     Frame::Error {
                         id,
                         message: format!(
@@ -188,32 +201,58 @@ fn serve_conn(
                     .write_to(&mut stream)?;
                     continue;
                 }
-                match batcher.submit(image) {
-                    Admission::Rejected { queue_depth } => {
+                let admission = {
+                    let _s = crate::trace::span("batcher.submit");
+                    batcher.submit(image)
+                };
+                match admission {
+                    Admission::Rejected { queue_depth, reason } => {
                         stats.rejected.fetch_add(1, Ordering::Relaxed);
+                        match reason {
+                            RejectReason::QueueFull => {
+                                engine.metrics.observe_rejected_queue_full()
+                            }
+                            RejectReason::Shutdown => engine.metrics.observe_rejected_shutdown(),
+                        }
+                        let _s = crate::trace::span("server.reply");
                         Frame::Rejected { id, queue_depth: queue_depth as u32 }
                             .write_to(&mut stream)?;
                     }
-                    Admission::Accepted(ticket) => match ticket.wait_timeout(wait_timeout) {
-                        Ok(resp) => {
-                            stats.ok.fetch_add(1, Ordering::Relaxed);
-                            Frame::ClassifyOk {
-                                id,
-                                class: resp.class as u16,
-                                latency_us: resp.latency_us,
-                                logits: resp.logits,
+                    Admission::Accepted(ticket) => {
+                        let waited = {
+                            let _s = crate::trace::span("ticket.wait");
+                            ticket.wait_timeout(wait_timeout)
+                        };
+                        match waited {
+                            Ok(resp) => {
+                                stats.ok.fetch_add(1, Ordering::Relaxed);
+                                let _s = crate::trace::span("server.reply");
+                                Frame::ClassifyOk {
+                                    id,
+                                    class: resp.class as u16,
+                                    latency_us: resp.latency_us,
+                                    logits: resp.logits,
+                                }
+                                .write_to(&mut stream)?;
                             }
-                            .write_to(&mut stream)?;
+                            Err(e) => {
+                                stats.errors.fetch_add(1, Ordering::Relaxed);
+                                let _s = crate::trace::span("server.reply");
+                                Frame::Error { id, message: e.to_string() }
+                                    .write_to(&mut stream)?;
+                            }
                         }
-                        Err(e) => {
-                            stats.errors.fetch_add(1, Ordering::Relaxed);
-                            Frame::Error { id, message: e.to_string() }.write_to(&mut stream)?;
-                        }
-                    },
+                    }
                 }
+                drop(span);
+                crate::trace::flush_thread();
             }
             Frame::StatsReq => {
                 Frame::Stats { text: stats_text(stats, batcher, engine) }
+                    .write_to(&mut stream)?;
+            }
+            Frame::StatsJsonReq => {
+                Frame::StatsJson { json: stats_json(stats, batcher, engine) }
                     .write_to(&mut stream)?;
             }
             other => {
@@ -240,10 +279,13 @@ fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> 
     format!(
         "server: connections={} frames_in={} ok={} rejected={} errors={} queue_depth={}\n\
          batcher: accepted={} rejected={} batches={} mean_fill={:.2}\n\
+         rejected: queue_full={} decode={} shutdown={} total={}\n\
          engine: requests={} batches={} mean_batch_fill={:.2} failed_requests={}\n\
          program: workers={} program_ns_mean={:.0} program_ns_max={}\n\
          scenario: {}\n\
-         latency_us: mean_batch={:.1} max={} p50={} p95={} p99={}\n",
+         latency_us: mean_batch={:.1} max={} p50={} p95={} p99={}\n\
+         walk: conv_calls={} strips={} phase_steps={} kernel_simd={} kernel_scalar={} \
+         prefetch_staged={} scratch_high_water_bytes={}\n",
         stats.connections.load(Ordering::Relaxed),
         stats.frames_in.load(Ordering::Relaxed),
         stats.ok.load(Ordering::Relaxed),
@@ -254,6 +296,10 @@ fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> 
         b.rejected.load(Ordering::Relaxed),
         b.batches.load(Ordering::Relaxed),
         b.mean_fill(),
+        m.rejected_queue_full,
+        m.rejected_decode,
+        m.rejected_shutdown,
+        m.rejected_total(),
         m.requests,
         m.batches,
         m.mean_batch_fill,
@@ -267,5 +313,44 @@ fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> 
         fmt_latency_us(m.p50_latency_us),
         fmt_latency_us(m.p95_latency_us),
         fmt_latency_us(m.p99_latency_us),
+        m.walk.conv_calls,
+        m.walk.strips_walked,
+        m.walk.phase_steps,
+        m.walk.kernel_simd,
+        m.walk.kernel_scalar,
+        m.walk.prefetch_staged,
+        m.walk.scratch_high_water_bytes,
     )
+}
+
+/// The machine-readable stats payload: the engine's full
+/// [`crate::coordinator::Metrics::stats_value`] snapshot (counters,
+/// rejected breakdown, program cost, scenario, crossbar walk profile, raw
+/// latency histogram) extended with the server's and batcher's own
+/// counters. One compact JSON object, parseable with any JSON library.
+fn stats_json(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> String {
+    use crate::util::json::{obj, Value};
+    let n = |v: u64| Value::Num(v as f64);
+    let server = obj(vec![
+        ("connections", n(stats.connections.load(Ordering::Relaxed))),
+        ("frames_in", n(stats.frames_in.load(Ordering::Relaxed))),
+        ("ok", n(stats.ok.load(Ordering::Relaxed))),
+        ("rejected", n(stats.rejected.load(Ordering::Relaxed))),
+        ("errors", n(stats.errors.load(Ordering::Relaxed))),
+    ]);
+    let b = &batcher.stats;
+    let batcher_v = obj(vec![
+        ("accepted", n(b.accepted.load(Ordering::Relaxed))),
+        ("rejected", n(b.rejected.load(Ordering::Relaxed))),
+        ("batches", n(b.batches.load(Ordering::Relaxed))),
+        ("mean_fill", Value::Num(b.mean_fill())),
+        ("queue_depth", n(batcher.queue_depth() as u64)),
+    ]);
+    let mut root = match engine.metrics.stats_value() {
+        Value::Obj(m) => m,
+        _ => Default::default(),
+    };
+    root.insert("server".to_string(), server);
+    root.insert("batcher".to_string(), batcher_v);
+    Value::Obj(root).to_json()
 }

@@ -1,0 +1,459 @@
+//! Request-lifecycle tracing — a std-only, low-overhead span recorder with
+//! Chrome-trace export.
+//!
+//! The subsystem is **compiled in but default-off**: every instrumentation
+//! point costs one relaxed atomic load (`enabled()`) until tracing is
+//! switched on via [`enable`] / [`TraceConfig::from_env`] (the
+//! `RERAM_MPQ_TRACE=1` environment knob) or a `--trace-out` CLI flag. With
+//! tracing off, [`span`] returns an inert guard without recording,
+//! allocating, or reading the clock — the zero-alloc steady-state invariant
+//! of the programmed forward path holds exactly as before (property-tested
+//! in `tests/trace_zero_alloc.rs`).
+//!
+//! ## Recording model
+//!
+//! Span begin/end events land in a **thread-local buffer** (no lock, no
+//! shared cache line on the hot path) and are drained over an `mpsc`
+//! channel: a buffer flushes to the channel when it fills, when the thread
+//! exits (the thread-local's `Drop`), or when the instrumented layer calls
+//! [`flush_thread`] at a request/batch boundary. [`drain`] collects every
+//! flushed event, sorted by the shared monotonic clock (one `Instant`
+//! epoch for the whole process, so cross-thread timestamps compare).
+//!
+//! ## Span taxonomy
+//!
+//! | span | where |
+//! |------|-------|
+//! | `server.handle` | one inbound frame, decode → reply (`serve::Server`) |
+//! | `batcher.submit` | admission into the bounded queue |
+//! | `ticket.wait` | connection thread parked on the reply |
+//! | `server.reply` | reply frame write |
+//! | `batch.coalesce` | batcher fill loop, first request → engine submit |
+//! | `engine.dispatch` | dispatcher hands a batch to a worker |
+//! | `worker.batch` | worker thread runs one batch end to end |
+//! | `backend.forward` | one `ExecBackend::forward` call |
+//! | `layer:<name>` | one conv layer inside the forward |
+//! | `xbar.conv` | one programmed-tile walk (`SimXbar::conv_programmed`) |
+//! | `tune.eval` | one tuner candidate evaluation (tags: cr/bits/align/cache) |
+//!
+//! ## Export
+//!
+//! [`chrome_trace_json`] renders drained events as Chrome trace-event JSON
+//! (`B`/`E` duration events) loadable in Perfetto or `chrome://tracing`;
+//! [`summary_table`] renders a compact per-span count/total/mean/max table.
+//! `tools/check_trace.py` validates emitted traces in CI (well-formed,
+//! balanced, required spans present).
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{obj, Value};
+use crate::Result;
+
+/// One recorded span edge (begin or end).
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Span name (static for hot-path spans, owned for per-layer names).
+    pub name: Cow<'static, str>,
+    /// `true` for a span begin (`ph: "B"`), `false` for an end (`"E"`).
+    pub begin: bool,
+    /// Nanoseconds since the process-wide trace epoch.
+    pub ts_ns: u64,
+    /// Recorder-assigned thread id (stable per OS thread for the process
+    /// lifetime; also the Chrome-trace `tid`).
+    pub tid: u64,
+    /// Key/value tags attached via [`Span::tag`] (emitted on the end edge).
+    pub args: Vec<(&'static str, String)>,
+}
+
+struct Global {
+    enabled: AtomicBool,
+    epoch: Instant,
+    tx: Mutex<Sender<Vec<Event>>>,
+    rx: Mutex<Receiver<Vec<Event>>>,
+    next_tid: AtomicU64,
+}
+
+static GLOBAL: OnceLock<Global> = OnceLock::new();
+
+fn global() -> &'static Global {
+    GLOBAL.get_or_init(|| {
+        let (tx, rx) = std::sync::mpsc::channel();
+        Global {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            tx: Mutex::new(tx),
+            rx: Mutex::new(rx),
+            next_tid: AtomicU64::new(1),
+        }
+    })
+}
+
+struct Local {
+    tid: u64,
+    buf: Vec<Event>,
+    tx: Sender<Vec<Event>>,
+}
+
+impl Local {
+    fn flush(&mut self) {
+        if !self.buf.is_empty() {
+            // A send can only fail if the receiver is gone, i.e. never
+            // (the receiver lives in the process-wide Global).
+            let _ = self.tx.send(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+impl Drop for Local {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<Local>> = const { RefCell::new(None) };
+}
+
+/// Thread-local buffer auto-flush threshold (events).
+const FLUSH_AT: usize = 4096;
+
+/// Is tracing live? One relaxed atomic load — this is the entire hot-path
+/// cost of every instrumentation point while tracing is off (and before
+/// the first [`enable`], not even that: the global is uninitialized).
+#[inline]
+pub fn enabled() -> bool {
+    GLOBAL.get().is_some_and(|g| g.enabled.load(Ordering::Relaxed))
+}
+
+fn record(name: Cow<'static, str>, begin: bool, args: Vec<(&'static str, String)>) {
+    let g = global();
+    let ts_ns = g.epoch.elapsed().as_nanos() as u64;
+    LOCAL.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let local = slot.get_or_insert_with(|| Local {
+            tid: g.next_tid.fetch_add(1, Ordering::Relaxed),
+            buf: Vec::with_capacity(1024),
+            tx: g.tx.lock().unwrap().clone(),
+        });
+        local.buf.push(Event { name, begin, ts_ns, tid: local.tid, args });
+        if local.buf.len() >= FLUSH_AT {
+            local.flush();
+        }
+    });
+}
+
+/// RAII span guard: records a begin event on creation (when tracing is on)
+/// and the matching end event on drop. An inert guard (tracing off) does
+/// nothing at all.
+pub struct Span {
+    name: Option<Cow<'static, str>>,
+    args: Vec<(&'static str, String)>,
+}
+
+impl Span {
+    /// Attach a tag to this span, emitted with the end event. The value
+    /// closure only runs when the span is live, so a disabled trace never
+    /// pays for the formatting.
+    #[inline]
+    pub fn tag(&mut self, key: &'static str, value: impl FnOnce() -> String) -> &mut Self {
+        if self.name.is_some() {
+            self.args.push((key, value()));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(name) = self.name.take() {
+            record(name, false, std::mem::take(&mut self.args));
+        }
+    }
+}
+
+/// Open a span with a static name. With tracing off this returns an inert
+/// guard: no clock read, no allocation, no recording.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span { name: None, args: Vec::new() };
+    }
+    record(Cow::Borrowed(name), true, Vec::new());
+    Span { name: Some(Cow::Borrowed(name)), args: Vec::new() }
+}
+
+/// Open a span whose name is computed lazily (e.g. `layer:<name>`): the
+/// closure only runs when tracing is on, so the disabled path never
+/// allocates the name string.
+#[inline]
+pub fn span_with(name: impl FnOnce() -> String) -> Span {
+    if !enabled() {
+        return Span { name: None, args: Vec::new() };
+    }
+    let name: Cow<'static, str> = Cow::Owned(name());
+    record(name.clone(), true, Vec::new());
+    Span { name: Some(name), args: Vec::new() }
+}
+
+/// Tracing configuration resolved from the environment.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceConfig {
+    /// Record spans from process start (`RERAM_MPQ_TRACE=1|on|true`).
+    pub enabled: bool,
+}
+
+impl TraceConfig {
+    /// Read the `RERAM_MPQ_TRACE` knob (off unless `1`, `on`, or `true`).
+    pub fn from_env() -> Self {
+        let enabled = std::env::var("RERAM_MPQ_TRACE")
+            .map(|v| {
+                let v = v.to_ascii_lowercase();
+                v == "1" || v == "on" || v == "true"
+            })
+            .unwrap_or(false);
+        Self { enabled }
+    }
+}
+
+/// Apply a [`TraceConfig`] (turns the recorder on when asked; never off).
+pub fn init(cfg: TraceConfig) {
+    if cfg.enabled {
+        enable();
+    }
+}
+
+/// Switch span recording on, process-wide.
+pub fn enable() {
+    global().enabled.store(true, Ordering::SeqCst);
+}
+
+/// Switch span recording off (already-buffered events stay drainable).
+pub fn disable() {
+    if let Some(g) = GLOBAL.get() {
+        g.enabled.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Flush the calling thread's buffered events to the drain channel. The
+/// instrumented layers call this at request/batch/eval boundaries so a
+/// [`drain`] from another thread (the `--trace-out` dumper, a test) sees
+/// complete spans without waiting for buffers to fill or threads to exit.
+pub fn flush_thread() {
+    if GLOBAL.get().is_none() {
+        return;
+    }
+    LOCAL.with(|cell| {
+        if let Some(local) = cell.borrow_mut().as_mut() {
+            local.flush();
+        }
+    });
+}
+
+/// Collect every event flushed so far (including the calling thread's
+/// buffer), ordered by timestamp. Events are consumed: a second drain
+/// returns only what was recorded in between.
+pub fn drain() -> Vec<Event> {
+    let Some(g) = GLOBAL.get() else {
+        return Vec::new();
+    };
+    flush_thread();
+    let rx = g.rx.lock().unwrap();
+    let mut out = Vec::new();
+    while let Ok(mut batch) = rx.try_recv() {
+        out.append(&mut batch);
+    }
+    // Stable by timestamp: per-thread order is preserved (timestamps are
+    // monotonic per thread and buffers flush in order), so B/E nesting
+    // survives the merge.
+    out.sort_by_key(|e| e.ts_ns);
+    out
+}
+
+/// Render events as Chrome trace-event JSON (the `traceEvents` array of
+/// `B`/`E` duration events), loadable in Perfetto / `chrome://tracing`.
+/// Timestamps are microseconds from the trace epoch.
+pub fn chrome_trace_json(events: &[Event]) -> String {
+    let rows: Vec<Value> = events
+        .iter()
+        .map(|e| {
+            let mut fields = vec![
+                ("name", Value::Str(e.name.to_string())),
+                ("ph", Value::Str((if e.begin { "B" } else { "E" }).to_string())),
+                ("ts", Value::Num(e.ts_ns as f64 / 1e3)),
+                ("pid", Value::Num(1.0)),
+                ("tid", Value::Num(e.tid as f64)),
+            ];
+            if !e.args.is_empty() {
+                fields.push((
+                    "args",
+                    Value::Obj(
+                        e.args
+                            .iter()
+                            .map(|(k, v)| (k.to_string(), Value::Str(v.clone())))
+                            .collect(),
+                    ),
+                ));
+            }
+            obj(fields)
+        })
+        .collect();
+    obj(vec![
+        ("traceEvents", Value::Arr(rows)),
+        ("displayTimeUnit", Value::Str("ms".to_string())),
+    ])
+    .to_json()
+}
+
+/// Write `events` as Chrome trace JSON to `path`, atomically (tmp +
+/// rename), so a reader — or a CI checker racing the serve dumper — never
+/// sees a torn file.
+pub fn write_chrome_trace(path: &Path, events: &[Event]) -> Result<()> {
+    let tmp = path.with_extension("trace.tmp");
+    std::fs::write(&tmp, chrome_trace_json(events))?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Compact per-span summary: count, total/mean/max duration in µs, one row
+/// per span name, alphabetical. Unmatched begin events (spans still open
+/// when drained) are not counted.
+pub fn summary_table(events: &[Event]) -> String {
+    use std::collections::{BTreeMap, HashMap};
+    #[derive(Default)]
+    struct Row {
+        count: u64,
+        total_ns: u64,
+        max_ns: u64,
+    }
+    let mut stacks: HashMap<u64, Vec<(&str, u64)>> = HashMap::new();
+    let mut rows: BTreeMap<&str, Row> = BTreeMap::new();
+    for e in events {
+        let stack = stacks.entry(e.tid).or_default();
+        if e.begin {
+            stack.push((e.name.as_ref(), e.ts_ns));
+        } else if let Some((name, t0)) = stack.pop() {
+            let dur = e.ts_ns.saturating_sub(t0);
+            let row = rows.entry(name).or_default();
+            row.count += 1;
+            row.total_ns += dur;
+            row.max_ns = row.max_ns.max(dur);
+        }
+    }
+    let mut out =
+        String::from("span                           count     total_us      mean_us       max_us\n");
+    for (name, r) in rows {
+        out.push_str(&format!(
+            "{:<30} {:>5} {:>12.1} {:>12.1} {:>12.1}\n",
+            name,
+            r.count,
+            r.total_ns as f64 / 1e3,
+            r.total_ns as f64 / 1e3 / r.count as f64,
+            r.max_ns as f64 / 1e3
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The recorder is process-global; serialize the tests that toggle it
+    // so parallel test threads can't interleave their event streams.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn drain_named(prefix: &str) -> Vec<Event> {
+        drain().into_iter().filter(|e| e.name.starts_with(prefix)).collect()
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _guard = TEST_LOCK.lock().unwrap();
+        disable();
+        let _ = drain();
+        {
+            let mut s = span("t1.quiet");
+            s.tag("never", || unreachable!("tag closures must not run when off"));
+            let _ = span_with(|| unreachable!("name closures must not run when off"));
+        }
+        assert!(!enabled());
+        assert!(drain_named("t1.").is_empty());
+    }
+
+    #[test]
+    fn spans_emit_balanced_nested_events_and_chrome_json_parses() {
+        let _guard = TEST_LOCK.lock().unwrap();
+        enable();
+        let _ = drain();
+        {
+            let mut outer = span("t2.outer");
+            outer.tag("k", || "v".to_string());
+            let _inner = span_with(|| "t2.layer:stem".to_string());
+        }
+        disable();
+        let evs = drain_named("t2.");
+        assert_eq!(evs.len(), 4, "{evs:?}");
+        // per-thread LIFO: outer B, inner B, inner E, outer E
+        assert_eq!(
+            evs.iter().map(|e| (e.name.as_ref(), e.begin)).collect::<Vec<_>>(),
+            vec![
+                ("t2.outer", true),
+                ("t2.layer:stem", true),
+                ("t2.layer:stem", false),
+                ("t2.outer", false),
+            ]
+        );
+        assert!(evs.windows(2).all(|w| w[0].ts_ns <= w[1].ts_ns));
+        assert_eq!(evs[3].args, vec![("k", "v".to_string())]);
+
+        let json = chrome_trace_json(&evs);
+        let v = Value::parse(&json).unwrap();
+        let rows = v.get("traceEvents").unwrap().arr().unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].get("ph").unwrap().str().unwrap(), "B");
+        assert_eq!(rows[3].get("ph").unwrap().str().unwrap(), "E");
+        assert_eq!(rows[3].get("args").unwrap().get("k").unwrap().str().unwrap(), "v");
+        // a second drain sees nothing new
+        assert!(drain_named("t2.").is_empty());
+    }
+
+    #[test]
+    fn summary_table_counts_and_averages_per_name() {
+        let _guard = TEST_LOCK.lock().unwrap();
+        enable();
+        let _ = drain();
+        for _ in 0..3 {
+            let _s = span("t3.step");
+        }
+        disable();
+        let evs = drain_named("t3.");
+        assert_eq!(evs.len(), 6);
+        let table = summary_table(&evs);
+        let line = table.lines().find(|l| l.starts_with("t3.step")).unwrap();
+        assert!(line.split_whitespace().any(|f| f == "3"), "count 3 in {line:?}");
+    }
+
+    #[test]
+    fn write_chrome_trace_is_atomic_and_loadable() {
+        let _guard = TEST_LOCK.lock().unwrap();
+        enable();
+        let _ = drain();
+        {
+            let _s = span("t4.io");
+        }
+        disable();
+        let evs = drain_named("t4.");
+        let path = std::env::temp_dir().join(format!("trace-selftest-{}.json", std::process::id()));
+        write_chrome_trace(&path, &evs).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = Value::parse(&text).unwrap();
+        assert_eq!(v.get("traceEvents").unwrap().arr().unwrap().len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -259,7 +259,24 @@ pub fn run(
                         if i >= todo.len() {
                             break;
                         }
-                        match eval_candidate(&plan, &todo[i], tcfg) {
+                        let cand = &todo[i];
+                        // Span one candidate evaluation; the `cache` tag
+                        // diffs the plan's Copy cache counters across the
+                        // eval, so prefix reuse is visible per span.
+                        let before = plan.cache_stats();
+                        let mut span = crate::trace::span("tune.eval");
+                        span.tag("cr", || format!("{:.3}", cand.cr));
+                        span.tag("bits", || format!("{}/{}", cand.hi_bits, cand.lo_bits));
+                        span.tag("align", || cand.align.to_string());
+                        let result = eval_candidate(&plan, cand, tcfg);
+                        span.tag("cache", || {
+                            let after = plan.cache_stats();
+                            let hit = after.prefix_hits() > before.prefix_hits();
+                            (if hit { "hit" } else { "miss" }).to_string()
+                        });
+                        drop(span);
+                        crate::trace::flush_thread();
+                        match result {
                             Ok(point) => {
                                 let _ = tx.send(Msg::Point(point));
                             }

@@ -584,6 +584,39 @@ fn prop_sim_programmed_index_drops_pruned_and_zero_scale_strips() {
     }
 }
 
+#[test]
+fn prop_sim_trace_toggle_never_changes_forward_bits_or_walk_counters() {
+    // Tracing is observability, not execution: flipping the recorder on
+    // must leave the programmed walk bit-identical, and the always-on walk
+    // profile must count the same work either way. (The allocation-free
+    // disabled path is asserted separately in tests/trace_zero_alloc.rs,
+    // which needs its own binary for the counting global allocator.)
+    use reram_mpq::backend::ExecBackend;
+    let mut rng = Rng::seed_from_u64(97);
+    for case in 0..6 {
+        let m = rand_model(&mut rng);
+        let layer = m.layer(0).clone();
+        let (theta, sp, patches, t) = rand_sim_case(&mut rng, &m, true);
+        let base = SimXbarConfig::default();
+        let cfg = if case % 2 == 0 { base } else { base.with_adc(4) };
+        let sim = SimXbar::new(cfg);
+        reram_mpq::trace::disable();
+        let p0 = sim.walk_profile().unwrap();
+        let off = sim.conv_bitserial(&m, &layer, &theta, &patches, t, &sp).unwrap();
+        let p1 = sim.walk_profile().unwrap();
+        reram_mpq::trace::enable();
+        let on = sim.conv_bitserial(&m, &layer, &theta, &patches, t, &sp).unwrap();
+        let p2 = sim.walk_profile().unwrap();
+        reram_mpq::trace::disable();
+        let _ = reram_mpq::trace::drain();
+        assert_eq!(off, on, "case {case}: tracing must never change forward bits");
+        let d_off = p1.delta(&p0);
+        let d_on = p2.delta(&p1);
+        assert_eq!(d_off, d_on, "case {case}: walk counters independent of tracing");
+        assert_eq!(d_on.conv_calls, 1, "case {case}: one conv call per delta");
+    }
+}
+
 // ---- faults/ device-variability scenario invariants ------------------------
 
 #[test]

@@ -244,6 +244,65 @@ fn sim_serve_stats_frame_and_bench_client_account_for_every_frame() {
 }
 
 #[test]
+fn sim_serve_stats_json_roundtrips_machine_readable_snapshot() {
+    // The StatsJsonReq frame must answer one valid JSON document exposing
+    // the complete snapshot: engine counters, the rejected breakdown, the
+    // raw 64-bucket latency histogram, the crossbar walk profile, and the
+    // server + batcher sections.
+    use reram_mpq::util::json::Value;
+    let plan = sim_plan(fixture::tiny(79), SimXbarConfig::default(), RunConfig::default())
+        .threshold(ThresholdMode::FixedCr(0.5));
+    let handle = plan.deploy(EngineConfig::default()).unwrap();
+    let (_server, addr) = start_server(&handle, ServeConfig::default());
+    let images = test_images(&plan, 4);
+    let mut client = ServeClient::connect(&addr).unwrap();
+    for img in &images {
+        match client.classify(img.clone()).unwrap() {
+            ClientReply::Ok { .. } => {}
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+
+    let json = client.stats_json().unwrap();
+    let v = Value::parse(&json).expect("stats_json is valid JSON");
+    let engine = v.get("engine").unwrap();
+    assert_eq!(engine.get("requests").unwrap().usize().unwrap(), 4, "{json}");
+    let lat = engine.get("latency").unwrap();
+    assert_eq!(lat.get("observed_requests").unwrap().usize().unwrap(), 4, "{json}");
+    let rej = v.get("rejected").unwrap();
+    for key in ["queue_full", "decode", "shutdown", "total"] {
+        assert_eq!(rej.get(key).unwrap().usize().unwrap(), 0, "rejected.{key} in {json}");
+    }
+    let hist = v.get("hist").unwrap().arr().unwrap();
+    assert_eq!(hist.len(), 64, "{json}");
+    let total: usize = hist.iter().map(|b| b.usize().unwrap()).sum();
+    assert_eq!(total, 4, "histogram counts the served requests: {json}");
+    assert_eq!(v.get("scenario").unwrap().str().unwrap(), "none", "{json}");
+    assert!(v.get("program").unwrap().get("workers").unwrap().usize().unwrap() >= 1, "{json}");
+    assert_eq!(v.get("server").unwrap().get("ok").unwrap().usize().unwrap(), 4, "{json}");
+    assert_eq!(v.get("batcher").unwrap().get("accepted").unwrap().usize().unwrap(), 4, "{json}");
+
+    // Walk-profile counters fold in *after* replies are sent (the worker
+    // pushes the delta once the batch completes), so poll briefly.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    loop {
+        let v = Value::parse(&client.stats_json().unwrap()).unwrap();
+        let walk = v.get("walk_profile").unwrap();
+        let calls = walk.get("conv_calls").unwrap().usize().unwrap();
+        if calls >= 1 {
+            assert!(walk.get("strips_walked").unwrap().usize().unwrap() >= 1);
+            assert!(walk.get("phase_steps").unwrap().usize().unwrap() >= 1);
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "walk profile never surfaced in stats JSON"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
 fn sim_serve_bad_image_size_answers_error_frame_and_connection_survives() {
     // An undersized image must be refused at the door with a typed Error
     // frame — never enter a batch (where it would fail the whole batch) —

@@ -1,0 +1,132 @@
+//! The zero-alloc steady-state invariant survives the tracing subsystem:
+//! with tracing **disabled** (the default), the programmed crossbar walk
+//! performs zero heap allocations once its scratch is warm — the span
+//! guards must not read the clock, format names, or touch buffers. With
+//! tracing **enabled** the walk may allocate (span events), but the
+//! numerical output must stay bit-identical.
+//!
+//! This lives in its own test binary because the counting
+//! `#[global_allocator]` is process-global: a shared binary's parallel
+//! tests would count each other's allocations.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use reram_mpq::backend::{ProgrammedModel, Scratch, SimXbar, SimXbarConfig, StripPrecision};
+use reram_mpq::config::QuantConfig;
+use reram_mpq::model::{BatchSizes, BinEntry, LayerEntry, ModelEntry, ModelInfo};
+use reram_mpq::quant::{self, BitMap};
+use reram_mpq::trace;
+use reram_mpq::util::rng::Rng;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Counts every allocation and reallocation, then defers to the system
+/// allocator. Deallocations are free (releasing warm capacity is not an
+/// allocation), so the counter measures exactly what the invariant forbids.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL_ALLOC: CountingAlloc = CountingAlloc;
+
+/// Single-conv-layer model, mirroring the property suite's fixture shape.
+fn conv_model(k: usize, d: usize, n: usize) -> ModelInfo {
+    let size = k * k * d * n;
+    ModelInfo::new(ModelEntry {
+        name: "zero-alloc".into(),
+        num_params: size,
+        num_conv_params: size,
+        fp32_test_acc: 1.0,
+        params: BinEntry { file: "x".into(), shape: vec![size], dtype: "f32".into() },
+        layers: vec![LayerEntry {
+            name: "s1.b0.conv1".into(),
+            shape: vec![k, k, d, n],
+            kind: "conv".into(),
+            theta_offset: 0,
+            convflat_offset: Some(0),
+        }],
+        executables: HashMap::new(),
+        batch: BatchSizes { eval: 1, serve: 1, calib: 1 },
+    })
+}
+
+#[test]
+fn trace_disabled_walk_is_allocation_free_and_enabling_keeps_bits() {
+    let m = conv_model(3, 14, 17);
+    let layer = m.layer(0).clone();
+    let mut rng = Rng::seed_from_u64(101);
+    let theta: Vec<f32> = (0..m.entry.num_params).map(|_| rng.normal() * 0.5).collect();
+    let bits: Vec<u8> = (0..m.num_strips()).map(|i| [4u8, 8][i % 2]).collect();
+    let qm = quant::apply(
+        &m,
+        &theta,
+        &BitMap { bits },
+        &QuantConfig { device_sigma: 0.0, ..QuantConfig::default() },
+    );
+    let sp = StripPrecision::from_quantized(&qm);
+    let t = 4usize;
+    let patches: Vec<f32> = (0..t * layer.k * layer.k * layer.d).map(|_| rng.normal()).collect();
+
+    // threads: 1 — the sharded path spawns scoped threads (stack + handle
+    // allocations by design); the invariant is about the walk itself. The
+    // 4-bit ADC selects the Packed store, the widest code path (DAC, plane
+    // packing, staged prefetch, kernel dispatch).
+    let cfg = SimXbarConfig { threads: 1, ..SimXbarConfig::default() }.with_adc(4);
+    let prog = ProgrammedModel::program(&m, &qm.theta, &sp, &cfg).unwrap();
+    let sim = SimXbar::new(cfg);
+    let mut scratch = Scratch::default();
+    let mut out = Vec::new();
+
+    // Warm the scratch arena (first calls grow every reusable buffer).
+    for _ in 0..2 {
+        sim.conv_programmed(&prog, &layer, &patches, t, &mut scratch.conv, &mut out).unwrap();
+    }
+    let want = out.clone();
+
+    // Steady state, tracing disabled (never initialized): zero allocations.
+    let before = ALLOCS.load(Ordering::SeqCst);
+    sim.conv_programmed(&prog, &layer, &patches, t, &mut scratch.conv, &mut out).unwrap();
+    let grew = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(
+        grew, 0,
+        "programmed walk allocated {grew} time(s) in steady state with tracing off"
+    );
+    assert_eq!(out, want, "steady-state walk must be deterministic");
+
+    // Tracing on: same bits (allocation is allowed — spans buffer events).
+    trace::enable();
+    sim.conv_programmed(&prog, &layer, &patches, t, &mut scratch.conv, &mut out).unwrap();
+    trace::disable();
+    assert_eq!(out, want, "tracing must never change the walk's output bits");
+    let events = trace::drain();
+    assert!(
+        events.iter().any(|e| e.name == "xbar.conv"),
+        "enabled tracing records the xbar.conv span (got {} events)",
+        events.len()
+    );
+
+    // And back off: the disabled path is allocation-free again even after
+    // the recorder has been initialized (the guard is one atomic load).
+    let before = ALLOCS.load(Ordering::SeqCst);
+    sim.conv_programmed(&prog, &layer, &patches, t, &mut scratch.conv, &mut out).unwrap();
+    let grew = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(grew, 0, "re-disabled walk allocated {grew} time(s)");
+    assert_eq!(out, want);
+}

@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file emitted by `reram-mpq`.
+
+Checks (stdlib only, exits non-zero with a message on the first failure):
+
+  1. The file parses as JSON and has the object form
+     {"traceEvents": [...], ...} that ui.perfetto.dev / chrome://tracing
+     load.
+  2. Every event carries the required fields (name, ph, ts, pid, tid),
+     ph is "B" or "E", and ts is a non-negative number.
+  3. Per (pid, tid), B/E events balance like a bracket string: every E
+     closes the most recent open B of the same name, and nothing stays
+     open at the end (the recorder's RAII spans guarantee this).
+  4. Optionally (--require NAME...), each NAME matches at least one span
+     name; a trailing ':' does prefix matching, so `--require layer:`
+     asserts at least one per-layer forward span exists.
+
+Usage:
+  python3 tools/check_trace.py serve_trace.json \
+      --require server.handle batcher.submit backend.forward layer:
+"""
+
+import argparse
+import json
+import sys
+
+
+def fail(msg):
+    print(f"check_trace: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument(
+        "--require",
+        nargs="*",
+        default=[],
+        metavar="NAME",
+        help="span names that must appear; a trailing ':' prefix-matches",
+    )
+    ap.add_argument(
+        "--min-events",
+        type=int,
+        default=1,
+        help="minimum number of events expected (default 1)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.trace, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{args.trace}: {e}")
+
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail("top level must be an object with a 'traceEvents' array")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        fail("'traceEvents' is not an array")
+    if len(events) < args.min_events:
+        fail(f"only {len(events)} event(s), expected >= {args.min_events}")
+
+    names = set()
+    stacks = {}  # (pid, tid) -> [open span names]
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            fail(f"event #{i} is not an object")
+        for field in ("name", "ph", "ts", "pid", "tid"):
+            if field not in ev:
+                fail(f"event #{i} missing '{field}': {ev}")
+        name, ph, ts = ev["name"], ev["ph"], ev["ts"]
+        if ph not in ("B", "E"):
+            fail(f"event #{i} has ph={ph!r}, expected 'B' or 'E'")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            fail(f"event #{i} has non-numeric or negative ts: {ts!r}")
+        names.add(name)
+        key = (ev["pid"], ev["tid"])
+        stack = stacks.setdefault(key, [])
+        if ph == "B":
+            stack.append(name)
+        else:
+            if not stack:
+                fail(f"event #{i}: E {name!r} on tid {key[1]} with no open span")
+            top = stack.pop()
+            if top != name:
+                fail(
+                    f"event #{i}: E {name!r} on tid {key[1]} closes "
+                    f"open span {top!r} (misnested)"
+                )
+
+    for (pid, tid), stack in stacks.items():
+        if stack:
+            fail(f"tid {tid} (pid {pid}) ends with unclosed span(s): {stack}")
+
+    for want in args.require:
+        if want.endswith(":"):
+            ok = any(n.startswith(want) for n in names)
+        else:
+            ok = want in names
+        if not ok:
+            fail(f"required span {want!r} never appears (saw: {sorted(names)})")
+
+    tids = len(stacks)
+    print(
+        f"check_trace: OK: {len(events)} events, {len(names)} span name(s), "
+        f"{tids} thread(s), all B/E balanced"
+    )
+
+
+if __name__ == "__main__":
+    main()
