@@ -61,7 +61,9 @@ fn main() -> reram_mpq::Result<()> {
         let name = format!("serve throughput, {conns} conns over tcp loopback");
         let mut last = None;
         b.run(&name, || {
-            let report = bench_client(&addr, conns, requests, &images).unwrap();
+            // 0 retries: the bench measures raw shed/served throughput;
+            // backoff sleeps would distort the timing.
+            let report = bench_client(&addr, conns, requests, &images, 0).unwrap();
             assert_eq!(report.failed, 0, "failed frames during bench: {report:?}");
             last = Some(report);
         });
@@ -78,6 +80,8 @@ fn main() -> reram_mpq::Result<()> {
                     ("p50_ns", report.p50_us as f64 * 1e3),
                     ("p99_ns", report.p99_us as f64 * 1e3),
                     ("rejected", report.rejected as f64),
+                    ("degraded", report.degraded as f64),
+                    ("retries", report.retries as f64),
                     ("conn_p99_min_ns", conn_p99_min as f64 * 1e3),
                     ("conn_p99_max_ns", conn_p99_max as f64 * 1e3),
                     ("max_queue_depth", report.max_queue_depth as f64),

@@ -149,6 +149,21 @@ pub trait ExecBackend {
     fn walk_profile(&self) -> Option<WalkProfile> {
         None
     }
+
+    /// One self-healing monitor step at logical tick `tick` (the worker's
+    /// served-batch count): probe canary strips, detect runtime fault
+    /// evolution, and repair by re-programming + hot-swapping a standby
+    /// artifact (see [`crate::health`]). Engine workers call this between
+    /// batches every `probe_every` batches. The default — and the pjrt
+    /// backend, whose artifacts cannot degrade — monitors nothing.
+    fn health_step(
+        &self,
+        _model: &ModelInfo,
+        _theta: &Tensor,
+        _tick: u64,
+    ) -> Option<crate::health::StepReport> {
+        None
+    }
 }
 
 impl ExecBackend for crate::runtime::Runtime {

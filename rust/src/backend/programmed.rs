@@ -38,6 +38,23 @@
 //! on-the-fly path for every config corner (property-tested in
 //! `tests/properties.rs`).
 //!
+//! ## Health reservations: canaries and spares
+//!
+//! When the scenario carries an active [`crate::faults::HealthSpec`], each
+//! layer reserves extra physical column slots past its natural `K²·N`
+//! range: first `spares` repair slots (candidates for sensitivity-aware
+//! placement alongside the natural slots — the most damaged slots of the
+//! pooled candidate set are left unused, which is the quarantine), then
+//! `canaries` known-answer strips programmed with a deterministic
+//! pseudo-random code pattern at unit scale. The serving-side health
+//! monitor ([`crate::health`]) replays each canary's expected codes through
+//! the *evolved* fault spec and compares against what a fresh programming
+//! pass would store — a mismatch means the device has drifted from the
+//! programmed artifact. Reserved slots extend the fault-key slot space
+//! (`nslots_ext`), so an artifact with reservations draws IR-drop column
+//! fractions over the wider array; with health off, `nslots_ext == K²·N`
+//! and the artifact is bit-identical to the reservation-free one.
+//!
 //! ## Fault scenarios
 //!
 //! [`ProgrammedModel::program_with`] additionally accepts a
@@ -252,8 +269,31 @@ pub struct ProgrammedStrip {
     pub store: StripStore,
 }
 
+/// One reserved known-answer strip: a deterministic code pattern programmed
+/// at unit scale whose post-fault state the health monitor can re-derive at
+/// any logical tick and compare against [`CanaryStrip::programmed`].
+#[derive(Clone, Debug)]
+pub struct CanaryStrip {
+    /// Physical slot the canary occupies (past the spare range).
+    pub slot: u32,
+    /// Cell slices the canary's codes span (the layer's canonical depth).
+    pub ncells: usize,
+    /// The fault-free code pattern (pure function of lane index and canary
+    /// ordinal — re-derivable without the artifact).
+    pub expected: Vec<i32>,
+    /// `expected` after the programming-time fault injection — what the
+    /// device actually holds. A probe at tick `t` replays `expected`
+    /// through the spec evolved to `t` and compares against this.
+    pub programmed: Vec<i32>,
+    /// Canary scale after injection (IR drop perturbs it like any strip).
+    pub sw: f32,
+}
+
 /// One conv layer's programmed tiles plus the compact live-strip index.
 pub struct ProgrammedLayer {
+    /// Fault-key layer index (`ConvLayer::index`), kept so health probes
+    /// can replay this layer's fault streams without the `ModelInfo`.
+    pub index: usize,
     /// Input depth D (strip length).
     pub d: usize,
     /// Output channels N.
@@ -270,6 +310,11 @@ pub struct ProgrammedLayer {
     pub segs: Vec<(usize, usize, usize)>,
     /// Packed u64 words per (phase/cell-bit × polarity) plane.
     pub total_words: usize,
+    /// Fault-key slot-space width: `K²·N` natural slots plus any reserved
+    /// spare and canary slots. Equals `kk·n` when health is off.
+    pub nslots_ext: usize,
+    /// Reserved known-answer strips (empty when health is off).
+    pub canaries: Vec<CanaryStrip>,
 }
 
 /// The programmed-crossbar artifact for one `(model, theta, strips,
@@ -288,9 +333,17 @@ pub struct ProgrammedModel {
     pub planes_bytes: usize,
     /// Wall-clock nanoseconds spent programming (always >= 1).
     pub program_ns: u64,
-    /// The fault spec injected at programming time (`None` when the
-    /// artifact is fault-free).
+    /// The *effective* fault spec injected at programming time — the
+    /// scenario's base spec evolved to [`ProgrammedModel::tick`] (`None`
+    /// when the artifact is fault-free).
     pub scenario: Option<faults::ScenarioSpec>,
+    /// Cell bit width the tiles were programmed with (needed to replay
+    /// canary fault streams at probe time).
+    pub cell_bits: u8,
+    /// Logical serving tick the artifact was programmed at (0 = deploy).
+    pub tick: u64,
+    /// Canary/spare reservation the artifact was programmed with.
+    pub health: faults::HealthSpec,
 }
 
 impl ProgrammedModel {
@@ -353,6 +406,11 @@ impl ProgrammedModel {
                 );
             }
         }
+        // The spec the device actually experiences at programming time: the
+        // base spec evolved to the scenario's logical tick. Tick 0 (deploy
+        // time) is the base spec itself.
+        let eff_spec: Option<faults::ScenarioSpec> = scn.map(|sc| sc.effective_spec());
+        let health = scn.map(|sc| sc.health).unwrap_or_default();
 
         let mode = ExecMode::of(cfg);
         let mask = (1i32 << cfg.cell_bits) - 1;
@@ -370,42 +428,65 @@ impl ProgrammedModel {
 
             // Fault draws are keyed by *physical slot*. With an active
             // scenario, decide each live strip's slot up front: rank the
-            // layer's slots by the damage the scenario deals them (exactly
-            // the draws injection will consume) and, under sensitivity-
-            // aware placement, put the highest-scoring strips on the
-            // healthiest slots. Identity otherwise.
+            // layer's candidate slots (natural live slots plus reserved
+            // spares) by the damage the *effective* spec deals them
+            // (exactly the draws injection will consume) and, under
+            // sensitivity-aware placement, put the highest-scoring strips
+            // on the healthiest candidates — leaving the most damaged
+            // candidates quarantined. Identity otherwise.
             let nslots = kk * layer.n;
-            let slot_of: Option<Vec<u32>> = scn.map(|sc| {
-                let mut live_slots = Vec::new();
-                let mut max_bits = 0u8;
-                for local in 0..nslots {
-                    let idx = base + local;
-                    if sp.bits[idx] > 0 && sp.scales[idx] > 0.0 {
-                        live_slots.push(local);
-                        max_bits = max_bits.max(sp.bits[idx]);
-                    }
+            let spares = health.spares as usize;
+            let ncanaries = health.canaries as usize;
+            let nslots_ext = nslots + spares + ncanaries;
+            let mut live_slots = Vec::new();
+            let mut max_bits = 0u8;
+            for local in 0..nslots {
+                let idx = base + local;
+                if sp.bits[idx] > 0 && sp.scales[idx] > 0.0 {
+                    live_slots.push(local);
+                    max_bits = max_bits.max(sp.bits[idx]);
                 }
-                let canon_ncells = max_bits.max(1).div_ceil(cfg.cell_bits) as usize;
-                let scores: Option<Vec<f64>> = sc
+            }
+            let canon_ncells = max_bits.max(1).div_ceil(cfg.cell_bits) as usize;
+            let slot_of: Option<Vec<u32>> = scn.map(|sc| {
+                let eff = eff_spec.expect("active scenario has an effective spec");
+                let mut candidates = live_slots.clone();
+                candidates.extend(nslots..nslots + spares);
+                let mut scores: Option<Vec<f64>> = sc
                     .scores
                     .as_ref()
                     .map(|s| live_slots.iter().map(|&l| s[base + l]).collect());
-                let damage: Vec<f64> = live_slots
+                if scores.is_none()
+                    && spares > 0
+                    && matches!(sc.placement, faults::Placement::SensitivityAware)
+                {
+                    // Spares reserved but no sensitivity profile: damage
+                    // avoidance should still work, so rank strips uniformly.
+                    // rank_desc's ascending-index tie-break makes this the
+                    // identity assignment on an undamaged device.
+                    scores = Some(vec![0.0; live_slots.len()]);
+                }
+                let damage: Vec<f64> = candidates
                     .iter()
                     .map(|&l| {
                         faults::slot_damage(
-                            &sc.spec,
+                            &eff,
                             layer.index,
                             l,
-                            nslots,
+                            nslots_ext,
                             cfg.cell_bits,
                             canon_ncells,
                             d,
                         )
                     })
                     .collect();
-                let assigned =
-                    faults::assign_slots(sc.placement, scores.as_deref(), &damage, &live_slots);
+                let assigned = faults::assign_slots_spares(
+                    sc.placement,
+                    scores.as_deref(),
+                    &damage,
+                    &candidates,
+                    live_slots.len(),
+                );
                 let mut map = vec![u32::MAX; nslots];
                 for (i, &l) in live_slots.iter().enumerate() {
                     map[l] = assigned[i] as u32;
@@ -441,12 +522,12 @@ impl ProgrammedModel {
                     let ncells = bits.div_ceil(cfg.cell_bits) as usize;
                     let local = g * layer.n + ch;
                     let slot = slot_of.as_ref().map_or(local as u32, |m| m[local]);
-                    if let Some(sc) = scn {
+                    if let Some(eff) = &eff_spec {
                         faults::apply_to_strip(
-                            &sc.spec,
+                            eff,
                             layer.index,
                             slot as usize,
-                            nslots,
+                            nslots_ext,
                             cfg.cell_bits,
                             ncells,
                             &mut codes_w,
@@ -510,7 +591,52 @@ impl ProgrammedModel {
                 }
                 chan.push((start, strips.len() as u32 - start));
             }
+
+            // Program the known-answer canary strips into the reserved
+            // slots past the spare range. The expected pattern is a pure
+            // function of (lane, canary ordinal) so a probe can re-derive
+            // it; the stored `programmed` codes carry whatever the
+            // programming-time fault spec did to them.
+            let mut canaries = Vec::with_capacity(ncanaries);
+            if ncanaries > 0 {
+                let cap = ((1i64 << (canon_ncells as u32 * cfg.cell_bits as u32)) - 1)
+                    .min(i32::MAX as i64);
+                for c in 0..ncanaries {
+                    let slot = nslots + spares + c;
+                    let expected: Vec<i32> = (0..d)
+                        .map(|dd| {
+                            ((dd as i64 * 7919 + c as i64 * 104_729).rem_euclid(2 * cap + 1)
+                                - cap) as i32
+                        })
+                        .collect();
+                    let mut programmed = expected.clone();
+                    let mut csw = 1.0f32;
+                    if let Some(eff) = &eff_spec {
+                        faults::apply_to_strip(
+                            eff,
+                            layer.index,
+                            slot,
+                            nslots_ext,
+                            cfg.cell_bits,
+                            canon_ncells,
+                            &mut programmed,
+                            &mut csw,
+                        );
+                    }
+                    planes_bytes +=
+                        (expected.len() + programmed.len()) * std::mem::size_of::<i32>();
+                    canaries.push(CanaryStrip {
+                        slot: slot as u32,
+                        ncells: canon_ncells,
+                        expected,
+                        programmed,
+                        sw: csw,
+                    });
+                }
+            }
+
             layers.push(ProgrammedLayer {
+                index: layer.index,
                 d,
                 n: layer.n,
                 kk,
@@ -518,6 +644,8 @@ impl ProgrammedModel {
                 chan,
                 segs,
                 total_words,
+                nslots_ext,
+                canaries,
             });
             base += layer.num_strips();
         }
@@ -528,7 +656,10 @@ impl ProgrammedModel {
             dropped_strips: dropped,
             planes_bytes,
             program_ns: (t0.elapsed().as_nanos() as u64).max(1),
-            scenario: scn.map(|s| s.spec),
+            scenario: eff_spec,
+            cell_bits: cfg.cell_bits,
+            tick: scn.map_or(0, |s| s.tick),
+            health,
         })
     }
 }

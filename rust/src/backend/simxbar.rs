@@ -74,7 +74,7 @@
 //!   seeded per strip (not per evaluation order), so any worker count
 //!   produces bit-identical results.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::backend::nn::{self, ConvExec, ExactConv, NetSpec};
 use crate::backend::programmed::{
@@ -743,6 +743,24 @@ pub struct SimXbar {
     /// conv call (never in the per-sample loops) and surfaced through
     /// [`ExecBackend::walk_profile`].
     walk: WalkProfileAtomic,
+    /// Serving-time self-healing state (see [`crate::health`]): the logical
+    /// tick the installed artifact was programmed at, plus the channel of
+    /// an in-flight background re-programming pass. Each engine worker owns
+    /// its backend, so the lock is uncontended.
+    health: Mutex<HealthState>,
+}
+
+/// Health-monitor state of one backend instance.
+#[derive(Default)]
+struct HealthState {
+    /// Logical tick the currently installed artifact was programmed at.
+    /// Folded into the effective scenario so the artifact cache key always
+    /// names the installed generation.
+    installed_tick: u64,
+    /// Receiver for a standby artifact being programmed on a background
+    /// thread: `Some((tick, artifact))` on success, `None` if programming
+    /// failed (the monitor retries on a later step).
+    pending: Option<mpsc::Receiver<Option<(u64, Arc<ProgrammedModel>)>>>,
 }
 
 /// FNV-1a over the programmed artifact's inputs: model identity, parameter
@@ -752,8 +770,9 @@ pub struct SimXbar {
 /// deliberately excluded — sharding and kernel width are bit-identical and
 /// the interleaved plane layout is the same either way, so they share the
 /// artifact). The fault
-/// scenario's fingerprint (spec + placement + scores) is mixed in so
-/// faulted and fault-free artifacts never alias.
+/// scenario's fingerprint (spec + placement + scores + health reservation
+/// + tick) is mixed in so faulted and fault-free artifacts — and distinct
+/// repair generations — never alias.
 fn prog_key(
     model: &ModelInfo,
     theta: &[f32],
@@ -810,6 +829,7 @@ impl SimXbar {
             programmed: Mutex::new(None),
             scratch: Mutex::new(Scratch::default()),
             walk: WalkProfileAtomic::default(),
+            health: Mutex::new(HealthState::default()),
         }
     }
 
@@ -847,6 +867,15 @@ impl SimXbar {
         self.scenario.as_ref().map_or_else(|| "none".to_string(), |s| s.describe())
     }
 
+    /// The scenario the *installed* artifact generation programs under: the
+    /// base scenario advanced to the tick the health monitor last swapped
+    /// at. The tick enters [`Scenario::fingerprint`], so every repair
+    /// generation gets its own cache key.
+    fn effective_scenario(&self) -> Option<Scenario> {
+        let tick = self.health.lock().unwrap().installed_tick;
+        self.scenario.clone().map(|sc| sc.with_tick(tick))
+    }
+
     /// The kernel the programmed packed walk will dispatch to on this host
     /// under the configured [`SimdMode`]: `"avx2"`, `"neon"` or `"scalar"`.
     pub fn simd_kernel_name(&self) -> &'static str {
@@ -872,7 +901,8 @@ impl SimXbar {
         theta: &[f32],
         sp: &StripPrecision,
     ) -> Result<Arc<ProgrammedModel>> {
-        let key = prog_key(model, theta, sp, &self.cfg, self.scenario.as_ref());
+        let scn = self.effective_scenario();
+        let key = prog_key(model, theta, sp, &self.cfg, scn.as_ref());
         {
             let guard = self.programmed.lock().unwrap();
             if let Some((k, p)) = guard.as_ref() {
@@ -883,15 +913,105 @@ impl SimXbar {
         }
         // Program outside the lock (it can take a while); if two threads
         // race, both computed the same artifact for the same key.
-        let p = Arc::new(ProgrammedModel::program_with(
-            model,
-            theta,
-            sp,
-            &self.cfg,
-            self.scenario.as_ref(),
-        )?);
+        let p = Arc::new(ProgrammedModel::program_with(model, theta, sp, &self.cfg, scn.as_ref())?);
         *self.programmed.lock().unwrap() = Some((key, p.clone()));
         Ok(p)
+    }
+
+    /// One health-monitor step at logical tick `tick` (the worker's
+    /// served-batch count): install any standby artifact that finished
+    /// programming, probe the canary strips against the evolved fault spec,
+    /// and kick off a background re-programming pass when the device has
+    /// drifted from the installed artifact. Returns `None` when the backend
+    /// has no active fault scenario or no programmed artifact — nothing to
+    /// monitor. Runs between batches on the worker thread; only the probe
+    /// (O(canaries × depth)) runs inline, programming happens on a spawned
+    /// thread.
+    pub fn run_health_step(
+        &self,
+        model: &ModelInfo,
+        theta: &[f32],
+        tick: u64,
+    ) -> Option<crate::health::StepReport> {
+        let sp = self.strips.as_ref()?;
+        let sc = self.scenario.as_ref().filter(|s| s.is_active())?;
+        let mut report = crate::health::StepReport { tick, ..Default::default() };
+
+        // 1. Install a standby artifact if background programming finished.
+        //    Lock order is health → programmed, matching nothing else (no
+        //    other path holds both).
+        {
+            let mut hs = self.health.lock().unwrap();
+            if let Some(rx) = &hs.pending {
+                match rx.try_recv() {
+                    Ok(Some((newtick, fresh))) => {
+                        hs.pending = None;
+                        let cur =
+                            self.programmed.lock().unwrap().as_ref().map(|(_, p)| p.clone());
+                        if let Some(cur) = &cur {
+                            let (repairs, quarantined) =
+                                crate::health::repair_diff(cur, &fresh);
+                            report.repairs = repairs;
+                            report.quarantined = quarantined;
+                        }
+                        let scn = self.scenario.clone().map(|s| s.with_tick(newtick));
+                        let key = prog_key(model, theta, sp, &self.cfg, scn.as_ref());
+                        *self.programmed.lock().unwrap() = Some((key, fresh));
+                        hs.installed_tick = newtick;
+                        report.swapped = true;
+                    }
+                    // Programming failed (or the thread died): clear and
+                    // let a later step retry from scratch.
+                    Ok(None) | Err(mpsc::TryRecvError::Disconnected) => hs.pending = None,
+                    Err(mpsc::TryRecvError::Empty) => {}
+                }
+            }
+        }
+
+        // 2. Probe the canaries against the spec evolved to *now*.
+        let cur = self.programmed.lock().unwrap().as_ref().map(|(_, p)| p.clone())?;
+        let eff = sc.spec.at_tick(tick);
+        {
+            let mut span = crate::trace::span("health.probe");
+            span.tag("tick", || tick.to_string());
+            let (probes, mismatches) = crate::health::probe_canaries(&cur, &eff);
+            report.probes = probes;
+            report.canary_mismatches = mismatches;
+        }
+
+        // 3. Re-program in the background when the device has evolved away
+        //    from the installed artifact and the damage is detectable — a
+        //    canary reported mismatched lanes, or the deployment reserved
+        //    no canaries at all and must trust the clock blindly.
+        let evolved = cur.scenario != Some(eff);
+        let detected = report.probes == 0 || report.canary_mismatches > 0;
+        let reprogram_in_flight = self.health.lock().unwrap().pending.is_some();
+        if evolved && detected && !reprogram_in_flight {
+            let (tx, rx) = mpsc::sync_channel(1);
+            let model = model.clone();
+            let theta = theta.to_vec();
+            let sp = sp.clone();
+            let cfg = self.cfg;
+            let scn = sc.clone().with_tick(tick);
+            let spawned = std::thread::Builder::new()
+                .name("health-reprogram".into())
+                .spawn(move || {
+                    let mut span = crate::trace::span("health.reprogram");
+                    span.tag("tick", || tick.to_string());
+                    let res = ProgrammedModel::program_with(&model, &theta, &sp, &cfg, Some(&scn))
+                        .ok()
+                        .map(|p| (tick, Arc::new(p)));
+                    let _ = tx.send(res);
+                    drop(span);
+                    crate::trace::flush_thread();
+                })
+                .is_ok();
+            if spawned {
+                self.health.lock().unwrap().pending = Some(rx);
+                report.reprogram_started = true;
+            }
+        }
+        Some(report)
     }
 
     /// Accumulate the always-on walk-profile counters for one programmed
@@ -1612,6 +1732,15 @@ impl ExecBackend for SimXbar {
 
     fn walk_profile(&self) -> Option<WalkProfile> {
         Some(self.walk.snapshot())
+    }
+
+    fn health_step(
+        &self,
+        model: &ModelInfo,
+        theta: &Tensor,
+        tick: u64,
+    ) -> Option<crate::health::StepReport> {
+        self.run_health_step(model, theta.data(), tick)
     }
 }
 

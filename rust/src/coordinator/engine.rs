@@ -19,9 +19,26 @@
 //! worker with a free queue slot (falling back to a blocking round-robin
 //! send when all are busy), and shutdown drains every accepted request —
 //! replies are always delivered, as a [`Response`] or a typed
-//! [`BatchError`], never a dropped channel.
+//! [`BatchFail`], never a dropped channel.
+//!
+//! ## Worker supervision and self-healing
+//!
+//! Each worker's batch execution runs under `catch_unwind`: a panic
+//! mid-batch answers the in-flight requests with a typed degraded reply
+//! ([`BatchFail::Degraded`] → [`WaitError::Degraded`]), then the worker
+//! **respawns in place** — rebuilding its backend and re-programming its
+//! crossbars from the original seed — before taking the next batch.
+//! Only a failed respawn takes the worker down ([`Metrics`] counts both).
+//! Between batches, every `EngineConfig::probe_every` served batches the
+//! worker runs one [`ExecBackend::health_step`] at its served-batch tick:
+//! canary probing, runtime fault-evolution detection, and background
+//! repair programming with a hot artifact swap (see [`crate::health`]).
+//! The test-only `EngineConfig::chaos_panic_after` injects one deliberate
+//! panic on the Nth batch across the pool, so CI can prove the
+//! degrade-respawn-recover path end to end.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, SendError, SyncSender, TrySendError,
 };
@@ -114,12 +131,24 @@ impl std::fmt::Display for BatchError {
 
 impl std::error::Error for BatchError {}
 
-type BatchResult = std::result::Result<Response, BatchError>;
+/// How a request's batch failed to produce a [`Response`]. `Error` is a
+/// hard engine failure; `Degraded` is the supervised path — the worker
+/// panicked mid-batch and is respawning, so the caller should retry
+/// shortly rather than treat the service as broken.
+#[derive(Clone, Debug)]
+pub enum BatchFail {
+    /// Hard failure with its typed error.
+    Error(BatchError),
+    /// Answered degraded during worker repair/respawn; retryable.
+    Degraded(String),
+}
+
+type BatchResult = std::result::Result<Response, BatchFail>;
 
 /// Why a [`Pending::wait_timeout`] produced no [`Response`]. `Timeout` is
 /// the load-bearing variant: it is what keeps a dead or wedged worker from
 /// hanging a serving connection thread forever (the `serve` front-end
-/// converts it into a typed error frame).
+/// converts it into a typed degraded frame carrying the missed deadline).
 #[derive(Clone, Debug)]
 pub enum WaitError {
     /// No reply within the deadline (slow, overloaded, or dead worker).
@@ -129,6 +158,12 @@ pub enum WaitError {
     Dropped,
     /// The request's batch failed inside the engine, with its typed error.
     Failed(BatchError),
+    /// The request was answered degraded — its worker panicked mid-batch
+    /// and is respawning. Retryable; the `serve` front-end converts it
+    /// into a typed `Degraded` frame with a retry hint.
+    Degraded {
+        reason: String,
+    },
 }
 
 impl std::fmt::Display for WaitError {
@@ -137,6 +172,7 @@ impl std::fmt::Display for WaitError {
             WaitError::Timeout => write!(f, "engine reply timed out"),
             WaitError::Dropped => write!(f, "engine dropped request"),
             WaitError::Failed(e) => write!(f, "engine batch failed: {e}"),
+            WaitError::Degraded { reason } => write!(f, "engine degraded: {reason}"),
         }
     }
 }
@@ -154,11 +190,25 @@ pub struct EngineConfig {
     /// Responses are bit-identical for every worker count (both backends
     /// are per-sample deterministic).
     pub workers: usize,
+    /// Run one health-monitor step ([`ExecBackend::health_step`]) every
+    /// this many served batches per worker; 0 (the default) disables the
+    /// monitor entirely — no probe work, no behavior change.
+    pub probe_every: u64,
+    /// Test-only chaos injection: panic deliberately on the Nth batch
+    /// executed across the worker pool (0 = never). Proves the
+    /// degrade-respawn-recover path under real traffic.
+    pub chaos_panic_after: u64,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { max_wait: Duration::from_millis(2), queue: 1024, workers: 1 }
+        Self {
+            max_wait: Duration::from_millis(2),
+            queue: 1024,
+            workers: 1,
+            probe_every: 0,
+            chaos_panic_after: 0,
+        }
     }
 }
 
@@ -166,6 +216,18 @@ impl EngineConfig {
     /// `workers` sharded backend workers, defaults otherwise.
     pub fn with_workers(mut self, workers: usize) -> Self {
         self.workers = workers;
+        self
+    }
+
+    /// Health-probe cadence in served batches per worker (0 = off).
+    pub fn with_probe_every(mut self, probe_every: u64) -> Self {
+        self.probe_every = probe_every;
+        self
+    }
+
+    /// Inject one deliberate worker panic on the Nth batch (test-only).
+    pub fn with_chaos_panic_after(mut self, n: u64) -> Self {
+        self.chaos_panic_after = n;
         self
     }
 }
@@ -186,7 +248,10 @@ impl Pending {
     pub fn wait(self) -> Result<Response> {
         match self.rx.recv() {
             Ok(Ok(r)) => Ok(r),
-            Ok(Err(e)) => Err(anyhow::anyhow!("engine batch failed: {e}")),
+            Ok(Err(BatchFail::Error(e))) => Err(anyhow::anyhow!("engine batch failed: {e}")),
+            Ok(Err(BatchFail::Degraded(reason))) => {
+                Err(anyhow::anyhow!("engine degraded: {reason}"))
+            }
             Err(_) => Err(anyhow::anyhow!("engine dropped request")),
         }
     }
@@ -197,7 +262,8 @@ impl Pending {
     pub fn wait_timeout(&self, timeout: Duration) -> std::result::Result<Response, WaitError> {
         match self.rx.recv_timeout(timeout) {
             Ok(Ok(r)) => Ok(r),
-            Ok(Err(e)) => Err(WaitError::Failed(e)),
+            Ok(Err(BatchFail::Error(e))) => Err(WaitError::Failed(e)),
+            Ok(Err(BatchFail::Degraded(reason))) => Err(WaitError::Degraded { reason }),
             Err(RecvTimeoutError::Timeout) => Err(WaitError::Timeout),
             Err(RecvTimeoutError::Disconnected) => Err(WaitError::Dropped),
         }
@@ -258,7 +324,9 @@ pub struct ShardedEngine {
 /// `workers == 1` *is* the classic single-worker engine.
 pub type Engine = ShardedEngine;
 
-/// Everything a worker thread needs to build its in-thread backend.
+/// Everything a worker thread needs to build its in-thread backend. Kept
+/// cloneable so a supervised worker can rebuild itself after a panic.
+#[derive(Clone)]
 struct WorkerSeed {
     spec: BackendSpec,
     model: ModelInfo,
@@ -390,6 +458,9 @@ impl ShardedEngine {
         // closes the channel instead of deadlocking the aggregation below.
         type Readiness = (usize, std::result::Result<(), StartupError>);
         let (ready_tx, ready_rx) = sync_channel::<Readiness>(workers);
+        // Shared batch counter for chaos injection: exactly one worker
+        // panics, on the Nth batch executed across the pool.
+        let chaos = Arc::new(AtomicU64::new(0));
         // Per-worker batch queues, capacity 1: at most one batch waits
         // behind the one a worker is executing, so dispatch can spill to a
         // free worker instead of piling onto a busy one.
@@ -406,9 +477,10 @@ impl ShardedEngine {
             };
             let ready = ready_tx.clone();
             let metrics = metrics.clone();
+            let chaos = chaos.clone();
             std::thread::spawn(move || {
                 // The backend is created inside this thread (PJRT is !Send).
-                let worker = match seed.build() {
+                let mut worker = match seed.clone().build() {
                     Ok(wk) => {
                         // Deploy-time crossbar programming happened inside
                         // the readiness check; record its cost *before*
@@ -435,27 +507,92 @@ impl ShardedEngine {
                 };
                 // Batches arrive until the dispatcher drops this queue; each
                 // is answered in full — successes per request, failures with
-                // typed BatchError replies (no silently dropped channels).
+                // typed BatchFail replies (no silently dropped channels).
+                // Execution is supervised: a panic answers the in-flight
+                // batch degraded and respawns the worker in place.
                 let mut last_walk = crate::backend::WalkProfile::default();
+                let mut served_batches = 0u64;
                 while let Ok(mut batch) = brx.recv() {
                     let mut span = crate::trace::span("worker.batch");
                     span.tag("worker", || w.to_string());
                     span.tag("size", || batch.len().to_string());
-                    if let Err(e) = worker.run_batch(&mut batch, &metrics) {
-                        crate::error!("batch failed on worker {w}: {e}");
-                        metrics.observe_batch_failure(batch.len());
-                        let err = BatchError(e.to_string());
-                        for req in batch.drain(..) {
-                            let _ = req.reply.send(Err(err.clone()));
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        if cfg.chaos_panic_after > 0
+                            && chaos.fetch_add(1, Ordering::Relaxed) + 1 == cfg.chaos_panic_after
+                        {
+                            panic!("chaos: injected worker panic");
                         }
-                    }
+                        worker.run_batch(&mut batch, &metrics)
+                    }));
                     drop(span);
-                    // Fold this batch's crossbar-walk counters into the
-                    // shared metrics (the backend keeps a cumulative
-                    // profile; the worker pushes deltas).
-                    if let Some(now) = worker.backend.walk_profile() {
-                        metrics.add_walk(&now.delta(&last_walk));
-                        last_walk = now;
+                    match run {
+                        Ok(run) => {
+                            if let Err(e) = run {
+                                crate::error!("batch failed on worker {w}: {e}");
+                                metrics.observe_batch_failure(batch.len());
+                                let err = BatchFail::Error(BatchError(e.to_string()));
+                                for req in batch.drain(..) {
+                                    let _ = req.reply.send(Err(err.clone()));
+                                }
+                            }
+                            served_batches += 1;
+                            // Fold this batch's crossbar-walk counters into
+                            // the shared metrics (the backend keeps a
+                            // cumulative profile; the worker pushes deltas).
+                            if let Some(now) = worker.backend.walk_profile() {
+                                metrics.add_walk(&now.delta(&last_walk));
+                                last_walk = now;
+                            }
+                            // Health monitor at the batch boundary: probe
+                            // canaries, detect runtime evolution, repair.
+                            if cfg.probe_every > 0 && served_batches % cfg.probe_every == 0 {
+                                if let Some(rep) = worker.backend.health_step(
+                                    &worker.model,
+                                    &worker.theta,
+                                    served_batches,
+                                ) {
+                                    metrics.observe_health(&rep);
+                                }
+                            }
+                        }
+                        Err(_) => {
+                            // The worker panicked mid-batch: answer every
+                            // in-flight request with a typed degraded reply
+                            // (retryable), then rebuild backend + crossbars
+                            // from the seed before the next batch.
+                            crate::error!("engine worker {w} panicked mid-batch; respawning");
+                            metrics.observe_batch_failure(batch.len());
+                            let err = BatchFail::Degraded(
+                                "worker panicked mid-batch; respawning".into(),
+                            );
+                            for req in batch.drain(..) {
+                                metrics.observe_degraded();
+                                let _ = req.reply.send(Err(err.clone()));
+                            }
+                            let mut span = crate::trace::span("worker.respawn");
+                            span.tag("worker", || w.to_string());
+                            match seed.clone().build() {
+                                Ok(fresh) => {
+                                    worker = fresh;
+                                    metrics.observe_program(worker.backend.program_ns());
+                                    metrics.observe_respawn();
+                                    last_walk = crate::backend::WalkProfile::default();
+                                }
+                                Err(e) => {
+                                    // Typed WorkerDown: the pool sheds this
+                                    // shard; the dispatcher routes around a
+                                    // disconnected queue.
+                                    crate::error!(
+                                        "engine worker {w} failed to respawn: {e:#}; worker down"
+                                    );
+                                    metrics.observe_worker_down();
+                                    drop(span);
+                                    crate::trace::flush_thread();
+                                    return;
+                                }
+                            }
+                            drop(span);
+                        }
                     }
                     crate::trace::flush_thread();
                 }
@@ -576,7 +713,7 @@ fn dispatch(
 /// Answer every request of an undeliverable batch with a typed error.
 fn fail_batch(batch: Vec<Request>, metrics: &Metrics) {
     metrics.observe_batch_failure(batch.len());
-    let err = BatchError("engine worker unavailable".into());
+    let err = BatchFail::Error(BatchError("engine worker unavailable".into()));
     for req in batch {
         let _ = req.reply.send(Err(err.clone()));
     }
@@ -732,11 +869,19 @@ mod tests {
         }
         // Failed: a typed batch error passes through intact.
         let (tx, rx) = sync_channel::<BatchResult>(1);
-        tx.send(Err(BatchError("boom".into()))).unwrap();
+        tx.send(Err(BatchFail::Error(BatchError("boom".into())))).unwrap();
         let p = Pending { rx };
         match p.wait_timeout(Duration::from_millis(10)) {
             Err(WaitError::Failed(e)) => assert_eq!(e.0, "boom"),
             other => panic!("expected Failed, got {other:?}"),
+        }
+        // Degraded: a respawning worker's typed reply carries its reason.
+        let (tx, rx) = sync_channel::<BatchResult>(1);
+        tx.send(Err(BatchFail::Degraded("respawning".into()))).unwrap();
+        let p = Pending { rx };
+        match p.wait_timeout(Duration::from_millis(10)) {
+            Err(WaitError::Degraded { reason }) => assert_eq!(reason, "respawning"),
+            other => panic!("expected Degraded, got {other:?}"),
         }
         // And a real response still comes through.
         let (tx, rx) = sync_channel::<BatchResult>(1);
@@ -746,5 +891,43 @@ mod tests {
         let r = p.wait_timeout(Duration::from_millis(10)).unwrap();
         assert_eq!(r.class, 0);
         assert_eq!(r.latency_us, 7);
+    }
+
+    #[test]
+    fn worker_panic_answers_degraded_then_respawns_and_recovers() {
+        use crate::fixture;
+
+        let fx = fixture::tiny(13);
+        let spec = BackendSpec::Sim {
+            cfg: SimXbarConfig::default().with_threads(1),
+            strips: None,
+            scenario: None,
+        };
+        // First batch across the pool panics deliberately.
+        let ecfg = EngineConfig::default().with_chaos_panic_after(1);
+        let engine = ShardedEngine::new(spec, &fx.model, fx.theta.clone(), ecfg).unwrap();
+        let handle = engine.start().unwrap();
+
+        // The request riding the panicked batch gets a typed Degraded
+        // reply, not an error and not a dropped channel.
+        let image = vec![0.1f32; 32 * 32 * 3];
+        let p = handle.submit(image.clone()).unwrap();
+        match p.wait_timeout(Duration::from_secs(30)) {
+            Err(WaitError::Degraded { reason }) => {
+                assert!(reason.contains("panicked"), "{reason}")
+            }
+            other => panic!("expected Degraded, got {other:?}"),
+        }
+
+        // The worker respawned in place: the next request is answered
+        // normally and the supervision counters recorded the event.
+        let r = handle.classify(image).unwrap();
+        assert_eq!(r.logits.len(), 10);
+        let snap = handle.metrics.snapshot();
+        assert!(snap.respawns >= 1, "respawn must be counted");
+        assert!(snap.degraded >= 1, "degraded reply must be counted");
+        assert_eq!(snap.workers_down, 0);
+        // Respawn re-programs the backend; both generations are recorded.
+        assert!(snap.programmed_workers >= 2);
     }
 }

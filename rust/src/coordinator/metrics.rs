@@ -119,6 +119,28 @@ pub struct Metrics {
     rejected_decode: AtomicU64,
     /// Requests refused because the batcher was already shut down.
     rejected_shutdown: AtomicU64,
+    /// Requests answered degraded because their reply deadline expired
+    /// (`wait_timeout` in the serve front-end).
+    rejected_deadline: AtomicU64,
+    /// Health-monitor steps that probed canary strips.
+    health_probes: AtomicU64,
+    /// Canary code lanes found mismatched against the programmed state.
+    health_canary_mismatches: AtomicU64,
+    /// Physical slots quarantined (vacated) by completed repairs.
+    health_quarantined: AtomicU64,
+    /// Strips migrated to a new physical slot by completed repairs.
+    health_repairs: AtomicU64,
+    /// Standby artifacts hot-swapped in at a batch boundary.
+    health_swaps: AtomicU64,
+    /// Background standby re-programming passes started.
+    health_reprograms: AtomicU64,
+    /// Workers respawned in place after a mid-batch panic.
+    worker_respawns: AtomicU64,
+    /// Workers that went down for good (respawn failed).
+    workers_down: AtomicU64,
+    /// Requests answered with a typed degraded reply (worker panic or
+    /// missed deadline).
+    degraded_replies: AtomicU64,
     /// Aggregated crossbar walk-profile counters (engine workers push
     /// per-batch deltas from their backend's [`WalkProfile`]).
     walk: WalkProfileAtomic,
@@ -145,6 +167,16 @@ impl Default for Metrics {
             rejected_queue_full: AtomicU64::new(0),
             rejected_decode: AtomicU64::new(0),
             rejected_shutdown: AtomicU64::new(0),
+            rejected_deadline: AtomicU64::new(0),
+            health_probes: AtomicU64::new(0),
+            health_canary_mismatches: AtomicU64::new(0),
+            health_quarantined: AtomicU64::new(0),
+            health_repairs: AtomicU64::new(0),
+            health_swaps: AtomicU64::new(0),
+            health_reprograms: AtomicU64::new(0),
+            worker_respawns: AtomicU64::new(0),
+            workers_down: AtomicU64::new(0),
+            degraded_replies: AtomicU64::new(0),
             walk: WalkProfileAtomic::default(),
             scenario: Mutex::new(None),
         }
@@ -190,14 +222,40 @@ pub struct Snapshot {
     pub rejected_decode: u64,
     /// Requests refused because the batcher was already shut down.
     pub rejected_shutdown: u64,
+    /// Requests answered degraded because their reply deadline expired.
+    pub rejected_deadline: u64,
+    /// Health-monitor steps that probed canary strips.
+    pub probes: u64,
+    /// Canary code lanes found mismatched against the programmed state.
+    pub canary_mismatches: u64,
+    /// Physical slots quarantined (vacated) by completed repairs.
+    pub quarantined: u64,
+    /// Strips migrated to a new physical slot by completed repairs.
+    pub repairs: u64,
+    /// Standby artifacts hot-swapped in at a batch boundary.
+    pub swaps: u64,
+    /// Background standby re-programming passes started.
+    pub reprograms: u64,
+    /// Workers respawned in place after a mid-batch panic.
+    pub respawns: u64,
+    /// Workers that went down for good (respawn failed).
+    pub workers_down: u64,
+    /// Requests answered with a typed degraded reply.
+    pub degraded: u64,
     /// Aggregated crossbar walk-profile counters.
     pub walk: WalkProfile,
 }
 
 impl Snapshot {
     /// All rejections, whatever the reason (the pre-split single counter).
+    /// Deadline misses count here too: the request was admitted but never
+    /// answered with logits, which is what a caller retrying on "rejected"
+    /// cares about.
     pub fn rejected_total(&self) -> u64 {
-        self.rejected_queue_full + self.rejected_decode + self.rejected_shutdown
+        self.rejected_queue_full
+            + self.rejected_decode
+            + self.rejected_shutdown
+            + self.rejected_deadline
     }
 }
 
@@ -247,6 +305,44 @@ impl Metrics {
     /// A request refused because the batcher was already shut down.
     pub fn observe_rejected_shutdown(&self) {
         self.rejected_shutdown.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// An admitted request whose reply deadline expired before its batch
+    /// finished (answered with a typed degraded frame, not an error).
+    pub fn observe_rejected_deadline(&self) {
+        self.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Fold one self-healing monitor step in (engine workers call this
+    /// after every [`crate::health::StepReport`] their backend returns).
+    pub fn observe_health(&self, rep: &crate::health::StepReport) {
+        let r = Ordering::Relaxed;
+        self.health_probes.fetch_add(rep.probes, r);
+        self.health_canary_mismatches.fetch_add(rep.canary_mismatches, r);
+        self.health_quarantined.fetch_add(rep.quarantined, r);
+        self.health_repairs.fetch_add(rep.repairs, r);
+        if rep.swapped {
+            self.health_swaps.fetch_add(1, r);
+        }
+        if rep.reprogram_started {
+            self.health_reprograms.fetch_add(1, r);
+        }
+    }
+
+    /// A worker respawned in place after a mid-batch panic.
+    pub fn observe_respawn(&self) {
+        self.worker_respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A worker went down for good (its respawn failed).
+    pub fn observe_worker_down(&self) {
+        self.workers_down.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request answered with a typed degraded reply (worker panic or
+    /// missed deadline) instead of logits.
+    pub fn observe_degraded(&self) {
+        self.degraded_replies.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Fold a crossbar walk-profile delta in (engine workers call this
@@ -307,6 +403,16 @@ impl Metrics {
             rejected_queue_full: self.rejected_queue_full.load(Ordering::Relaxed),
             rejected_decode: self.rejected_decode.load(Ordering::Relaxed),
             rejected_shutdown: self.rejected_shutdown.load(Ordering::Relaxed),
+            rejected_deadline: self.rejected_deadline.load(Ordering::Relaxed),
+            probes: self.health_probes.load(Ordering::Relaxed),
+            canary_mismatches: self.health_canary_mismatches.load(Ordering::Relaxed),
+            quarantined: self.health_quarantined.load(Ordering::Relaxed),
+            repairs: self.health_repairs.load(Ordering::Relaxed),
+            swaps: self.health_swaps.load(Ordering::Relaxed),
+            reprograms: self.health_reprograms.load(Ordering::Relaxed),
+            respawns: self.worker_respawns.load(Ordering::Relaxed),
+            workers_down: self.workers_down.load(Ordering::Relaxed),
+            degraded: self.degraded_replies.load(Ordering::Relaxed),
             walk: self.walk.snapshot(),
         }
     }
@@ -341,6 +447,16 @@ impl Metrics {
         self.rejected_queue_full.fetch_add(other.rejected_queue_full.load(r), r);
         self.rejected_decode.fetch_add(other.rejected_decode.load(r), r);
         self.rejected_shutdown.fetch_add(other.rejected_shutdown.load(r), r);
+        self.rejected_deadline.fetch_add(other.rejected_deadline.load(r), r);
+        self.health_probes.fetch_add(other.health_probes.load(r), r);
+        self.health_canary_mismatches.fetch_add(other.health_canary_mismatches.load(r), r);
+        self.health_quarantined.fetch_add(other.health_quarantined.load(r), r);
+        self.health_repairs.fetch_add(other.health_repairs.load(r), r);
+        self.health_swaps.fetch_add(other.health_swaps.load(r), r);
+        self.health_reprograms.fetch_add(other.health_reprograms.load(r), r);
+        self.worker_respawns.fetch_add(other.worker_respawns.load(r), r);
+        self.workers_down.fetch_add(other.workers_down.load(r), r);
+        self.degraded_replies.fetch_add(other.degraded_replies.load(r), r);
         self.walk.add(&other.walk.snapshot());
         let mut mine = self.scenario.lock().unwrap();
         if mine.is_none() {
@@ -385,7 +501,22 @@ impl Metrics {
                     ("queue_full", n(s.rejected_queue_full)),
                     ("decode", n(s.rejected_decode)),
                     ("shutdown", n(s.rejected_shutdown)),
+                    ("deadline", n(s.rejected_deadline)),
                     ("total", n(s.rejected_total())),
+                ]),
+            ),
+            (
+                "health",
+                obj(vec![
+                    ("probes", n(s.probes)),
+                    ("canary_mismatches", n(s.canary_mismatches)),
+                    ("quarantined", n(s.quarantined)),
+                    ("repairs", n(s.repairs)),
+                    ("swaps", n(s.swaps)),
+                    ("reprograms", n(s.reprograms)),
+                    ("respawns", n(s.respawns)),
+                    ("workers_down", n(s.workers_down)),
+                    ("degraded", n(s.degraded)),
                 ]),
             ),
             (
@@ -592,6 +723,18 @@ mod tests {
         a.observe_rejected_queue_full();
         b.observe_rejected_decode();
         b.observe_rejected_shutdown();
+        a.observe_rejected_deadline();
+        a.observe_respawn();
+        b.observe_degraded();
+        b.observe_health(&crate::health::StepReport {
+            tick: 8,
+            probes: 2,
+            canary_mismatches: 1,
+            quarantined: 3,
+            repairs: 4,
+            swapped: true,
+            reprogram_started: true,
+        });
         let (sa, sb) = (a.snapshot(), b.snapshot());
         a.absorb(&b);
         let s = a.snapshot();
@@ -611,7 +754,60 @@ mod tests {
         assert_eq!(s.rejected_queue_full, 1);
         assert_eq!(s.rejected_decode, 1);
         assert_eq!(s.rejected_shutdown, 1);
-        assert_eq!(s.rejected_total(), 3);
+        assert_eq!(s.rejected_deadline, 1);
+        assert_eq!(s.rejected_total(), 4);
+        // health counters sum too
+        assert_eq!(s.probes, 2);
+        assert_eq!(s.canary_mismatches, 1);
+        assert_eq!(s.quarantined, 3);
+        assert_eq!(s.repairs, 4);
+        assert_eq!(s.swaps, 1);
+        assert_eq!(s.reprograms, 1);
+        assert_eq!(s.respawns, 1);
+        assert_eq!(s.degraded, 1);
+    }
+
+    #[test]
+    fn health_counters_accumulate_per_step() {
+        let m = Metrics::default();
+        let s = m.snapshot();
+        assert_eq!(
+            (s.probes, s.canary_mismatches, s.quarantined, s.repairs, s.swaps),
+            (0, 0, 0, 0, 0)
+        );
+        // An idle probe step: canaries read back clean, nothing swapped.
+        m.observe_health(&crate::health::StepReport {
+            tick: 16,
+            probes: 3,
+            ..Default::default()
+        });
+        // A later step that detected evolution and completed a repair.
+        m.observe_health(&crate::health::StepReport {
+            tick: 32,
+            probes: 3,
+            canary_mismatches: 5,
+            quarantined: 2,
+            repairs: 2,
+            swapped: true,
+            reprogram_started: true,
+        });
+        m.observe_respawn();
+        m.observe_worker_down();
+        m.observe_degraded();
+        m.observe_degraded();
+        m.observe_rejected_deadline();
+        let s = m.snapshot();
+        assert_eq!(s.probes, 6);
+        assert_eq!(s.canary_mismatches, 5);
+        assert_eq!(s.quarantined, 2);
+        assert_eq!(s.repairs, 2);
+        assert_eq!(s.swaps, 1, "only the swapped step counts a swap");
+        assert_eq!(s.reprograms, 1);
+        assert_eq!(s.respawns, 1);
+        assert_eq!(s.workers_down, 1);
+        assert_eq!(s.degraded, 2);
+        assert_eq!(s.rejected_deadline, 1);
+        assert_eq!(s.rejected_total(), 1, "deadline misses count as rejections");
     }
 
     #[test]
@@ -622,11 +818,22 @@ mod tests {
         m.observe_latency(100);
         m.observe_rejected_queue_full();
         m.add_walk(&crate::backend::WalkProfile { conv_calls: 7, ..Default::default() });
+        m.observe_health(&crate::health::StepReport {
+            tick: 4,
+            probes: 1,
+            repairs: 1,
+            swapped: true,
+            ..Default::default()
+        });
         let text = m.stats_value().to_json();
         let v = Value::parse(&text).unwrap();
         assert_eq!(v.get("engine").unwrap().get("requests").unwrap().num().unwrap(), 1.0);
         assert_eq!(v.get("rejected").unwrap().get("queue_full").unwrap().num().unwrap(), 1.0);
+        assert_eq!(v.get("rejected").unwrap().get("deadline").unwrap().num().unwrap(), 0.0);
         assert_eq!(v.get("rejected").unwrap().get("total").unwrap().num().unwrap(), 1.0);
+        assert_eq!(v.get("health").unwrap().get("repairs").unwrap().num().unwrap(), 1.0);
+        assert_eq!(v.get("health").unwrap().get("swaps").unwrap().num().unwrap(), 1.0);
+        assert_eq!(v.get("health").unwrap().get("respawns").unwrap().num().unwrap(), 0.0);
         assert_eq!(
             v.get("walk_profile").unwrap().get("conv_calls").unwrap().num().unwrap(),
             7.0

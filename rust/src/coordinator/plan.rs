@@ -43,7 +43,7 @@ use crate::coordinator::engine::{BackendSpec, Engine, EngineConfig, EngineHandle
 use crate::coordinator::eval;
 use crate::coordinator::pipeline::{PipelineReport, ThresholdMode};
 use crate::dataset::{CalibSet, TestSet};
-use crate::faults::{Placement, Scenario, ScenarioSpec};
+use crate::faults::{HealthSpec, Placement, Scenario, ScenarioSpec};
 use crate::fim::ThresholdSearch;
 use crate::model::{Manifest, ModelInfo};
 use crate::quant::{self, BitMap, QuantizedModel};
@@ -327,6 +327,7 @@ pub struct CompressionPlan<'a> {
     explicit: Option<ExplicitBitmap>,
     nominal: Option<ThresholdMode>,
     scenario: Option<(ScenarioSpec, Placement)>,
+    health: HealthSpec,
 }
 
 impl<'a> CompressionPlan<'a> {
@@ -383,6 +384,7 @@ impl<'a> CompressionPlan<'a> {
             explicit: None,
             nominal: None,
             scenario: None,
+            health: HealthSpec::default(),
         }
     }
 
@@ -471,6 +473,16 @@ impl<'a> CompressionPlan<'a> {
     /// has no programmed device to fault and ignores the scenario.
     pub fn with_scenario(mut self, spec: ScenarioSpec, placement: Placement) -> Self {
         self.scenario = if spec.is_active() { Some((spec, placement)) } else { None };
+        self
+    }
+
+    /// Reserve per-layer health machinery — known-answer canary strips and
+    /// spare column slots — when the simulator programs its crossbars (see
+    /// [`crate::health`]). Works with or without an attached fault
+    /// scenario: canaries on a healthy device simply read back clean, and
+    /// with zero reservations this is a no-op.
+    pub fn with_health(mut self, health: HealthSpec) -> Self {
+        self.health = health;
         self
     }
 
@@ -774,12 +786,16 @@ impl<'a> CompressionPlan<'a> {
     /// Resolve the plan's fault scenario into the form the simulator
     /// consumes: sensitivity-aware placement needs the per-strip scores, so
     /// the sensitivity stage (cached) is pulled in exactly when the policy
-    /// asks for it.
+    /// asks for it. A health reservation with no fault scenario still
+    /// yields a scenario (zero-fault spec, natural placement) — canaries
+    /// and spares must be programmed for probes to have something to read.
     fn fault_scenario(&self) -> Result<Option<Scenario>> {
-        let Some((spec, placement)) = self.scenario else {
-            return Ok(None);
+        let (spec, placement) = match self.scenario {
+            Some((spec, placement)) => (spec, placement),
+            None if self.health.is_active() => (ScenarioSpec::default(), Placement::Naive),
+            None => return Ok(None),
         };
-        let mut sc = Scenario::new(spec).with_placement(placement);
+        let mut sc = Scenario::new(spec).with_placement(placement).with_health(self.health);
         if placement == Placement::SensitivityAware {
             let sens = self.sensitivity_scores()?;
             sc = sc.with_scores(Arc::new(sens.scores.clone()));
@@ -789,10 +805,13 @@ impl<'a> CompressionPlan<'a> {
 
     /// Cache-key fragment for the active scenario ("none" when absent).
     fn scenario_part(&self) -> String {
+        let h = self.health;
+        let health_part =
+            if h.is_active() { format!(":hc{}s{}", h.canaries, h.spares) } else { String::new() };
         match self.scenario {
-            None => "scn:none".into(),
+            None => format!("scn:none{health_part}"),
             Some((spec, placement)) => {
-                format!("scn:{:016x}:{}", spec.fingerprint(), placement.name())
+                format!("scn:{:016x}:{}{health_part}", spec.fingerprint(), placement.name())
             }
         }
     }

@@ -49,6 +49,23 @@
 //! draws — walk order, channel ranges and accumulation order are untouched,
 //! so a zero-fault scenario is bit-identical to the unfaulted path no
 //! matter the placement mode.
+//!
+//! ## Runtime evolution and self-healing
+//!
+//! Real devices keep degrading *after* programming. An [`EvolutionSpec`]
+//! adds a logical-clock time axis to a spec: drift time and the stuck-at
+//! probability advance per served batch ([`ScenarioSpec::at_tick`] derives
+//! the effective static spec at tick `t`, reusing the same per-site seeded
+//! streams). A [`HealthSpec`] on the bound [`Scenario`] reserves
+//! known-answer *canary* strips and *spare* column slots per layer at
+//! programming time; the serving-side [`crate::health`] monitor replays the
+//! canaries against the evolved spec to detect damage, and repairs by
+//! re-programming a standby artifact at the current tick —
+//! [`assign_slots_spares`] then moves the highest-sensitivity strips onto
+//! the healthiest of the live+spare slot pool, exactly the
+//! [`slot_damage`]-ranked placement used at deploy time. [`Scenario::tick`]
+//! carries the logical programming time and enters the fingerprint, so
+//! artifacts programmed at different ticks never alias in any cache.
 
 use std::sync::Arc;
 
@@ -157,6 +174,43 @@ impl ReadNoiseSpec {
     }
 }
 
+/// Runtime fault evolution: how much the spec's drift time and stuck-at
+/// probability advance per logical serving tick (one tick = one served
+/// batch, counted per engine worker). The zero value is inactive: the
+/// device stays exactly where programming left it.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EvolutionSpec {
+    /// Added to `drift.time` per tick (drift needs `drift.rate > 0` and a
+    /// drift seed to act, exactly like the static axis).
+    pub drift_time_per_tick: f64,
+    /// Added to `stuck.rate` per tick, saturating at 1.0.
+    pub stuck_rate_per_tick: f64,
+}
+
+impl EvolutionSpec {
+    pub fn is_active(&self) -> bool {
+        self.drift_time_per_tick > 0.0 || self.stuck_rate_per_tick > 0.0
+    }
+}
+
+/// Per-layer health reservation programmed alongside the live strips:
+/// known-answer canary strips (damage detectors) and spare column slots
+/// (repair targets). Both live on slot indices past every walkable strip,
+/// so inference never reads them and the zero value changes nothing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HealthSpec {
+    /// Known-answer canary strips reserved per layer.
+    pub canaries: u32,
+    /// Spare column slots reserved per layer for hot repair.
+    pub spares: u32,
+}
+
+impl HealthSpec {
+    pub fn is_active(&self) -> bool {
+        self.canaries > 0 || self.spares > 0
+    }
+}
+
 /// A composable device-variability scenario. `Default` is the inactive
 /// (zero-fault) scenario, which is bit-identical to not injecting at all.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -165,6 +219,9 @@ pub struct ScenarioSpec {
     pub stuck: StuckSpec,
     pub ir_drop: IrDropSpec,
     pub read_noise: ReadNoiseSpec,
+    /// Per-tick runtime degradation (inactive = static program-time faults
+    /// only, today's behavior).
+    pub evolution: EvolutionSpec,
 }
 
 impl ScenarioSpec {
@@ -188,12 +245,35 @@ impl ScenarioSpec {
         self
     }
 
-    /// True when any component would perturb a programmed strip.
+    pub fn with_evolution(mut self, drift_time_per_tick: f64, stuck_rate_per_tick: f64) -> Self {
+        self.evolution = EvolutionSpec { drift_time_per_tick, stuck_rate_per_tick };
+        self
+    }
+
+    /// The effective static spec after `tick` logical serving ticks: drift
+    /// time and the stuck-at rate advanced per [`EvolutionSpec`], everything
+    /// else (seeds included) untouched. Identity at tick 0 or when evolution
+    /// is inactive, so static scenarios are exactly the `tick == 0` slice.
+    pub fn at_tick(&self, tick: u64) -> ScenarioSpec {
+        if tick == 0 || !self.evolution.is_active() {
+            return *self;
+        }
+        let t = tick as f64;
+        let mut s = *self;
+        s.drift.time += self.evolution.drift_time_per_tick * t;
+        s.stuck.rate = (s.stuck.rate + self.evolution.stuck_rate_per_tick * t).min(1.0);
+        s
+    }
+
+    /// True when any component would perturb a programmed strip, now or at
+    /// a later tick (an evolving spec is active even if its tick-0 slice is
+    /// a no-op — programming must reserve the placement machinery up front).
     pub fn is_active(&self) -> bool {
         self.drift.is_active()
             || self.stuck.is_active()
             || self.ir_drop.is_active()
             || self.read_noise.is_active()
+            || self.evolution.is_active()
     }
 
     /// Stable content hash, mixed into programming-artifact and eval-memo
@@ -209,6 +289,8 @@ impl ScenarioSpec {
             self.ir_drop.seed,
             self.read_noise.sigma.to_bits(),
             self.read_noise.seed,
+            self.evolution.drift_time_per_tick.to_bits(),
+            self.evolution.stuck_rate_per_tick.to_bits(),
         ])
     }
 
@@ -227,6 +309,12 @@ impl ScenarioSpec {
         }
         if self.read_noise.is_active() {
             parts.push(format!("read_noise(sigma={})", self.read_noise.sigma));
+        }
+        if self.evolution.is_active() {
+            parts.push(format!(
+                "evolve(drift/tick={},stuck/tick={})",
+                self.evolution.drift_time_per_tick, self.evolution.stuck_rate_per_tick
+            ));
         }
         if parts.is_empty() {
             "none".to_string()
@@ -264,11 +352,22 @@ pub struct Scenario {
     pub spec: ScenarioSpec,
     pub placement: Placement,
     pub scores: Option<Arc<Vec<f64>>>,
+    /// Canary/spare reservation programmed into every layer (zero = none).
+    pub health: HealthSpec,
+    /// Logical serving tick this scenario programs at: the spec is evaluated
+    /// as [`ScenarioSpec::at_tick`]`(tick)`. 0 = deploy time.
+    pub tick: u64,
 }
 
 impl Scenario {
     pub fn new(spec: ScenarioSpec) -> Self {
-        Scenario { spec, placement: Placement::Naive, scores: None }
+        Scenario {
+            spec,
+            placement: Placement::Naive,
+            scores: None,
+            health: HealthSpec::default(),
+            tick: 0,
+        }
     }
 
     pub fn with_placement(mut self, placement: Placement) -> Self {
@@ -281,11 +380,35 @@ impl Scenario {
         self
     }
 
-    pub fn is_active(&self) -> bool {
-        self.spec.is_active()
+    /// Reserve canary strips and spare slots per layer.
+    pub fn with_health(mut self, health: HealthSpec) -> Self {
+        self.health = health;
+        self
     }
 
-    /// Content hash over spec, placement and scores (cache-key grade).
+    /// The same scenario advanced to logical tick `tick` (the standby
+    /// re-programming path: base scenario + current serving clock).
+    pub fn with_tick(mut self, tick: u64) -> Self {
+        self.tick = tick;
+        self
+    }
+
+    /// The static spec this scenario actually programs: the base spec
+    /// evolved to [`Scenario::tick`].
+    pub fn effective_spec(&self) -> ScenarioSpec {
+        self.spec.at_tick(self.tick)
+    }
+
+    /// Active when the spec perturbs anything (now or later) *or* a health
+    /// reservation is requested — canaries and spares must be programmed
+    /// even on an otherwise healthy device so probes have something to read.
+    pub fn is_active(&self) -> bool {
+        self.spec.is_active() || self.health.is_active()
+    }
+
+    /// Content hash over spec, placement, scores, health reservation and
+    /// tick (cache-key grade): artifacts programmed at different ticks or
+    /// with different reservations never alias.
     pub fn fingerprint(&self) -> u64 {
         let mut vals = vec![
             self.spec.fingerprint(),
@@ -293,6 +416,9 @@ impl Scenario {
                 Placement::Naive => 1,
                 Placement::SensitivityAware => 2,
             },
+            self.health.canaries as u64,
+            self.health.spares as u64,
+            self.tick,
         ];
         if let Some(s) = &self.scores {
             vals.push(s.len() as u64);
@@ -301,12 +427,23 @@ impl Scenario {
         fnv(&vals)
     }
 
-    /// The serving stats `scenario:` line: active spec + placement mode.
+    /// The serving stats `scenario:` line: active spec + placement mode,
+    /// plus the health reservation and tick when present.
     pub fn describe(&self) -> String {
         if !self.is_active() {
             return "none".to_string();
         }
-        format!("{} placement={}", self.spec.describe(), self.placement.name())
+        let mut s = format!("{} placement={}", self.spec.describe(), self.placement.name());
+        if self.health.is_active() {
+            s.push_str(&format!(
+                " health(canaries={},spares={})",
+                self.health.canaries, self.health.spares
+            ));
+        }
+        if self.tick > 0 {
+            s.push_str(&format!(" tick={}", self.tick));
+        }
+        s
     }
 }
 
@@ -475,19 +612,39 @@ pub fn assign_slots(
     damage: &[f64],
     live: &[usize],
 ) -> Vec<usize> {
-    debug_assert_eq!(damage.len(), live.len());
+    assign_slots_spares(placement, scores, damage, live, live.len())
+}
+
+/// Generalization of [`assign_slots`] with a candidate pool larger than the
+/// strip count: `candidates` holds `nstrips` natural slots *plus* reserved
+/// spares, with per-candidate `damage`. Sensitivity-aware placement maps the
+/// `nstrips` strips onto the healthiest `nstrips` candidates; the most
+/// damaged `candidates.len() - nstrips` slots are left unused — that is the
+/// quarantine. With no spares (`candidates.len() == nstrips`) this is
+/// exactly [`assign_slots`]. Naive placement (or missing scores) ignores the
+/// spares and keeps the natural assignment, preserving bit-identity with the
+/// spare-less path.
+pub fn assign_slots_spares(
+    placement: Placement,
+    scores: Option<&[f64]>,
+    damage: &[f64],
+    candidates: &[usize],
+    nstrips: usize,
+) -> Vec<usize> {
+    debug_assert_eq!(damage.len(), candidates.len());
+    debug_assert!(nstrips <= candidates.len());
     let scores = match (placement, scores) {
-        (Placement::SensitivityAware, Some(s)) if s.len() == live.len() => s,
-        _ => return live.to_vec(),
+        (Placement::SensitivityAware, Some(s)) if s.len() == nstrips => s,
+        _ => return candidates[..nstrips.min(candidates.len())].to_vec(),
     };
     let strip_order = crate::sensitivity::rank_desc(scores);
     let healthiest_first = {
         let neg: Vec<f64> = damage.iter().map(|v| -v).collect();
         crate::sensitivity::rank_desc(&neg)
     };
-    let mut out = vec![0usize; live.len()];
+    let mut out = vec![0usize; nstrips];
     for (rank, &strip) in strip_order.iter().enumerate() {
-        out[strip] = live[healthiest_first[rank]];
+        out[strip] = candidates[healthiest_first[rank]];
     }
     out
 }
@@ -614,5 +771,84 @@ mod tests {
         assert_ne!(base.fingerprint(), aware.fingerprint());
         let scored = aware.clone().with_scores(Arc::new(vec![1.0, 2.0]));
         assert_ne!(aware.fingerprint(), scored.fingerprint());
+    }
+
+    #[test]
+    fn at_tick_is_identity_without_evolution_and_advances_with_it() {
+        let spec = busy_spec();
+        assert_eq!(spec.at_tick(0), spec);
+        assert_eq!(spec.at_tick(1000), spec, "no evolution -> static forever");
+
+        let evo = spec.with_evolution(0.5, 0.001);
+        assert!(evo.is_active());
+        assert_eq!(evo.at_tick(0), evo, "tick 0 is the programmed state");
+        let t10 = evo.at_tick(10);
+        assert_eq!(t10.drift.time, spec.drift.time + 5.0);
+        assert!((t10.stuck.rate - (spec.stuck.rate + 0.01)).abs() < 1e-12);
+        // Evolution params ride along unchanged; stuck rate saturates at 1.
+        assert_eq!(t10.evolution, evo.evolution);
+        assert_eq!(evo.at_tick(u64::MAX / 2).stuck.rate, 1.0);
+
+        // Evolution alone activates an otherwise-empty spec…
+        let only_evo = ScenarioSpec::default().with_evolution(0.1, 0.0);
+        assert!(only_evo.is_active());
+        // …but its tick-0 slice is still a no-op on codes.
+        let mut codes = vec![5i32, -9, 0];
+        let orig = codes.clone();
+        let mut sw = 1.0f32;
+        apply_to_strip(&only_evo.at_tick(0), 0, 0, 4, 2, 4, &mut codes, &mut sw);
+        assert_eq!(codes, orig);
+        assert_eq!(sw, 1.0);
+    }
+
+    #[test]
+    fn fingerprint_tracks_evolution_health_and_tick() {
+        let spec = busy_spec();
+        assert_ne!(spec.fingerprint(), spec.with_evolution(0.5, 0.0).fingerprint());
+
+        let base = Scenario::new(spec);
+        let healthy = base.clone().with_health(HealthSpec { canaries: 2, spares: 3 });
+        assert_ne!(base.fingerprint(), healthy.fingerprint());
+        let ticked = healthy.clone().with_tick(7);
+        assert_ne!(healthy.fingerprint(), ticked.fingerprint());
+        assert_eq!(ticked.effective_spec(), spec.at_tick(7));
+
+        // A health reservation activates a scenario even with an empty spec.
+        let only_health =
+            Scenario::new(ScenarioSpec::default()).with_health(HealthSpec { canaries: 1, spares: 0 });
+        assert!(only_health.is_active());
+        let d = ticked.describe();
+        assert!(d.contains("health(canaries=2,spares=3)"), "{d}");
+        assert!(d.contains("tick=7"), "{d}");
+    }
+
+    #[test]
+    fn assign_slots_spares_quarantines_most_damaged_candidates() {
+        // 3 strips, 5 candidates (slots 0..3 natural + 10,11 spare).
+        let candidates = vec![0usize, 1, 2, 10, 11];
+        let scores = vec![1.0, 1.0, 1.0];
+        let damage = vec![5.0, 0.0, 7.0, 0.0, 0.0];
+        let out =
+            assign_slots_spares(Placement::SensitivityAware, Some(&scores), &damage, &candidates, 3);
+        assert_eq!(out.len(), 3);
+        // The two most-damaged candidates (slots 0 and 2) must be unused.
+        assert!(!out.contains(&0), "{out:?}");
+        assert!(!out.contains(&2), "{out:?}");
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "assignment must be injective: {out:?}");
+
+        // Naive placement ignores the spares entirely.
+        let naive =
+            assign_slots_spares(Placement::Naive, Some(&scores), &damage, &candidates, 3);
+        assert_eq!(naive, vec![0, 1, 2]);
+
+        // Zero damage + uniform scores is the identity over the natural
+        // slots — the bit-identity guarantee for healthy devices.
+        let zero = vec![0.0; 5];
+        let id =
+            assign_slots_spares(Placement::SensitivityAware, Some(&scores), &zero, &candidates, 3);
+        assert_eq!(id, vec![0, 1, 2]);
     }
 }

@@ -1,0 +1,188 @@
+//! Serving-side self-healing: canary-probe damage detection, spare-slot
+//! quarantine, background repair, and hot artifact swap.
+//!
+//! Real ReRAM keeps degrading *after* the crossbars are programmed:
+//! conductance drift and stuck-at faults accumulate while the device
+//! serves. The `faults` engine models that with
+//! [`crate::faults::EvolutionSpec`] — a logical-clock time axis where one
+//! tick is one served batch — and this module closes the loop from
+//! detection to repair:
+//!
+//! 1. **Detect** — the artifact reserves known-answer *canary* strips per
+//!    layer ([`crate::backend::programmed::CanaryStrip`]). A probe replays
+//!    each canary's fault-free expected codes through the spec evolved to
+//!    the current tick ([`probe_canaries`]) and compares against the codes
+//!    the device was actually programmed with: the fault streams are
+//!    deterministic per (seed, layer, slot, site), so at the programmed
+//!    tick the replay matches bit for bit, and any mismatch is exactly the
+//!    runtime degradation since programming.
+//! 2. **Quarantine + repair** — on detection, a standby artifact is
+//!    re-programmed in the background at the *current* tick. Programming
+//!    re-ranks every candidate slot (natural + reserved spares) by
+//!    [`crate::faults::slot_damage`] under the evolved spec and re-runs
+//!    sensitivity-aware placement ([`crate::faults::assign_slots_spares`]),
+//!    so high-sensitivity strips migrate off damaged slots onto spares and
+//!    the most damaged slots are left unused. [`repair_diff`] reports the
+//!    migration as typed counters: strips that moved (`repairs`) and slots
+//!    vacated (`quarantined`).
+//! 3. **Swap** — the engine worker installs the standby artifact at a
+//!    batch boundary (`ExecBackend::health_step`), so the steady-state
+//!    forward walk stays read-only and zero-alloc between swaps.
+//!
+//! The monitor runs *between* batches on the worker thread (probing is
+//! O(canaries × depth), far from the request path) and the re-programming
+//! pass runs on a spawned background thread, so serving never blocks on
+//! repair. Health counters flow into `Metrics`, the serve stats frames,
+//! and `trace` spans (`health.probe`, `health.reprogram`).
+
+use std::collections::HashSet;
+
+use crate::backend::programmed::ProgrammedModel;
+use crate::faults::{self, ScenarioSpec};
+
+/// Outcome of one health-monitor step, folded into
+/// [`crate::coordinator::Metrics`] by the engine worker.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StepReport {
+    /// Logical tick (served-batch count) the step ran at.
+    pub tick: u64,
+    /// Canary strips probed (0 when the artifact reserves none).
+    pub probes: u64,
+    /// Canary code lanes whose evolved replay disagrees with the
+    /// programmed state — the damage signal.
+    pub canary_mismatches: u64,
+    /// Physical slots vacated by a completed repair (only on swap).
+    pub quarantined: u64,
+    /// Strips whose physical slot changed in a completed repair (only on
+    /// swap).
+    pub repairs: u64,
+    /// A standby artifact finished programming and was hot-swapped in.
+    pub swapped: bool,
+    /// A standby re-programming pass was started in the background.
+    pub reprogram_started: bool,
+}
+
+/// Replay every canary strip of `prog` through `spec` (the fault spec
+/// evolved to the probe tick) and compare against the programmed state.
+/// Returns `(probes, mismatched lanes)`. Zero mismatches at the artifact's
+/// own programmed tick is a determinism invariant: the per-site fault
+/// streams are pure functions of (seed, layer, slot, site).
+pub fn probe_canaries(prog: &ProgrammedModel, spec: &ScenarioSpec) -> (u64, u64) {
+    let mut probes = 0u64;
+    let mut mismatches = 0u64;
+    for pl in &prog.layers {
+        for c in &pl.canaries {
+            probes += 1;
+            let mut codes = c.expected.clone();
+            let mut sw = 1.0f32;
+            faults::apply_to_strip(
+                spec,
+                pl.index,
+                c.slot as usize,
+                pl.nslots_ext,
+                prog.cell_bits,
+                c.ncells,
+                &mut codes,
+                &mut sw,
+            );
+            mismatches +=
+                codes.iter().zip(&c.programmed).filter(|(a, b)| a != b).count() as u64;
+        }
+    }
+    (probes, mismatches)
+}
+
+/// Diff the strip→slot assignment of two artifacts programmed from the
+/// same `(model, theta, strips)` tuple: `repairs` strips moved to a new
+/// physical slot, and `quarantined` slots used by `old` are vacated in
+/// `new`. Strip order is deterministic (channel-major, kernel-tap
+/// ascending) and independent of placement, so the positional diff is
+/// exact.
+pub fn repair_diff(old: &ProgrammedModel, new: &ProgrammedModel) -> (u64, u64) {
+    let mut repairs = 0u64;
+    let mut quarantined = 0u64;
+    for (ol, nl) in old.layers.iter().zip(&new.layers) {
+        for (os, ns) in ol.strips.iter().zip(&nl.strips) {
+            if os.slot != ns.slot {
+                repairs += 1;
+            }
+        }
+        let mut vacated: HashSet<u32> = ol.strips.iter().map(|s| s.slot).collect();
+        for ns in &nl.strips {
+            vacated.remove(&ns.slot);
+        }
+        quarantined += vacated.len() as u64;
+    }
+    (repairs, quarantined)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::programmed::{CanaryStrip, ProgrammedLayer};
+    use crate::backend::{ExecMode, ProgrammedModel, ProgrammedStrip, StripStore};
+
+    fn strip(slot: u32) -> ProgrammedStrip {
+        ProgrammedStrip { g: 0, sw: 1.0, slot, store: StripStore::Exact { codes: vec![1] } }
+    }
+
+    fn model_with(slots: &[u32], canaries: Vec<CanaryStrip>) -> ProgrammedModel {
+        ProgrammedModel {
+            mode: ExecMode::Exact,
+            layers: vec![ProgrammedLayer {
+                index: 0,
+                d: 4,
+                n: slots.len(),
+                kk: 1,
+                strips: slots.iter().map(|&s| strip(s)).collect(),
+                chan: slots.iter().enumerate().map(|(i, _)| (i as u32, 1)).collect(),
+                segs: vec![(0, 4, 0)],
+                total_words: 1,
+                nslots_ext: slots.len() + 2 + canaries.len(),
+                canaries,
+            }],
+            live_strips: slots.len(),
+            dropped_strips: 0,
+            planes_bytes: 0,
+            program_ns: 1,
+            scenario: None,
+            cell_bits: 2,
+            tick: 0,
+            health: faults::HealthSpec { canaries: 0, spares: 2 },
+        }
+    }
+
+    #[test]
+    fn repair_diff_counts_moves_and_vacated_slots() {
+        let old = model_with(&[0, 1, 2], vec![]);
+        let same = model_with(&[0, 1, 2], vec![]);
+        assert_eq!(repair_diff(&old, &same), (0, 0));
+        // Strip 1 moved to spare slot 4; slot 1 is vacated (quarantined).
+        let new = model_with(&[0, 4, 2], vec![]);
+        assert_eq!(repair_diff(&old, &new), (1, 1));
+        // Two strips swap slots: two repairs, nothing vacated.
+        let swapped = model_with(&[1, 0, 2], vec![]);
+        assert_eq!(repair_diff(&old, &swapped), (2, 0));
+    }
+
+    #[test]
+    fn probe_matches_at_programmed_tick_and_detects_evolution() {
+        let spec = ScenarioSpec::default().with_stuck(0.4, 9).with_evolution(0.0, 0.01);
+        let t0 = spec.at_tick(0);
+        let expected: Vec<i32> = (0..4).map(|i| i * 3 - 5).collect();
+        let mut programmed = expected.clone();
+        let mut sw = 1.0f32;
+        faults::apply_to_strip(&t0, 0, 5, 6, 2, 2, &mut programmed, &mut sw);
+        let canary =
+            CanaryStrip { slot: 5, ncells: 2, expected: expected.clone(), programmed, sw };
+        let prog = model_with(&[0, 1, 2], vec![canary]);
+        // Replay at the programmed tick: bit-identical, zero mismatches.
+        assert_eq!(probe_canaries(&prog, &t0), (1, 0));
+        // Far enough in the future the stuck-at rate saturates and the
+        // canary pattern cannot survive unchanged.
+        let late = spec.at_tick(1_000_000);
+        let (probes, mism) = probe_canaries(&prog, &late);
+        assert_eq!(probes, 1);
+        assert!(mism > 0, "saturated stuck-at must perturb the canary");
+    }
+}

@@ -89,7 +89,11 @@
 //!   sensitivity scores (paper §4.1).
 //! * [`faults`] — device-variability scenario engine: composable drift /
 //!   stuck-at / IR-drop / read-noise fault injection on programmed
-//!   crossbars, plus sensitivity-aware strip placement.
+//!   crossbars, runtime fault evolution on a logical serving clock, plus
+//!   sensitivity-aware strip placement over natural + spare slots.
+//! * [`health`] — serving-side self-healing: canary-probe damage
+//!   detection, spare-slot quarantine, background repair programming, and
+//!   hot artifact swap at batch boundaries.
 //! * [`fim`] — empirical Fisher diagonal + Algorithm 1 threshold search
 //!   (paper §4.2).
 //! * [`clustering`] — sensitivity clustering and the dynamic crossbar-
@@ -130,6 +134,7 @@ pub mod experiments;
 pub mod faults;
 pub mod fim;
 pub mod fixture;
+pub mod health;
 pub mod model;
 pub mod quant;
 pub mod report;

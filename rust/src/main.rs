@@ -13,8 +13,8 @@ use reram_mpq::coordinator::{
 };
 use reram_mpq::dataset::{CalibSet, TestSet};
 use reram_mpq::experiments::{self, ExpOpts, Lab};
-use reram_mpq::faults::{Placement, ScenarioSpec};
-use reram_mpq::serve::{bench_client, BatchPolicy, ServeConfig, Server};
+use reram_mpq::faults::{HealthSpec, Placement, ScenarioSpec};
+use reram_mpq::serve::{bench_client, BatchPolicy, ServeClient, ServeConfig, Server};
 use reram_mpq::tuner;
 use reram_mpq::util::cli::Args;
 use reram_mpq::xbar::MappingStrategy;
@@ -70,9 +70,13 @@ COMMANDS:
                                  fixture model.
   serve    [--model M] [--requests N] [--cr R] [--workers N]
            [--listen ADDR] [--max-batch N] [--flush-ms MS]
-           [--admit-queue N] [--wait-timeout-s S] [--fixture]
+           [--admit-queue N] [--wait-timeout-s S] [--deadline-ms MS]
+           [--fixture]
            [--stuck R] [--drift-time T] [--drift-rate R] [--ir-drop S]
            [--read-sigma S] [--fault-seed N]
+           [--evolve-drift T] [--evolve-stuck R]
+           [--canaries N] [--spares N] [--probe-every N]
+           [--chaos-panic-after N]
            [--placement naive|sensitivity] [--trace-out FILE]
                                  without --listen: push test images through
                                  the engine in-process and report latency
@@ -82,10 +86,31 @@ COMMANDS:
                                  --backend sim and no artifacts (or
                                  --fixture), serves the hermetic in-memory
                                  fixture model.
-  bench-client --addr HOST:PORT [--conns N] [--requests N]
+  bench-client --addr HOST:PORT [--conns N] [--requests N] [--retries N]
                                  drive load at a running server and report
                                  req/s + latency percentiles (exits
-                                 non-zero on any failed frame)
+                                 non-zero on any failed frame). Rejected /
+                                 degraded replies retry up to --retries
+                                 times (default 3) with the server's
+                                 backoff hint; --retries 0 counts every
+                                 shed reply as terminal.
+  stats    --addr HOST:PORT [--json]
+                                 fetch a running server's stats frame:
+                                 plain text, or the machine-readable
+                                 StatsJson document (engine counters,
+                                 rejected breakdown, health counters,
+                                 latency histogram) with --json.
+
+SELF-HEALING (serve, sim backend, quantized deployments):
+  --evolve-drift T / --evolve-stuck R advance the fault scenario per served
+  batch (runtime fault evolution on the engine's logical clock).
+  --canaries N reserves known-answer canary strips and --spares N spare
+  column slots per layer; --probe-every N makes each worker probe its
+  canaries every N batches, re-program a repaired standby artifact in the
+  background, and hot-swap it at a batch boundary. --deadline-ms bounds one
+  request's reply wait (missed deadlines answer a typed Degraded frame).
+  --chaos-panic-after N (testing) panics a worker mid-batch on the Nth
+  batch to exercise supervision; the worker respawns and re-programs.
 
 TRACING:
   --trace-out FILE (serve --listen, tune) enables request-lifecycle tracing
@@ -117,9 +142,13 @@ fn main() -> Result<()> {
     }
     reram_mpq::trace::init(tc);
 
-    // bench-client is a pure network client: no artifacts, no manifest.
+    // bench-client and stats are pure network clients: no artifacts, no
+    // manifest.
     if args.subcommand.as_deref() == Some("bench-client") {
         return bench_client_cmd(&args);
+    }
+    if args.subcommand.as_deref() == Some("stats") {
+        return stats_cmd(&args);
     }
 
     let dir = args
@@ -532,6 +561,15 @@ fn scenario_from_args(args: &Args) -> Result<Option<(ScenarioSpec, Placement)>> 
     if let Some(s) = args.get_f64("read-sigma")? {
         spec = spec.with_read_noise(s, seed ^ 3);
     }
+    let (ed, es) = (args.get_f64("evolve-drift")?, args.get_f64("evolve-stuck")?);
+    if ed.is_some() || es.is_some() {
+        if es.is_some() && !spec.stuck.is_active() {
+            // Evolving stuck-at from a zero base still needs a seeded
+            // per-site stream; pin the seed without activating the base.
+            spec = spec.with_stuck(0.0, seed);
+        }
+        spec = spec.with_evolution(ed.unwrap_or(0.0), es.unwrap_or(0.0));
+    }
     let placement = match args.get_or("placement", "naive").as_str() {
         "naive" => Placement::Naive,
         "sensitivity" => Placement::SensitivityAware,
@@ -540,24 +578,43 @@ fn scenario_from_args(args: &Args) -> Result<Option<(ScenarioSpec, Placement)>> 
     Ok(if spec.is_active() { Some((spec, placement)) } else { None })
 }
 
+/// Health-reservation flags shared by the `serve` paths: canary strips and
+/// spare slots per layer (absent flags reserve nothing).
+fn health_from_args(args: &Args) -> Result<HealthSpec> {
+    Ok(HealthSpec {
+        canaries: args.get_usize("canaries")?.unwrap_or(0) as u32,
+        spares: args.get_usize("spares")?.unwrap_or(0) as u32,
+    })
+}
+
 /// Shared tail of both `serve` paths (artifact-backed and fixture):
 /// quantize at the requested CR (or serve fp32), deploy, then either run
 /// the TCP front-end (`--listen`) or the in-process loop.
-fn deploy_and_serve(plan: &CompressionPlan<'_>, ecfg: EngineConfig, args: &Args) -> Result<()> {
+fn deploy_and_serve(plan: &CompressionPlan<'_>, mut ecfg: EngineConfig, args: &Args) -> Result<()> {
     let scenario = scenario_from_args(args)?;
+    let health = health_from_args(args)?;
+    if let Some(n) = args.get_usize("probe-every")? {
+        ecfg.probe_every = n as u64;
+    }
+    if let Some(n) = args.get_usize("chaos-panic-after")? {
+        ecfg.chaos_panic_after = n as u64;
+    }
     let handle = match args.get_f64("cr")? {
         Some(c) => {
             let mut p = plan.clone().threshold(ThresholdMode::FixedCr(c));
             if let Some((spec, placement)) = scenario {
                 p = p.with_scenario(spec, placement);
             }
+            if health.is_active() {
+                p = p.with_health(health);
+            }
             p.deploy(ecfg)?
         }
         None => {
             anyhow::ensure!(
-                scenario.is_none(),
-                "fault scenario flags need a quantized deployment: add --cr R \
-                 (faults are injected when the crossbars are programmed)"
+                scenario.is_none() && !health.is_active(),
+                "fault scenario / health reservation flags need a quantized deployment: \
+                 add --cr R (faults and canaries apply when the crossbars are programmed)"
             );
             plan.deploy_fp32(ecfg)?
         }
@@ -600,6 +657,13 @@ fn run_server(handle: EngineHandle, addr: &str, args: &Args) -> Result<()> {
             "--wait-timeout-s must be between 0 and 86400 (one day)"
         );
         cfg.wait_timeout = Duration::from_secs_f64(s);
+    }
+    if let Some(ms) = args.get_usize("deadline-ms")? {
+        anyhow::ensure!(
+            (1..=86_400_000).contains(&ms),
+            "--deadline-ms must be between 1 and 86400000 (one day)"
+        );
+        cfg.wait_timeout = Duration::from_millis(ms as u64);
     }
     let listener = std::net::TcpListener::bind(addr)?;
     // Deploy-time crossbar programming already happened inside the engine's
@@ -649,6 +713,7 @@ fn bench_client_cmd(args: &Args) -> Result<()> {
     let addr = args.require("addr")?;
     let conns = args.get_usize("conns")?.unwrap_or(4).max(1);
     let requests = args.get_usize("requests")?.unwrap_or(200);
+    let retries = args.get_usize("retries")?.unwrap_or(3);
     // Deterministic synthetic traffic: the server classifies, the client
     // counts frames — labels are irrelevant here.
     let test = fixture::synthetic_test_set(64, 7);
@@ -656,10 +721,24 @@ fn bench_client_cmd(args: &Args) -> Result<()> {
     let images: Vec<Vec<f32>> = (0..test.len())
         .map(|j| test.x.data()[j * elems..(j + 1) * elems].to_vec())
         .collect();
-    let report = bench_client(addr, conns, requests, &images)?;
+    let report = bench_client(addr, conns, requests, &images, retries)?;
     println!("{}", report.summary());
     if report.failed > 0 {
         std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// `stats`: fetch a running server's stats frame and print it. `--json`
+/// asks for the full StatsJson document (the CI chaos smoke parses the
+/// health counters out of it); the default is the human-readable text.
+fn stats_cmd(args: &Args) -> Result<()> {
+    let addr = args.require("addr")?;
+    let mut client = ServeClient::connect(addr)?;
+    if args.has("json") {
+        println!("{}", client.stats_json()?);
+    } else {
+        print!("{}", client.stats()?);
     }
     Ok(())
 }

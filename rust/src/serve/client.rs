@@ -16,15 +16,20 @@ pub struct ServeClient {
 }
 
 /// A classify answer as seen by a client: every server reply is typed,
-/// including the load-shedding and failure paths.
+/// including the load-shedding, degraded, and failure paths.
 #[derive(Clone, Debug)]
 pub enum ClientReply {
     Ok { id: u64, class: usize, latency_us: u64, logits: Vec<f32> },
     /// Admission control turned the request away; `queue_depth` requests
-    /// were already waiting. Back off and retry.
-    Rejected { id: u64, queue_depth: u32 },
-    /// The server answered a typed error frame (bad request, engine
-    /// failure, or reply timeout).
+    /// were already waiting. Back off for `retry_after_ms` and retry.
+    Rejected { id: u64, queue_depth: u32, retry_after_ms: u32 },
+    /// The request was admitted but not answered with logits — its reply
+    /// deadline (`deadline_ms`, 0 when not deadline-related) expired, or
+    /// its worker panicked mid-batch and is respawning. Retryable after
+    /// the hinted backoff.
+    Degraded { id: u64, reason: String, retry_after_ms: u32, deadline_ms: u32 },
+    /// The server answered a typed error frame (bad request or engine
+    /// failure). Terminal: no retry semantics.
     Error { id: u64, message: String },
 }
 
@@ -45,8 +50,11 @@ impl ServeClient {
             Ok(Frame::ClassifyOk { id, class, latency_us, logits }) => {
                 Ok(ClientReply::Ok { id, class: class as usize, latency_us, logits })
             }
-            Ok(Frame::Rejected { id, queue_depth }) => {
-                Ok(ClientReply::Rejected { id, queue_depth })
+            Ok(Frame::Rejected { id, queue_depth, retry_after_ms }) => {
+                Ok(ClientReply::Rejected { id, queue_depth, retry_after_ms })
+            }
+            Ok(Frame::Degraded { id, reason, retry_after_ms, deadline_ms }) => {
+                Ok(ClientReply::Degraded { id, reason, retry_after_ms, deadline_ms })
             }
             Ok(Frame::Error { id, message }) => Ok(ClientReply::Error { id, message }),
             Ok(other) => anyhow::bail!("unexpected reply frame: {}", other.kind_name()),
@@ -94,10 +102,17 @@ pub struct ConnLatency {
 pub struct BenchReport {
     pub requests: usize,
     pub ok: usize,
+    /// Requests whose *final* attempt was turned away at admission.
     pub rejected: usize,
+    /// Requests whose *final* attempt got a typed `Degraded` reply
+    /// (missed deadline or worker panic).
+    pub degraded: usize,
     /// Error frames plus protocol-level failures — the smoke gate asserts
     /// this is zero.
     pub failed: usize,
+    /// Extra attempts made beyond each request's first (`Rejected` and
+    /// `Degraded` replies retried after their hinted backoff).
+    pub retries: usize,
     pub elapsed: Duration,
     pub p50_us: u64,
     pub p99_us: u64,
@@ -139,11 +154,14 @@ impl BenchReport {
             self.per_conn.iter().map(|c| f(c).to_string()).collect::<Vec<_>>().join(",")
         };
         s.push_str(&format!(
-            "\nconns={} conn_p50_us=[{}] conn_p99_us=[{}] max_queue_depth={}",
+            "\nconns={} conn_p50_us=[{}] conn_p99_us=[{}] max_queue_depth={} \
+             degraded={} retries={}",
             self.per_conn.len(),
             join(|c| c.p50_us),
             join(|c| c.p99_us),
             self.max_queue_depth,
+            self.degraded,
+            self.retries,
         ));
         s
     }
@@ -159,15 +177,49 @@ fn percentile(sorted_us: &[u64], q: f64) -> u64 {
     sorted_us[rank - 1]
 }
 
+/// Hard ceiling on one backoff sleep so a deep retry ladder can never
+/// stall a bench run for seconds per request.
+const MAX_BACKOFF_MS: u64 = 250;
+
+/// Capped exponential backoff for retry attempt `attempt` (1-based),
+/// seeded by the server's `retry_after_ms` hint, plus deterministic
+/// LCG jitter (up to +50%) so retrying connections don't re-collide in
+/// lockstep. No external RNG: `jitter_state` is a per-connection LCG.
+fn backoff_ms(hint_ms: u32, attempt: u32, jitter_state: &mut u64) -> u64 {
+    let base = (hint_ms.max(1) as u64) << (attempt - 1).min(8);
+    let base = base.min(MAX_BACKOFF_MS);
+    *jitter_state =
+        jitter_state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    let jitter = (*jitter_state >> 33) % (base / 2 + 1);
+    (base + jitter).min(MAX_BACKOFF_MS)
+}
+
+/// One connection's tallies, accumulated by the [`bench_client`] fan-in.
+#[derive(Default)]
+struct ConnTally {
+    ok: usize,
+    rejected: usize,
+    degraded: usize,
+    failed: usize,
+    retries: usize,
+    lats: Vec<u64>,
+    max_qd: u32,
+}
+
 /// Drive `requests` classify calls against `addr` from `conns` concurrent
 /// connections, round-robining over `images`. Every reply is counted; an
 /// unusable connection fails the run (the smoke gate wants hard failures,
-/// not silent undercounting).
+/// not silent undercounting). `Rejected` and `Degraded` replies are
+/// retried up to `max_retries` times per request, honoring the server's
+/// `retry_after_ms` hint with capped exponential backoff and jitter
+/// (pass 0 to count every shed reply as terminal, the pre-retry
+/// behavior); `Error` replies are terminal.
 pub fn bench_client(
     addr: &str,
     conns: usize,
     requests: usize,
     images: &[Vec<f32>],
+    max_retries: usize,
 ) -> Result<BenchReport> {
     anyhow::ensure!(!images.is_empty(), "bench_client needs at least one image");
     let conns = conns.max(1).min(requests.max(1));
@@ -179,27 +231,47 @@ pub fn bench_client(
         for c in 0..conns {
             // Split `requests` across connections, remainder to the first.
             let n = requests / conns + usize::from(c < requests % conns);
-            handles.push(s.spawn(move || -> Result<(usize, usize, usize, Vec<u64>, u32)> {
+            handles.push(s.spawn(move || -> Result<ConnTally> {
                 let mut client = ServeClient::connect(addr)?;
-                let (mut ok, mut rejected, mut failed) = (0usize, 0usize, 0usize);
-                let mut max_qd = 0u32;
-                let mut lats = Vec::with_capacity(n);
+                let mut t = ConnTally { lats: Vec::with_capacity(n), ..ConnTally::default() };
+                let mut jitter_state = 0x9e3779b97f4a7c15u64 ^ (c as u64);
                 for i in 0..n {
-                    let image = images[(c + i * conns) % images.len()].clone();
-                    let t = Instant::now();
-                    match client.classify(image)? {
-                        ClientReply::Ok { .. } => {
-                            ok += 1;
-                            lats.push(t.elapsed().as_micros() as u64);
+                    let image = &images[(c + i * conns) % images.len()];
+                    let mut attempt = 0u32;
+                    loop {
+                        let t_req = Instant::now();
+                        let (terminal_shed, hint) = match client.classify(image.clone())? {
+                            ClientReply::Ok { .. } => {
+                                t.ok += 1;
+                                t.lats.push(t_req.elapsed().as_micros() as u64);
+                                break;
+                            }
+                            ClientReply::Rejected { queue_depth, retry_after_ms, .. } => {
+                                t.max_qd = t.max_qd.max(queue_depth);
+                                (&mut t.rejected, retry_after_ms)
+                            }
+                            ClientReply::Degraded { retry_after_ms, .. } => {
+                                (&mut t.degraded, retry_after_ms)
+                            }
+                            ClientReply::Error { .. } => {
+                                t.failed += 1;
+                                break;
+                            }
+                        };
+                        if attempt as usize >= max_retries {
+                            *terminal_shed += 1;
+                            break;
                         }
-                        ClientReply::Rejected { queue_depth, .. } => {
-                            rejected += 1;
-                            max_qd = max_qd.max(queue_depth);
-                        }
-                        ClientReply::Error { .. } => failed += 1,
+                        attempt += 1;
+                        t.retries += 1;
+                        std::thread::sleep(Duration::from_millis(backoff_ms(
+                            hint,
+                            attempt,
+                            &mut jitter_state,
+                        )));
                     }
                 }
-                Ok((ok, rejected, failed, lats, max_qd))
+                Ok(t)
             }));
         }
         handles
@@ -208,16 +280,19 @@ pub fn bench_client(
             .collect::<Vec<_>>()
     });
     for r in results {
-        let (ok, rejected, failed, mut lats, max_qd) = r?;
-        report.ok += ok;
-        report.rejected += rejected;
-        report.failed += failed;
-        report.max_queue_depth = report.max_queue_depth.max(max_qd);
-        lats.sort_unstable();
-        report
-            .per_conn
-            .push(ConnLatency { p50_us: percentile(&lats, 0.50), p99_us: percentile(&lats, 0.99) });
-        latencies.extend(lats);
+        let mut t = r?;
+        report.ok += t.ok;
+        report.rejected += t.rejected;
+        report.degraded += t.degraded;
+        report.failed += t.failed;
+        report.retries += t.retries;
+        report.max_queue_depth = report.max_queue_depth.max(t.max_qd);
+        t.lats.sort_unstable();
+        report.per_conn.push(ConnLatency {
+            p50_us: percentile(&t.lats, 0.50),
+            p99_us: percentile(&t.lats, 0.99),
+        });
+        latencies.extend(t.lats);
     }
     report.elapsed = t0.elapsed();
     latencies.sort_unstable();
@@ -246,7 +321,9 @@ mod tests {
             requests: 4,
             ok: 2,
             rejected: 1,
+            degraded: 1,
             failed: 1,
+            retries: 3,
             elapsed: Duration::from_secs(2),
             p50_us: 5,
             p99_us: 9,
@@ -264,6 +341,31 @@ mod tests {
         assert!(s.contains("conn_p50_us=[4,6]"), "{s}");
         assert!(s.contains("conn_p99_us=[8,9]"), "{s}");
         assert!(s.contains("max_queue_depth=17"), "{s}");
+        // retry accounting rides on the second line, so the first line's
+        // ` failed=0 `-style grep contract is untouched.
+        let (first, second) = s.split_once('\n').unwrap();
+        assert!(!first.contains("retries="), "{first}");
+        assert!(second.contains("degraded=1"), "{second}");
+        assert!(second.contains("retries=3"), "{second}");
         assert_eq!(BenchReport::default().req_per_s(), 0.0);
+    }
+
+    #[test]
+    fn backoff_grows_is_capped_and_is_deterministic() {
+        let mut st = 7u64;
+        let first = backoff_ms(2, 1, &mut st);
+        // attempt 1 from a 2 ms hint: base 2, jitter at most +1.
+        assert!((2..=3).contains(&first), "{first}");
+        // deep attempts saturate at the cap regardless of jitter
+        for attempt in 8..12 {
+            assert_eq!(backoff_ms(100, attempt, &mut st), MAX_BACKOFF_MS);
+        }
+        // a 0 hint still backs off at least 1 ms
+        assert!(backoff_ms(0, 1, &mut st) >= 1);
+        // same state + inputs -> same schedule
+        let (mut a, mut b) = (42u64, 42u64);
+        for attempt in 1..6 {
+            assert_eq!(backoff_ms(5, attempt, &mut a), backoff_ms(5, attempt, &mut b));
+        }
     }
 }

@@ -12,10 +12,18 @@
 //! | 2    | `ClassifyOk`  | s -> c    | `id:u64`, `class:u16`, `latency_us:u64`, `k:u32`, `k × f32` logits |
 //! | 3    | `StatsReq`    | c -> s    | (empty) |
 //! | 4    | `Stats`       | s -> c    | `text:str` (plain-text metrics) |
-//! | 5    | `Rejected`    | s -> c    | `id:u64`, `queue_depth:u32` — admission control said no |
+//! | 5    | `Rejected`    | s -> c    | `id:u64`, `queue_depth:u32`, `retry_after_ms:u32` — admission control said no; retry after the hinted backoff |
 //! | 6    | `Error`       | s -> c    | `id:u64`, `message:str` |
 //! | 7    | `StatsJsonReq`| c -> s    | (empty) |
-//! | 8    | `StatsJson`   | s -> c    | `json:str` — the complete machine-readable snapshot (counters, rejected-by-reason breakdown, latency histogram buckets, program cost, scenario, walk profile) |
+//! | 8    | `StatsJson`   | s -> c    | `json:str` — the complete machine-readable snapshot (counters, rejected-by-reason breakdown, health, latency histogram buckets, program cost, scenario, walk profile) |
+//! | 9    | `Degraded`    | s -> c    | `id:u64`, `reason:str`, `retry_after_ms:u32`, `deadline_ms:u32` — the request was admitted but not answered with logits (worker panic mid-batch, or the reply deadline `deadline_ms` expired); safe to retry after the hint |
+//!
+//! `Rejected` and `Degraded` both mean "no logits, but the server is
+//! healthy enough to say so": `Rejected` is refused *at admission*
+//! (queue full, undecodable frame), `Degraded` is a request that was
+//! *accepted* and then could not be answered normally. Both carry a
+//! `retry_after_ms` backoff hint; `Error` remains the terminal
+//! per-request failure with no retry semantics.
 //!
 //! Decoding is strict: an unknown version or kind, a truncated body, or
 //! trailing bytes after the body are all typed [`ProtoError`]s — a server
@@ -27,7 +35,10 @@
 use std::io::{self, Read, Write};
 
 /// Protocol version stamped into (and required of) every payload.
-pub const PROTO_VERSION: u8 = 1;
+/// Version 2 added `retry_after_ms` to `Rejected` and the `Degraded`
+/// frame (kind 9); v1 peers are refused with a `Version` error rather
+/// than silently misparsing the widened `Rejected` body.
+pub const PROTO_VERSION: u8 = 2;
 
 /// Upper bound on a payload length; anything larger is rejected before
 /// allocation so a corrupt or hostile length prefix cannot OOM the server.
@@ -44,10 +55,11 @@ pub enum Frame {
     ClassifyOk { id: u64, class: u16, latency_us: u64, logits: Vec<f32> },
     StatsReq,
     Stats { text: String },
-    Rejected { id: u64, queue_depth: u32 },
+    Rejected { id: u64, queue_depth: u32, retry_after_ms: u32 },
     Error { id: u64, message: String },
     StatsJsonReq,
     StatsJson { json: String },
+    Degraded { id: u64, reason: String, retry_after_ms: u32, deadline_ms: u32 },
 }
 
 /// Why a frame could not be read.
@@ -100,6 +112,7 @@ const KIND_REJECTED: u8 = 5;
 const KIND_ERROR: u8 = 6;
 const KIND_STATS_JSON_REQ: u8 = 7;
 const KIND_STATS_JSON: u8 = 8;
+const KIND_DEGRADED: u8 = 9;
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -186,6 +199,7 @@ impl Frame {
             Frame::Error { .. } => "Error",
             Frame::StatsJsonReq => "StatsJsonReq",
             Frame::StatsJson { .. } => "StatsJson",
+            Frame::Degraded { .. } => "Degraded",
         }
     }
 
@@ -213,10 +227,11 @@ impl Frame {
                 p.push(KIND_STATS);
                 put_str(&mut p, text);
             }
-            Frame::Rejected { id, queue_depth } => {
+            Frame::Rejected { id, queue_depth, retry_after_ms } => {
                 p.push(KIND_REJECTED);
                 put_u64(&mut p, *id);
                 put_u32(&mut p, *queue_depth);
+                put_u32(&mut p, *retry_after_ms);
             }
             Frame::Error { id, message } => {
                 p.push(KIND_ERROR);
@@ -227,6 +242,13 @@ impl Frame {
             Frame::StatsJson { json } => {
                 p.push(KIND_STATS_JSON);
                 put_str(&mut p, json);
+            }
+            Frame::Degraded { id, reason, retry_after_ms, deadline_ms } => {
+                p.push(KIND_DEGRADED);
+                put_u64(&mut p, *id);
+                put_str(&mut p, reason);
+                put_u32(&mut p, *retry_after_ms);
+                put_u32(&mut p, *deadline_ms);
             }
         }
         let len = (p.len() - 4) as u32;
@@ -277,7 +299,8 @@ impl Frame {
             KIND_REJECTED => {
                 let id = cur.u64()?;
                 let queue_depth = cur.u32()?;
-                Frame::Rejected { id, queue_depth }
+                let retry_after_ms = cur.u32()?;
+                Frame::Rejected { id, queue_depth, retry_after_ms }
             }
             KIND_ERROR => {
                 let id = cur.u64()?;
@@ -286,6 +309,13 @@ impl Frame {
             }
             KIND_STATS_JSON_REQ => Frame::StatsJsonReq,
             KIND_STATS_JSON => Frame::StatsJson { json: cur.str()? },
+            KIND_DEGRADED => {
+                let id = cur.u64()?;
+                let reason = cur.str()?;
+                let retry_after_ms = cur.u32()?;
+                let deadline_ms = cur.u32()?;
+                Frame::Degraded { id, reason, retry_after_ms, deadline_ms }
+            }
             other => return Err(ProtoError::Kind(other)),
         };
         cur.done()?;
@@ -337,13 +367,25 @@ mod tests {
         });
         roundtrip(Frame::StatsReq);
         roundtrip(Frame::Stats { text: "requests=3\nok=3\n".into() });
-        roundtrip(Frame::Rejected { id: 1, queue_depth: 42 });
+        roundtrip(Frame::Rejected { id: 1, queue_depth: 42, retry_after_ms: 17 });
         roundtrip(Frame::Error { id: 2, message: "bad image size".into() });
         roundtrip(Frame::StatsJsonReq);
         roundtrip(Frame::StatsJson { json: "{\"server\":{\"ok\":3}}".into() });
+        roundtrip(Frame::Degraded {
+            id: 11,
+            reason: "reply deadline missed".into(),
+            retry_after_ms: 250,
+            deadline_ms: 30_000,
+        });
         // empty vectors / strings are legal
         roundtrip(Frame::ClassifyReq { id: 0, image: vec![] });
         roundtrip(Frame::Error { id: 0, message: String::new() });
+        roundtrip(Frame::Degraded {
+            id: 0,
+            reason: String::new(),
+            retry_after_ms: 0,
+            deadline_ms: 0,
+        });
     }
 
     #[test]
@@ -430,8 +472,18 @@ mod tests {
         }
 
         // Trailing junk after a well-formed body.
-        let mut bytes = Frame::Rejected { id: 4, queue_depth: 2 }.to_bytes();
+        let mut bytes = Frame::Rejected { id: 4, queue_depth: 2, retry_after_ms: 1 }.to_bytes();
         bytes.push(0xab);
+        let len = (bytes.len() - 4) as u32;
+        bytes[..4].copy_from_slice(&len.to_le_bytes());
+        match Frame::read_from(&mut &bytes[..]) {
+            Err(ProtoError::Malformed(_)) => {}
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+
+        // A v1-shaped Rejected body (no retry_after_ms) is truncated in v2.
+        let mut bytes = Frame::Rejected { id: 4, queue_depth: 2, retry_after_ms: 1 }.to_bytes();
+        bytes.truncate(bytes.len() - 4);
         let len = (bytes.len() - 4) as u32;
         bytes[..4].copy_from_slice(&len.to_le_bytes());
         match Frame::read_from(&mut &bytes[..]) {

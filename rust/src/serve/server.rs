@@ -9,10 +9,12 @@
 //! 1. validates the image size (a typed `Error` frame on mismatch, so one
 //!    bad request can never poison a batch inside the engine),
 //! 2. asks the batcher for admission — a full queue answers a `Rejected`
-//!    frame with the observed queue depth, *without blocking*,
+//!    frame with the observed queue depth and a `retry_after_ms` backoff
+//!    hint scaled by that depth, *without blocking*,
 //! 3. waits on the admitted ticket with [`ServeConfig::wait_timeout`] — a
-//!    dead or wedged worker becomes an `Error` frame, never a hung
-//!    connection.
+//!    missed deadline or a worker panicking mid-batch becomes a typed
+//!    `Degraded` frame (retryable, with its own backoff hint), an engine
+//!    batch failure an `Error` frame — never a hung connection.
 //!
 //! A `StatsReq` frame answers a plain-text snapshot merging the server's
 //! own counters, the batcher's admission/coalescing stats, and the engine
@@ -36,7 +38,7 @@ use std::time::Duration;
 
 use super::batcher::{Admission, BatchPolicy, Batcher, RejectReason};
 use super::proto::{Frame, ProtoError, IMAGE_ELEMS};
-use crate::coordinator::engine::EngineHandle;
+use crate::coordinator::engine::{EngineHandle, WaitError};
 use crate::Result;
 
 /// Server configuration: the batching policy plus the per-request reply
@@ -62,7 +64,18 @@ pub struct ServerStats {
     pub frames_in: AtomicU64,
     pub ok: AtomicU64,
     pub rejected: AtomicU64,
+    /// Admitted requests answered with a typed `Degraded` frame (missed
+    /// reply deadline or a worker panic mid-batch).
+    pub degraded: AtomicU64,
     pub errors: AtomicU64,
+}
+
+/// Backoff hint for a `Rejected` frame: grows with the observed queue
+/// depth (a fuller queue needs more time to drain) and stays bounded so a
+/// deep queue never tells clients to stall for seconds. Deterministic —
+/// jitter is the client's job.
+fn retry_after_hint_ms(queue_depth: usize) -> u32 {
+    1 + (queue_depth as u32).min(49)
 }
 
 /// A running server. Dropping it stops the accept loop (in-flight
@@ -215,8 +228,12 @@ fn serve_conn(
                             RejectReason::Shutdown => engine.metrics.observe_rejected_shutdown(),
                         }
                         let _s = crate::trace::span("server.reply");
-                        Frame::Rejected { id, queue_depth: queue_depth as u32 }
-                            .write_to(&mut stream)?;
+                        Frame::Rejected {
+                            id,
+                            queue_depth: queue_depth as u32,
+                            retry_after_ms: retry_after_hint_ms(queue_depth),
+                        }
+                        .write_to(&mut stream)?;
                     }
                     Admission::Accepted(ticket) => {
                         let waited = {
@@ -232,6 +249,39 @@ fn serve_conn(
                                     class: resp.class as u16,
                                     latency_us: resp.latency_us,
                                     logits: resp.logits,
+                                }
+                                .write_to(&mut stream)?;
+                            }
+                            Err(WaitError::Timeout) => {
+                                // The request was admitted but its reply
+                                // deadline expired: a typed degraded reply
+                                // with the deadline it missed, not a
+                                // generic error — the caller may retry.
+                                stats.degraded.fetch_add(1, Ordering::Relaxed);
+                                engine.metrics.observe_rejected_deadline();
+                                engine.metrics.observe_degraded();
+                                let deadline_ms = wait_timeout.as_millis().min(u32::MAX as u128);
+                                let _s = crate::trace::span("server.reply");
+                                Frame::Degraded {
+                                    id,
+                                    reason: format!(
+                                        "reply deadline of {deadline_ms} ms missed"
+                                    ),
+                                    retry_after_ms: retry_after_hint_ms(batcher.queue_depth()),
+                                    deadline_ms: deadline_ms as u32,
+                                }
+                                .write_to(&mut stream)?;
+                            }
+                            Err(WaitError::Degraded { reason }) => {
+                                // Worker panicked mid-batch; the engine is
+                                // respawning it. Retryable.
+                                stats.degraded.fetch_add(1, Ordering::Relaxed);
+                                let _s = crate::trace::span("server.reply");
+                                Frame::Degraded {
+                                    id,
+                                    reason,
+                                    retry_after_ms: retry_after_hint_ms(batcher.queue_depth()),
+                                    deadline_ms: 0,
                                 }
                                 .write_to(&mut stream)?;
                             }
@@ -270,17 +320,19 @@ fn serve_conn(
 }
 
 /// The plain-text stats payload: server frames, batcher admission, engine
-/// execution, deploy-time programming cost, latency percentiles — one
-/// `key=value` line per layer.
+/// execution, self-healing counters, deploy-time programming cost, latency
+/// percentiles — one `key=value` line per layer.
 fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> String {
     use crate::coordinator::metrics::fmt_latency_us;
     let m = engine.metrics.snapshot();
     let b = &batcher.stats;
     format!(
-        "server: connections={} frames_in={} ok={} rejected={} errors={} queue_depth={}\n\
+        "server: connections={} frames_in={} ok={} rejected={} degraded={} errors={} queue_depth={}\n\
          batcher: accepted={} rejected={} batches={} mean_fill={:.2}\n\
-         rejected: queue_full={} decode={} shutdown={} total={}\n\
+         rejected: queue_full={} decode={} shutdown={} deadline={} total={}\n\
          engine: requests={} batches={} mean_batch_fill={:.2} failed_requests={}\n\
+         health: probes={} canary_mismatches={} quarantined={} repairs={} swaps={} \
+         reprograms={} respawns={} workers_down={} degraded={}\n\
          program: workers={} program_ns_mean={:.0} program_ns_max={}\n\
          scenario: {}\n\
          latency_us: mean_batch={:.1} max={} p50={} p95={} p99={}\n\
@@ -290,6 +342,7 @@ fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> 
         stats.frames_in.load(Ordering::Relaxed),
         stats.ok.load(Ordering::Relaxed),
         stats.rejected.load(Ordering::Relaxed),
+        stats.degraded.load(Ordering::Relaxed),
         stats.errors.load(Ordering::Relaxed),
         batcher.queue_depth(),
         b.accepted.load(Ordering::Relaxed),
@@ -299,11 +352,21 @@ fn stats_text(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> 
         m.rejected_queue_full,
         m.rejected_decode,
         m.rejected_shutdown,
+        m.rejected_deadline,
         m.rejected_total(),
         m.requests,
         m.batches,
         m.mean_batch_fill,
         m.failed_requests,
+        m.probes,
+        m.canary_mismatches,
+        m.quarantined,
+        m.repairs,
+        m.swaps,
+        m.reprograms,
+        m.respawns,
+        m.workers_down,
+        m.degraded,
         m.programmed_workers,
         m.program_ns_mean,
         m.program_ns_max,
@@ -336,6 +399,7 @@ fn stats_json(stats: &ServerStats, batcher: &Batcher, engine: &EngineHandle) -> 
         ("frames_in", n(stats.frames_in.load(Ordering::Relaxed))),
         ("ok", n(stats.ok.load(Ordering::Relaxed))),
         ("rejected", n(stats.rejected.load(Ordering::Relaxed))),
+        ("degraded", n(stats.degraded.load(Ordering::Relaxed))),
         ("errors", n(stats.errors.load(Ordering::Relaxed))),
     ]);
     let b = &batcher.stats;

@@ -704,6 +704,68 @@ fn prop_faults_zero_scenario_is_bit_identical_across_modes_and_threads() {
 }
 
 #[test]
+fn prop_health_reservation_and_idle_probes_never_change_forward_bits() {
+    // Self-healing must be pure observability until something actually
+    // degrades: a canary + spare reservation on a zero-degradation scenario
+    // (no faults, no evolution) programs extra slots past every walkable
+    // strip, so the forward pass stays bit-identical to the unfaulted walk
+    // across the exact / packed / analog execution modes and every
+    // tile-shard count — and an idle health step probes the canaries,
+    // finds zero mismatches, and neither repairs, quarantines, swaps, nor
+    // starts a background re-program.
+    use reram_mpq::faults::HealthSpec;
+    let mut rng = Rng::seed_from_u64(101);
+    for case in 0..6 {
+        let m = rand_model(&mut rng);
+        let layer = m.layer(0).clone();
+        let (theta, sp, patches, t) = rand_sim_case(&mut rng, &m, true);
+        let health = Scenario::new(ScenarioSpec::default())
+            .with_placement(Placement::SensitivityAware)
+            .with_health(HealthSpec { canaries: 2, spares: 3 });
+        assert!(health.is_active(), "a reservation alone activates the scenario");
+        let corners = [
+            // exact: ideal converters, integer fast path
+            SimXbarConfig::default(),
+            // packed: ADC phase loop over u64 bit-planes, multi-segment rows
+            SimXbarConfig { rows: 16, ..SimXbarConfig::default() }.with_adc(4),
+            // analog: seeded conductance noise forces the scalar lane scan
+            SimXbarConfig::default().with_adc(4).with_noise(0.05, 7),
+        ];
+        for base in corners {
+            for threads in [1usize, 2, 4] {
+                let cfg = SimXbarConfig { threads, ..base };
+                let clean = SimXbar::new(cfg)
+                    .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+                    .unwrap();
+                let sim = SimXbar::new(cfg)
+                    .with_scenario(health.clone())
+                    .with_strips(sp.clone());
+                let reserved = sim
+                    .conv_bitserial(&m, &layer, &theta, &patches, t, &sp)
+                    .unwrap();
+                assert_eq!(
+                    clean, reserved,
+                    "case {case}: health reservation must never change forward \
+                     bits (adc={} noise={} threads={threads})",
+                    base.adc_bits, base.noise_sigma
+                );
+                // An idle monitor step on the undamaged artifact: canaries
+                // replay exactly as programmed, nothing moves.
+                let rep = sim
+                    .run_health_step(&m, &theta, 5)
+                    .expect("an active scenario with a programmed artifact must report");
+                assert!(rep.probes >= 1, "case {case}: canaries must be probed");
+                assert_eq!(rep.canary_mismatches, 0, "case {case}: {rep:?}");
+                assert_eq!(rep.repairs, 0, "case {case}: {rep:?}");
+                assert_eq!(rep.quarantined, 0, "case {case}: {rep:?}");
+                assert!(!rep.swapped, "case {case}: {rep:?}");
+                assert!(!rep.reprogram_started, "case {case}: {rep:?}");
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_faults_placement_is_a_bijection_over_live_slots() {
     let mut rng = Rng::seed_from_u64(83);
     for case in 0..CASES {

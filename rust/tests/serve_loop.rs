@@ -156,6 +156,7 @@ fn sim_serve_overload_returns_rejected_not_deadlock() {
             max_wait: Duration::from_millis(1),
             queue: 1,
             workers: 1,
+            ..EngineConfig::default()
         })
         .unwrap();
     let cfg = ServeConfig {
@@ -178,6 +179,9 @@ fn sim_serve_overload_returns_rejected_not_deadlock() {
                         match client.classify(images[c].clone()).unwrap() {
                             ClientReply::Ok { .. } => ok += 1,
                             ClientReply::Rejected { .. } => rejected += 1,
+                            ClientReply::Degraded { reason, .. } => {
+                                panic!("unexpected degraded frame: {reason}")
+                            }
                             ClientReply::Error { message, .. } => {
                                 panic!("unexpected error frame: {message}")
                             }
@@ -210,14 +214,17 @@ fn sim_serve_stats_frame_and_bench_client_account_for_every_frame() {
     let (_server, addr) = start_server(&handle, ServeConfig::default());
     let images = test_images(&plan, 4);
     let requests = 12usize;
-    let report = bench_client(&addr, 3, requests, &images).unwrap();
+    // 0 retries: every shed reply is terminal, so the accounting identity
+    // below holds exactly.
+    let report = bench_client(&addr, 3, requests, &images, 0).unwrap();
     assert_eq!(report.requests, requests);
     assert_eq!(
-        report.ok + report.rejected + report.failed,
+        report.ok + report.rejected + report.degraded + report.failed,
         requests,
         "every request accounted for: {report:?}"
     );
     assert_eq!(report.failed, 0, "{report:?}");
+    assert_eq!(report.retries, 0, "{report:?}");
     // Default queue (256) cannot overflow on 12 requests.
     assert_eq!(report.rejected, 0, "{report:?}");
     assert!(report.p99_us >= report.p50_us, "{report:?}");
@@ -299,6 +306,92 @@ fn sim_serve_stats_json_roundtrips_machine_readable_snapshot() {
             "walk profile never surfaced in stats JSON"
         );
         std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn sim_serve_chaos_panic_and_runtime_evolution_recover_bit_exact() {
+    // End-to-end self-healing under live traffic: an injected worker panic
+    // must answer the in-flight request with a typed Degraded frame and
+    // respawn the worker, while a runtime stuck-at ramp must trip the
+    // canary probes and drive a background repair with a hot artifact swap.
+    //
+    // The stuck rate evolves from a clean base (0.0) and saturates at 1.0
+    // after one served batch, which makes the test deterministic twice
+    // over: the first probe is guaranteed to see saturated damage, and the
+    // effective spec is identical at every tick >= 1, so once the repaired
+    // artifact is swapped in the monitor goes quiet and replies are
+    // bit-stable again.
+    use reram_mpq::faults::{HealthSpec, Placement, ScenarioSpec};
+    let spec = ScenarioSpec::default().with_stuck(0.0, 41).with_evolution(0.0, 1.0);
+    let plan = sim_plan(fixture::tiny(83), SimXbarConfig::default(), RunConfig::default())
+        .threshold(ThresholdMode::FixedCr(0.5))
+        .with_scenario(spec, Placement::SensitivityAware)
+        .with_health(HealthSpec { canaries: 2, spares: 2 });
+    let ecfg = EngineConfig {
+        workers: 1,
+        probe_every: 1,
+        chaos_panic_after: 2,
+        ..EngineConfig::default()
+    };
+    let handle = plan.deploy(ecfg).unwrap();
+    let (_server, addr) = start_server(&handle, ServeConfig::default());
+    let images = test_images(&plan, 2);
+    let mut client = ServeClient::connect(&addr).unwrap();
+
+    // Batch 1 serves normally; batch 2 rides the injected panic and must
+    // come back as a typed Degraded frame on a connection that survives.
+    match client.classify(images[0].clone()).unwrap() {
+        ClientReply::Ok { .. } => {}
+        other => panic!("first request: unexpected reply {other:?}"),
+    }
+    match client.classify(images[0].clone()).unwrap() {
+        ClientReply::Degraded { reason, retry_after_ms, .. } => {
+            assert!(reason.contains("panic"), "degraded reason: {reason}");
+            assert!(retry_after_ms >= 1, "degraded frames carry a retry hint");
+        }
+        other => panic!("chaos batch: unexpected reply {other:?}"),
+    }
+
+    // Keep driving traffic (each served batch is one health tick) until the
+    // repair cycle completes: probes fired, canaries mismatched, a standby
+    // artifact was programmed in the background and hot-swapped in, and
+    // sensitivity-aware re-placement moved strips off damaged slots.
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    loop {
+        match client.classify(images[0].clone()).unwrap() {
+            ClientReply::Ok { .. } => {}
+            other => panic!("post-respawn request: unexpected reply {other:?}"),
+        }
+        let snap = handle.metrics.snapshot();
+        if snap.swaps >= 1 && snap.repairs >= 1 {
+            assert!(snap.probes >= 1, "{snap:?}");
+            assert!(snap.canary_mismatches >= 1, "{snap:?}");
+            assert!(snap.reprograms >= 1, "{snap:?}");
+            assert_eq!(snap.respawns, 1, "{snap:?}");
+            assert_eq!(snap.workers_down, 0, "{snap:?}");
+            assert!(snap.degraded >= 1, "{snap:?}");
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "repair cycle never completed: {snap:?}"
+        );
+    }
+
+    // Post-recovery the effective spec no longer moves (saturated), so the
+    // swapped artifact is final: replies must be bit-identical between
+    // consecutive direct classifies AND across the wire.
+    let a = handle.classify(images[1].clone()).unwrap();
+    let b = handle.classify(images[1].clone()).unwrap();
+    assert_eq!(a.class, b.class);
+    assert_eq!(a.logits, b.logits, "post-recovery replies must be bit-stable");
+    match client.classify(images[1].clone()).unwrap() {
+        ClientReply::Ok { class, logits, .. } => {
+            assert_eq!(class, a.class, "wire argmax vs direct classify");
+            assert_eq!(logits, a.logits, "wire logits not bit-exact after recovery");
+        }
+        other => panic!("post-recovery request: unexpected reply {other:?}"),
     }
 }
 

@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Promote a CI-refreshed perf baseline into `benches/baseline.json`.
+
+CI's bench-smoke job refreshes a copy of the committed baseline with the
+runner's own means (`check_regression.py --update`) and uploads it as the
+`baseline.refreshed.json` artifact. This tool closes ROADMAP item 4's loop:
+it takes that artifact and produces a committable `benches/baseline.json`
+whose **means** come from the trusted run while every piece of gate
+**policy** — the `note`, the global `tolerance`, and each row's pinned
+`max_regress` override — is re-asserted from the committed file, so a run
+can never loosen the gate by shipping a doctored artifact.
+
+Promotion is strict:
+  * every committed row must appear in the refreshed file with a positive,
+    finite `mean_ns` (a bootstrap or missing row means the trusted run did
+    not actually measure the full pipeline — refuse to promote);
+  * rows the refreshed file adds on top of the committed set are carried
+    over as new gated rows (with a note on stdout), since `--update`
+    appends newly added benches the same way.
+
+Usage:
+    # validate + write the promoted baseline next to the artifact
+    python3 tools/promote_baseline.py baseline.refreshed.json \
+        --into benches/baseline.json --out baseline.promoted.json
+
+    # maintainer loop: download the bench-json artifact from a trusted run,
+    # then promote straight over the committed file and commit the diff
+    python3 tools/promote_baseline.py baseline.refreshed.json
+
+    # CI dry-run: validate the artifact is promotable, write nothing
+    python3 tools/promote_baseline.py baseline.refreshed.json --check
+
+Exit status: 0 when the refreshed file is promotable (and, without
+--check, the output was written), 1 otherwise. Stdlib only — runs on a
+bare CI runner.
+"""
+
+import argparse
+import json
+import math
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("refreshed", help="baseline.refreshed.json from a trusted run")
+    ap.add_argument(
+        "--into",
+        default="benches/baseline.json",
+        help="committed baseline supplying the gate policy (default: %(default)s)",
+    )
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="where to write the promoted baseline (default: overwrite --into)",
+    )
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="validate only — exit 0 if promotable, write nothing",
+    )
+    args = ap.parse_args()
+
+    committed = load(args.into)
+    refreshed = load(args.refreshed)
+    fresh = {r["name"]: r for r in refreshed.get("results", [])}
+
+    errors = []
+    promoted_rows = []
+    for rec in committed.get("results", []):
+        name = rec["name"]
+        if name not in fresh:
+            errors.append(f"committed row '{name}' missing from the refreshed file")
+            continue
+        mean = fresh[name].get("mean_ns")
+        if not isinstance(mean, (int, float)) or not math.isfinite(mean) or mean <= 0:
+            errors.append(f"committed row '{name}' has no usable mean ({mean!r})")
+            continue
+        # Mean from the trusted run; everything else (max_regress pin
+        # included) from the committed policy row.
+        row = dict(rec)
+        row["mean_ns"] = float(mean)
+        promoted_rows.append(row)
+
+    committed_names = {r["name"] for r in committed.get("results", [])}
+    added = 0
+    for name in sorted(set(fresh) - committed_names):
+        mean = fresh[name].get("mean_ns")
+        if not isinstance(mean, (int, float)) or not math.isfinite(mean) or mean <= 0:
+            # A new bench that the trusted run itself never measured gates
+            # nothing — leave it for a future refresh rather than pinning
+            # a null row.
+            print(f"note: new row '{name}' has no usable mean; skipped")
+            continue
+        print(f"note: new row '{name}' promoted from the refreshed file")
+        promoted_rows.append({"name": name, "mean_ns": float(mean)})
+        added += 1
+
+    if errors:
+        for e in errors:
+            print(f"::error::{e}", file=sys.stderr)
+        print(
+            f"not promotable: {len(errors)} of {len(committed_names)} committed "
+            "rows lack a trusted mean",
+            file=sys.stderr,
+        )
+        return 1
+
+    pinned = sum(1 for r in promoted_rows if "max_regress" in r)
+    print(
+        f"promotable: {len(promoted_rows)} rows ({pinned} with pinned "
+        f"max_regress, {added} new), policy from {args.into}"
+    )
+    if args.check:
+        return 0
+
+    out = dict(committed)  # note + tolerance from the committed policy
+    out["results"] = promoted_rows
+    out_path = args.out or args.into
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"promoted baseline written: {out_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
